@@ -1,0 +1,53 @@
+//! Load-sweep example: how the three systems degrade as the shared LLM
+//! moves from idle to excessive load (paper §1's motivating regime).
+//!
+//! Sweeps the request rate, reports queueing ratio and avg token latency
+//! per system — the crossover structure (all equal when idle, Kairos
+//! pulling ahead as queueing grows) is the paper's core story.
+//!
+//! Run: `cargo run --release --example excessive_load_sweep`
+
+use kairos::server::sim::{run_system, SimConfig};
+use kairos::stats::rng::Rng;
+use kairos::util::table::Table;
+use kairos::workload::{TraceGen, WorkloadMix};
+
+fn main() -> anyhow::Result<()> {
+    println!("== load sweep: idle -> excessive (co-located workload, 4 instances) ==\n");
+    let cfg = SimConfig::default();
+    let mut t = Table::new(&[
+        "rate (req/s)", "queue ratio", "Parrot avg", "Ayo avg", "Kairos avg",
+        "Kairos vs Parrot",
+    ]);
+    for rate in [0.5, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0] {
+        let mut lat = std::collections::HashMap::new();
+        let mut qr = 0.0;
+        for (sys, sched, disp) in
+            [("parrot", "parrot", "rr"), ("ayo", "ayo", "rr"), ("kairos", "kairos", "kairos")]
+        {
+            let arrivals = TraceGen::default().generate(
+                &WorkloadMix::colocated(),
+                rate,
+                1200,
+                &mut Rng::new(7),
+            );
+            let res = run_system(cfg, sched, disp, arrivals);
+            if sys == "parrot" {
+                qr = res.summary.mean_queue_ratio;
+            }
+            lat.insert(sys, res.summary.avg_token_latency);
+        }
+        let (p, a, k) = (lat["parrot"], lat["ayo"], lat["kairos"]);
+        t.row(vec![
+            format!("{rate:.1}"),
+            format!("{:.0}%", qr * 100.0),
+            format!("{p:.4}"),
+            format!("{a:.4}"),
+            format!("{k:.4}"),
+            format!("{:+.1}%", (k - p) / p * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\nexcessive_load_sweep OK");
+    Ok(())
+}

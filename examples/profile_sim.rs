@@ -1,0 +1,10 @@
+//! Profiling driver for the perf pass: one heavy co-located run.
+fn main() {
+    use kairos::server::sim::*; use kairos::workload::*; use kairos::stats::rng::Rng;
+    let cfg = SimConfig::default();
+    let arrivals = TraceGen::default().generate(&WorkloadMix::colocated(), 5.0, 8000, &mut Rng::new(13));
+    let t0 = std::time::Instant::now();
+    let res = run_system(cfg, "kairos", "kairos", arrivals);
+    println!("events={} wall={:?} ev/s={:.0}", res.events_processed, t0.elapsed(),
+        res.events_processed as f64 / t0.elapsed().as_secs_f64());
+}

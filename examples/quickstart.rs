@@ -1,0 +1,77 @@
+//! Quickstart: the END-TO-END validation driver (DESIGN.md §7).
+//!
+//! Loads the real AOT-compiled tiny LM through PJRT (no python anywhere on
+//! the request path), serves batched multi-agent requests through the same
+//! queue → scheduler → dispatcher → continuous-batching engine stack the
+//! simulations use, and reports latency/throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::path::Path;
+
+use kairos::dispatch::RoundRobin;
+use kairos::lb::policies::Fcfs;
+use kairos::server::real::{RealServer, ServeRequest};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    anyhow::ensure!(
+        artifacts.join("tiny_manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    println!("== Kairos quickstart: real PJRT serving ==\n");
+    let mut server = RealServer::new(
+        artifacts,
+        "tiny",
+        2, // two engine instances behind one load balancer
+        Box::new(Fcfs),
+        Box::new(RoundRobin::new()),
+    )?;
+
+    // A small multi-agent-flavoured batch: routers, experts, writers.
+    let prompts = [
+        ("Router", "Route this: what is 17 * 23?", 4),
+        ("MathAgent", "Solve step by step: 17 * 23 =", 16),
+        ("HumanitiesAgent", "Describe the causes of World War 1.", 20),
+        ("Router", "Route this: who was Napoleon?", 4),
+        ("ResearchAgent", "Collect material on LLM serving.", 16),
+        ("WriterAgent", "Write a report from the materials.", 20),
+        ("Engineer", "Implement quicksort in rust.", 18),
+        ("QAEngineer", "Review the code for bugs.", 12),
+    ];
+    let reqs: Vec<ServeRequest> = prompts
+        .iter()
+        .map(|(agent, prompt, max_tokens)| ServeRequest {
+            agent: agent.to_string(),
+            prompt: prompt.to_string(),
+            max_tokens: *max_tokens,
+        })
+        .collect();
+
+    let (responses, stats) = server.serve(reqs)?;
+
+    println!("{:<18} {:>5} {:>9} {:>9}  completion", "agent", "tok", "queue(s)", "e2e(s)");
+    println!("{}", "-".repeat(78));
+    for r in &responses {
+        println!(
+            "{:<18} {:>5} {:>9.4} {:>9.4}  {:?}",
+            r.agent,
+            r.output_tokens,
+            r.queue_seconds,
+            r.e2e_seconds,
+            &r.completion[..r.completion.len().min(24)]
+        );
+    }
+    println!("\n== summary ==");
+    println!("requests served     : {}", stats.n_requests);
+    println!("tokens generated    : {}", stats.total_tokens);
+    println!("wall time           : {:.3} s", stats.wall_seconds);
+    println!("throughput          : {:.1} tok/s", stats.tokens_per_second);
+    println!("mean e2e latency    : {:.4} s", stats.mean_e2e);
+    println!("p90 e2e latency     : {:.4} s", stats.p90_e2e);
+    println!("PJRT compute time   : {:.3} s", stats.compute_seconds);
+    assert_eq!(stats.n_requests, prompts.len(), "every request must complete");
+    println!("\nquickstart OK — all layers (Pallas→JAX→HLO→PJRT→rust engine) composed.");
+    Ok(())
+}

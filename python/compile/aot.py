@@ -1,0 +1,157 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per model config ``<name>``:
+  artifacts/<name>_prefill.hlo.txt   (tokens[B,S], seq_lens[B], kv) -> tuple
+  artifacts/<name>_decode.hlo.txt    (tokens[B],   seq_lens[B], kv) -> tuple
+  artifacts/<name>_manifest.json     static shapes the rust side validates
+
+Both entry points return ``(logits, next_token, kv_cache)`` lowered with
+``return_tuple=True``; the rust side unwraps the 3-tuple.
+
+Usage: ``python -m compile.aot --out ../artifacts [--models tiny,micro]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked model weights ARE large constants; the
+    # default printer elides them as `{...}` which the rust-side text parser
+    # would silently zero-fill.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def lower_entry_points(cfg: ModelConfig):
+    """Lower prefill and decode for ``cfg``; returns (prefill_txt, decode_txt).
+
+    Weights are created here and closed over, so they are constants in the
+    emitted HLO (donated-arg style weight threading would force the rust side
+    to carry ~1MB literals per call instead).
+    """
+    weights = model.init_weights(cfg)
+
+    prefill_fn = functools.partial(model.prefill, cfg, weights)
+    decode_fn = functools.partial(model.decode_step, cfg, weights)
+
+    tokens2d = jax.ShapeDtypeStruct((cfg.batch, cfg.max_seq), jnp.int32)
+    tokens1d = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    lens = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    kv = jax.ShapeDtypeStruct(
+        (cfg.n_layers, 2, cfg.batch, cfg.max_seq, cfg.n_heads, cfg.head_dim),
+        jnp.float32,
+    )
+
+    prefill_txt = to_hlo_text(jax.jit(prefill_fn).lower(tokens2d, lens, kv))
+    decode_txt = to_hlo_text(jax.jit(decode_fn).lower(tokens1d, lens, kv))
+    return prefill_txt, decode_txt
+
+
+def manifest_for(cfg: ModelConfig) -> dict:
+    """Static metadata the rust runtime validates against at load time."""
+    return {
+        "name": cfg.name,
+        "vocab_size": cfg.vocab_size,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "head_dim": cfg.head_dim,
+        "d_ff": cfg.d_ff,
+        "max_seq": cfg.max_seq,
+        "batch": cfg.batch,
+        "seed": cfg.seed,
+        "kv_cache_shape": [
+            cfg.n_layers, 2, cfg.batch, cfg.max_seq, cfg.n_heads, cfg.head_dim,
+        ],
+        "outputs": ["logits", "next_token", "kv_cache"],
+        "prefill_hlo": f"{cfg.name}_prefill.hlo.txt",
+        "decode_hlo": f"{cfg.name}_decode.hlo.txt",
+    }
+
+
+def golden_for(cfg: ModelConfig, steps: int = 6) -> dict:
+    """Reference greedy generation the rust runtime must reproduce exactly.
+
+    A fixed prompt per batch row is prefilled and decoded ``steps`` times in
+    python; the rust integration test replays the same calls through PJRT
+    and compares token-for-token.
+    """
+    import jax.numpy as jnp
+
+    weights = model.init_weights(cfg)
+    prompts = [
+        [(7 * i + 3 * b) % cfg.vocab_size for i in range(2 + b)]
+        for b in range(cfg.batch)
+    ]
+    tokens = jnp.zeros((cfg.batch, cfg.max_seq), jnp.int32)
+    lens = []
+    for b, p in enumerate(prompts):
+        tokens = tokens.at[b, : len(p)].set(jnp.array(p, jnp.int32))
+        lens.append(len(p))
+    seq_lens = jnp.array(lens, jnp.int32)
+    cache = model.empty_cache(cfg)
+    logits, nxt, cache = model.prefill(cfg, weights, tokens, seq_lens, cache)
+    generated = [[int(t)] for t in nxt]
+    cur_lens = seq_lens
+    cur = nxt
+    for _ in range(steps - 1):
+        _, cur, cache = model.decode_step(cfg, weights, cur, cur_lens, cache)
+        cur_lens = cur_lens + 1
+        for b in range(cfg.batch):
+            generated[b].append(int(cur[b]))
+    return {"prompts": prompts, "steps": steps, "generated": generated}
+
+
+def build(out_dir: str, names) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name in names:
+        cfg = CONFIGS[name]
+        prefill_txt, decode_txt = lower_entry_points(cfg)
+        paths = {
+            f"{cfg.name}_prefill.hlo.txt": prefill_txt,
+            f"{cfg.name}_decode.hlo.txt": decode_txt,
+            f"{cfg.name}_manifest.json": json.dumps(manifest_for(cfg), indent=2),
+            f"{cfg.name}_golden.json": json.dumps(golden_for(cfg)),
+        }
+        for fname, text in paths.items():
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--models", default="tiny,micro", help="comma-separated config names"
+    )
+    args = parser.parse_args()
+    build(args.out, [n for n in args.models.split(",") if n])
+
+
+if __name__ == "__main__":
+    main()

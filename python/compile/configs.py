@@ -1,0 +1,66 @@
+"""Model configurations for the tiny served LM.
+
+The rust coordinator serves AOT-compiled variants of this model through PJRT.
+Shapes are static (PJRT executables are monomorphic): one (batch, max_seq)
+pair per artifact set. ``tiny`` is the default end-to-end model; ``micro`` is
+an even smaller variant used by fast tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static hyper-parameters of the served decoder-only LM."""
+
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    head_dim: int
+    d_ff: int
+    max_seq: int  # KV-cache capacity (prompt + generated tokens)
+    batch: int  # static engine batch width
+    seed: int = 0  # PRNG seed the weights are derived from
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        """f32 K+V bytes per token across all layers (one sequence)."""
+        return 2 * 4 * self.n_layers * self.n_heads * self.head_dim
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        per_layer = 4 * d * self.n_heads * self.head_dim + 3 * d * f + 2 * d
+        return v * d + self.max_seq * d + self.n_layers * per_layer + d + d * v
+
+
+TINY = ModelConfig(
+    name="tiny",
+    vocab_size=256,
+    d_model=64,
+    n_layers=2,
+    n_heads=4,
+    head_dim=16,
+    d_ff=256,
+    max_seq=64,
+    batch=4,
+    seed=0,
+)
+
+MICRO = ModelConfig(
+    name="micro",
+    vocab_size=64,
+    d_model=32,
+    n_layers=1,
+    n_heads=2,
+    head_dim=16,
+    d_ff=64,
+    max_seq=16,
+    batch=2,
+    seed=1,
+)
+
+CONFIGS = {c.name: c for c in (TINY, MICRO)}

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the Kairos tiny served model.
+
+Two fused kernels cover the decode hot path of the served LM:
+
+- :mod:`attention` -- single-step decode attention over an explicit KV cache
+  with per-sequence length masking (the vLLM hot spot the paper serves).
+- :mod:`swiglu` -- fused SwiGLU feed-forward for the decode step.
+
+Both are authored for TPU (VMEM tiling via BlockSpec, MXU-shaped matmuls) but
+executed with ``interpret=True`` on this CPU-only image; numerics are verified
+against the pure-jnp oracles in :mod:`ref` by pytest.
+"""

@@ -1,0 +1,104 @@
+"""Fused decode-attention Pallas kernel.
+
+Single-token decode: each sequence in the batch attends from one query token
+over its KV cache prefix (``seq_lens[b]`` valid positions), producing the
+attention output for that token. This is the per-step hot spot of a
+continuous-batching LLM engine (what vLLM's paged-attention kernel does on
+CUDA).
+
+TPU adaptation (DESIGN.md #Hardware-Adaptation): instead of a CUDA
+threadblock per sequence with shared-memory staging, the grid iterates
+(batch,) and the BlockSpec stages each sequence's full KV prefix into VMEM;
+masking is an in-register iota-vs-length compare; the QK^T and PV contractions
+are jnp.dot's that land on the MXU when compiled for TPU. On this image the
+kernel always runs with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls), so the lowered HLO is plain ops executable by the rust PJRT
+CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Softmax numerics: subtract the row max before exp. Masked positions get
+# this large negative bias so they contribute ~0 after exp.
+_NEG_INF = -1e30
+
+
+def _decode_attention_kernel(seq_len_ref, q_ref, k_ref, v_ref, o_ref, *, scale):
+    """Kernel body for one batch element.
+
+    Block shapes (leading batch dim squeezed via ``None`` in the BlockSpec):
+      seq_len_ref: (1,)      int32   -- valid KV prefix length for this seq
+      q_ref:       (H, D)    float   -- query for the current token
+      k_ref:       (S, H, D) float   -- key cache (padded to max len S)
+      v_ref:       (S, H, D) float   -- value cache
+      o_ref:       (H, D)    float   -- attention output
+    """
+    q = q_ref[...].astype(jnp.float32)  # (H, D)
+    k = k_ref[...].astype(jnp.float32)  # (S, H, D)
+    v = v_ref[...].astype(jnp.float32)  # (S, H, D)
+    seq_len = seq_len_ref[0]
+
+    # scores[h, s] = scale * <q[h, :], k[s, h, :]>
+    scores = jnp.einsum("hd,shd->hs", q, k) * scale  # (H, S)
+
+    # Mask out positions >= seq_len (padding / not-yet-written cache slots).
+    positions = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)  # (H, S)
+    mask = positions < seq_len
+    scores = jnp.where(mask, scores, _NEG_INF)
+
+    # Numerically stable softmax over the key axis.
+    m = jnp.max(scores, axis=1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p, axis=1, keepdims=True)
+    # seq_len >= 1 always holds for live sequences, but guard anyway.
+    p = p / jnp.maximum(denom, 1e-30)
+
+    # out[h, d] = sum_s p[h, s] * v[s, h, d]
+    out = jnp.einsum("hs,shd->hd", p, v)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k_cache, v_cache, seq_lens, *, interpret=True):
+    """Single-step decode attention over a padded KV cache.
+
+    Args:
+      q:        (B, H, D)     queries for the token being decoded.
+      k_cache:  (B, S, H, D)  key cache; rows >= seq_lens[b] are padding.
+      v_cache:  (B, S, H, D)  value cache.
+      seq_lens: (B,) int32    number of valid cache rows per sequence
+                              (includes the current token's K/V, already
+                              written by the caller).
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      (B, H, D) attention outputs, same dtype as ``q``.
+    """
+    batch, num_heads, head_dim = q.shape
+    _, max_len, kh, kd = k_cache.shape
+    assert (kh, kd) == (num_heads, head_dim), "KV cache head shape mismatch"
+    assert v_cache.shape == k_cache.shape, "K and V cache shapes must match"
+    assert seq_lens.shape == (batch,), "seq_lens must be (B,)"
+    scale = 1.0 / (head_dim**0.5)
+
+    kernel = functools.partial(_decode_attention_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b: (b,)),  # per-seq length
+            pl.BlockSpec((None, num_heads, head_dim), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, max_len, num_heads, head_dim), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((None, max_len, num_heads, head_dim), lambda b: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, num_heads, head_dim), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, num_heads, head_dim), q.dtype),
+        interpret=interpret,
+    )(seq_lens, q, k_cache, v_cache)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite compares the kernels against.
+They deliberately avoid Pallas and any fused tricks: plain masked softmax
+attention and a three-matmul SwiGLU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, seq_lens):
+    """Reference single-step decode attention.
+
+    Args mirror :func:`kernels.attention.decode_attention`.
+    """
+    batch, num_heads, head_dim = q.shape
+    _, max_len, _, _ = k_cache.shape
+    scale = 1.0 / (head_dim**0.5)
+
+    qf = q.astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+
+    scores = jnp.einsum("bhd,bshd->bhs", qf, kf) * scale  # (B, H, S)
+    positions = jnp.arange(max_len, dtype=jnp.int32)[None, None, :]
+    mask = positions < seq_lens[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(mask, probs, 0.0)  # handle all-masked rows -> NaN guard
+    out = jnp.einsum("bhs,bshd->bhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def swiglu_ffn_ref(x, w_gate, w_up, w_down):
+    """Reference SwiGLU FFN: ``silu(x @ w_gate) * (x @ w_up) @ w_down``."""
+    xf = x.astype(jnp.float32)
+    gate = xf @ w_gate.astype(jnp.float32)
+    up = xf @ w_up.astype(jnp.float32)
+    hidden = jax.nn.silu(gate) * up
+    out = hidden @ w_down.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def causal_attention_ref(q, k, v, seq_lens):
+    """Reference full (prefill) causal attention with padding mask.
+
+    Args:
+      q, k, v:  (B, S, H, D)
+      seq_lens: (B,) valid token counts; positions >= seq_lens are padding.
+
+    Returns:
+      (B, S, H, D); rows at padded positions are zeros.
+    """
+    batch, max_len, num_heads, head_dim = q.shape
+    scale = 1.0 / (head_dim**0.5)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) * scale
+    qpos = jnp.arange(max_len)[None, None, :, None]
+    kpos = jnp.arange(max_len)[None, None, None, :]
+    causal = kpos <= qpos
+    valid = kpos < seq_lens[:, None, None, None]
+    mask = causal & valid
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(mask, probs, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    row_valid = (jnp.arange(max_len)[None, :] < seq_lens[:, None])[:, :, None, None]
+    return jnp.where(row_valid, out, 0.0).astype(q.dtype)

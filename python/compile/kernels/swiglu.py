@@ -1,0 +1,91 @@
+"""Fused SwiGLU feed-forward Pallas kernel for the decode step.
+
+Computes ``down( silu(x @ W_gate) * (x @ W_up) )`` in one kernel so the two
+projection results never round-trip through HBM. On TPU the three matmuls are
+MXU-shaped contractions over (D, F) / (F, D) tiles staged into VMEM by the
+BlockSpec; here it runs under ``interpret=True``.
+
+The decode step has a single token per sequence, so the activation block is
+(B, D) -- small enough to keep entirely in VMEM alongside one (D, F) weight
+tile; the grid is therefore trivial (single program) for the tiny model, but
+the kernel is written to block over the FFN dimension so larger F would still
+fit VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    """One grid step: a block of the FFN dimension.
+
+    Block shapes (F blocked into chunks of Fb):
+      x_ref:  (B, D)   activations (whole batch; decode step = 1 tok/seq)
+      wg_ref: (D, Fb)  gate projection tile
+      wu_ref: (D, Fb)  up projection tile
+      wd_ref: (Fb, D)  down projection tile
+      o_ref:  (B, D)   output; the block mapping is constant across the
+                       grid, so it stays resident in VMEM and doubles as the
+                       accumulator across F blocks.
+    """
+    fb = pl.program_id(0)
+
+    x = x_ref[...].astype(jnp.float32)
+    gate = x @ wg_ref[...].astype(jnp.float32)  # (B, Fb) -> MXU
+    up = x @ wu_ref[...].astype(jnp.float32)  # (B, Fb) -> MXU
+    hidden = jax.nn.silu(gate) * up
+    partial = hidden @ wd_ref[...].astype(jnp.float32)  # (B, D) -> MXU
+
+    @pl.when(fb == 0)
+    def _init():
+        o_ref[...] = partial.astype(o_ref.dtype)
+
+    @pl.when(fb != 0)
+    def _accum():
+        o_ref[...] += partial.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def swiglu_ffn(x, w_gate, w_up, w_down, *, block_f=None, interpret=True):
+    """Fused SwiGLU FFN: ``silu(x @ w_gate) * (x @ w_up) @ w_down``.
+
+    Args:
+      x:      (B, D)  input activations.
+      w_gate: (D, F)  gate projection.
+      w_up:   (D, F)  up projection.
+      w_down: (F, D)  down projection.
+      block_f: FFN-dimension block size (defaults to min(F, 128)); must
+               divide F.
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      (B, D) output, same dtype as ``x``.
+    """
+    batch, d_model = x.shape
+    d_in, d_ff = w_gate.shape
+    assert d_in == d_model, "w_gate shape mismatch"
+    assert w_up.shape == (d_model, d_ff), "w_up shape mismatch"
+    assert w_down.shape == (d_ff, d_model), "w_down shape mismatch"
+    if block_f is None:
+        block_f = min(d_ff, 128)
+    assert d_ff % block_f == 0, "block_f must divide the FFN dimension"
+    n_blocks = d_ff // block_f
+
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((batch, d_model), lambda f: (0, 0)),
+            pl.BlockSpec((d_model, block_f), lambda f: (0, f)),
+            pl.BlockSpec((d_model, block_f), lambda f: (0, f)),
+            pl.BlockSpec((block_f, d_model), lambda f: (f, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, d_model), lambda f: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, d_model), x.dtype),
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)

@@ -1,0 +1,184 @@
+"""Layer-2: the tiny Llama-style decoder LM served by the rust coordinator.
+
+Two jittable entry points over an explicit, caller-owned KV cache:
+
+- :func:`prefill` -- run the (padded) prompt through the model, write the
+  prompt's K/V into the cache, return next-token logits per sequence.
+- :func:`decode_step` -- run ONE token per sequence, append its K/V to the
+  cache, return logits. The attention and FFN of this hot path go through the
+  Layer-1 Pallas kernels.
+
+Design notes:
+- Weights are derived from a PRNG seed and **closed over** at lowering time,
+  so they appear as constants in the AOT HLO and the rust binary needs no
+  weight files.
+- Shapes are static; sequences shorter than ``max_seq`` are padded and
+  masked via ``seq_lens``.
+- Positional encoding is a learned embedding (simpler than RoPE and
+  irrelevant to the serving experiments).
+- All caches are functional: entry points return the updated cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.attention import decode_attention
+from .kernels.ref import causal_attention_ref
+from .kernels.swiglu import swiglu_ffn
+
+
+def init_weights(cfg: ModelConfig):
+    """Deterministic weight pytree from ``cfg.seed``."""
+    key = jax.random.PRNGKey(cfg.seed)
+    d, h, hd, f, v = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff, cfg.vocab_size
+
+    def dense(key, shape, scale=None):
+        if scale is None:
+            scale = 1.0 / (shape[0] ** 0.5)
+        return jax.random.normal(key, shape, jnp.float32) * scale
+
+    n_keys = 3 + 8 * cfg.n_layers
+    keys = iter(jax.random.split(key, n_keys))
+    weights = {
+        "tok_emb": dense(next(keys), (v, d), scale=0.02),
+        "pos_emb": dense(next(keys), (cfg.max_seq, d), scale=0.02),
+        "layers": [],
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": dense(next(keys), (d, v)),
+    }
+    for _ in range(cfg.n_layers):
+        weights["layers"].append(
+            {
+                "attn_norm": jnp.ones((d,), jnp.float32),
+                "wq": dense(next(keys), (d, h * hd)),
+                "wk": dense(next(keys), (d, h * hd)),
+                "wv": dense(next(keys), (d, h * hd)),
+                "wo": dense(next(keys), (h * hd, d)),
+                "ffn_norm": jnp.ones((d,), jnp.float32),
+                "w_gate": dense(next(keys), (d, f)),
+                "w_up": dense(next(keys), (d, f)),
+                "w_down": dense(next(keys), (f, d)),
+            }
+        )
+    return weights
+
+
+def rms_norm(x, gamma, eps=1e-5):
+    """RMSNorm over the trailing feature axis."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * gamma).astype(x.dtype)
+
+
+def empty_cache(cfg: ModelConfig):
+    """Fresh zeroed KV cache: (layers, 2, B, S, H, D) as one array."""
+    return jnp.zeros(
+        (cfg.n_layers, 2, cfg.batch, cfg.max_seq, cfg.n_heads, cfg.head_dim),
+        jnp.float32,
+    )
+
+
+def prefill(cfg: ModelConfig, weights, tokens, seq_lens, kv_cache):
+    """Process padded prompts; returns (logits, next_token, new_cache).
+
+    Args:
+      tokens:   (B, S) int32 prompt tokens, padded with anything.
+      seq_lens: (B,) int32 valid prompt lengths (>= 1 for live rows).
+      kv_cache: (L, 2, B, S, H, D) cache to (re)write.
+
+    Returns:
+      logits:     (B, V) logits for the token after each prompt.
+      next_token: (B,) int32 greedy argmax.
+      kv_cache:   updated cache with prompt K/V written at [0, seq_len).
+    """
+    b, s = tokens.shape
+    assert (b, s) == (cfg.batch, cfg.max_seq)
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    pos = jnp.arange(s)
+    x = weights["tok_emb"][tokens] + weights["pos_emb"][None, pos]
+
+    for li, layer in enumerate(weights["layers"]):
+        xn = rms_norm(x, layer["attn_norm"])
+        q = (xn @ layer["wq"]).reshape(b, s, h, hd)
+        k = (xn @ layer["wk"]).reshape(b, s, h, hd)
+        v = (xn @ layer["wv"]).reshape(b, s, h, hd)
+        kv_cache = kv_cache.at[li, 0].set(k)
+        kv_cache = kv_cache.at[li, 1].set(v)
+        attn = causal_attention_ref(q, k, v, seq_lens)
+        x = x + attn.reshape(b, s, h * hd) @ layer["wo"]
+        xn = rms_norm(x, layer["ffn_norm"])
+        hidden = jax.nn.silu(xn @ layer["w_gate"]) * (xn @ layer["w_up"])
+        x = x + hidden @ layer["w_down"]
+
+    x = rms_norm(x, weights["final_norm"])
+    # Gather the hidden state at the last valid position of each sequence.
+    last = jnp.clip(seq_lens - 1, 0, s - 1)
+    x_last = x[jnp.arange(b), last]  # (B, D)
+    logits = x_last @ weights["lm_head"]
+    return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), kv_cache
+
+
+def decode_step(cfg: ModelConfig, weights, tokens, seq_lens, kv_cache):
+    """Decode ONE token per sequence through the Pallas hot path.
+
+    Args:
+      tokens:   (B,) int32 current input token per sequence.
+      seq_lens: (B,) int32 number of cache rows already valid (i.e. the
+                position this token will be written to).
+      kv_cache: (L, 2, B, S, H, D).
+
+    Returns:
+      logits:     (B, V)
+      next_token: (B,) int32 greedy argmax.
+      kv_cache:   cache with this token's K/V appended at ``seq_lens``.
+    """
+    b = tokens.shape[0]
+    assert b == cfg.batch
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    pos = jnp.clip(seq_lens, 0, cfg.max_seq - 1)
+    x = weights["tok_emb"][tokens] + weights["pos_emb"][pos]  # (B, D)
+
+    rows = jnp.arange(b)
+    for li, layer in enumerate(weights["layers"]):
+        xn = rms_norm(x, layer["attn_norm"])
+        q = (xn @ layer["wq"]).reshape(b, h, hd)
+        k = (xn @ layer["wk"]).reshape(b, h, hd)
+        v = (xn @ layer["wv"]).reshape(b, h, hd)
+        kv_cache = kv_cache.at[li, 0, rows, pos].set(k)
+        kv_cache = kv_cache.at[li, 1, rows, pos].set(v)
+        # Attend over the prefix INCLUDING the token just written.
+        attn = decode_attention(q, kv_cache[li, 0], kv_cache[li, 1], seq_lens + 1)
+        x = x + attn.reshape(b, h * hd) @ layer["wo"]
+        xn = rms_norm(x, layer["ffn_norm"])
+        x = x + swiglu_ffn(xn, layer["w_gate"], layer["w_up"], layer["w_down"])
+
+    x = rms_norm(x, weights["final_norm"])
+    logits = x @ weights["lm_head"]
+    return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), kv_cache
+
+
+def full_forward_logits(cfg: ModelConfig, weights, tokens, seq_lens):
+    """Oracle: next-token logits at EVERY position via one full forward.
+
+    Used by tests to check prefill+decode consistency. Returns (B, S, V).
+    """
+    b, s = tokens.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    pos = jnp.arange(s)
+    x = weights["tok_emb"][tokens] + weights["pos_emb"][None, pos]
+    for layer in weights["layers"]:
+        xn = rms_norm(x, layer["attn_norm"])
+        q = (xn @ layer["wq"]).reshape(b, s, h, hd)
+        k = (xn @ layer["wk"]).reshape(b, s, h, hd)
+        v = (xn @ layer["wv"]).reshape(b, s, h, hd)
+        attn = causal_attention_ref(q, k, v, seq_lens)
+        x = x + attn.reshape(b, s, h * hd) @ layer["wo"]
+        xn = rms_norm(x, layer["ffn_norm"])
+        hidden = jax.nn.silu(xn @ layer["w_gate"]) * (xn @ layer["w_up"])
+        x = x + hidden @ layer["w_down"]
+    x = rms_norm(x, weights["final_norm"])
+    return x @ weights["lm_head"]

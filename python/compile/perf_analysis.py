@@ -1,0 +1,90 @@
+"""L1/L2 performance analysis (EXPERIMENTS.md §Perf).
+
+Pallas interpret=True gives CPU-numpy timings that say nothing about TPU
+performance, so the L1 analysis is *structural*: per-kernel VMEM footprint
+and MXU utilization estimates from the BlockSpecs, plus an HLO op census of
+the lowered L2 module (fusion/redundancy check).
+
+Usage: ``python -m compile.perf_analysis``
+"""
+
+from __future__ import annotations
+
+import collections
+import re
+
+from . import aot
+from .configs import CONFIGS
+
+MXU_DIM = 128  # TPU systolic array is 128x128
+VMEM_BYTES = 16 * 2**20  # ~16 MiB per TensorCore
+
+
+def attention_kernel_stats(cfg):
+    """Decode-attention kernel: one grid step = one sequence."""
+    h, d, s = cfg.n_heads, cfg.head_dim, cfg.max_seq
+    f32 = 4
+    vmem = (
+        h * d * f32  # q block
+        + 2 * s * h * d * f32  # k + v blocks
+        + h * d * f32  # out block
+        + 2 * h * s * f32  # scores + probs intermediates
+    )
+    # MXU work per step: QK^T (h*d*s MACs) + PV (h*s*d MACs); the
+    # contraction dims (d=16, s<=64) underfill the 128x128 array -> ratio.
+    util = min(d / MXU_DIM, 1.0) * min(h / 8.0, 1.0)
+    return vmem, util
+
+
+def swiglu_kernel_stats(cfg, block_f=128):
+    b, dm, f = cfg.batch, cfg.d_model, cfg.d_ff
+    block_f = min(block_f, f)
+    f32 = 4
+    vmem = (
+        b * dm * f32  # x block
+        + 2 * dm * block_f * f32  # gate + up tiles
+        + block_f * dm * f32  # down tile
+        + b * dm * f32  # out/acc
+        + 2 * b * block_f * f32  # gate/up intermediates
+    )
+    # Matmul shapes (b x dm) @ (dm x block_f): contraction dm=64 of 128.
+    util = min(dm / MXU_DIM, 1.0) * min(block_f / MXU_DIM, 1.0)
+    return vmem, util
+
+
+def hlo_census(text: str) -> dict:
+    ops = collections.Counter()
+    for m in re.finditer(r"=\s+\w+\[[^\]]*\]\{?[^}]*\}?\s+([a-z-]+)\(", text):
+        ops[m.group(1)] += 1
+    return dict(ops)
+
+
+def main() -> None:
+    for name in ("tiny",):
+        cfg = CONFIGS[name]
+        print(f"== {name}: L1 kernel structure ==")
+        vmem, util = attention_kernel_stats(cfg)
+        print(
+            f"decode-attention: VMEM/block {vmem/1024:.1f} KiB "
+            f"({vmem/VMEM_BYTES*100:.2f}% of VMEM), MXU fill ~{util*100:.0f}%"
+        )
+        for bf in (64, 128, 256):
+            vmem, util = swiglu_kernel_stats(cfg, bf)
+            print(
+                f"swiglu block_f={bf:<4}: VMEM/block {vmem/1024:.1f} KiB "
+                f"({vmem/VMEM_BYTES*100:.2f}%), MXU fill ~{util*100:.0f}%"
+            )
+
+        print(f"\n== {name}: L2 HLO census ==")
+        prefill_txt, decode_txt = aot.lower_entry_points(cfg)
+        for kind, text in (("prefill", prefill_txt), ("decode", decode_txt)):
+            ops = hlo_census(text)
+            total = sum(ops.values())
+            top = sorted(ops.items(), key=lambda kv: -kv[1])[:8]
+            print(f"{kind}: {total} ops; top: {top}")
+            fused = ops.get("fusion", 0)
+            print(f"  fusions: {fused}; custom-calls: {ops.get('custom-call', 0)} (must be 0)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Shared fixtures for the python test suite."""
+
+import jax
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="session")
+def micro_cfg():
+    return CONFIGS["micro"]
+
+
+@pytest.fixture(scope="session")
+def tiny_weights(tiny_cfg):
+    return model.init_weights(tiny_cfg)
+
+
+@pytest.fixture(scope="session")
+def micro_weights(micro_cfg):
+    return model.init_weights(micro_cfg)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(1234)

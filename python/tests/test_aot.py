@@ -1,0 +1,72 @@
+"""AOT lowering: artifacts are well-formed HLO text with the right interface."""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def micro_texts():
+    return aot.lower_entry_points(CONFIGS["micro"])
+
+
+def test_entry_has_three_params_and_tuple_root(micro_texts):
+    cfg = CONFIGS["micro"]
+    for text, tok_shape in zip(micro_texts, [f"s32[{cfg.batch},{cfg.max_seq}]", f"s32[{cfg.batch}]"]):
+        entry = text[text.index("ENTRY") :]
+        params = re.findall(r"parameter\(\d+\)", entry)
+        assert len(params) == 3, "expects (tokens, seq_lens, kv_cache)"
+        assert tok_shape in entry
+        assert "ROOT" in entry and "tuple(" in entry
+
+
+def test_no_elided_constants(micro_texts):
+    for text in micro_texts:
+        assert "{...}" not in text
+
+
+def test_no_custom_calls(micro_texts):
+    """interpret=True must lower Pallas to plain HLO (no Mosaic custom-call)."""
+    for text in micro_texts:
+        assert "custom-call" not in text, "CPU PJRT cannot run Mosaic custom-calls"
+
+
+def test_manifest_round_trip(tmp_path):
+    aot_dir = str(tmp_path)
+    cfg = CONFIGS["micro"]
+    manifest = aot.manifest_for(cfg)
+    path = os.path.join(aot_dir, "m.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f)
+    with open(path) as f:
+        back = json.load(f)
+    assert back["batch"] == cfg.batch
+    assert back["kv_cache_shape"] == [
+        cfg.n_layers, 2, cfg.batch, cfg.max_seq, cfg.n_heads, cfg.head_dim,
+    ]
+    assert back["outputs"] == ["logits", "next_token", "kv_cache"]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "tiny_manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_artifacts_consistent():
+    for name in ("tiny", "micro"):
+        with open(os.path.join(ART, f"{name}_manifest.json")) as f:
+            m = json.load(f)
+        cfg = CONFIGS[name]
+        assert m["batch"] == cfg.batch and m["max_seq"] == cfg.max_seq
+        for kind in ("prefill", "decode"):
+            p = os.path.join(ART, m[f"{kind}_hlo"])
+            assert os.path.exists(p)
+            with open(p) as f:
+                text = f.read()
+            assert "ENTRY" in text and "{...}" not in text

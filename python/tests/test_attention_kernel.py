@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas decode-attention kernel vs pure-jnp oracle.
+
+Parametrized sweeps over shapes, dtypes, seeds and sequence-length patterns
+stand in for hypothesis (not installed on this image).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.attention import decode_attention
+from compile.kernels.ref import decode_attention_ref
+
+SHAPES = [
+    # (batch, heads, head_dim, max_len)
+    (1, 1, 8, 4),
+    (2, 2, 16, 16),
+    (4, 4, 16, 64),
+    (3, 5, 32, 33),  # deliberately non-power-of-two
+    (8, 2, 64, 128),
+]
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def make_inputs(key, batch, heads, head_dim, max_len, dtype, len_pattern):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (batch, heads, head_dim), dtype)
+    k = jax.random.normal(ks[1], (batch, max_len, heads, head_dim), dtype)
+    v = jax.random.normal(ks[2], (batch, max_len, heads, head_dim), dtype)
+    if len_pattern == "ones":
+        lens = jnp.ones((batch,), jnp.int32)
+    elif len_pattern == "full":
+        lens = jnp.full((batch,), max_len, jnp.int32)
+    elif len_pattern == "random":
+        lens = jax.random.randint(ks[3], (batch,), 1, max_len + 1).astype(jnp.int32)
+    elif len_pattern == "mixed":
+        base = [1, max_len, max(1, max_len // 2), max(1, max_len // 3)]
+        lens = jnp.array([base[i % 4] for i in range(batch)], jnp.int32)
+    else:
+        raise ValueError(len_pattern)
+    return q, k, v, lens
+
+
+def tolerances(dtype):
+    return (2e-2, 2e-2) if dtype == jnp.bfloat16 else (1e-5, 1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: d.__name__)
+@pytest.mark.parametrize("len_pattern", ["ones", "full", "random", "mixed"])
+def test_kernel_matches_ref(key, shape, dtype, len_pattern):
+    q, k, v, lens = make_inputs(key, *shape, dtype, len_pattern)
+    got = decode_attention(q, k, v, lens)
+    want = decode_attention_ref(q, k, v, lens)
+    rtol, atol = tolerances(dtype)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=rtol, atol=atol
+    )
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_kernel_matches_ref_seed_sweep(seed):
+    key = jax.random.PRNGKey(seed)
+    q, k, v, lens = make_inputs(key, 4, 4, 16, 32, jnp.float32, "random")
+    got = decode_attention(q, k, v, lens)
+    want = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_output_shape_and_dtype(key):
+    q, k, v, lens = make_inputs(key, 4, 4, 16, 32, jnp.float32, "random")
+    out = decode_attention(q, k, v, lens)
+    assert out.shape == q.shape
+    assert out.dtype == q.dtype
+
+
+def test_len_one_attends_only_first_position(key):
+    """With seq_len == 1 the output must equal v[:, 0] exactly."""
+    q, k, v, _ = make_inputs(key, 4, 4, 16, 32, jnp.float32, "random")
+    lens = jnp.ones((4,), jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v[:, 0]), rtol=1e-6, atol=1e-6)
+
+
+def test_padding_is_ignored(key):
+    """Garbage beyond seq_len must not change the result."""
+    q, k, v, lens = make_inputs(key, 4, 4, 16, 32, jnp.float32, "mixed")
+    out1 = decode_attention(q, k, v, lens)
+    mask = (jnp.arange(32)[None, :, None, None] < lens[:, None, None, None])
+    k2 = jnp.where(mask, k, 1e6)
+    v2 = jnp.where(mask, v, -1e6)
+    out2 = decode_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6, atol=1e-6)
+
+
+def test_softmax_convexity(key):
+    """Attention output lies in the convex hull of the valid V rows."""
+    q, k, v, lens = make_inputs(key, 4, 4, 16, 32, jnp.float32, "random")
+    out = np.asarray(decode_attention(q, k, v, lens))
+    vn = np.asarray(v)
+    ln = np.asarray(lens)
+    for b in range(4):
+        valid = vn[b, : ln[b]]  # (s, h, d)
+        lo = valid.min(axis=0) - 1e-5
+        hi = valid.max(axis=0) + 1e-5
+        assert (out[b] >= lo).all() and (out[b] <= hi).all()
+
+
+def test_scale_invariance_of_uniform_keys(key):
+    """If all valid keys are identical, output is the mean of valid values."""
+    batch, heads, hd, s = 2, 3, 8, 16
+    q = jax.random.normal(key, (batch, heads, hd), jnp.float32)
+    k = jnp.ones((batch, s, heads, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(7), (batch, s, heads, hd), jnp.float32)
+    lens = jnp.array([4, 16], jnp.int32)
+    out = np.asarray(decode_attention(q, k, v, lens))
+    for b, l in enumerate([4, 16]):
+        want = np.asarray(v)[b, :l].mean(axis=0)
+        np.testing.assert_allclose(out[b], want, rtol=1e-5, atol=1e-5)
+
+
+def test_deterministic(key):
+    q, k, v, lens = make_inputs(key, 4, 4, 16, 32, jnp.float32, "random")
+    a = decode_attention(q, k, v, lens)
+    b = decode_attention(q, k, v, lens)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

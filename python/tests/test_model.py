@@ -1,0 +1,131 @@
+"""L2 correctness: prefill/decode consistency against the full-forward oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def random_prompts(key, cfg, min_len=2):
+    ks = jax.random.split(key, 2)
+    tokens = jax.random.randint(
+        ks[0], (cfg.batch, cfg.max_seq), 0, cfg.vocab_size
+    ).astype(jnp.int32)
+    lens = jax.random.randint(
+        ks[1], (cfg.batch,), min_len, cfg.max_seq // 2
+    ).astype(jnp.int32)
+    return tokens, lens
+
+
+class TestPrefill:
+    def test_shapes(self, micro_cfg, micro_weights, key):
+        tokens, lens = random_prompts(key, micro_cfg)
+        cache = model.empty_cache(micro_cfg)
+        logits, nxt, cache = model.prefill(micro_cfg, micro_weights, tokens, lens, cache)
+        assert logits.shape == (micro_cfg.batch, micro_cfg.vocab_size)
+        assert nxt.shape == (micro_cfg.batch,)
+        assert cache.shape == (
+            micro_cfg.n_layers, 2, micro_cfg.batch, micro_cfg.max_seq,
+            micro_cfg.n_heads, micro_cfg.head_dim,
+        )
+
+    def test_matches_full_forward(self, tiny_cfg, tiny_weights, key):
+        tokens, lens = random_prompts(key, tiny_cfg)
+        cache = model.empty_cache(tiny_cfg)
+        logits, _, _ = model.prefill(tiny_cfg, tiny_weights, tokens, lens, cache)
+        oracle = model.full_forward_logits(tiny_cfg, tiny_weights, tokens, lens)
+        want = np.asarray(oracle)[np.arange(tiny_cfg.batch), np.asarray(lens) - 1]
+        np.testing.assert_allclose(np.asarray(logits), want, rtol=1e-4, atol=1e-4)
+
+    def test_padding_independence(self, micro_cfg, micro_weights, key):
+        """Tokens beyond seq_len must not affect the logits."""
+        tokens, lens = random_prompts(key, micro_cfg)
+        cache = model.empty_cache(micro_cfg)
+        l1, _, _ = model.prefill(micro_cfg, micro_weights, tokens, lens, cache)
+        pad_mask = jnp.arange(micro_cfg.max_seq)[None, :] >= lens[:, None]
+        tokens2 = jnp.where(pad_mask, (tokens + 7) % micro_cfg.vocab_size, tokens)
+        l2, _, _ = model.prefill(micro_cfg, micro_weights, tokens2, lens, cache)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5, atol=1e-5)
+
+    def test_greedy_token_is_argmax(self, micro_cfg, micro_weights, key):
+        tokens, lens = random_prompts(key, micro_cfg)
+        cache = model.empty_cache(micro_cfg)
+        logits, nxt, _ = model.prefill(micro_cfg, micro_weights, tokens, lens, cache)
+        np.testing.assert_array_equal(
+            np.asarray(nxt), np.argmax(np.asarray(logits), axis=-1)
+        )
+
+
+class TestDecodeStep:
+    def test_decode_after_prefill_matches_oracle(self, tiny_cfg, tiny_weights, key):
+        """THE core L2 invariant: prefill(prompt) then decode(next tokens)
+        reproduces the logits a full forward pass over the whole sequence
+        would produce at every step."""
+        cfg, weights = tiny_cfg, tiny_weights
+        tokens, lens = random_prompts(key, cfg)
+        cache = model.empty_cache(cfg)
+        logits, _, cache = model.prefill(cfg, weights, tokens, lens, cache)
+
+        n_steps = 4
+        cur_lens = lens
+        cur_tokens = tokens
+        for _ in range(n_steps):
+            step_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # Extend the oracle's token matrix at position cur_lens.
+            cur_tokens = cur_tokens.at[jnp.arange(cfg.batch), cur_lens].set(step_tok)
+            logits, _, cache = model.decode_step(
+                cfg, weights, step_tok, cur_lens, cache
+            )
+            cur_lens = cur_lens + 1
+            oracle = model.full_forward_logits(cfg, weights, cur_tokens, cur_lens)
+            want = np.asarray(oracle)[np.arange(cfg.batch), np.asarray(cur_lens) - 1]
+            np.testing.assert_allclose(
+                np.asarray(logits), want, rtol=2e-3, atol=2e-3
+            )
+
+    def test_cache_rows_untouched_beyond_position(self, micro_cfg, micro_weights, key):
+        cfg, weights = micro_cfg, micro_weights
+        tokens, lens = random_prompts(key, cfg)
+        cache = model.empty_cache(cfg)
+        _, nxt, cache = model.prefill(cfg, weights, tokens, lens, cache)
+        _, _, cache2 = model.decode_step(cfg, weights, nxt, lens, cache)
+        c1, c2 = np.asarray(cache), np.asarray(cache2)
+        for b in range(cfg.batch):
+            pos = int(np.asarray(lens)[b])
+            # rows strictly beyond the written position are unchanged
+            if pos + 1 < cfg.max_seq:
+                np.testing.assert_array_equal(
+                    c1[:, :, b, pos + 1 :], c2[:, :, b, pos + 1 :]
+                )
+
+    def test_deterministic(self, micro_cfg, micro_weights, key):
+        cfg, weights = micro_cfg, micro_weights
+        tokens, lens = random_prompts(key, cfg)
+        cache = model.empty_cache(cfg)
+        _, nxt, cache = model.prefill(cfg, weights, tokens, lens, cache)
+        l1, _, _ = model.decode_step(cfg, weights, nxt, lens, cache)
+        l2, _, _ = model.decode_step(cfg, weights, nxt, lens, cache)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+class TestWeights:
+    def test_deterministic_from_seed(self, tiny_cfg):
+        w1 = model.init_weights(tiny_cfg)
+        w2 = model.init_weights(tiny_cfg)
+        np.testing.assert_array_equal(np.asarray(w1["tok_emb"]), np.asarray(w2["tok_emb"]))
+        np.testing.assert_array_equal(
+            np.asarray(w1["layers"][0]["wq"]), np.asarray(w2["layers"][0]["wq"])
+        )
+
+    def test_layer_count(self, tiny_cfg):
+        w = model.init_weights(tiny_cfg)
+        assert len(w["layers"]) == tiny_cfg.n_layers
+
+    @pytest.mark.parametrize("name", ["tiny", "micro"])
+    def test_kv_bytes_per_token(self, name):
+        from compile.configs import CONFIGS
+
+        cfg = CONFIGS[name]
+        assert cfg.kv_bytes_per_token == 2 * 4 * cfg.n_layers * cfg.n_heads * cfg.head_dim

@@ -1,0 +1,76 @@
+"""L1 correctness: fused SwiGLU Pallas kernel vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import swiglu_ffn_ref
+from compile.kernels.swiglu import swiglu_ffn
+
+SHAPES = [
+    # (batch, d_model, d_ff)
+    (1, 16, 32),
+    (2, 32, 64),
+    (4, 64, 256),
+    (8, 64, 512),
+    (3, 48, 96),  # non-power-of-two
+]
+
+
+def make_inputs(key, batch, d_model, d_ff, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / (d_model**0.5)
+    x = jax.random.normal(ks[0], (batch, d_model), dtype)
+    wg = jax.random.normal(ks[1], (d_model, d_ff), dtype) * scale
+    wu = jax.random.normal(ks[2], (d_model, d_ff), dtype) * scale
+    wd = jax.random.normal(ks[3], (d_ff, d_model), dtype) * (1.0 / d_ff**0.5)
+    return x, wg, wu, wd
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_matches_ref(key, shape):
+    x, wg, wu, wd = make_inputs(key, *shape)
+    got = swiglu_ffn(x, wg, wu, wd)
+    want = swiglu_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("block_f", [16, 32, 64, 128, 256])
+def test_blocking_invariance(key, block_f):
+    """Result must not depend on the FFN block size."""
+    x, wg, wu, wd = make_inputs(key, 4, 64, 256)
+    got = swiglu_ffn(x, wg, wu, wd, block_f=block_f)
+    want = swiglu_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_seed_sweep(seed):
+    x, wg, wu, wd = make_inputs(jax.random.PRNGKey(seed), 4, 64, 256)
+    got = swiglu_ffn(x, wg, wu, wd)
+    want = swiglu_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_bf16(key):
+    x, wg, wu, wd = make_inputs(key, 4, 64, 256, dtype=jnp.bfloat16)
+    got = swiglu_ffn(x, wg, wu, wd)
+    want = swiglu_ffn_ref(x, wg, wu, wd)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_zero_input_gives_zero(key):
+    _, wg, wu, wd = make_inputs(key, 4, 64, 256)
+    x = jnp.zeros((4, 64), jnp.float32)
+    out = np.asarray(swiglu_ffn(x, wg, wu, wd))
+    np.testing.assert_allclose(out, np.zeros_like(out), atol=1e-7)
+
+
+def test_invalid_block_raises(key):
+    x, wg, wu, wd = make_inputs(key, 4, 64, 256)
+    with pytest.raises(AssertionError):
+        swiglu_ffn(x, wg, wu, wd, block_f=100)  # does not divide 256

@@ -1,0 +1,79 @@
+//! End-to-end figure benches: one reduced run per paper experiment family,
+//! timing the full simulation pipeline and printing the headline
+//! comparison (who wins, by what factor) — the `cargo bench` counterpart
+//! of `kairos figures`.
+//!
+//! Run: `cargo bench`.
+
+mod common;
+
+use common::bench;
+use kairos::agents::apps::App;
+use kairos::engine::cost_model::ModelKind;
+use kairos::server::sim::{run_system, SimConfig};
+use kairos::stats::rng::Rng;
+use kairos::workload::{TraceGen, WorkloadMix};
+
+fn trace(mix: &WorkloadMix, rate: f64, n: usize, seed: u64) -> Vec<kairos::workload::ArrivalEvent> {
+    TraceGen::default().generate(mix, rate, n, &mut Rng::new(seed))
+}
+
+fn headline(tag: &str, cfg: SimConfig, mix: &WorkloadMix, rate: f64, n: usize) {
+    let mut lat = vec![];
+    for (sched, disp) in [("parrot", "rr"), ("ayo", "rr"), ("kairos", "kairos")] {
+        let res = run_system(cfg, sched, disp, trace(mix, rate, n, 11));
+        lat.push((sched, res.summary.avg_token_latency));
+    }
+    println!(
+        "  {tag}: parrot {:.4}  ayo {:.4}  kairos {:.4}  (kairos vs parrot {:+.1}%)",
+        lat[0].1,
+        lat[1].1,
+        lat[2].1,
+        (lat[2].1 - lat[0].1) / lat[0].1 * 100.0
+    );
+}
+
+fn main() {
+    println!("== end-to-end (reduced figure runs) ==");
+
+    // Fig 14 family: single application.
+    bench("fig14_reduced/QA_GM_3systems", 3, || {
+        headline(
+            "fig14 QA/G+M",
+            SimConfig::default(),
+            &WorkloadMix::single(App::Qa, "G+M"),
+            10.0,
+            600,
+        );
+    });
+
+    // Fig 15 family: co-located.
+    bench("fig15_reduced/colocated_3systems", 3, || {
+        headline("fig15 co-located", SimConfig::default(), &WorkloadMix::colocated(), 5.0, 600);
+    });
+
+    // Fig 17 family: 13B.
+    bench("fig17_reduced/colocated_13B", 3, || {
+        headline(
+            "fig17 co-located 13B",
+            SimConfig { model: ModelKind::Llama2_13B, ..Default::default() },
+            &WorkloadMix::colocated(),
+            3.0,
+            400,
+        );
+    });
+
+    // Raw simulator throughput (events/s) — the perf-pass tracking number.
+    let cfg = SimConfig::default();
+    let arrivals = trace(&WorkloadMix::colocated(), 5.0, 2000, 13);
+    let t0 = std::time::Instant::now();
+    let res = run_system(cfg, "kairos", "kairos", arrivals);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "\nsim_throughput: {} events in {:.3}s = {:.0} events/s ({:.0} sim-s/wall-s)",
+        res.events_processed,
+        dt,
+        res.events_processed as f64 / dt,
+        res.sim_duration / dt
+    );
+}

@@ -1,0 +1,85 @@
+//! Engine-substrate benches: continuous-batching step throughput and block
+//! manager operations — the L3 hot loop under every end-to-end figure.
+//!
+//! Run: `cargo bench`.
+
+mod common;
+
+use common::{bench, black_box};
+use kairos::engine::core::{EngineConfig, EngineCore, SimBackend};
+use kairos::engine::cost_model::{CostModel, ModelKind};
+use kairos::engine::request::Request;
+use kairos::orchestrator::ids::AgentId;
+
+fn mk_req(id: u64, prompt: u32, output: u32) -> Request {
+    Request {
+        id,
+        msg_id: id,
+        agent: AgentId((id % 8) as u32),
+        upstream: None,
+        prompt_tokens: prompt,
+        true_output_tokens: output,
+        true_remaining_latency: 1.0,
+        remaining_stages: 1,
+        app_start: 0.0,
+        stage_arrival: id as f64 * 1e-3,
+    }
+}
+
+fn engine(max_batch: usize) -> EngineCore<SimBackend> {
+    let cost = CostModel::new(ModelKind::Llama3_8B);
+    let mut cfg = EngineConfig::for_model(&cost, 16);
+    cfg.max_batch = max_batch;
+    EngineCore::new(0, cfg, SimBackend::new(cost))
+}
+
+fn main() {
+    println!("== engine substrate ==");
+    for batch in [8usize, 64, 256] {
+        let mut e = engine(batch);
+        for i in 0..batch as u64 {
+            e.submit(mk_req(i, 256, 1_000_000), 0.0); // never finish
+        }
+        let mut now = 0.0;
+        e.step(now); // admit everyone
+        bench(&format!("engine_step/decode_batch={batch}"), 2000, || {
+            now += 0.01;
+            black_box(e.step(now).n_decode);
+        });
+    }
+
+    // Full request lifecycle: submit → prefill → decode → complete.
+    bench("engine_lifecycle/req=32x(128p,64o)", 50, || {
+        let mut e = engine(64);
+        for i in 0..32 {
+            e.submit(mk_req(i, 128, 64), 0.0);
+        }
+        let mut now = 0.0;
+        while e.has_work() {
+            let out = e.step(now);
+            now += out.duration.max(1e-6);
+        }
+        black_box(now);
+    });
+
+    // Preemption-pressure lifecycle (small pool forces recompute).
+    bench("engine_lifecycle/preemption_pressure", 50, || {
+        let cost = CostModel::new(ModelKind::Llama3_8B);
+        let cfg = EngineConfig {
+            block_size: 16,
+            total_blocks: 64,
+            max_batch: 32,
+            max_prefill_tokens: 4096,
+        };
+        let mut e = EngineCore::new(0, cfg, SimBackend::new(cost));
+        for i in 0..16 {
+            e.submit(mk_req(i, 64, 96), 0.0);
+        }
+        let mut now = 0.0;
+        while e.has_work() {
+            let out = e.step(now);
+            now += out.duration.max(1e-6);
+        }
+        black_box(e.preemptions);
+    });
+}

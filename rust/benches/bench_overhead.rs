@@ -1,0 +1,31 @@
+//! §7.7 overhead benches: queue scheduling pick, time-slot packing
+//! decision, and MDS priority update vs agent count.
+//!
+//! Paper reference points: sort ≈ 3.6 ms, packing ≈ 4.1 ms, MDS 0.1 s @ 10
+//! agents → 4.3 s @ 5000 agents (python). Run: `cargo bench`.
+
+mod common;
+
+use common::{bench, black_box};
+use kairos::figures::overhead::{mds_time, packing_time, sort_time};
+
+fn main() {
+    println!("== §7.7 overheads ==");
+    for n in [100usize, 1_000, 10_000, 100_000] {
+        bench(&format!("scheduler_pick/queue={n}"), 20, || {
+            black_box(sort_time(n, 1));
+        });
+    }
+    for inst in [4usize, 8, 16] {
+        bench(&format!("timeslot_packing/instances={inst}"), 20, || {
+            black_box(packing_time(inst, 200, 2));
+        });
+    }
+    // MDS scaling: report the measured update time directly (one-shot per
+    // size; the inner computation is the measurement).
+    println!("\nMDS priority update (agents -> seconds):");
+    for n in [10usize, 100, 500, 1000, 5000] {
+        let dt = mds_time(n, 64, 3);
+        println!("mds_update/agents={n:<6} {dt:.4} s");
+    }
+}

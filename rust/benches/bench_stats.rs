@@ -1,0 +1,45 @@
+//! Statistics-substrate benches: Wasserstein-1, ECDF construction, MDS —
+//! the math inside every Kairos priority refresh.
+//!
+//! Run: `cargo bench`.
+
+mod common;
+
+use common::{bench, black_box};
+use kairos::stats::dist::{Dist, LogNormal};
+use kairos::stats::ecdf::{wasserstein1, Ecdf};
+use kairos::stats::mds::{mds_1d, SymMatrix};
+use kairos::stats::rng::Rng;
+
+fn samples(n: usize, seed: u64) -> Vec<f64> {
+    let d = LogNormal::from_mean_cv(5.0, 0.7);
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| d.sample(&mut rng)).collect()
+}
+
+fn main() {
+    println!("== stats substrate ==");
+    for n in [100usize, 1_000, 10_000] {
+        let xs = samples(n, 1);
+        bench(&format!("ecdf_build/n={n}"), 200, || {
+            black_box(Ecdf::new(xs.clone()));
+        });
+        let a = Ecdf::new(samples(n, 2));
+        let b = Ecdf::new(samples(n, 3));
+        bench(&format!("wasserstein1/n={n}"), 200, || {
+            black_box(wasserstein1(&a, &b));
+        });
+    }
+    for n in [10usize, 50, 200] {
+        let mut m = SymMatrix::zeros(n);
+        let mut rng = Rng::new(4);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                m.set(i, j, rng.f64() * 10.0);
+            }
+        }
+        bench(&format!("mds_1d/agents={n}"), 50, || {
+            black_box(mds_1d(&m));
+        });
+    }
+}

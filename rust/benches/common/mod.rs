@@ -1,0 +1,66 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `bench(name, iters, f)` warms up, times `iters` runs, and prints
+//! mean / p50 / p95 per-iteration latency in a fixed format the perf pass
+//! and EXPERIMENTS.md grep for.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub iters: usize,
+}
+
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    // Warmup.
+    for _ in 0..iters.div_ceil(10).max(1) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p50 = samples[samples.len() / 2];
+    let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_ns: mean,
+        p50_ns: p50,
+        p95_ns: p95,
+        iters,
+    };
+    println!(
+        "bench {:<44} mean {:>12}  p50 {:>12}  p95 {:>12}  (n={})",
+        r.name,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p95_ns),
+        r.iters
+    );
+    r
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Keep a value alive / defeat optimizer.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

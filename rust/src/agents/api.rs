@@ -1,0 +1,242 @@
+//! The developer-facing workflow API (paper Listing 1), rust edition.
+//!
+//! Mirrors the python API the paper shows: subclass `BaseAgent`, override
+//! `_run_impl`, register agents in a `Workflow`. Here an agent is anything
+//! implementing [`BaseAgent`]; [`Workflow`] wires agents to bus topics and
+//! [`Workflow::run_task`] drives one task through the chain, transparently
+//! propagating the system identifiers (msg_id, upstream, timestamps) in
+//! message headers so the orchestrator can reconstruct the workflow —
+//! exactly the "almost transparent to developers" contract of §4.1.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::bus::{Broker, Message};
+use crate::orchestrator::graph::ExecRecord;
+use crate::orchestrator::Orchestrator;
+use crate::Time;
+
+/// What an agent returns: its output payload and the next agent to invoke
+/// (None terminates the workflow).
+pub struct AgentOutput {
+    pub payload: String,
+    pub next_agent: Option<String>,
+}
+
+/// An LLM client the agents call — the `self.generate(prompt)` of
+/// Listing 1. Implementations: the real PJRT server or a test stub.
+pub trait LlmClient: Send + Sync {
+    /// Generate a completion; returns (text, exec_start, exec_end).
+    fn generate(&self, agent: &str, prompt: &str) -> (String, Time, Time);
+}
+
+/// The BaseAgent contract (Listing 1's `_run_impl`).
+pub trait BaseAgent: Send {
+    fn name(&self) -> &str;
+    /// Consume the upstream payload, call the LLM, pick the next agent.
+    fn run_impl(&mut self, input: &str, llm: &dyn LlmClient) -> AgentOutput;
+}
+
+/// A workflow: agents registered by name, connected via bus topics
+/// `agent.<name>`, with identifier propagation and orchestrator feedback.
+pub struct Workflow {
+    broker: Broker,
+    agents: HashMap<String, Box<dyn BaseAgent>>,
+    orchestrator: Arc<Mutex<Orchestrator>>,
+    next_msg_id: u64,
+}
+
+impl Workflow {
+    pub fn new(broker: Broker, orchestrator: Arc<Mutex<Orchestrator>>) -> Workflow {
+        Workflow { broker, agents: HashMap::new(), orchestrator, next_msg_id: 1 }
+    }
+
+    /// `workflow.add_agent(...)` of Listing 1.
+    pub fn add_agent(&mut self, agent: Box<dyn BaseAgent>) {
+        let topic = format!("agent.{}", agent.name());
+        self.broker.create_topic(&topic, 1);
+        self.agents.insert(agent.name().to_string(), agent);
+    }
+
+    pub fn agent_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.agents.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Drive one user task through the workflow starting at `entry`.
+    /// Returns the final payload and the msg_id assigned to the task.
+    ///
+    /// Identifier propagation: each hop publishes a message to the next
+    /// agent's topic carrying `msg_id` and `upstream` headers; execution
+    /// timestamps are reported to the orchestrator after every stage.
+    pub fn run_task(
+        &mut self,
+        entry: &str,
+        task: &str,
+        llm: &dyn LlmClient,
+    ) -> crate::Result<(String, u64)> {
+        let msg_id = self.next_msg_id;
+        self.next_msg_id += 1;
+
+        // Wrap the client so the workflow observes each stage's execution
+        // span without the agent having to report it (transparency, §4.1).
+        struct SpanRecorder<'a> {
+            inner: &'a dyn LlmClient,
+            last: Mutex<(Time, Time)>,
+        }
+        impl LlmClient for SpanRecorder<'_> {
+            fn generate(&self, agent: &str, prompt: &str) -> (String, Time, Time) {
+                let (text, s, e) = self.inner.generate(agent, prompt);
+                *self.last.lock().unwrap() = (s, e);
+                (text, s, e)
+            }
+        }
+        let recorder = SpanRecorder { inner: llm, last: Mutex::new((0.0, 0.0)) };
+
+        let mut current = entry.to_string();
+        let mut payload = task.to_string();
+        let mut upstream: Option<String> = None;
+        let mut last_end: Time = 0.0;
+        let mut hops = 0usize;
+
+        loop {
+            anyhow::ensure!(hops < 64, "workflow exceeded 64 hops (cycle?)");
+            hops += 1;
+            // Deliver through the bus (headers carry the identifiers).
+            let topic = format!("agent.{current}");
+            let mut msg = Message::new(format!("{msg_id}"), payload.clone())
+                .header("msg_id", format!("{msg_id}"))
+                .header("agent", current.clone());
+            if let Some(up) = &upstream {
+                msg = msg.header("upstream", up.clone());
+            }
+            self.broker.publish(&topic, msg)?;
+            let delivered = self
+                .broker
+                .try_poll(&topic, "workflow")?
+                .expect("just published");
+
+            let agent = self
+                .agents
+                .get_mut(&current)
+                .ok_or_else(|| anyhow::anyhow!("no agent {current:?}"))?;
+            let out = agent.run_impl(&delivered.payload, &recorder);
+
+            // Report execution to the orchestrator (identifiers + spans).
+            {
+                let (mut start, mut end) = *recorder.last.lock().unwrap();
+                if end <= last_end {
+                    // Stage spans must be monotone even for stub clients.
+                    start = last_end;
+                    end = last_end + 1e-3;
+                }
+                last_end = end;
+                let mut orch = self.orchestrator.lock().unwrap();
+                let agent_id = orch.registry.intern(&current);
+                let upstream_id =
+                    upstream.as_ref().map(|u| orch.registry.intern(u));
+                orch.record_execution(ExecRecord {
+                    msg_id,
+                    agent: agent_id,
+                    upstream: upstream_id,
+                    start,
+                    end,
+                });
+            }
+
+            upstream = Some(current.clone());
+            payload = out.payload;
+            match out.next_agent {
+                Some(next) => current = next,
+                None => break,
+            }
+        }
+        self.orchestrator
+            .lock()
+            .unwrap()
+            .record_workflow_done(msg_id, last_end);
+        Ok((payload, msg_id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct StubLlm;
+    impl LlmClient for StubLlm {
+        fn generate(&self, _agent: &str, prompt: &str) -> (String, Time, Time) {
+            (format!("echo:{prompt}"), 0.0, 0.1)
+        }
+    }
+
+    struct Router;
+    impl BaseAgent for Router {
+        fn name(&self) -> &str {
+            "Router"
+        }
+        fn run_impl(&mut self, input: &str, llm: &dyn LlmClient) -> AgentOutput {
+            let (out, _, _) = llm.generate("Router", input);
+            let next = if input.contains("17 * 23") { "MathAgent" } else { "HumanitiesAgent" };
+            AgentOutput { payload: out, next_agent: Some(next.to_string()) }
+        }
+    }
+
+    struct Expert(&'static str);
+    impl BaseAgent for Expert {
+        fn name(&self) -> &str {
+            self.0
+        }
+        fn run_impl(&mut self, input: &str, llm: &dyn LlmClient) -> AgentOutput {
+            let (out, _, _) = llm.generate(self.0, input);
+            AgentOutput { payload: out, next_agent: None }
+        }
+    }
+
+    fn workflow() -> Workflow {
+        let orch = Arc::new(Mutex::new(Orchestrator::new()));
+        let mut w = Workflow::new(Broker::new(), orch);
+        w.add_agent(Box::new(Router));
+        w.add_agent(Box::new(Expert("MathAgent")));
+        w.add_agent(Box::new(Expert("HumanitiesAgent")));
+        w
+    }
+
+    #[test]
+    fn routes_math_questions_to_math_agent() {
+        let mut w = workflow();
+        let (out, _) = w.run_task("Router", "what is 17 * 23?", &StubLlm).unwrap();
+        assert!(out.starts_with("echo:"));
+    }
+
+    #[test]
+    fn orchestrator_learns_the_workflow() {
+        let orch = Arc::new(Mutex::new(Orchestrator::new()));
+        let mut w = Workflow::new(Broker::new(), orch.clone());
+        w.add_agent(Box::new(Router));
+        w.add_agent(Box::new(Expert("MathAgent")));
+        w.add_agent(Box::new(Expert("HumanitiesAgent")));
+        w.run_task("Router", "what is 17 * 23?", &StubLlm).unwrap();
+        w.run_task("Router", "who was Napoleon?", &StubLlm).unwrap();
+        let o = orch.lock().unwrap();
+        let router = o.registry.get("Router").unwrap();
+        let math = o.registry.get("MathAgent").unwrap();
+        let hum = o.registry.get("HumanitiesAgent").unwrap();
+        assert!(o.graph.edge(router, math).is_some());
+        assert!(o.graph.edge(router, hum).is_some());
+        assert_eq!(o.graph.remaining_depth(router), 2);
+    }
+
+    #[test]
+    fn agent_names_listed() {
+        let w = workflow();
+        assert_eq!(w.agent_names(), vec!["HumanitiesAgent", "MathAgent", "Router"]);
+    }
+
+    #[test]
+    fn missing_agent_errors() {
+        let mut w = workflow();
+        assert!(w.run_task("Nope", "task", &StubLlm).is_err());
+    }
+}

@@ -1,0 +1,254 @@
+//! The three benchmark applications (paper Fig. 2) as workflow generators.
+//!
+//! A user task is instantiated into a [`WorkflowPlan`] — the resolved
+//! sequence of agent stages with sampled prompt/output lengths. Dynamic
+//! structure (QA's branch, CG's feedback loop) is resolved by sampling at
+//! instantiation; the serving system never sees the plan, only the requests
+//! as they arrive stage by stage (the orchestrator must *learn* the
+//! structure, §4.2).
+
+use super::datasets::{cg_dataset, qa_dataset, rg_dataset, DatasetProfile};
+use crate::stats::rng::Rng;
+
+/// The three benchmark applications.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum App {
+    /// Question Answer — dynamic branching (Router → Math | Humanities).
+    Qa,
+    /// Report Generate — sequential (Research → Writer).
+    Rg,
+    /// Code Generate — dynamic feedback (PM → Arch → PjM → Eng → QA ⟲ Eng).
+    Cg,
+}
+
+impl App {
+    pub fn name(&self) -> &'static str {
+        match self {
+            App::Qa => "QA",
+            App::Rg => "RG",
+            App::Cg => "CG",
+        }
+    }
+
+    /// Dataset profile by paper dataset name.
+    pub fn dataset(&self, name: &str) -> DatasetProfile {
+        match self {
+            App::Qa => qa_dataset(name),
+            App::Rg => rg_dataset(name),
+            App::Cg => cg_dataset(name),
+        }
+    }
+
+    pub fn datasets(&self) -> [&'static str; 3] {
+        match self {
+            App::Qa => ["G+M", "M+W", "S+S"],
+            App::Rg => ["TQ", "NCD", "NQ"],
+            App::Cg => ["HE", "MBPP", "APPS"],
+        }
+    }
+
+    pub fn all() -> [App; 3] {
+        [App::Qa, App::Rg, App::Cg]
+    }
+}
+
+/// One resolved stage of a workflow instance.
+#[derive(Debug, Clone)]
+pub struct PlannedStage {
+    pub agent: &'static str,
+    pub prompt_tokens: u32,
+    pub output_tokens: u32,
+}
+
+/// A fully resolved workflow instance (linear stage sequence: the paper's
+/// three apps branch/loop but never fan out in parallel, Fig. 2).
+#[derive(Debug, Clone)]
+pub struct WorkflowPlan {
+    pub app: App,
+    pub dataset: &'static str,
+    pub stages: Vec<PlannedStage>,
+}
+
+impl WorkflowPlan {
+    /// Sample one user task of `app` over `dataset`.
+    pub fn sample(app: App, dataset: &'static str, rng: &mut Rng) -> WorkflowPlan {
+        let ds = app.dataset(dataset);
+        let mut stages = Vec::new();
+        let stage = |ds: &DatasetProfile, agent: &'static str, rng: &mut Rng| {
+            let p = ds.agent(agent);
+            PlannedStage {
+                agent,
+                prompt_tokens: p.sample_prompt(rng),
+                output_tokens: p.sample_output(rng),
+            }
+        };
+        match app {
+            App::Qa => {
+                stages.push(stage(&ds, "Router", rng));
+                if rng.chance(ds.math_ratio) {
+                    stages.push(stage(&ds, "MathAgent", rng));
+                } else {
+                    stages.push(stage(&ds, "HumanitiesAgent", rng));
+                }
+            }
+            App::Rg => {
+                stages.push(stage(&ds, "ResearchAgent", rng));
+                stages.push(stage(&ds, "WriterAgent", rng));
+            }
+            App::Cg => {
+                stages.push(stage(&ds, "ProductManager", rng));
+                stages.push(stage(&ds, "Architect", rng));
+                stages.push(stage(&ds, "ProjectManager", rng));
+                stages.push(stage(&ds, "Engineer", rng));
+                stages.push(stage(&ds, "QAEngineer", rng));
+                // Dynamic feedback: failed evaluation feeds back to the
+                // engineer (bounded retries keep plans finite).
+                let mut retries = 0;
+                while retries < 3 && rng.chance(ds.feedback_ratio) {
+                    stages.push(stage(&ds, "Engineer", rng));
+                    stages.push(stage(&ds, "QAEngineer", rng));
+                    retries += 1;
+                }
+            }
+        }
+        WorkflowPlan { app, dataset: ds.name, stages }
+    }
+
+    /// Total generated tokens across all stages (the denominator of
+    /// program-level token latency).
+    pub fn total_output_tokens(&self) -> u64 {
+        self.stages.iter().map(|s| s.output_tokens as u64).sum()
+    }
+
+    /// Stages remaining including stage `i`, as the STATIC workflow
+    /// topology sees it (Ayo's signal): the agent's depth in the app's
+    /// call graph. Dynamic feedback iterations (CG) do not deepen it —
+    /// Ayo cannot know how many loop iterations a task will take.
+    pub fn remaining_stages(&self, i: usize) -> u32 {
+        static_depth(self.app, self.stages[i].agent)
+    }
+
+    /// True resolved stages remaining including stage `i` (ground truth;
+    /// Oracle/analysis only).
+    pub fn true_remaining_stages(&self, i: usize) -> u32 {
+        (self.stages.len() - i) as u32
+    }
+}
+
+/// Static topology depth of an agent within its application workflow
+/// (longest downstream path including the agent's own stage).
+pub fn static_depth(app: App, agent: &str) -> u32 {
+    match (app, agent) {
+        (App::Qa, "Router") => 2,
+        (App::Qa, _) => 1,
+        (App::Rg, "ResearchAgent") => 2,
+        (App::Rg, _) => 1,
+        (App::Cg, "ProductManager") => 5,
+        (App::Cg, "Architect") => 4,
+        (App::Cg, "ProjectManager") => 3,
+        (App::Cg, "Engineer") => 2,
+        (App::Cg, _) => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qa_is_two_stage_branch() {
+        let mut rng = Rng::new(1);
+        let mut math = 0;
+        let mut hum = 0;
+        for _ in 0..1000 {
+            let p = WorkflowPlan::sample(App::Qa, "G+M", &mut rng);
+            assert_eq!(p.stages.len(), 2);
+            assert_eq!(p.stages[0].agent, "Router");
+            match p.stages[1].agent {
+                "MathAgent" => math += 1,
+                "HumanitiesAgent" => hum += 1,
+                other => panic!("unexpected {other}"),
+            }
+        }
+        let ratio = math as f64 / (math + hum) as f64;
+        assert!((ratio - 0.5).abs() < 0.05, "branch ratio {ratio}");
+    }
+
+    #[test]
+    fn rg_is_fixed_sequence() {
+        let mut rng = Rng::new(2);
+        let p = WorkflowPlan::sample(App::Rg, "TQ", &mut rng);
+        let agents: Vec<&str> = p.stages.iter().map(|s| s.agent).collect();
+        assert_eq!(agents, vec!["ResearchAgent", "WriterAgent"]);
+    }
+
+    #[test]
+    fn cg_has_feedback_loops_sometimes() {
+        let mut rng = Rng::new(3);
+        let mut base = 0;
+        let mut looped = 0;
+        for _ in 0..500 {
+            let p = WorkflowPlan::sample(App::Cg, "HE", &mut rng);
+            assert!(p.stages.len() >= 5);
+            assert_eq!(p.stages[3].agent, "Engineer");
+            assert_eq!(p.stages[4].agent, "QAEngineer");
+            assert!((p.stages.len() - 5) % 2 == 0, "loops add Eng+QA pairs");
+            if p.stages.len() == 5 {
+                base += 1;
+            } else {
+                looped += 1;
+            }
+        }
+        assert!(base > 0 && looped > 0, "both outcomes occur");
+        let loop_rate = looped as f64 / 500.0;
+        assert!((loop_rate - 0.3).abs() < 0.08, "loop rate {loop_rate}");
+    }
+
+    #[test]
+    fn true_remaining_stages_counts_down() {
+        let mut rng = Rng::new(4);
+        let p = WorkflowPlan::sample(App::Cg, "HE", &mut rng);
+        assert_eq!(p.true_remaining_stages(0) as usize, p.stages.len());
+        assert_eq!(p.true_remaining_stages(p.stages.len() - 1), 1);
+    }
+
+    #[test]
+    fn static_depth_ignores_feedback_loops() {
+        let mut rng = Rng::new(11);
+        // Find a plan with a feedback loop (> 5 stages).
+        let p = loop {
+            let p = WorkflowPlan::sample(App::Cg, "APPS", &mut rng);
+            if p.stages.len() > 5 {
+                break p;
+            }
+        };
+        // The looped Engineer stage still reports static depth 2.
+        let loop_eng_idx = 5;
+        assert_eq!(p.stages[loop_eng_idx].agent, "Engineer");
+        assert_eq!(p.remaining_stages(loop_eng_idx), 2);
+        // QA depths.
+        assert_eq!(static_depth(App::Qa, "Router"), 2);
+        assert_eq!(static_depth(App::Qa, "MathAgent"), 1);
+    }
+
+    #[test]
+    fn total_output_positive() {
+        let mut rng = Rng::new(5);
+        for app in App::all() {
+            let ds = app.datasets()[0];
+            let p = WorkflowPlan::sample(app, ds, &mut rng);
+            assert!(p.total_output_tokens() > 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p1 = WorkflowPlan::sample(App::Cg, "APPS", &mut Rng::new(9));
+        let p2 = WorkflowPlan::sample(App::Cg, "APPS", &mut Rng::new(9));
+        assert_eq!(p1.stages.len(), p2.stages.len());
+        for (a, b) in p1.stages.iter().zip(&p2.stages) {
+            assert_eq!(a.agent, b.agent);
+            assert_eq!(a.output_tokens, b.output_tokens);
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Synthetic dataset models (substitution for GSM8K/MMLU/… — DESIGN.md §3).
+//!
+//! The scheduler and dispatcher only ever observe token *counts*; these
+//! models reproduce the paper's measured per-agent output-length structure
+//! (Fig. 3: heavy-tailed, LogNormal-like; Fig. 5: stable per-agent means
+//! across dataset groups; §2.1: up to ~25× Router-vs-expert latency gap;
+//! §7.2: SocialIQA shrinks HumanitiesAgent outputs, weakening QA gains on
+//! S+S).
+
+use crate::stats::dist::{Dist, LogNormal};
+use crate::stats::rng::Rng;
+
+/// Per-agent prompt/output token-length model.
+#[derive(Debug, Clone)]
+pub struct AgentProfile {
+    pub agent: &'static str,
+    pub prompt: LogNormal,
+    pub output: LogNormal,
+}
+
+impl AgentProfile {
+    fn new(agent: &'static str, prompt_mean: f64, output_mean: f64, cv: f64) -> Self {
+        AgentProfile {
+            agent,
+            prompt: LogNormal::from_mean_cv(prompt_mean, 0.35),
+            output: LogNormal::from_mean_cv(output_mean, cv),
+        }
+    }
+
+    pub fn sample_prompt(&self, rng: &mut Rng) -> u32 {
+        (self.prompt.sample(rng).round() as u32).clamp(8, 4096)
+    }
+
+    pub fn sample_output(&self, rng: &mut Rng) -> u32 {
+        (self.output.sample(rng).round() as u32).clamp(2, 4096)
+    }
+}
+
+/// One (application, dataset) pairing with its agent roster.
+#[derive(Debug, Clone)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    pub agents: Vec<AgentProfile>,
+    /// QA only: probability the router sends the task to the math expert.
+    pub math_ratio: f64,
+    /// CG only: probability a QA evaluation fails and feeds back.
+    pub feedback_ratio: f64,
+}
+
+impl DatasetProfile {
+    pub fn agent(&self, name: &str) -> &AgentProfile {
+        self.agents
+            .iter()
+            .find(|a| a.agent == name)
+            .unwrap_or_else(|| panic!("no agent {name:?} in dataset {}", self.name))
+    }
+}
+
+/// QA datasets: G+M (GSM8K+MMLU), M+W (MathQA+WorldHistoryQA),
+/// S+S (SVAMP+SocialIQA).
+pub fn qa_dataset(name: &str) -> DatasetProfile {
+    // Router: short routing decision (~15 tok — the 25x gap vs experts).
+    let router = |out: f64| AgentProfile::new("Router", 180.0, out, 0.45);
+    match name {
+        "G+M" => DatasetProfile {
+            name: "G+M",
+            agents: vec![
+                router(15.0),
+                AgentProfile::new("MathAgent", 210.0, 280.0, 0.75),
+                AgentProfile::new("HumanitiesAgent", 240.0, 380.0, 0.65),
+            ],
+            math_ratio: 0.5,
+            feedback_ratio: 0.0,
+        },
+        "M+W" => DatasetProfile {
+            name: "M+W",
+            agents: vec![
+                router(14.0),
+                AgentProfile::new("MathAgent", 200.0, 235.0, 0.8),
+                AgentProfile::new("HumanitiesAgent", 230.0, 350.0, 0.6),
+            ],
+            math_ratio: 0.5,
+            feedback_ratio: 0.0,
+        },
+        // SocialIQA: social-science questions get SHORT humanities answers,
+        // compressing the inter-agent gap (paper §7.2 nuance).
+        "S+S" => DatasetProfile {
+            name: "S+S",
+            agents: vec![
+                router(15.0),
+                AgentProfile::new("MathAgent", 190.0, 225.0, 0.7),
+                AgentProfile::new("HumanitiesAgent", 210.0, 250.0, 0.55),
+            ],
+            math_ratio: 0.5,
+            feedback_ratio: 0.0,
+        },
+        other => panic!("unknown QA dataset {other:?}"),
+    }
+}
+
+/// RG datasets: TQ (TruthfulQA), NCD (News Category), NQ (Natural Questions).
+pub fn rg_dataset(name: &str) -> DatasetProfile {
+    let mk = |name: &'static str, research: f64, writer: f64| DatasetProfile {
+        name,
+        agents: vec![
+            AgentProfile::new("ResearchAgent", 260.0, research, 0.55),
+            AgentProfile::new("WriterAgent", 420.0, writer, 0.5),
+        ],
+        math_ratio: 0.0,
+        feedback_ratio: 0.0,
+    };
+    match name {
+        "TQ" => mk("TQ", 450.0, 620.0),
+        "NCD" => mk("NCD", 380.0, 560.0),
+        "NQ" => mk("NQ", 420.0, 600.0),
+        other => panic!("unknown RG dataset {other:?}"),
+    }
+}
+
+/// CG datasets: HE (HumanEval), MBPP, APPS.
+pub fn cg_dataset(name: &str) -> DatasetProfile {
+    let mk = |name: &'static str, scale: f64, feedback: f64| DatasetProfile {
+        name,
+        agents: vec![
+            AgentProfile::new("ProductManager", 280.0, 350.0 * scale, 0.5),
+            AgentProfile::new("Architect", 340.0, 420.0 * scale, 0.5),
+            AgentProfile::new("ProjectManager", 300.0, 300.0 * scale, 0.45),
+            AgentProfile::new("Engineer", 420.0, 550.0 * scale, 0.6),
+            AgentProfile::new("QAEngineer", 380.0, 260.0 * scale, 0.55),
+        ],
+        math_ratio: 0.0,
+        feedback_ratio: feedback,
+    };
+    match name {
+        "HE" => mk("HE", 1.0, 0.3),
+        "MBPP" => mk("MBPP", 0.85, 0.25),
+        "APPS" => mk("APPS", 1.25, 0.4),
+        other => panic!("unknown CG dataset {other:?}"),
+    }
+}
+
+/// Paper dataset groups (Fig. 5/6): Group 1 = {G+M, TQ, HE},
+/// Group 2 = {M+W, NCD, MBPP}, Group 3 = {S+S, NQ, APPS}.
+pub fn group_datasets(group: usize) -> (&'static str, &'static str, &'static str) {
+    match group {
+        1 => ("G+M", "TQ", "HE"),
+        2 => ("M+W", "NCD", "MBPP"),
+        3 => ("S+S", "NQ", "APPS"),
+        other => panic!("unknown group {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_output(p: &AgentProfile, n: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| p.sample_output(&mut rng) as f64).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn router_vs_expert_gap_is_large() {
+        // Paper §1: latency variance up to 25.1x between Router and experts.
+        let ds = qa_dataset("G+M");
+        let r = mean_output(ds.agent("Router"), 5000, 1);
+        let h = mean_output(ds.agent("HumanitiesAgent"), 5000, 2);
+        assert!(h / r > 15.0, "gap {h}/{r}");
+    }
+
+    #[test]
+    fn ss_dataset_compresses_gap() {
+        // §7.2: S+S humanities outputs shorter => smaller inter-agent diff.
+        let gm = qa_dataset("G+M");
+        let ss = qa_dataset("S+S");
+        let gap_gm = gm.agent("HumanitiesAgent").output.mean()
+            - gm.agent("MathAgent").output.mean();
+        let gap_ss = ss.agent("HumanitiesAgent").output.mean()
+            - ss.agent("MathAgent").output.mean();
+        assert!(gap_ss < gap_gm * 0.5, "gap_ss={gap_ss} gap_gm={gap_gm}");
+    }
+
+    #[test]
+    fn agent_means_stable_across_groups() {
+        // Fig. 5: each agent's behaviour is consistent across datasets.
+        for app_datasets in [["G+M", "M+W", "S+S"]] {
+            let means: Vec<f64> = app_datasets
+                .iter()
+                .map(|d| qa_dataset(d).agent("Router").output.mean())
+                .collect();
+            let max = means.iter().cloned().fold(f64::MIN, f64::max);
+            let min = means.iter().cloned().fold(f64::MAX, f64::min);
+            assert!(max / min < 1.3, "router stable: {means:?}");
+        }
+    }
+
+    #[test]
+    fn samples_positive_and_bounded() {
+        let mut rng = Rng::new(3);
+        for ds in ["HE", "MBPP", "APPS"] {
+            let d = cg_dataset(ds);
+            for a in &d.agents {
+                for _ in 0..200 {
+                    let p = a.sample_prompt(&mut rng);
+                    let o = a.sample_output(&mut rng);
+                    assert!((8..=4096).contains(&p));
+                    assert!((2..=4096).contains(&o));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rosters_match_paper() {
+        assert_eq!(qa_dataset("G+M").agents.len(), 3);
+        assert_eq!(rg_dataset("TQ").agents.len(), 2);
+        assert_eq!(cg_dataset("HE").agents.len(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_dataset_panics() {
+        qa_dataset("nope");
+    }
+}

@@ -1,0 +1,16 @@
+//! Multi-agent applications and their dataset models (paper §2.1).
+//!
+//! * [`datasets`] — synthetic per-(app, dataset, agent) prompt/output-length
+//!   models fit to the paper's Fig. 3/5 shapes (DESIGN.md §3 substitution).
+//! * [`apps`] — the three benchmark applications: Question Answer (dynamic
+//!   branching), Report Generate (sequential), Code Generate (dynamic
+//!   feedback), instantiated as sampled [`apps::WorkflowPlan`]s.
+//! * [`api`] — the Listing-1-style developer API (BaseAgent / Workflow)
+//!   used by the real-mode server over the message bus.
+
+pub mod api;
+pub mod apps;
+pub mod datasets;
+
+pub use apps::{App, PlannedStage, WorkflowPlan};
+pub use datasets::{AgentProfile, DatasetProfile};

@@ -1,0 +1,352 @@
+//! In-process message bus — the Kafka substitute (DESIGN.md §3).
+//!
+//! The paper deploys agents as distributed processes communicating through
+//! Kafka topics; identifiers (`msg_id`, `upstream_name`, timestamps) ride on
+//! the messages so the orchestrator can reconstruct workflows. This module
+//! reproduces the semantics the system relies on — named topics, append-only
+//! partitions, independent consumer-group offsets, blocking polls — as a
+//! thread-safe in-process broker (threads + condvars; no network, no tokio).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A message delivered through the bus. `key` selects the partition (same
+/// key → same partition → per-key ordering, as in Kafka).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub key: String,
+    pub payload: String,
+    /// Headers carry the Kairos system identifiers transparently.
+    pub headers: Vec<(String, String)>,
+}
+
+impl Message {
+    pub fn new(key: impl Into<String>, payload: impl Into<String>) -> Message {
+        Message { key: key.into(), payload: payload.into(), headers: vec![] }
+    }
+
+    pub fn header(mut self, k: impl Into<String>, v: impl Into<String>) -> Message {
+        self.headers.push((k.into(), v.into()));
+        self
+    }
+
+    pub fn get_header(&self, k: &str) -> Option<&str> {
+        self.headers.iter().find(|(hk, _)| hk == k).map(|(_, v)| v.as_str())
+    }
+}
+
+#[derive(Debug, Default)]
+struct Partition {
+    log: Vec<Message>,
+}
+
+#[derive(Debug, Default)]
+struct TopicState {
+    partitions: Vec<Partition>,
+    /// consumer group -> per-partition committed offset
+    offsets: HashMap<String, Vec<usize>>,
+    closed: bool,
+}
+
+#[derive(Debug, Default)]
+struct BrokerState {
+    topics: HashMap<String, TopicState>,
+}
+
+/// The broker: cheaply clonable handle over shared state.
+#[derive(Clone, Default)]
+pub struct Broker {
+    state: Arc<(Mutex<BrokerState>, Condvar)>,
+}
+
+impl Broker {
+    pub fn new() -> Broker {
+        Broker::default()
+    }
+
+    /// Create a topic with `partitions` partitions. Idempotent.
+    pub fn create_topic(&self, name: &str, partitions: usize) {
+        assert!(partitions > 0);
+        let (lock, _) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        st.topics.entry(name.to_string()).or_insert_with(|| TopicState {
+            partitions: (0..partitions).map(|_| Partition::default()).collect(),
+            offsets: HashMap::new(),
+            closed: false,
+        });
+    }
+
+    fn partition_for(key: &str, n: usize) -> usize {
+        // FNV-1a over the key.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in key.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        (h % n as u64) as usize
+    }
+
+    /// Append a message to `topic`. Returns (partition, offset).
+    pub fn publish(&self, topic: &str, msg: Message) -> Result<(usize, usize), BusError> {
+        let (lock, cvar) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        let t = st.topics.get_mut(topic).ok_or(BusError::NoSuchTopic)?;
+        if t.closed {
+            return Err(BusError::TopicClosed);
+        }
+        let p = Self::partition_for(&msg.key, t.partitions.len());
+        t.partitions[p].log.push(msg);
+        let off = t.partitions[p].log.len() - 1;
+        cvar.notify_all();
+        Ok((p, off))
+    }
+
+    /// Non-blocking poll: next unconsumed message for `group`, advancing the
+    /// group's offset. Scans partitions round-robin-ish (lowest backlog of
+    /// unread first to avoid starvation).
+    pub fn try_poll(&self, topic: &str, group: &str) -> Result<Option<Message>, BusError> {
+        let (lock, _) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        let t = st.topics.get_mut(topic).ok_or(BusError::NoSuchTopic)?;
+        let nparts = t.partitions.len();
+        let offsets = t
+            .offsets
+            .entry(group.to_string())
+            .or_insert_with(|| vec![0; nparts]);
+        // Pick the partition with the largest unread backlog (fair-ish).
+        let mut best: Option<(usize, usize)> = None;
+        for p in 0..nparts {
+            let unread = t.partitions[p].log.len().saturating_sub(offsets[p]);
+            if unread > 0 && best.map(|(_, b)| unread > b).unwrap_or(true) {
+                best = Some((p, unread));
+            }
+        }
+        if let Some((p, _)) = best {
+            let off = offsets[p];
+            offsets[p] += 1;
+            return Ok(Some(t.partitions[p].log[off].clone()));
+        }
+        if t.closed {
+            return Err(BusError::TopicClosed);
+        }
+        Ok(None)
+    }
+
+    /// Blocking poll with timeout. Returns `Ok(None)` on timeout and
+    /// `Err(TopicClosed)` when the topic is closed and fully drained.
+    pub fn poll(
+        &self,
+        topic: &str,
+        group: &str,
+        timeout: Duration,
+    ) -> Result<Option<Message>, BusError> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            match self.try_poll(topic, group)? {
+                Some(m) => return Ok(Some(m)),
+                None => {
+                    let (lock, cvar) = &*self.state;
+                    let st = lock.lock().unwrap();
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        return Ok(None);
+                    }
+                    let (_st, timed_out) =
+                        cvar.wait_timeout(st, deadline - now).unwrap();
+                    if timed_out.timed_out() {
+                        // One last non-blocking check happens via the loop.
+                    }
+                }
+            }
+        }
+    }
+
+    /// Close a topic: publishes fail; consumers drain the backlog then get
+    /// `TopicClosed`.
+    pub fn close_topic(&self, topic: &str) {
+        let (lock, cvar) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        if let Some(t) = st.topics.get_mut(topic) {
+            t.closed = true;
+        }
+        cvar.notify_all();
+    }
+
+    /// Unread backlog for a group across all partitions of a topic.
+    pub fn backlog(&self, topic: &str, group: &str) -> usize {
+        let (lock, _) = &*self.state;
+        let st = lock.lock().unwrap();
+        let Some(t) = st.topics.get(topic) else { return 0 };
+        let total: usize = t.partitions.iter().map(|p| p.log.len()).sum();
+        let consumed: usize = t
+            .offsets
+            .get(group)
+            .map(|offs| offs.iter().sum())
+            .unwrap_or(0);
+        total - consumed
+    }
+
+    pub fn topics(&self) -> Vec<String> {
+        let (lock, _) = &*self.state;
+        let st = lock.lock().unwrap();
+        st.topics.keys().cloned().collect()
+    }
+}
+
+/// Bus error type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum BusError {
+    #[error("no such topic")]
+    NoSuchTopic,
+    #[error("topic closed")]
+    TopicClosed,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn publish_then_poll() {
+        let b = Broker::new();
+        b.create_topic("agent.router", 2);
+        b.publish("agent.router", Message::new("m1", "hello")).unwrap();
+        let m = b.try_poll("agent.router", "g").unwrap().unwrap();
+        assert_eq!(m.payload, "hello");
+        assert!(b.try_poll("agent.router", "g").unwrap().is_none());
+    }
+
+    #[test]
+    fn groups_have_independent_offsets() {
+        let b = Broker::new();
+        b.create_topic("t", 1);
+        b.publish("t", Message::new("k", "x")).unwrap();
+        assert!(b.try_poll("t", "g1").unwrap().is_some());
+        assert!(b.try_poll("t", "g2").unwrap().is_some());
+        assert!(b.try_poll("t", "g1").unwrap().is_none());
+    }
+
+    #[test]
+    fn same_key_preserves_order() {
+        let b = Broker::new();
+        b.create_topic("t", 4);
+        for i in 0..10 {
+            b.publish("t", Message::new("same", format!("{i}"))).unwrap();
+        }
+        let mut seen = vec![];
+        while let Some(m) = b.try_poll("t", "g").unwrap() {
+            seen.push(m.payload.parse::<usize>().unwrap());
+        }
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn headers_round_trip() {
+        let b = Broker::new();
+        b.create_topic("t", 1);
+        let m = Message::new("k", "p")
+            .header("msg_id", "abc-123")
+            .header("upstream", "Router");
+        b.publish("t", m).unwrap();
+        let got = b.try_poll("t", "g").unwrap().unwrap();
+        assert_eq!(got.get_header("msg_id"), Some("abc-123"));
+        assert_eq!(got.get_header("upstream"), Some("Router"));
+        assert_eq!(got.get_header("missing"), None);
+    }
+
+    #[test]
+    fn missing_topic_errors() {
+        let b = Broker::new();
+        assert_eq!(
+            b.publish("nope", Message::new("k", "p")).unwrap_err(),
+            BusError::NoSuchTopic
+        );
+        assert_eq!(b.try_poll("nope", "g").unwrap_err(), BusError::NoSuchTopic);
+    }
+
+    #[test]
+    fn closed_topic_drains_then_errors() {
+        let b = Broker::new();
+        b.create_topic("t", 1);
+        b.publish("t", Message::new("k", "last")).unwrap();
+        b.close_topic("t");
+        assert!(b.publish("t", Message::new("k", "x")).is_err());
+        assert_eq!(b.try_poll("t", "g").unwrap().unwrap().payload, "last");
+        assert_eq!(b.try_poll("t", "g").unwrap_err(), BusError::TopicClosed);
+    }
+
+    #[test]
+    fn blocking_poll_wakes_on_publish() {
+        let b = Broker::new();
+        b.create_topic("t", 1);
+        let b2 = b.clone();
+        let h = thread::spawn(move || {
+            b2.poll("t", "g", Duration::from_secs(5)).unwrap().unwrap().payload
+        });
+        thread::sleep(Duration::from_millis(30));
+        b.publish("t", Message::new("k", "wake")).unwrap();
+        assert_eq!(h.join().unwrap(), "wake");
+    }
+
+    #[test]
+    fn blocking_poll_times_out() {
+        let b = Broker::new();
+        b.create_topic("t", 1);
+        let got = b.poll("t", "g", Duration::from_millis(30)).unwrap();
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_conserve_messages() {
+        let b = Broker::new();
+        b.create_topic("t", 4);
+        let n_producers = 4;
+        let per = 250;
+        let mut handles = vec![];
+        for p in 0..n_producers {
+            let b = b.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    b.publish("t", Message::new(format!("k{p}"), format!("{p}:{i}")))
+                        .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let consumed = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = vec![];
+        for _ in 0..3 {
+            let b = b.clone();
+            let consumed = consumed.clone();
+            handles.push(thread::spawn(move || loop {
+                match b.try_poll("t", "g").unwrap() {
+                    Some(m) => consumed.lock().unwrap().push(m.payload),
+                    None => break,
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all = consumed.lock().unwrap().clone();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), n_producers * per, "every message exactly once");
+    }
+
+    #[test]
+    fn backlog_accounting() {
+        let b = Broker::new();
+        b.create_topic("t", 2);
+        for i in 0..5 {
+            b.publish("t", Message::new(format!("k{i}"), "x")).unwrap();
+        }
+        assert_eq!(b.backlog("t", "g"), 5);
+        b.try_poll("t", "g").unwrap();
+        assert_eq!(b.backlog("t", "g"), 4);
+    }
+}

@@ -1,0 +1,213 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! ```text
+//! kairos serve   [--config file.toml] [--scheduler S] [--dispatcher D]
+//!                [--rate R] [--tasks N] [--instances I] [--model M] [--seed X]
+//! kairos figures <id|all> [--out results/]
+//! kairos quickstart [--artifacts DIR] [--model NAME]
+//! ```
+
+use std::collections::HashMap;
+
+use crate::agents::apps::App;
+use crate::config::ServingConfig;
+use crate::engine::cost_model::ModelKind;
+use crate::server::sim::run_system;
+use crate::stats::rng::Rng;
+use crate::workload::{TraceGen, WorkloadMix};
+
+/// Parsed `--key value` flags plus positional args.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(args: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = args
+                    .get(i + 1)
+                    .ok_or_else(|| format!("flag --{key} needs a value"))?;
+                out.flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn num(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+const USAGE: &str = "\
+kairos — low-latency multi-agent LLM serving (paper reproduction)
+
+USAGE:
+  kairos serve      [--config F] [--scheduler kairos|parrot|ayo|oracle]
+                    [--dispatcher kairos|rr|oracle|least] [--rate R]
+                    [--tasks N] [--instances I] [--model llama3-8b|llama2-13b]
+                    [--seed S] [--workload colocated|qa|rg|cg]
+  kairos figures    <table1|fig3..fig18|overhead|all> [--out results]
+  kairos quickstart [--artifacts artifacts] [--model tiny]
+";
+
+/// CLI entrypoint.
+pub fn run(raw: Vec<String>) -> crate::Result<()> {
+    let args = Args::parse(&raw).map_err(|e| anyhow::anyhow!(e))?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("serve") => serve(&args),
+        Some("figures") => {
+            let id = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            let out = args.get("out").unwrap_or("results");
+            crate::figures::run(id, out)
+        }
+        Some("quickstart") => quickstart(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &Args) -> crate::Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            ServingConfig::from_toml(&text).map_err(|e| anyhow::anyhow!(e))?
+        }
+        None => ServingConfig::default(),
+    };
+    if let Some(s) = args.get("scheduler") {
+        cfg.scheduler = s.to_string();
+    }
+    if let Some(d) = args.get("dispatcher") {
+        cfg.dispatcher = d.to_string();
+    }
+    cfg.rate = args.num("rate", cfg.rate);
+    cfg.n_tasks = args.num("tasks", cfg.n_tasks as f64) as usize;
+    cfg.seed = args.num("seed", cfg.seed as f64) as u64;
+    cfg.sim.n_instances = args.num("instances", cfg.sim.n_instances as f64) as usize;
+    if let Some(m) = args.get("model") {
+        cfg.sim.model = match m {
+            "llama3-8b" => ModelKind::Llama3_8B,
+            "llama2-13b" => ModelKind::Llama2_13B,
+            other => anyhow::bail!("unknown model {other:?}"),
+        };
+    }
+    let mix = match args.get("workload").unwrap_or("colocated") {
+        "colocated" => WorkloadMix::colocated(),
+        "qa" => WorkloadMix::single(App::Qa, "G+M"),
+        "rg" => WorkloadMix::single(App::Rg, "TQ"),
+        "cg" => WorkloadMix::single(App::Cg, "HE"),
+        other => anyhow::bail!("unknown workload {other:?}"),
+    };
+
+    println!(
+        "serving {} tasks at {} req/s on {} instances ({:?}) — scheduler={} dispatcher={}",
+        cfg.n_tasks, cfg.rate, cfg.sim.n_instances, cfg.sim.model, cfg.scheduler,
+        cfg.dispatcher
+    );
+    let arrivals =
+        TraceGen::default().generate(&mix, cfg.rate, cfg.n_tasks, &mut Rng::new(cfg.seed));
+    let res = run_system(cfg.sim, &cfg.scheduler, &cfg.dispatcher, arrivals);
+    let s = &res.summary;
+    println!("\ncompleted {} workflows over {:.1} sim-seconds", s.n_workflows, res.sim_duration);
+    println!("program-level token latency:");
+    println!("  avg  {:.4} s/tok", s.avg_token_latency);
+    println!("  P50  {:.4}   P90 {:.4}   P95 {:.4}   P99 {:.4}",
+        s.p50_token_latency, s.p90_token_latency, s.p95_token_latency, s.p99_token_latency);
+    println!("queueing-time ratio: {:.1}%", s.mean_queue_ratio * 100.0);
+    println!("preempted requests:  {:.1}%", s.preemption_rate * 100.0);
+    println!("dropped requests:    {}", res.dropped_requests);
+    Ok(())
+}
+
+fn quickstart(args: &Args) -> crate::Result<()> {
+    use crate::dispatch::RoundRobin;
+    use crate::lb::policies::Fcfs;
+    use crate::server::real::{RealServer, ServeRequest};
+    use std::path::Path;
+
+    let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let model = args.get("model").unwrap_or("tiny");
+    println!("loading AOT artifacts '{model}' from {dir}/ via PJRT ...");
+    let mut server = RealServer::new(
+        Path::new(&dir),
+        model,
+        1,
+        Box::new(Fcfs),
+        Box::new(RoundRobin::new()),
+    )?;
+    let prompts = [
+        ("Router", "Route: what is 17 * 23?"),
+        ("MathAgent", "Solve: 17 * 23 = "),
+        ("HumanitiesAgent", "Describe the causes of WW1."),
+        ("WriterAgent", "Write a report on LLM serving."),
+    ];
+    let reqs = prompts
+        .iter()
+        .map(|(agent, p)| ServeRequest {
+            agent: agent.to_string(),
+            prompt: p.to_string(),
+            max_tokens: 12,
+        })
+        .collect();
+    let (responses, stats) = server.serve(reqs)?;
+    for r in &responses {
+        println!(
+            "[{}] {} tok in {:.3}s  prompt={:?}",
+            r.agent, r.output_tokens, r.e2e_seconds, r.prompt
+        );
+    }
+    println!(
+        "\n{} requests, {} tokens, {:.2} tok/s wall, mean e2e {:.3}s, p90 {:.3}s",
+        stats.n_requests, stats.total_tokens, stats.tokens_per_second, stats.mean_e2e,
+        stats.p90_e2e
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&sv(&["figures", "fig14", "--out", "res"])).unwrap();
+        assert_eq!(a.positional, vec!["figures", "fig14"]);
+        assert_eq!(a.get("out"), Some("res"));
+    }
+
+    #[test]
+    fn missing_flag_value_errors() {
+        assert!(Args::parse(&sv(&["serve", "--rate"])).is_err());
+    }
+
+    #[test]
+    fn num_parses_with_default() {
+        let a = Args::parse(&sv(&["serve", "--rate", "3.5"])).unwrap();
+        assert_eq!(a.num("rate", 1.0), 3.5);
+        assert_eq!(a.num("missing", 9.0), 9.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! System configuration: a TOML-subset parser (serde/toml are unavailable
+//! offline) and the typed serving config the CLI loads.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string,
+//! number, and boolean values, `#` comments.
+
+use std::collections::BTreeMap;
+
+use crate::engine::cost_model::ModelKind;
+use crate::server::sim::SimConfig;
+
+/// A parsed flat TOML-subset document: section -> key -> raw value.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+/// Scalar values the subset supports.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = k.trim().to_string();
+            let val = Self::parse_value(v.trim())
+                .ok_or_else(|| format!("line {}: bad value {:?}", lineno + 1, v.trim()))?;
+            doc.sections.entry(section.clone()).or_default().insert(key, val);
+        }
+        Ok(doc)
+    }
+
+    fn parse_value(s: &str) -> Option<TomlValue> {
+        if s == "true" {
+            return Some(TomlValue::Bool(true));
+        }
+        if s == "false" {
+            return Some(TomlValue::Bool(false));
+        }
+        if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+            return Some(TomlValue::Str(inner.to_string()));
+        }
+        s.parse::<f64>().ok().map(TomlValue::Num)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn num(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(TomlValue::as_f64).unwrap_or(default)
+    }
+
+    pub fn str(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(TomlValue::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+}
+
+/// Top-level serving configuration (CLI `--config <file>`).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub sim: SimConfig,
+    pub scheduler: String,
+    pub dispatcher: String,
+    pub rate: f64,
+    pub n_tasks: usize,
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            sim: SimConfig::default(),
+            scheduler: "kairos".into(),
+            dispatcher: "kairos".into(),
+            rate: 8.0,
+            n_tasks: 400,
+            seed: 42,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn from_toml(text: &str) -> Result<ServingConfig, String> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = ServingConfig::default();
+        cfg.sim.n_instances = doc.num("cluster", "instances", 4.0) as usize;
+        cfg.sim.block_size = doc.num("cluster", "block_size", 16.0) as u32;
+        cfg.sim.max_batch = doc.num("cluster", "max_batch", 64.0) as usize;
+        cfg.sim.kv_scale = doc.num("cluster", "kv_scale", 1.0);
+        cfg.sim.refresh_interval = doc.num("kairos", "refresh_interval", 5.0);
+        cfg.sim.warmup_frac = doc.num("workload", "warmup_frac", 0.2);
+        cfg.sim.model = match doc.str("cluster", "model", "llama3-8b").as_str() {
+            "llama3-8b" => ModelKind::Llama3_8B,
+            "llama2-13b" => ModelKind::Llama2_13B,
+            "tiny" => ModelKind::Tiny,
+            other => return Err(format!("unknown model {other:?}")),
+        };
+        cfg.scheduler = doc.str("policy", "scheduler", "kairos");
+        cfg.dispatcher = doc.str("policy", "dispatcher", "kairos");
+        cfg.rate = doc.num("workload", "rate", 8.0);
+        cfg.n_tasks = doc.num("workload", "tasks", 400.0) as usize;
+        cfg.seed = doc.num("workload", "seed", 42.0) as u64;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Kairos serving config
+[cluster]
+instances = 4
+model = "llama3-8b"
+block_size = 16
+
+[policy]
+scheduler = "kairos"
+dispatcher = "kairos"
+
+[workload]
+rate = 10.5
+tasks = 200
+seed = 7
+warmup_frac = 0.25
+
+[kairos]
+refresh_interval = 2.0
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.num("cluster", "instances", 0.0), 4.0);
+        assert_eq!(doc.str("cluster", "model", ""), "llama3-8b");
+        assert_eq!(doc.num("workload", "rate", 0.0), 10.5);
+    }
+
+    #[test]
+    fn serving_config_from_toml() {
+        let cfg = ServingConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.sim.n_instances, 4);
+        assert_eq!(cfg.scheduler, "kairos");
+        assert_eq!(cfg.rate, 10.5);
+        assert_eq!(cfg.n_tasks, 200);
+        assert_eq!(cfg.seed, 7);
+        assert!((cfg.sim.refresh_interval - 2.0).abs() < 1e-12);
+        assert!((cfg.sim.warmup_frac - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let cfg = ServingConfig::from_toml("[cluster]\ninstances = 2\n").unwrap();
+        assert_eq!(cfg.sim.n_instances, 2);
+        assert_eq!(cfg.dispatcher, "kairos");
+        assert_eq!(cfg.sim.max_batch, 64);
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("keyonly\n").is_err());
+        assert!(TomlDoc::parse("k = @bad\n").is_err());
+        assert!(ServingConfig::from_toml("[cluster]\nmodel = \"gpt5\"\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = TomlDoc::parse("# top\n\n[a]\nx = 1 # trailing\n").unwrap();
+        assert_eq!(doc.num("a", "x", 0.0), 1.0);
+    }
+}

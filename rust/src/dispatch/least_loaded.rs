@@ -1,0 +1,90 @@
+//! Least-loaded dispatching (ablation): send each request to the instance
+//! with the fewest committed KV tokens *right now*. Memory-aware but
+//! temporally blind — no ramp model, no future slots. Isolates the value of
+//! Kairos' time-dimension (DESIGN.md ablation benches).
+
+use super::DispatchPolicy;
+use crate::engine::core::InstanceStatus;
+use crate::engine::request::Request;
+use crate::Time;
+
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl LeastLoaded {
+    pub fn new() -> LeastLoaded {
+        LeastLoaded
+    }
+}
+
+impl DispatchPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn choose(
+        &mut self,
+        _req: &Request,
+        statuses: &[InstanceStatus],
+        _now: Time,
+    ) -> Option<usize> {
+        statuses
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| s.committed_tokens + s.n_waiting as u64 * 256)
+            .map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestrator::ids::AgentId;
+
+    fn st(id: usize, committed: u64) -> InstanceStatus {
+        InstanceStatus {
+            id,
+            free_blocks: 100,
+            used_blocks: 0,
+            total_blocks: 100,
+            block_size: 16,
+            n_running: 0,
+            n_waiting: 0,
+            waiting_tokens: 0,
+            committed_tokens: committed,
+            capacity_tokens: 160_000,
+            preemptions: 0,
+        }
+    }
+
+    fn req() -> Request {
+        Request {
+            id: 0,
+            msg_id: 0,
+            agent: AgentId(0),
+            upstream: None,
+            prompt_tokens: 1,
+            true_output_tokens: 1,
+            true_remaining_latency: 0.0,
+            remaining_stages: 1,
+            app_start: 0.0,
+            stage_arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn picks_lowest_commitment() {
+        let mut d = LeastLoaded::new();
+        let statuses = vec![st(0, 500), st(1, 100), st(2, 900)];
+        assert_eq!(d.choose(&req(), &statuses, 0.0), Some(1));
+    }
+
+    #[test]
+    fn waiting_queue_counts_as_load() {
+        let mut d = LeastLoaded::new();
+        let mut a = st(0, 100);
+        a.n_waiting = 10;
+        let statuses = vec![a, st(1, 200)];
+        assert_eq!(d.choose(&req(), &statuses, 0.0), Some(1));
+    }
+}

@@ -1,0 +1,55 @@
+//! Request dispatching across LLM instances (paper §6 + baselines).
+//!
+//! * [`round_robin::RoundRobin`] — Parrot's / Ayo's baseline dispatcher.
+//! * [`timeslot::TimeSlotDispatcher`] — Kairos' memory-aware time-slot
+//!   packing: per-instance slot grids of predicted KV usage, linear memory
+//!   ramps per request, lowest-expected-peak instance selection, adaptive
+//!   slot release on early completion and OOM-suspect suspension.
+//! * [`oracle_fit::OracleFit`] — best-fit with ground-truth output lengths
+//!   (the "Oracle" of Fig. 9).
+//! * [`least_loaded::LeastLoaded`] — ablation: committed-tokens balancing
+//!   without temporal modeling.
+
+pub mod least_loaded;
+pub mod oracle_fit;
+pub mod round_robin;
+pub mod timeslot;
+
+use crate::engine::core::InstanceStatus;
+use crate::engine::request::{Request, RequestId};
+use crate::Time;
+
+/// Picks the target instance for each scheduled request.
+pub trait DispatchPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Choose an instance for `req`, or `None` to keep it queued for the
+    /// next scheduling round (paper §6: "if none of the instances are
+    /// available, the request remains in the scheduling queue").
+    fn choose(
+        &mut self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        now: Time,
+    ) -> Option<usize>;
+
+    /// Request actually dispatched to `instance` (stateful policies commit
+    /// their prediction here).
+    fn on_dispatch(&mut self, _req: &Request, _instance: usize, _now: Time) {}
+
+    /// Request finished on `instance` (release predicted future usage).
+    fn on_complete(&mut self, _req: RequestId, _instance: usize, _now: Time) {}
+
+    /// Engine reported a preemption on `instance` (OOM-suspect signal).
+    fn on_preemption(&mut self, _instance: usize, _now: Time) {}
+
+    /// Refresh internal state from the orchestrator's profiles (Kairos
+    /// pulls each agent's expected execution time — the distribution mode —
+    /// here; baselines ignore it).
+    fn refresh(&mut self, _orch: &crate::orchestrator::Orchestrator) {}
+}
+
+pub use least_loaded::LeastLoaded;
+pub use oracle_fit::OracleFit;
+pub use round_robin::RoundRobin;
+pub use timeslot::{TimeSlotConfig, TimeSlotDispatcher};

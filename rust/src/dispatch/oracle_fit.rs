@@ -1,0 +1,136 @@
+//! Oracle dispatching (paper Fig. 9): knows each request's TRUE output
+//! length, hence its true peak KV demand, and places it on the instance
+//! whose expected peak stays lowest — the upper bound the time-slot
+//! dispatcher approximates without ground truth.
+
+use std::collections::HashMap;
+
+use super::DispatchPolicy;
+use crate::engine::core::InstanceStatus;
+use crate::engine::request::{Request, RequestId};
+use crate::Time;
+
+#[derive(Debug, Default)]
+pub struct OracleFit {
+    /// instance -> outstanding true token demand of dispatched requests.
+    outstanding: Vec<u64>,
+    /// request -> (instance, tokens), to release on completion.
+    placed: HashMap<RequestId, (usize, u64)>,
+}
+
+impl OracleFit {
+    pub fn new(n_instances: usize) -> OracleFit {
+        OracleFit { outstanding: vec![0; n_instances], placed: HashMap::new() }
+    }
+}
+
+impl DispatchPolicy for OracleFit {
+    fn name(&self) -> &'static str {
+        "oracle-fit"
+    }
+
+    fn choose(
+        &mut self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        _now: Time,
+    ) -> Option<usize> {
+        if self.outstanding.len() != statuses.len() {
+            self.outstanding.resize(statuses.len(), 0);
+        }
+        let demand = req.total_tokens() as u64;
+        // Feasible instances: true peak (outstanding + demand) within
+        // capacity. Choose the one with the smallest resulting peak.
+        statuses
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| self.outstanding[*i] + demand <= s.capacity_tokens)
+            .min_by_key(|(i, _)| self.outstanding[*i] + demand)
+            .map(|(i, _)| i)
+    }
+
+    fn on_dispatch(&mut self, req: &Request, instance: usize, _now: Time) {
+        let demand = req.total_tokens() as u64;
+        if instance >= self.outstanding.len() {
+            self.outstanding.resize(instance + 1, 0);
+        }
+        self.outstanding[instance] += demand;
+        self.placed.insert(req.id, (instance, demand));
+    }
+
+    fn on_complete(&mut self, req: RequestId, _instance: usize, _now: Time) {
+        if let Some((inst, demand)) = self.placed.remove(&req) {
+            self.outstanding[inst] = self.outstanding[inst].saturating_sub(demand);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestrator::ids::AgentId;
+
+    fn st(id: usize, capacity: u64) -> InstanceStatus {
+        InstanceStatus {
+            id,
+            free_blocks: 0,
+            used_blocks: 0,
+            total_blocks: 1,
+            block_size: 16,
+            n_running: 0,
+            n_waiting: 0,
+            waiting_tokens: 0,
+            committed_tokens: 0,
+            capacity_tokens: capacity,
+            preemptions: 0,
+        }
+    }
+
+    fn req(id: u64, prompt: u32, output: u32) -> Request {
+        Request {
+            id,
+            msg_id: id,
+            agent: AgentId(0),
+            upstream: None,
+            prompt_tokens: prompt,
+            true_output_tokens: output,
+            true_remaining_latency: 0.0,
+            remaining_stages: 1,
+            app_start: 0.0,
+            stage_arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn balances_true_demand() {
+        let mut d = OracleFit::new(2);
+        let statuses = vec![st(0, 1000), st(1, 1000)];
+        let r1 = req(1, 100, 400); // 500 tokens
+        let i1 = d.choose(&r1, &statuses, 0.0).unwrap();
+        d.on_dispatch(&r1, i1, 0.0);
+        let r2 = req(2, 100, 100); // 200 tokens -> other instance
+        let i2 = d.choose(&r2, &statuses, 0.0).unwrap();
+        assert_ne!(i1, i2);
+    }
+
+    #[test]
+    fn refuses_when_nothing_fits() {
+        let mut d = OracleFit::new(1);
+        let statuses = vec![st(0, 100)];
+        let r = req(1, 100, 400);
+        assert_eq!(d.choose(&r, &statuses, 0.0), None, "stays queued");
+    }
+
+    #[test]
+    fn completion_releases_demand() {
+        let mut d = OracleFit::new(1);
+        let statuses = vec![st(0, 600)];
+        let r1 = req(1, 100, 400);
+        let i = d.choose(&r1, &statuses, 0.0).unwrap();
+        d.on_dispatch(&r1, i, 0.0);
+        // 500/600 used; a 200-token request cannot fit.
+        assert_eq!(d.choose(&req(2, 100, 100), &statuses, 0.0), None);
+        d.on_complete(1, 0, 1.0);
+        assert_eq!(d.choose(&req(2, 100, 100), &statuses, 0.0), Some(0));
+    }
+}

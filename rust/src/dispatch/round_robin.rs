@@ -1,0 +1,104 @@
+//! Round-Robin dispatching — the baseline both Parrot and Ayo use
+//! (paper §2.2.3): blind to memory demand and instance state.
+
+use super::DispatchPolicy;
+use crate::engine::core::InstanceStatus;
+use crate::engine::request::Request;
+use crate::Time;
+
+/// Cycles through instances in order of arrival.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin::default()
+    }
+}
+
+impl DispatchPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn choose(
+        &mut self,
+        _req: &Request,
+        statuses: &[InstanceStatus],
+        _now: Time,
+    ) -> Option<usize> {
+        if statuses.is_empty() {
+            return None;
+        }
+        let pick = self.next % statuses.len();
+        self.next = (self.next + 1) % statuses.len();
+        Some(pick)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestrator::ids::AgentId;
+
+    fn st(id: usize) -> InstanceStatus {
+        InstanceStatus {
+            id,
+            free_blocks: 100,
+            used_blocks: 0,
+            total_blocks: 100,
+            block_size: 16,
+            n_running: 0,
+            n_waiting: 0,
+            waiting_tokens: 0,
+            committed_tokens: 0,
+            capacity_tokens: 1600,
+            preemptions: 0,
+        }
+    }
+
+    fn req() -> Request {
+        Request {
+            id: 0,
+            msg_id: 0,
+            agent: AgentId(0),
+            upstream: None,
+            prompt_tokens: 1,
+            true_output_tokens: 1,
+            true_remaining_latency: 0.0,
+            remaining_stages: 1,
+            app_start: 0.0,
+            stage_arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn cycles_through_instances() {
+        let mut rr = RoundRobin::new();
+        let statuses = vec![st(0), st(1), st(2)];
+        let picks: Vec<usize> = (0..6)
+            .map(|_| rr.choose(&req(), &statuses, 0.0).unwrap())
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn ignores_load_entirely() {
+        // The defining (mis)behaviour: a saturated instance still gets work.
+        let mut rr = RoundRobin::new();
+        let mut busy = st(0);
+        busy.free_blocks = 0;
+        busy.used_blocks = 100;
+        busy.committed_tokens = 1600;
+        let statuses = vec![busy, st(1)];
+        assert_eq!(rr.choose(&req(), &statuses, 0.0), Some(0));
+    }
+
+    #[test]
+    fn empty_cluster_returns_none() {
+        let mut rr = RoundRobin::new();
+        assert_eq!(rr.choose(&req(), &[], 0.0), None);
+    }
+}

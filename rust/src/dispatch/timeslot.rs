@@ -1,0 +1,487 @@
+//! Kairos' memory-aware time-slot dispatcher (paper §6).
+//!
+//! Each request's KV usage is modelled as a linear ramp (Eq. 1):
+//!
+//! ```text
+//! f_i(t) = P_i + k · (t − t_start)   for t in [t_start, t_end), else 0
+//! ```
+//!
+//! with `P_i` the prompt (prefill) KV bytes — computable online from the
+//! prompt length — `k` the memory ramp slope from prior hardware profiling,
+//! and `t_end = t_start + T_i` where `T_i` is the **mode** of the agent's
+//! single-request execution-latency distribution.
+//!
+//! The future timeline is discretized into fixed 0.5 s slots; per instance a
+//! ring of slots accumulates `F_j(t) = Σ f_i(t)` (Eq. 3). A request may go
+//! to instance `j` only if no spanned slot would exceed capacity; among the
+//! available instances the one with the lowest expected **total peak**
+//! memory wins. Adaptive measures: slots are released early when a request
+//! finishes before its prediction, and an instance that reports a
+//! preemption (OOM-suspect) is suspended for a cooldown.
+
+use std::collections::HashMap;
+
+use super::DispatchPolicy;
+use crate::engine::core::InstanceStatus;
+use crate::engine::request::{Request, RequestId};
+use crate::Time;
+
+/// Tuning parameters of the time-slot packer.
+#[derive(Debug, Clone, Copy)]
+pub struct TimeSlotConfig {
+    /// Slot length in seconds (paper: 0.5 s is the empirical sweet spot).
+    pub slot_len: f64,
+    /// Horizon in slots (predictions beyond it are clamped to the last slot).
+    pub horizon_slots: usize,
+    /// KV bytes per token (from the model's cost calibration).
+    pub kv_bytes_per_token: f64,
+    /// Memory ramp slope `k` in bytes/second (decode rate × bytes/token).
+    pub mem_slope: f64,
+    /// Per-instance KV capacity in bytes.
+    pub capacity_bytes: f64,
+    /// Fallback expected execution time before profiles exist (s).
+    pub default_exec_time: f64,
+    /// Safety factor on expected execution times: the mode of a
+    /// heavy-tailed latency distribution under-estimates the tail, so
+    /// packing with the raw mode over-commits; >1 compensates (the paper's
+    /// "estimation errors" margin, §6).
+    pub safety: f64,
+    /// OOM-suspect suspension cooldown (s).
+    pub suspend_cooldown: f64,
+}
+
+impl TimeSlotConfig {
+    pub fn slots_spanned(&self, duration: f64) -> usize {
+        ((duration / self.slot_len).ceil() as usize).clamp(1, self.horizon_slots)
+    }
+}
+
+/// A committed prediction for one dispatched request.
+#[derive(Debug, Clone)]
+struct Placement {
+    instance: usize,
+    start: Time,
+    end: Time,
+    prefill_bytes: f64,
+}
+
+/// Per-instance future memory profile as a slot ring.
+#[derive(Debug, Clone)]
+struct SlotRing {
+    /// Absolute index of slots[cursor]; slot s covers
+    /// [s·slot_len, (s+1)·slot_len).
+    base_slot: i64,
+    cursor: usize,
+    slots: Vec<f64>,
+}
+
+impl SlotRing {
+    fn new(horizon: usize) -> SlotRing {
+        SlotRing { base_slot: 0, cursor: 0, slots: vec![0.0; horizon] }
+    }
+
+    fn idx(&self, abs_slot: i64) -> Option<usize> {
+        let off = abs_slot - self.base_slot;
+        if off < 0 || off >= self.slots.len() as i64 {
+            None
+        } else {
+            Some((self.cursor + off as usize) % self.slots.len())
+        }
+    }
+
+    /// Advance the ring so `abs_slot` becomes the base; expired slots reset.
+    fn advance_to(&mut self, abs_slot: i64) {
+        while self.base_slot < abs_slot {
+            self.slots[self.cursor] = 0.0;
+            self.cursor = (self.cursor + 1) % self.slots.len();
+            self.base_slot += 1;
+        }
+    }
+
+    fn add(&mut self, abs_slot: i64, v: f64) {
+        // Beyond-horizon predictions fold into the last slot (conservative).
+        let clamped = abs_slot
+            .max(self.base_slot)
+            .min(self.base_slot + self.slots.len() as i64 - 1);
+        if let Some(i) = self.idx(clamped) {
+            self.slots[i] += v;
+            if self.slots[i] < 0.0 {
+                self.slots[i] = 0.0; // numeric dust from release
+            }
+        }
+    }
+
+    fn get(&self, abs_slot: i64) -> f64 {
+        self.idx(abs_slot.max(self.base_slot)).map_or(0.0, |i| self.slots[i])
+    }
+
+    fn peak(&self) -> f64 {
+        self.slots.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// The memory-aware time-slot dispatcher.
+pub struct TimeSlotDispatcher {
+    cfg: TimeSlotConfig,
+    rings: Vec<SlotRing>,
+    placements: HashMap<RequestId, Placement>,
+    /// Expected exec-time provider: agent -> T_i (mode of the exec-latency
+    /// distribution). Refreshed by the server from the orchestrator.
+    expected_exec: HashMap<crate::orchestrator::ids::AgentId, f64>,
+    /// Instance -> suspended-until time (OOM-suspect cooldown).
+    suspended_until: Vec<Time>,
+    /// Diagnostics.
+    pub rejected_rounds: u64,
+}
+
+impl TimeSlotDispatcher {
+    pub fn new(n_instances: usize, cfg: TimeSlotConfig) -> TimeSlotDispatcher {
+        TimeSlotDispatcher {
+            cfg,
+            rings: (0..n_instances).map(|_| SlotRing::new(cfg.horizon_slots)).collect(),
+            placements: HashMap::new(),
+            expected_exec: HashMap::new(),
+            suspended_until: vec![0.0; n_instances],
+            rejected_rounds: 0,
+        }
+    }
+
+    pub fn config(&self) -> &TimeSlotConfig {
+        &self.cfg
+    }
+
+    /// Refresh the per-agent expected execution times from the profiler
+    /// (mode of the single-request latency distribution, §6).
+    pub fn set_expected_exec(
+        &mut self,
+        agent: crate::orchestrator::ids::AgentId,
+        t_mode: f64,
+    ) {
+        self.expected_exec.insert(agent, t_mode.max(1e-3));
+    }
+
+    fn abs_slot(&self, t: Time) -> i64 {
+        (t / self.cfg.slot_len).floor() as i64
+    }
+
+    /// The request's predicted memory in the slot covering `t`
+    /// (midpoint-evaluated linear ramp, clamped to [P_i, peak]).
+    fn ramp_at(&self, prefill_bytes: f64, start: Time, end: Time, slot: i64) -> f64 {
+        let mid = (slot as f64 + 0.5) * self.cfg.slot_len;
+        if mid < start || mid >= end {
+            // Slot partially covered at the edges: charge the boundary value
+            // if the slot intersects [start, end) at all.
+            let slot_lo = slot as f64 * self.cfg.slot_len;
+            let slot_hi = slot_lo + self.cfg.slot_len;
+            if slot_hi <= start || slot_lo >= end {
+                return 0.0;
+            }
+        }
+        let t = mid.clamp(start, end);
+        prefill_bytes + self.cfg.mem_slope * (t - start)
+    }
+
+    fn expected_time(&self, req: &Request) -> f64 {
+        self.expected_exec
+            .get(&req.agent)
+            .copied()
+            .unwrap_or(self.cfg.default_exec_time)
+            * self.cfg.safety
+    }
+
+    /// Evaluate placing `req` on instance `j` starting `now`; returns the
+    /// resulting peak usage over the spanned slots, or None if any slot
+    /// would exceed capacity.
+    fn evaluate(&self, j: usize, req: &Request, now: Time) -> Option<f64> {
+        let t_i = self.expected_time(req);
+        let start = now;
+        let end = now + t_i;
+        let prefill_bytes = req.prompt_tokens as f64 * self.cfg.kv_bytes_per_token;
+        let s0 = self.abs_slot(start);
+        let s1 = self.abs_slot(end) + 1;
+        let ring = &self.rings[j];
+        let mut peak: f64 = ring.peak();
+        for s in s0..=s1 {
+            let add = self.ramp_at(prefill_bytes, start, end, s);
+            if add == 0.0 {
+                continue;
+            }
+            let total = ring.get(s) + add;
+            if total > self.cfg.capacity_bytes {
+                return None; // this instance is temporarily unavailable
+            }
+            peak = peak.max(total);
+        }
+        Some(peak)
+    }
+}
+
+impl DispatchPolicy for TimeSlotDispatcher {
+    fn name(&self) -> &'static str {
+        "kairos-timeslot"
+    }
+
+    fn choose(
+        &mut self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        now: Time,
+    ) -> Option<usize> {
+        debug_assert_eq!(statuses.len(), self.rings.len());
+        let cur = self.abs_slot(now);
+        for ring in self.rings.iter_mut() {
+            ring.advance_to(cur);
+        }
+        // Evaluate all instances "in parallel" (paper §6 step 2) and pick
+        // the lowest expected total peak among the available ones.
+        // Expected total KV tokens of this request over its lifetime.
+        let expected_tokens = req.prompt_tokens as u64
+            + (self.cfg.mem_slope * self.expected_time(req) / self.cfg.kv_bytes_per_token)
+                as u64;
+        let mut best: Option<(usize, f64)> = None;
+        for j in 0..self.rings.len() {
+            if now < self.suspended_until[j] {
+                continue; // OOM-suspect cooldown
+            }
+            // Live-status feasibility: dispatching is deferred while the
+            // instance's committed + queued demand leaves no room — the
+            // request "remains in the scheduling queue" (§6). This keeps
+            // engine-side queues short so the slot-ramp predictions (which
+            // assume execution starts at dispatch) stay accurate.
+            let st = &statuses[j];
+            if st.committed_tokens + st.waiting_tokens + expected_tokens
+                > st.capacity_tokens
+            {
+                continue;
+            }
+            if let Some(peak) = self.evaluate(j, req, now) {
+                if best.map(|(_, p)| peak < p).unwrap_or(true) {
+                    best = Some((j, peak));
+                }
+            }
+        }
+        if best.is_none() {
+            self.rejected_rounds += 1;
+        }
+        best.map(|(j, _)| j)
+    }
+
+    fn on_dispatch(&mut self, req: &Request, instance: usize, now: Time) {
+        let t_i = self.expected_time(req);
+        let start = now;
+        let end = now + t_i;
+        let prefill_bytes = req.prompt_tokens as f64 * self.cfg.kv_bytes_per_token;
+        let s0 = self.abs_slot(start);
+        let s1 = self.abs_slot(end) + 1;
+        for s in s0..=s1 {
+            let add = self.ramp_at(prefill_bytes, start, end, s);
+            if add > 0.0 {
+                self.rings[instance].add(s, add);
+            }
+        }
+        self.placements
+            .insert(req.id, Placement { instance, start, end, prefill_bytes });
+    }
+
+    fn on_complete(&mut self, req: RequestId, _instance: usize, now: Time) {
+        // Early (or late) completion: remove the request's remaining
+        // predicted usage from all future slots (§6 adaptive measure).
+        let Some(p) = self.placements.remove(&req) else { return };
+        let cur = self.abs_slot(now);
+        let s1 = self.abs_slot(p.end) + 1;
+        for s in cur..=s1 {
+            let v = self.ramp_at(p.prefill_bytes, p.start, p.end, s);
+            if v > 0.0 {
+                self.rings[p.instance].add(s, -v);
+            }
+        }
+    }
+
+    fn on_preemption(&mut self, instance: usize, now: Time) {
+        // OOM-suspect: temporarily suspend new dispatches to this instance.
+        self.suspended_until[instance] = now + self.cfg.suspend_cooldown;
+    }
+
+    fn refresh(&mut self, orch: &crate::orchestrator::Orchestrator) {
+        for agent in orch.registry.all() {
+            if let Some(mode) = orch.profiler.expected_exec(agent) {
+                self.set_expected_exec(agent, mode);
+            }
+        }
+    }
+}
+
+/// Default config for a cost-model-calibrated cluster.
+impl TimeSlotConfig {
+    pub fn for_cost_model(cost: &crate::engine::cost_model::CostModel) -> TimeSlotConfig {
+        TimeSlotConfig {
+            slot_len: 0.5,
+            horizon_slots: 600, // 5 minutes of look-ahead
+            kv_bytes_per_token: cost.kv_bytes_per_token as f64,
+            // Profile at a representative operating point (batch 16,
+            // context 600) — "determined through prior hardware profiling".
+            mem_slope: cost.mem_slope(16, 600) / 16.0,
+            capacity_bytes: cost.kv_budget_bytes as f64,
+            default_exec_time: 5.0,
+            safety: 1.8,
+            suspend_cooldown: 2.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestrator::ids::AgentId;
+
+    fn cfg() -> TimeSlotConfig {
+        TimeSlotConfig {
+            slot_len: 0.5,
+            horizon_slots: 100,
+            kv_bytes_per_token: 1.0, // 1 byte per token: easy arithmetic
+            mem_slope: 10.0,         // bytes per second
+            capacity_bytes: 1000.0,
+            default_exec_time: 4.0,
+            safety: 1.0,
+            suspend_cooldown: 2.0,
+        }
+    }
+
+    fn st(id: usize) -> InstanceStatus {
+        InstanceStatus {
+            id,
+            free_blocks: 100,
+            used_blocks: 0,
+            total_blocks: 100,
+            block_size: 16,
+            n_running: 0,
+            n_waiting: 0,
+            waiting_tokens: 0,
+            committed_tokens: 0,
+            capacity_tokens: 1000,
+            preemptions: 0,
+        }
+    }
+
+    fn req(id: u64, agent: u32, prompt: u32) -> Request {
+        Request {
+            id,
+            msg_id: id,
+            agent: AgentId(agent),
+            upstream: None,
+            prompt_tokens: prompt,
+            true_output_tokens: 10,
+            true_remaining_latency: 0.0,
+            remaining_stages: 1,
+            app_start: 0.0,
+            stage_arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn balances_across_instances() {
+        let mut d = TimeSlotDispatcher::new(2, cfg());
+        let statuses = vec![st(0), st(1)];
+        let r1 = req(1, 0, 500);
+        let i1 = d.choose(&r1, &statuses, 0.0).unwrap();
+        d.on_dispatch(&r1, i1, 0.0);
+        // Second heavy request should take the other instance.
+        let r2 = req(2, 0, 500);
+        let i2 = d.choose(&r2, &statuses, 0.0).unwrap();
+        assert_ne!(i1, i2);
+    }
+
+    #[test]
+    fn rejects_when_all_slots_full() {
+        let mut d = TimeSlotDispatcher::new(1, cfg());
+        let statuses = vec![st(0)];
+        // Fill the instance close to capacity.
+        let r1 = req(1, 0, 900);
+        let i = d.choose(&r1, &statuses, 0.0).unwrap();
+        d.on_dispatch(&r1, i, 0.0);
+        // 900 + ramp(40) ~ 940; a 200-prompt request would cross 1000.
+        let r2 = req(2, 0, 200);
+        assert_eq!(d.choose(&r2, &statuses, 0.0), None);
+        assert_eq!(d.rejected_rounds, 1);
+    }
+
+    #[test]
+    fn completion_frees_future_slots() {
+        let mut d = TimeSlotDispatcher::new(1, cfg());
+        let statuses = vec![st(0)];
+        let r1 = req(1, 0, 900);
+        let i = d.choose(&r1, &statuses, 0.0).unwrap();
+        d.on_dispatch(&r1, i, 0.0);
+        assert_eq!(d.choose(&req(2, 0, 200), &statuses, 0.5), None);
+        // r1 finishes much earlier than predicted.
+        d.on_complete(1, 0, 1.0);
+        assert_eq!(d.choose(&req(2, 0, 200), &statuses, 1.0), Some(0));
+    }
+
+    #[test]
+    fn preemption_suspends_instance() {
+        let mut d = TimeSlotDispatcher::new(2, cfg());
+        let statuses = vec![st(0), st(1)];
+        d.on_preemption(0, 0.0);
+        // During the cooldown all traffic goes to instance 1.
+        for k in 0..4 {
+            assert_eq!(d.choose(&req(k, 0, 10), &statuses, 0.1), Some(1));
+        }
+        // After the cooldown instance 0 becomes eligible again.
+        let pick = d.choose(&req(9, 0, 10), &statuses, 3.0);
+        assert!(pick.is_some());
+    }
+
+    #[test]
+    fn expected_time_uses_agent_profile() {
+        let mut d = TimeSlotDispatcher::new(1, cfg());
+        // Agent 7 runs 20 s (long ramp); default is 4 s.
+        d.set_expected_exec(AgentId(7), 20.0);
+        let long = req(1, 7, 100);
+        let short = req(2, 0, 100);
+        // Longer expected time => more future slots occupied => higher peak.
+        let statuses = vec![st(0)];
+        let _ = d.choose(&long, &statuses, 0.0);
+        d.on_dispatch(&long, 0, 0.0);
+        let peak_long = d.rings[0].peak();
+        let mut d2 = TimeSlotDispatcher::new(1, cfg());
+        let _ = d2.choose(&short, &statuses, 0.0);
+        d2.on_dispatch(&short, 0, 0.0);
+        let peak_short = d2.rings[0].peak();
+        assert!(peak_long > peak_short);
+    }
+
+    #[test]
+    fn ring_advances_and_recycles() {
+        let mut ring = SlotRing::new(4);
+        ring.add(0, 5.0);
+        ring.add(3, 7.0);
+        assert_eq!(ring.get(0), 5.0);
+        ring.advance_to(2);
+        assert_eq!(ring.get(0), 0.0, "expired slots drop");
+        assert_eq!(ring.get(3), 7.0, "future slots survive");
+        ring.add(5, 1.0);
+        assert_eq!(ring.get(5), 1.0);
+    }
+
+    #[test]
+    fn beyond_horizon_folds_into_last_slot() {
+        let mut ring = SlotRing::new(4);
+        ring.add(1000, 9.0);
+        assert_eq!(ring.get(3), 9.0);
+    }
+
+    #[test]
+    fn slot_accounting_never_negative() {
+        let mut d = TimeSlotDispatcher::new(1, cfg());
+        let statuses = vec![st(0)];
+        let r = req(1, 0, 100);
+        let i = d.choose(&r, &statuses, 0.0).unwrap();
+        d.on_dispatch(&r, i, 0.0);
+        d.on_complete(1, 0, 0.0);
+        // Double-complete must be a no-op.
+        d.on_complete(1, 0, 0.0);
+        assert!(d.rings[0].peak() >= 0.0);
+        assert!(d.rings[0].peak() < 1e-6, "all predicted usage released");
+    }
+}

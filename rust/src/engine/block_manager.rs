@@ -1,0 +1,159 @@
+//! Paged KV-cache block accounting (vLLM's PagedAttention block manager).
+//!
+//! The dispatcher experiments hinge on this: when a batch's KV demand
+//! exceeds the instance's block pool, the engine must preempt and recompute
+//! (paper §2.2.3 measures 18.4% of requests preempted under Round-Robin).
+
+/// Allocator for fixed-size KV blocks of one engine instance.
+#[derive(Debug, Clone)]
+pub struct BlockManager {
+    block_size: u32,
+    total_blocks: u32,
+    used_blocks: u32,
+    /// Cumulative allocation failures (diagnostics).
+    pub alloc_failures: u64,
+}
+
+impl BlockManager {
+    pub fn new(total_blocks: u32, block_size: u32) -> BlockManager {
+        assert!(block_size > 0 && total_blocks > 0);
+        BlockManager { block_size, total_blocks, used_blocks: 0, alloc_failures: 0 }
+    }
+
+    /// Blocks required to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: u32) -> u32 {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn free_blocks(&self) -> u32 {
+        self.total_blocks - self.used_blocks
+    }
+
+    pub fn used_blocks(&self) -> u32 {
+        self.used_blocks
+    }
+
+    pub fn total_blocks(&self) -> u32 {
+        self.total_blocks
+    }
+
+    pub fn block_size(&self) -> u32 {
+        self.block_size
+    }
+
+    /// Utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        self.used_blocks as f64 / self.total_blocks as f64
+    }
+
+    /// Try to allocate `n` blocks; returns false (and counts the failure)
+    /// if the pool cannot satisfy it.
+    pub fn allocate(&mut self, n: u32) -> bool {
+        if n <= self.free_blocks() {
+            self.used_blocks += n;
+            true
+        } else {
+            self.alloc_failures += 1;
+            false
+        }
+    }
+
+    /// Release `n` blocks back to the pool.
+    pub fn free(&mut self, n: u32) {
+        assert!(n <= self.used_blocks, "double free: {} > {}", n, self.used_blocks);
+        self.used_blocks -= n;
+    }
+
+    /// Whether a sequence growing from `tokens` to `tokens + 1` needs a new
+    /// block appended.
+    pub fn needs_new_block(&self, tokens: u32) -> bool {
+        tokens % self.block_size == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+    use crate::testing::forall;
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let bm = BlockManager::new(100, 16);
+        assert_eq!(bm.blocks_for(0), 0);
+        assert_eq!(bm.blocks_for(1), 1);
+        assert_eq!(bm.blocks_for(16), 1);
+        assert_eq!(bm.blocks_for(17), 2);
+    }
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut bm = BlockManager::new(10, 16);
+        assert!(bm.allocate(4));
+        assert_eq!(bm.free_blocks(), 6);
+        assert!(bm.allocate(6));
+        assert!(!bm.allocate(1));
+        assert_eq!(bm.alloc_failures, 1);
+        bm.free(10);
+        assert_eq!(bm.free_blocks(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut bm = BlockManager::new(10, 16);
+        bm.allocate(2);
+        bm.free(3);
+    }
+
+    #[test]
+    fn needs_new_block_at_boundaries() {
+        let bm = BlockManager::new(10, 16);
+        assert!(bm.needs_new_block(0));
+        assert!(!bm.needs_new_block(1));
+        assert!(!bm.needs_new_block(15));
+        assert!(bm.needs_new_block(16));
+        assert!(bm.needs_new_block(32));
+    }
+
+    #[test]
+    fn conservation_property() {
+        // Random alloc/free traces never violate used + free == total.
+        forall(
+            "block-conservation",
+            200,
+            0xB10C,
+            |rng: &mut Rng| {
+                let ops: Vec<(bool, u32)> = (0..50)
+                    .map(|_| (rng.chance(0.6), rng.below(8) as u32 + 1))
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut bm = BlockManager::new(32, 16);
+                let mut held: Vec<u32> = vec![];
+                for &(is_alloc, n) in ops {
+                    if is_alloc {
+                        if bm.allocate(n) {
+                            held.push(n);
+                        }
+                    } else if let Some(n) = held.pop() {
+                        bm.free(n);
+                    }
+                    let held_sum: u32 = held.iter().sum();
+                    if bm.used_blocks() != held_sum {
+                        return Err(format!(
+                            "used {} != held {}",
+                            bm.used_blocks(),
+                            held_sum
+                        ));
+                    }
+                    if bm.used_blocks() + bm.free_blocks() != bm.total_blocks() {
+                        return Err("used + free != total".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,559 @@
+//! Continuous-batching engine core (the vLLM iteration loop).
+//!
+//! One [`EngineCore`] is one LLM instance (one GPU in the paper's testbed).
+//! Every call to [`EngineCore::step`] runs one iteration:
+//!
+//! 1. **Admit** waiting sequences (prefill) while KV blocks and the batch /
+//!    prefill-token budgets allow — vLLM's prefill-priority scheduling.
+//! 2. **Grow** decoding sequences by one block at block boundaries; if the
+//!    pool is exhausted, **preempt** the latest-arrived decoding sequence
+//!    (recompute-style: its blocks are freed and it re-enters the waiting
+//!    queue to re-prefill prompt + already-generated tokens).
+//! 3. **Execute** the iteration through the [`ExecBackend`] (virtual-time
+//!    cost model or real PJRT compute) and advance sequence state.
+//! 4. **Complete** sequences that reached their output length.
+
+use std::collections::VecDeque;
+
+use super::block_manager::BlockManager;
+use super::cost_model::CostModel;
+use super::request::{Request, RequestId, SeqPhase, SeqState};
+use crate::Time;
+
+/// Execution backend: advances the actual compute for one iteration and
+/// returns its duration in seconds.
+pub trait ExecBackend {
+    /// `prefill`: (request, tokens to prefill) admitted this step.
+    /// `decode`: (request, current context length) generating one token.
+    fn run_step(&mut self, prefill: &[(RequestId, u32)], decode: &[(RequestId, u32)]) -> f64;
+}
+
+/// Virtual-time backend: the calibrated cost model *is* the execution.
+#[derive(Debug, Clone)]
+pub struct SimBackend {
+    pub cost: CostModel,
+}
+
+impl SimBackend {
+    pub fn new(cost: CostModel) -> SimBackend {
+        SimBackend { cost }
+    }
+}
+
+impl ExecBackend for SimBackend {
+    fn run_step(&mut self, prefill: &[(RequestId, u32)], decode: &[(RequestId, u32)]) -> f64 {
+        let prefill_tokens: u32 = prefill.iter().map(|&(_, t)| t).sum();
+        let sum_ctx: u64 = decode.iter().map(|&(_, c)| c as u64).sum();
+        self.cost.step_time(prefill_tokens, decode.len() as u32, sum_ctx)
+    }
+}
+
+/// Outcome of one engine iteration.
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    /// Iteration duration (seconds; virtual or measured).
+    pub duration: f64,
+    /// Sequences that finished this step.
+    pub completed: Vec<SeqState>,
+    /// Sequences preempted this step.
+    pub preempted: u32,
+    /// Prefill tokens processed.
+    pub prefill_tokens: u32,
+    /// Decoding sequences advanced.
+    pub n_decode: u32,
+}
+
+/// Point-in-time view of an instance for the dispatcher / status monitor
+/// (the paper's vLLM status APIs).
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceStatus {
+    pub id: usize,
+    pub free_blocks: u32,
+    pub used_blocks: u32,
+    pub total_blocks: u32,
+    pub block_size: u32,
+    pub n_running: usize,
+    pub n_waiting: usize,
+    /// Prompt tokens of requests dispatched but not yet admitted.
+    pub waiting_tokens: u64,
+    /// KV tokens currently committed (running context).
+    pub committed_tokens: u64,
+    /// Token capacity of the KV pool.
+    pub capacity_tokens: u64,
+    pub preemptions: u64,
+}
+
+impl InstanceStatus {
+    pub fn utilization(&self) -> f64 {
+        self.used_blocks as f64 / self.total_blocks as f64
+    }
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    pub block_size: u32,
+    pub total_blocks: u32,
+    /// Max sequences resident in a batch (vLLM `max_num_seqs`).
+    pub max_batch: usize,
+    /// Max prefill tokens admitted per iteration (vLLM
+    /// `max_num_batched_tokens`).
+    pub max_prefill_tokens: u32,
+}
+
+impl EngineConfig {
+    /// Config for a GPU instance serving `cost`'s model.
+    pub fn for_model(cost: &CostModel, block_size: u32) -> EngineConfig {
+        EngineConfig {
+            block_size,
+            total_blocks: cost.total_blocks(block_size),
+            max_batch: 256,
+            max_prefill_tokens: 2048,
+        }
+    }
+}
+
+/// One LLM instance: waiting queue + running batch + block pool + backend.
+pub struct EngineCore<B: ExecBackend> {
+    pub id: usize,
+    pub backend: B,
+    blocks: BlockManager,
+    cfg: EngineConfig,
+    waiting: VecDeque<SeqState>,
+    running: Vec<SeqState>,
+    // counters
+    pub preemptions: u64,
+    pub steps: u64,
+    pub tokens_generated: u64,
+    /// Tokens re-prefilled due to preemption (wasted work; §2.2.3 reports
+    /// 14.2% of memory wasted under Round-Robin).
+    pub recomputed_tokens: u64,
+    /// When true, the dispatcher has suspended this instance after an
+    /// OOM-suspect (paper §6 adaptive measure).
+    pub suspended: bool,
+    /// Set when the waiting queue changed since the last policy sort
+    /// (avoids re-sorting on every iteration — EXPERIMENTS.md §Perf).
+    pub waiting_dirty: bool,
+}
+
+impl<B: ExecBackend> EngineCore<B> {
+    pub fn new(id: usize, cfg: EngineConfig, backend: B) -> EngineCore<B> {
+        EngineCore {
+            id,
+            backend,
+            blocks: BlockManager::new(cfg.total_blocks, cfg.block_size),
+            cfg,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            preemptions: 0,
+            steps: 0,
+            tokens_generated: 0,
+            recomputed_tokens: 0,
+            suspended: false,
+            waiting_dirty: false,
+        }
+    }
+
+    /// Enqueue a dispatched request.
+    pub fn submit(&mut self, req: Request, now: Time) {
+        self.waiting.push_back(SeqState::new(req, now));
+        self.waiting_dirty = true;
+    }
+
+    /// Whether the engine has any work.
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    pub fn status(&self) -> InstanceStatus {
+        InstanceStatus {
+            id: self.id,
+            free_blocks: self.blocks.free_blocks(),
+            used_blocks: self.blocks.used_blocks(),
+            total_blocks: self.blocks.total_blocks(),
+            block_size: self.blocks.block_size(),
+            n_running: self.running.len(),
+            n_waiting: self.waiting.len(),
+            waiting_tokens: self
+                .waiting
+                .iter()
+                .map(|s| s.prefill_tokens as u64)
+                .sum(),
+            committed_tokens: self
+                .running
+                .iter()
+                .map(|s| s.context_len() as u64)
+                .sum(),
+            capacity_tokens: self.blocks.total_blocks() as u64
+                * self.blocks.block_size() as u64,
+            preemptions: self.preemptions,
+        }
+    }
+
+    /// Number of sequences currently resident (running batch).
+    pub fn batch_len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Re-order the waiting queue by a scheduling key (lower = admitted
+    /// first). This is how the system's scheduling policy governs the
+    /// engine-side queue — vLLM's pluggable scheduling policy; FCFS for
+    /// Parrot, topology depth for Ayo, Kairos' agent priority + app start
+    /// for Kairos. Preempted sequences compete with their original key (a
+    /// preempted request does not lose its place).
+    pub fn sort_waiting_by<F: Fn(&Request) -> (f64, f64)>(&mut self, key: F) {
+        self.waiting_dirty = false;
+        if self.waiting.len() < 2 {
+            return;
+        }
+        let mut v: Vec<SeqState> = self.waiting.drain(..).collect();
+        v.sort_by(|a, b| {
+            let ka = key(&a.req);
+            let kb = key(&b.req);
+            ka.partial_cmp(&kb)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(
+                    a.req
+                        .stage_arrival
+                        .partial_cmp(&b.req.stage_arrival)
+                        .unwrap_or(std::cmp::Ordering::Equal),
+                )
+        });
+        self.waiting = v.into();
+    }
+
+    /// Run one continuous-batching iteration at engine-local time `now`.
+    pub fn step(&mut self, now: Time) -> StepOutcome {
+        let mut out = StepOutcome::default();
+
+        // --- 1. Admit waiting sequences (prefill-priority) ---------------
+        let mut prefill_budget = self.cfg.max_prefill_tokens;
+        while let Some(front) = self.waiting.front() {
+            if self.running.len() >= self.cfg.max_batch {
+                break;
+            }
+            let need_tokens = front.prefill_tokens;
+            if need_tokens > prefill_budget && out.prefill_tokens > 0 {
+                break; // token budget exhausted (always admit >= 1 if possible)
+            }
+            // +1: room for the first generated token of this iteration.
+            let need_blocks = self.blocks.blocks_for(front.context_len() + 1);
+            // vLLM-style watermark: keep one growth block of headroom per
+            // resident sequence so admission does not immediately force
+            // decode-time preemption.
+            let headroom = self.running.len() as u32 + 1;
+            if need_blocks + headroom > self.blocks.free_blocks() {
+                self.blocks.alloc_failures += 1;
+                break; // no memory: stay queued
+            }
+            let ok = self.blocks.allocate(need_blocks);
+            debug_assert!(ok);
+            let mut seq = self.waiting.pop_front().unwrap();
+            seq.held_blocks = need_blocks;
+            seq.admitted_at = now;
+            seq.first_admitted_at.get_or_insert(now);
+            prefill_budget = prefill_budget.saturating_sub(need_tokens);
+            out.prefill_tokens += need_tokens;
+            if seq.preempt_count > 0 {
+                self.recomputed_tokens += need_tokens as u64;
+            }
+            self.running.push(seq);
+        }
+
+        // --- 2. Block growth for decoding sequences; preempt on pressure -
+        let mut need_growth: Vec<usize> = Vec::new();
+        for (i, s) in self.running.iter().enumerate() {
+            if s.phase == SeqPhase::Decoding && self.blocks.needs_new_block(s.context_len())
+            {
+                need_growth.push(i);
+            }
+        }
+        // Preempt latest-arrived decoding sequences until growth fits.
+        while (need_growth.len() as u32) > self.blocks.free_blocks() {
+            let victim_idx = self
+                .running
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.phase == SeqPhase::Decoding)
+                .max_by(|(_, a), (_, b)| {
+                    a.req
+                        .stage_arrival
+                        .partial_cmp(&b.req.stage_arrival)
+                        .unwrap()
+                })
+                .map(|(i, _)| i);
+            let Some(vi) = victim_idx else { break };
+            let mut victim = self.running.swap_remove(vi);
+            self.blocks.free(victim.held_blocks);
+            victim.held_blocks = 0;
+            victim.preempt_count += 1;
+            victim.phase = SeqPhase::NeedsPrefill;
+            // Recompute-style: the whole context must be prefilled again.
+            victim.prefill_tokens = victim.context_len();
+            self.preemptions += 1;
+            out.preempted += 1;
+            self.waiting.push_front(victim);
+            self.waiting_dirty = true;
+            // Re-derive growth set (indices shifted by swap_remove).
+            need_growth.clear();
+            for (i, s) in self.running.iter().enumerate() {
+                if s.phase == SeqPhase::Decoding
+                    && self.blocks.needs_new_block(s.context_len())
+                {
+                    need_growth.push(i);
+                }
+            }
+        }
+        for &i in &need_growth {
+            let ok = self.blocks.allocate(1);
+            debug_assert!(ok, "growth allocation must succeed after preemption");
+            self.running[i].held_blocks += 1;
+        }
+
+        // --- 3. Execute the iteration -------------------------------------
+        let prefill: Vec<(RequestId, u32)> = self
+            .running
+            .iter()
+            .filter(|s| s.phase == SeqPhase::NeedsPrefill)
+            .map(|s| (s.req.id, s.prefill_tokens))
+            .collect();
+        let decode: Vec<(RequestId, u32)> = self
+            .running
+            .iter()
+            .filter(|s| s.phase == SeqPhase::Decoding)
+            .map(|s| (s.req.id, s.context_len()))
+            .collect();
+        if prefill.is_empty() && decode.is_empty() {
+            return out; // idle
+        }
+        out.n_decode = decode.len() as u32;
+        out.duration = self.backend.run_step(&prefill, &decode);
+        self.steps += 1;
+
+        // --- 4. Advance sequence state ------------------------------------
+        for s in self.running.iter_mut() {
+            match s.phase {
+                SeqPhase::NeedsPrefill => {
+                    // Prefill iteration also emits the first new token.
+                    s.phase = SeqPhase::Decoding;
+                    s.prefill_tokens = 0;
+                    s.generated += 1;
+                    self.tokens_generated += 1;
+                }
+                SeqPhase::Decoding => {
+                    s.generated += 1;
+                    self.tokens_generated += 1;
+                }
+            }
+        }
+
+        // --- 5. Collect completions ---------------------------------------
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].is_finished() {
+                let seq = self.running.swap_remove(i);
+                self.blocks.free(seq.held_blocks);
+                out.completed.push(seq);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Drain every request (used on shutdown): waiting + running, in order.
+    pub fn drain(&mut self) -> Vec<Request> {
+        let mut reqs: Vec<Request> = self.waiting.drain(..).map(|s| s.req).collect();
+        for s in self.running.drain(..) {
+            self.blocks.free(s.held_blocks);
+            reqs.push(s.req);
+        }
+        reqs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost_model::ModelKind;
+    use crate::orchestrator::ids::AgentId;
+
+    fn mk_req(id: u64, prompt: u32, output: u32, arrival: f64) -> Request {
+        Request {
+            id,
+            msg_id: id,
+            agent: AgentId(0),
+            upstream: None,
+            prompt_tokens: prompt,
+            true_output_tokens: output,
+            true_remaining_latency: 0.0,
+            remaining_stages: 1,
+            app_start: arrival,
+            stage_arrival: arrival,
+        }
+    }
+
+    fn small_engine(total_blocks: u32) -> EngineCore<SimBackend> {
+        let cfg = EngineConfig {
+            block_size: 16,
+            total_blocks,
+            max_batch: 64,
+            max_prefill_tokens: 4096,
+        };
+        EngineCore::new(0, cfg, SimBackend::new(CostModel::new(ModelKind::Llama3_8B)))
+    }
+
+    #[test]
+    fn single_request_runs_to_completion() {
+        let mut e = small_engine(1000);
+        e.submit(mk_req(1, 100, 10, 0.0), 0.0);
+        let mut now = 0.0;
+        let mut completed = vec![];
+        for _ in 0..100 {
+            let out = e.step(now);
+            now += out.duration;
+            completed.extend(out.completed);
+            if !e.has_work() {
+                break;
+            }
+        }
+        assert_eq!(completed.len(), 1);
+        let s = &completed[0];
+        assert_eq!(s.generated, 10);
+        assert_eq!(s.preempt_count, 0);
+        // All blocks returned.
+        assert_eq!(e.status().used_blocks, 0);
+        assert!(now > 0.0);
+    }
+
+    #[test]
+    fn prefill_emits_first_token() {
+        let mut e = small_engine(1000);
+        e.submit(mk_req(1, 32, 1, 0.0), 0.0);
+        let out = e.step(0.0);
+        assert_eq!(out.prefill_tokens, 32);
+        assert_eq!(out.completed.len(), 1, "output of 1 finishes in the prefill step");
+    }
+
+    #[test]
+    fn continuous_batching_admits_mid_flight() {
+        let mut e = small_engine(1000);
+        e.submit(mk_req(1, 50, 100, 0.0), 0.0);
+        e.step(0.0);
+        assert_eq!(e.batch_len(), 1);
+        // Another request arrives mid-generation and joins the batch.
+        e.submit(mk_req(2, 50, 100, 1.0), 1.0);
+        let out = e.step(1.0);
+        assert_eq!(e.batch_len(), 2);
+        assert!(out.prefill_tokens > 0 && out.n_decode == 1);
+    }
+
+    #[test]
+    fn preemption_under_block_pressure() {
+        // Pool sized so either sequence fits alone (needs 7 blocks at peak)
+        // and both pass admission (3+headroom blocks each), but the two
+        // cannot grow to completion concurrently.
+        let mut e = small_engine(9);
+        e.submit(mk_req(1, 32, 80, 0.0), 0.0);
+        e.submit(mk_req(2, 32, 80, 0.5), 0.0);
+        let mut preempted_total = 0;
+        let mut now = 0.0;
+        for _ in 0..1000 {
+            let out = e.step(now);
+            now += out.duration.max(1e-6);
+            preempted_total += out.preempted;
+            if !e.has_work() {
+                break;
+            }
+        }
+        assert!(preempted_total > 0, "block pressure must trigger preemption");
+        // Later arrival (id 2) must be the preemption victim first.
+        // Both must eventually complete despite preemption.
+        assert!(!e.has_work());
+        assert_eq!(e.status().used_blocks, 0);
+        assert!(e.recomputed_tokens > 0);
+    }
+
+    #[test]
+    fn memory_never_overcommitted() {
+        let mut e = small_engine(20);
+        for i in 0..10 {
+            e.submit(mk_req(i, 64, 80, i as f64 * 0.1), 0.0);
+        }
+        let mut now = 0.0;
+        for _ in 0..500 {
+            let out = e.step(now);
+            now += out.duration.max(1e-6);
+            let st = e.status();
+            assert!(st.used_blocks <= st.total_blocks);
+            if !e.has_work() {
+                break;
+            }
+        }
+        assert!(!e.has_work(), "all requests must finish");
+        assert_eq!(e.status().used_blocks, 0);
+    }
+
+    #[test]
+    fn max_batch_respected() {
+        let cfg = EngineConfig {
+            block_size: 16,
+            total_blocks: 10_000,
+            max_batch: 4,
+            max_prefill_tokens: 1 << 20,
+        };
+        let mut e =
+            EngineCore::new(0, cfg, SimBackend::new(CostModel::new(ModelKind::Llama3_8B)));
+        for i in 0..10 {
+            e.submit(mk_req(i, 16, 50, 0.0), 0.0);
+        }
+        e.step(0.0);
+        assert_eq!(e.batch_len(), 4);
+        assert_eq!(e.waiting_len(), 6);
+    }
+
+    #[test]
+    fn prefill_token_budget_limits_admission() {
+        let cfg = EngineConfig {
+            block_size: 16,
+            total_blocks: 10_000,
+            max_batch: 256,
+            max_prefill_tokens: 100,
+        };
+        let mut e =
+            EngineCore::new(0, cfg, SimBackend::new(CostModel::new(ModelKind::Llama3_8B)));
+        for i in 0..5 {
+            e.submit(mk_req(i, 80, 10, 0.0), 0.0);
+        }
+        let out = e.step(0.0);
+        // First request (80 tok) admitted; second would exceed 100.
+        assert_eq!(out.prefill_tokens, 80);
+        assert_eq!(e.batch_len(), 1);
+    }
+
+    #[test]
+    fn drain_returns_everything_and_frees() {
+        let mut e = small_engine(100);
+        e.submit(mk_req(1, 32, 50, 0.0), 0.0);
+        e.submit(mk_req(2, 32, 50, 0.0), 0.0);
+        e.step(0.0);
+        let reqs = e.drain();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(e.status().used_blocks, 0);
+        assert!(!e.has_work());
+    }
+
+    #[test]
+    fn virtual_time_advances_with_cost_model() {
+        let mut e = small_engine(1000);
+        e.submit(mk_req(1, 100, 20, 0.0), 0.0);
+        let out1 = e.step(0.0); // prefill step
+        let out2 = e.step(out1.duration); // decode step
+        assert!(out1.duration > out2.duration, "prefill step costs more");
+        assert!(out2.duration > 0.0);
+    }
+}

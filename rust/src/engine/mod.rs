@@ -1,0 +1,28 @@
+//! The vLLM-like LLM engine substrate (DESIGN.md §3).
+//!
+//! The paper runs on vLLM [31]; nothing in its contribution depends on CUDA
+//! kernels, but everything depends on vLLM's *iteration-level* behaviour:
+//! continuous batching, paged KV-cache block allocation, and
+//! recompute-preemption when blocks run out. This module reproduces that
+//! behaviour from scratch:
+//!
+//! * [`request::Request`] — a single agent LLM call with its ground-truth
+//!   sampled output length (visible only to the engine and the Oracle).
+//! * [`block_manager::BlockManager`] — paged KV block accounting.
+//! * [`cost_model::CostModel`] — calibrated A40 step-latency + KV-memory
+//!   model for Llama3-8B / Llama2-13B (virtual-time backend).
+//! * [`core::EngineCore`] — the continuous-batching step loop, generic over
+//!   the execution backend: [`core::SimBackend`] advances virtual time by
+//!   the cost model; `PjrtExecBackend` (in [`pjrt_backend`]) runs the real
+//!   tiny model through PJRT with the same batching/block-manager code.
+
+pub mod block_manager;
+pub mod core;
+pub mod cost_model;
+pub mod pjrt_backend;
+pub mod request;
+
+pub use block_manager::BlockManager;
+pub use core::{EngineCore, ExecBackend, InstanceStatus, SimBackend, StepOutcome};
+pub use cost_model::{CostModel, ModelKind};
+pub use request::{Request, RequestId, SeqPhase, SeqState};

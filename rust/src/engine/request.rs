@@ -1,0 +1,142 @@
+//! Request and sequence state shared by the engine, the load balancer and
+//! the dispatcher.
+
+use crate::orchestrator::ids::{AgentId, MsgId};
+use crate::Time;
+
+/// Unique id of one LLM call (one workflow stage execution).
+pub type RequestId = u64;
+
+/// Where a running sequence is in its lifecycle inside an engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// Admitted; its (effective) prompt has not been computed yet.
+    NeedsPrefill,
+    /// Prefill done; generating one token per engine step.
+    Decoding,
+}
+
+/// One LLM request emitted by an agent stage of a workflow.
+///
+/// `true_output_tokens` is the ground-truth sampled generation length: the
+/// engine uses it to decide completion (standing in for the model's EOS).
+/// Schedulers must NOT read it — only the Oracle policies do, explicitly.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Workflow instance this stage belongs to.
+    pub msg_id: MsgId,
+    /// The agent issuing this request.
+    pub agent: AgentId,
+    /// Immediate upstream agent in the workflow (None for the entry stage).
+    pub upstream: Option<AgentId>,
+    /// Prompt length in tokens (known at dispatch, as in the paper §2.3).
+    pub prompt_tokens: u32,
+    /// Ground truth output length (engine/Oracle only).
+    pub true_output_tokens: u32,
+    /// Ground truth remaining *workflow* latency after this stage completes
+    /// would start (engine-seconds; Oracle scheduling + Fig 8/16 analyses).
+    pub true_remaining_latency: f64,
+    /// Number of workflow stages remaining including this one (Ayo's
+    /// topology-depth signal).
+    pub remaining_stages: u32,
+    /// Application-level start time: when the user task entered the system
+    /// (Kairos' intra-agent ordering key, §5.2).
+    pub app_start: Time,
+    /// Arrival time of THIS stage at the load balancer.
+    pub stage_arrival: Time,
+}
+
+impl Request {
+    /// Tokens the sequence will hold in KV cache when complete.
+    pub fn total_tokens(&self) -> u32 {
+        self.prompt_tokens + self.true_output_tokens
+    }
+}
+
+/// A sequence resident in an engine (admitted request + progress).
+#[derive(Debug, Clone)]
+pub struct SeqState {
+    pub req: Request,
+    pub phase: SeqPhase,
+    /// Tokens generated so far (survives recompute-preemption: vLLM re-runs
+    /// prefill over prompt + already-generated tokens).
+    pub generated: u32,
+    /// Tokens that must be (re)prefilled when next scheduled.
+    pub prefill_tokens: u32,
+    /// Engine time the request was last admitted.
+    pub admitted_at: Time,
+    /// Engine time the request was FIRST admitted (LLM execution start for
+    /// the orchestrator's timestamps; survives recompute-preemption).
+    pub first_admitted_at: Option<Time>,
+    /// Times this sequence was preempted.
+    pub preempt_count: u32,
+    /// KV blocks currently held by this sequence.
+    pub held_blocks: u32,
+}
+
+impl SeqState {
+    pub fn new(req: Request, now: Time) -> SeqState {
+        let prefill_tokens = req.prompt_tokens;
+        SeqState {
+            req,
+            phase: SeqPhase::NeedsPrefill,
+            generated: 0,
+            prefill_tokens,
+            admitted_at: now,
+            first_admitted_at: None,
+            preempt_count: 0,
+            held_blocks: 0,
+        }
+    }
+
+    /// Current context length held in KV cache (after prefill).
+    pub fn context_len(&self) -> u32 {
+        self.req.prompt_tokens + self.generated
+    }
+
+    /// True when generation has reached the sampled output length.
+    pub fn is_finished(&self) -> bool {
+        self.generated >= self.req.true_output_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestrator::ids::AgentId;
+
+    fn req() -> Request {
+        Request {
+            id: 1,
+            msg_id: 10,
+            agent: AgentId(0),
+            upstream: None,
+            prompt_tokens: 100,
+            true_output_tokens: 50,
+            true_remaining_latency: 1.0,
+            remaining_stages: 2,
+            app_start: 0.0,
+            stage_arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn totals() {
+        assert_eq!(req().total_tokens(), 150);
+    }
+
+    #[test]
+    fn seq_lifecycle() {
+        let mut s = SeqState::new(req(), 1.0);
+        assert_eq!(s.phase, SeqPhase::NeedsPrefill);
+        assert_eq!(s.prefill_tokens, 100);
+        assert_eq!(s.context_len(), 100);
+        s.phase = SeqPhase::Decoding;
+        s.generated = 49;
+        assert!(!s.is_finished());
+        assert_eq!(s.context_len(), 149);
+        s.generated = 50;
+        assert!(s.is_finished());
+    }
+}

@@ -1,0 +1,76 @@
+//! Load calibration (paper §7.1): "we adjust the overall load rate so that
+//! the average queueing time ratio ranges from 0% to 90%".
+//!
+//! Finds the request rate at which the FCFS/Round-Robin baseline reaches a
+//! target queueing-time ratio, by bisection over short probe runs.
+
+use crate::server::sim::{run_system, SimConfig};
+use crate::stats::rng::Rng;
+use crate::workload::{TraceGen, WorkloadMix};
+
+/// Probe the baseline queueing ratio at `rate`.
+pub fn queue_ratio_at(
+    cfg: SimConfig,
+    mix: &WorkloadMix,
+    rate: f64,
+    n_tasks: usize,
+    seed: u64,
+) -> f64 {
+    let arrivals =
+        TraceGen::default().generate(mix, rate, n_tasks, &mut Rng::new(seed));
+    let res = run_system(cfg, "parrot", "rr", arrivals);
+    res.summary.mean_queue_ratio
+}
+
+/// Bisection search for the rate achieving `target` queueing ratio under
+/// the FCFS/RR baseline (all policies are then compared at that same rate).
+pub fn rate_for_queue_ratio(
+    cfg: SimConfig,
+    mix: &WorkloadMix,
+    target: f64,
+    n_tasks: usize,
+    seed: u64,
+) -> f64 {
+    // The queueing ratio is regime-dependent on trace length (a finite
+    // backlog keeps building under sustained overload), so calibration must
+    // probe with the same trace length the experiment will run.
+    let mut lo = 0.2;
+    let mut hi = 2.0;
+    // Grow `hi` until the ratio exceeds the target (or a cap).
+    while queue_ratio_at(cfg, mix, hi, n_tasks, seed) < target && hi < 256.0 {
+        lo = hi;
+        hi *= 2.0;
+    }
+    for _ in 0..7 {
+        let mid = 0.5 * (lo + hi);
+        if queue_ratio_at(cfg, mix, mid, n_tasks, seed) < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_grows_with_rate() {
+        let cfg = SimConfig { n_instances: 2, ..Default::default() };
+        let mix = WorkloadMix::colocated();
+        let low = queue_ratio_at(cfg, &mix, 1.0, 400, 1);
+        let high = queue_ratio_at(cfg, &mix, 16.0, 400, 1);
+        assert!(high > low, "high={high} low={low}");
+    }
+
+    #[test]
+    fn calibration_hits_target_roughly() {
+        let cfg = SimConfig { n_instances: 2, ..Default::default() };
+        let mix = WorkloadMix::colocated();
+        let rate = rate_for_queue_ratio(cfg, &mix, 0.5, 400, 2);
+        let got = queue_ratio_at(cfg, &mix, rate, 400, 3); // different seed
+        assert!((got - 0.5).abs() < 0.25, "rate={rate} got={got}");
+    }
+}

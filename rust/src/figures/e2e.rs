@@ -1,0 +1,183 @@
+//! End-to-end comparisons: Fig 14 (per-application), Fig 15 (co-located,
+//! Llama3-8B), Fig 17 (co-located, Llama2-13B).
+//!
+//! Each harness fixes a workload, calibrates the request rate so the
+//! FCFS/RR baseline sits at ~50% queueing-time ratio (mid excessive-load,
+//! paper §7.1), then runs Parrot, Ayo, and Kairos at the SAME rate and
+//! reports program-level token latency (avg + tails) and Kairos' reduction
+//! vs each baseline.
+
+use crate::agents::apps::App;
+use crate::engine::cost_model::ModelKind;
+use crate::figures::calibrate::rate_for_queue_ratio;
+use crate::server::sim::{run_system, SimConfig, SimResult};
+use crate::stats::rng::Rng;
+use crate::util::csv::write_csv;
+use crate::util::table::Table;
+use crate::workload::{TraceGen, WorkloadMix};
+use crate::Result;
+
+/// The three compared systems as (scheduler, dispatcher) pairs.
+pub const SYSTEMS: [(&str, &str, &str); 3] = [
+    ("Parrot", "parrot", "rr"),
+    ("Ayo", "ayo", "rr"),
+    ("Kairos", "kairos", "kairos"),
+];
+
+pub struct E2eRow {
+    pub system: &'static str,
+    pub avg: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub queue_ratio: f64,
+}
+
+/// Run the three systems on one workload at the calibrated rate.
+pub fn compare(
+    cfg: SimConfig,
+    mix: &WorkloadMix,
+    n_tasks: usize,
+    target_qr: f64,
+    seed: u64,
+) -> (f64, Vec<E2eRow>) {
+    let rate = rate_for_queue_ratio(cfg, mix, target_qr, n_tasks, seed);
+    let rows = SYSTEMS
+        .iter()
+        .map(|&(name, sched, disp)| {
+            let arrivals = TraceGen::default().generate(
+                mix,
+                rate,
+                n_tasks,
+                &mut Rng::new(seed),
+            );
+            let res: SimResult = run_system(cfg, sched, disp, arrivals);
+            E2eRow {
+                system: name,
+                avg: res.summary.avg_token_latency,
+                p90: res.summary.p90_token_latency,
+                p95: res.summary.p95_token_latency,
+                p99: res.summary.p99_token_latency,
+                queue_ratio: res.summary.mean_queue_ratio,
+            }
+        })
+        .collect();
+    (rate, rows)
+}
+
+fn reduction(baseline: f64, ours: f64) -> String {
+    format!("{:+.1}%", (ours - baseline) / baseline * 100.0)
+}
+
+fn print_rows(title: &str, rate: f64, rows: &[E2eRow], csv_path: &str) -> Result<()> {
+    let mut t = Table::new(&[
+        "system", "avg (s/tok)", "P90", "P95", "P99", "queue ratio",
+        "avg vs Parrot", "P90 vs Parrot",
+    ]);
+    let parrot = &rows[0];
+    let mut csv = vec![vec![
+        "system".to_string(), "avg".into(), "p90".into(), "p95".into(), "p99".into(),
+        "queue_ratio".into(),
+    ]];
+    for r in rows {
+        t.row(vec![
+            r.system.into(),
+            format!("{:.4}", r.avg),
+            format!("{:.4}", r.p90),
+            format!("{:.4}", r.p95),
+            format!("{:.4}", r.p99),
+            format!("{:.2}", r.queue_ratio),
+            reduction(parrot.avg, r.avg),
+            reduction(parrot.p90, r.p90),
+        ]);
+        csv.push(vec![
+            r.system.into(),
+            r.avg.to_string(),
+            r.p90.to_string(),
+            r.p95.to_string(),
+            r.p99.to_string(),
+            r.queue_ratio.to_string(),
+        ]);
+    }
+    println!("{title} (calibrated rate {rate:.2} req/s):");
+    t.print();
+    write_csv(csv_path, &csv)?;
+    Ok(())
+}
+
+/// Fig 14: per-application (3 apps × 3 datasets), avg + P90.
+pub fn fig14(out_dir: &str) -> Result<()> {
+    println!("Fig 14 — individual applications, Llama3-8B, 4 instances");
+    println!("(paper: Kairos avg −17.8%..−28.4% vs Parrot; −5.8%..−10.8% vs Ayo)\n");
+    let cfg = SimConfig::default();
+    for app in App::all() {
+        for ds in app.datasets() {
+            let mix = WorkloadMix::single(app, ds);
+            let (rate, rows) = compare(cfg, &mix, 1500, 0.5, 14);
+            print_rows(
+                &format!("{} / {}", app.name(), ds),
+                rate,
+                &rows,
+                &format!("{out_dir}/fig14_{}_{}.csv", app.name(), ds.replace('+', "")),
+            )?;
+            println!();
+        }
+    }
+    Ok(())
+}
+
+/// Fig 15: co-located applications, Llama3-8B, avg/P90/P95/P99.
+pub fn fig15(out_dir: &str) -> Result<()> {
+    println!("Fig 15 — co-located QA+RG+CG, Llama3-8B, 4 instances");
+    println!("(paper: Kairos −45.1..−72.8% avg vs Parrot; −6.1..−37.9% vs Ayo)\n");
+    let cfg = SimConfig::default();
+    // The co-location scenario spans several load levels in the paper; we
+    // report the three characteristic points.
+    for (tag, qr) in [("moderate", 0.3), ("high", 0.5), ("excessive", 0.7)] {
+        let (rate, rows) = compare(cfg, &WorkloadMix::colocated(), 2000, qr, 15);
+        print_rows(
+            &format!("co-located, {tag} load"),
+            rate,
+            &rows,
+            &format!("{out_dir}/fig15_{tag}.csv"),
+        )?;
+        println!();
+    }
+    Ok(())
+}
+
+/// Fig 17: co-located applications on Llama2-13B.
+pub fn fig17(out_dir: &str) -> Result<()> {
+    println!("Fig 17 — co-located QA+RG+CG, Llama2-13B, 4 instances");
+    println!("(paper: Kairos −42.1..−57.4% avg vs Parrot; −21.8..−24.6% vs Ayo)\n");
+    let cfg = SimConfig { model: ModelKind::Llama2_13B, ..Default::default() };
+    for (tag, qr) in [("high", 0.5), ("excessive", 0.7)] {
+        let (rate, rows) = compare(cfg, &WorkloadMix::colocated(), 2000, qr, 17);
+        print_rows(
+            &format!("co-located 13B, {tag} load"),
+            rate,
+            &rows,
+            &format!("{out_dir}/fig17_{tag}.csv"),
+        )?;
+        println!();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kairos_wins_colocated_at_high_load() {
+        // Smaller/cheaper variant of fig15's high-load point.
+        let cfg = SimConfig { n_instances: 2, ..Default::default() };
+        let (_, rows) = compare(cfg, &WorkloadMix::colocated(), 600, 0.5, 150);
+        let parrot = rows.iter().find(|r| r.system == "Parrot").unwrap();
+        let ayo = rows.iter().find(|r| r.system == "Ayo").unwrap();
+        let kairos = rows.iter().find(|r| r.system == "Kairos").unwrap();
+        assert!(kairos.avg < parrot.avg, "kairos {} parrot {}", kairos.avg, parrot.avg);
+        assert!(kairos.avg < ayo.avg * 1.05, "kairos {} ayo {}", kairos.avg, ayo.avg);
+        assert!(kairos.p90 < parrot.p90);
+    }
+}

@@ -1,0 +1,109 @@
+//! Fig 18: ablation studies (paper §7.6).
+//!
+//! * **w/o priority** — FCFS scheduling + Kairos packing (paper: priority
+//!   scheduling contributes 1.63× at the 50%-queueing point, growing
+//!   38.8%→69.6% with request rate).
+//! * **w/o packing** — Kairos scheduling + Round-Robin dispatch (paper:
+//!   packing contributes 1.12×, a stable 9.5–10.6% across rates).
+
+use crate::figures::calibrate::rate_for_queue_ratio;
+use crate::server::sim::{run_system, SimConfig};
+use crate::stats::rng::Rng;
+use crate::util::csv::write_csv;
+use crate::util::table::Table;
+use crate::workload::{TraceGen, WorkloadMix};
+use crate::Result;
+
+pub struct AblationRow {
+    pub rate: f64,
+    pub kairos: f64,
+    pub wo_priority: f64,
+    pub wo_packing: f64,
+}
+
+pub fn sweep(rates: &[f64], n_tasks: usize, seed: u64, kv_scale: f64) -> Vec<AblationRow> {
+    let cfg = SimConfig { kv_scale, ..Default::default() };
+    rates
+        .iter()
+        .map(|&rate| {
+            let run = |sched: &str, disp: &str| {
+                let arrivals = TraceGen::default().generate(
+                    &WorkloadMix::colocated(),
+                    rate,
+                    n_tasks,
+                    &mut Rng::new(seed),
+                );
+                run_system(cfg, sched, disp, arrivals).summary.avg_token_latency
+            };
+            AblationRow {
+                rate,
+                kairos: run("kairos", "kairos"),
+                wo_priority: run("parrot", "kairos"),
+                wo_packing: run("kairos", "rr"),
+            }
+        })
+        .collect()
+}
+
+pub fn run(out_dir: &str) -> Result<()> {
+    // Anchor the sweep around the 50%-queueing point of the baseline.
+    let cfg = SimConfig::default();
+    let mid = rate_for_queue_ratio(cfg, &WorkloadMix::colocated(), 0.5, 1500, 18);
+    let rates: Vec<f64> = [0.6, 0.8, 1.0, 1.25, 1.5].iter().map(|m| m * mid).collect();
+    // Mild memory pressure so the packing ablation has headroom to matter.
+    let rows = sweep(&rates, 1500, 18, 0.06);
+
+    let mut t = Table::new(&[
+        "rate (req/s)", "Kairos", "w/o priority", "w/o packing",
+        "priority gain", "packing gain",
+    ]);
+    let mut csv = vec![vec![
+        "rate".to_string(), "kairos".into(), "wo_priority".into(), "wo_packing".into(),
+    ]];
+    for r in &rows {
+        t.row(vec![
+            format!("{:.2}", r.rate),
+            format!("{:.4}", r.kairos),
+            format!("{:.4}", r.wo_priority),
+            format!("{:.4}", r.wo_packing),
+            format!("{:.2}x", r.wo_priority / r.kairos),
+            format!("{:.2}x", r.wo_packing / r.kairos),
+        ]);
+        csv.push(vec![
+            r.rate.to_string(),
+            r.kairos.to_string(),
+            r.wo_priority.to_string(),
+            r.wo_packing.to_string(),
+        ]);
+    }
+    println!("Fig 18 — ablations on the co-located workload");
+    println!("(paper: w/o priority 1.63x @50% queueing, 38.8→69.6% with rate;");
+    println!("        w/o packing 1.12x, stable 9.5–10.6%)");
+    t.print();
+    write_csv(format!("{out_dir}/fig18.csv"), &csv)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_gain_grows_with_rate() {
+        let rows = sweep(&[3.0, 8.0], 500, 4, 0.06);
+        let gain_low = rows[0].wo_priority / rows[0].kairos;
+        let gain_high = rows[1].wo_priority / rows[1].kairos;
+        assert!(gain_high > 1.0, "priority must help at high load: {gain_high}");
+        assert!(
+            gain_high > gain_low * 0.9,
+            "gain should not collapse with load: low {gain_low} high {gain_high}"
+        );
+    }
+
+    #[test]
+    fn packing_helps_under_pressure() {
+        let rows = sweep(&[8.0], 500, 5, 0.06);
+        let gain = rows[0].wo_packing / rows[0].kairos;
+        assert!(gain > 0.95, "packing must not hurt materially: {gain}");
+    }
+}

@@ -1,0 +1,72 @@
+//! Fig 8: correlation between scheduling order (queue ranking) and true
+//! inference latency ranking under FCFS and Topo at 8 req/s (paper §2.2.2:
+//! "no obvious correlations").
+//!
+//! We run the co-located workload, collect per-request (dispatch order,
+//! true remaining latency) pairs, and report Kendall-τ rank correlation —
+//! FCFS/Topo sit near zero, Kairos and the Oracle are strongly positive.
+
+use crate::server::sim::{run_system, SimConfig};
+use crate::stats::kendall::kendall_tau;
+use crate::stats::rng::Rng;
+use crate::util::csv::write_csv;
+use crate::util::table::Table;
+use crate::workload::{TraceGen, WorkloadMix};
+use crate::Result;
+
+/// Dispatch-order vs true-latency Kendall tau for one scheduler.
+pub fn tau_for(scheduler: &str, rate: f64, seed: u64) -> f64 {
+    let cfg = SimConfig::default();
+    let arrivals =
+        TraceGen::default().generate(&WorkloadMix::colocated(), rate, 1200, &mut Rng::new(seed));
+    let res = run_system(cfg, scheduler, "rr", arrivals);
+    // Only requests that actually waited tell us anything about ordering.
+    let mut rows: Vec<(f64, f64)> = res
+        .metrics
+        .requests
+        .iter()
+        .filter(|r| r.queue_time() > 1e-6)
+        .map(|r| (r.dispatched_at, r.true_remaining))
+        .collect();
+    rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let order: Vec<f64> = (0..rows.len()).map(|i| i as f64).collect();
+    let lat: Vec<f64> = rows.iter().map(|r| r.1).collect();
+    kendall_tau(&order, &lat)
+}
+
+pub fn run(out_dir: &str) -> Result<()> {
+    let rate = 8.0; // the paper's operating point
+    let mut t = Table::new(&["scheduler", "kendall tau (order vs latency)", "paper expectation"]);
+    let mut csv = vec![vec!["scheduler".to_string(), "tau".into()]];
+    for (name, expect) in [
+        ("parrot", "~0 (no correlation)"),
+        ("ayo", "weak"),
+        ("kairos", "positive"),
+        ("oracle", "strongly positive"),
+    ] {
+        let tau = tau_for(name, rate, 88);
+        t.row(vec![name.into(), format!("{tau:.3}"), expect.into()]);
+        csv.push(vec![name.into(), tau.to_string()]);
+    }
+    println!("Fig 8 — scheduling order vs inference latency (8 req/s, co-located):");
+    t.print();
+    write_csv(format!("{out_dir}/fig8.csv"), &csv)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fcfs_uncorrelated_kairos_correlated() {
+        let fcfs = tau_for("parrot", 8.0, 5);
+        let kairos = tau_for("kairos", 8.0, 5);
+        let oracle = tau_for("oracle", 8.0, 5);
+        assert!(fcfs.abs() < 0.25, "FCFS tau should be near zero: {fcfs}");
+        assert!(kairos > fcfs + 0.1, "kairos {kairos} vs fcfs {fcfs}");
+        // Dispatch order also reflects arrival times (requests are not all
+        // queued simultaneously), so even the oracle's tau is well below 1.
+        assert!(oracle > 0.2 && oracle > fcfs + 0.15, "oracle {oracle} fcfs {fcfs}");
+    }
+}

@@ -1,0 +1,52 @@
+//! Figure/table regeneration harnesses — one per table AND figure of the
+//! paper's evaluation (DESIGN.md §5 maps each to its modules).
+//!
+//! Every harness prints the paper's rows/series as an aligned table and
+//! writes the same data as CSV under `results/`. Invoke via
+//! `kairos figures <id>` or `kairos figures all`.
+
+pub mod calibrate;
+pub mod e2e;
+pub mod fig16;
+pub mod fig18;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod motivation;
+pub mod overhead;
+
+use crate::Result;
+
+/// All known figure ids, in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
+    "fig14", "fig15", "fig16", "fig17", "fig18", "overhead",
+];
+
+/// Run one harness by id (or "all").
+pub fn run(id: &str, out_dir: &str) -> Result<()> {
+    match id {
+        "table1" => motivation::table1(out_dir),
+        "fig3" => motivation::fig3(out_dir),
+        "fig4" => motivation::fig4(out_dir),
+        "fig5" => motivation::fig5(out_dir),
+        "fig6" => motivation::fig6(out_dir),
+        "fig7" => fig7::run(out_dir),
+        "fig8" => fig8::run(out_dir),
+        "fig9" => fig9::run(out_dir),
+        "fig14" => e2e::fig14(out_dir),
+        "fig15" => e2e::fig15(out_dir),
+        "fig16" => fig16::run(out_dir),
+        "fig17" => e2e::fig17(out_dir),
+        "fig18" => fig18::run(out_dir),
+        "overhead" => overhead::run(out_dir),
+        "all" => {
+            for id in ALL {
+                println!("\n================ {id} ================");
+                run(id, out_dir)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown figure id {other:?}; known: {ALL:?} or all"),
+    }
+}

@@ -1,0 +1,242 @@
+//! Motivation / characterization harnesses: Table 1 and Figures 3–6
+//! (paper §2.1).
+
+use crate::agents::apps::App;
+use crate::agents::datasets::group_datasets;
+use crate::engine::cost_model::{CostModel, ModelKind};
+use crate::stats::dist::Dist;
+use crate::stats::rng::Rng;
+use crate::stats::summary::Summary;
+use crate::util::csv::write_csv;
+use crate::util::table::{f3, Table};
+use crate::Result;
+
+/// Table 1: workflow-type survey statistics (static data from the paper's
+/// 30-project GitHub survey).
+pub fn table1(out_dir: &str) -> Result<()> {
+    let rows = [
+        ("Dynamic branching", 19, 63.3),
+        ("Sequential execution", 23, 76.6),
+        ("Dynamic feedback", 16, 53.3),
+    ];
+    let mut t = Table::new(&["Workflow Type", "Count", "Proportion"]);
+    let mut csv = vec![vec!["workflow_type".to_string(), "count".into(), "proportion".into()]];
+    for (name, count, prop) in rows {
+        t.row(vec![name.into(), count.to_string(), format!("{prop}%")]);
+        csv.push(vec![name.into(), count.to_string(), prop.to_string()]);
+    }
+    t.print();
+    write_csv(format!("{out_dir}/table1.csv"), &csv)?;
+    Ok(())
+}
+
+/// The ten agents of the Group-1 workloads (QA/G+M, RG/TQ, CG/HE) — the
+/// roster Figures 3 and 4 characterize.
+fn group1_agents() -> Vec<(App, &'static str, &'static str)> {
+    let mut v = Vec::new();
+    for (app, ds) in [(App::Qa, "G+M"), (App::Rg, "TQ"), (App::Cg, "HE")] {
+        for a in app.dataset(ds).agents {
+            v.push((app, ds, a.agent));
+        }
+    }
+    v
+}
+
+/// Sample output lengths for one agent of one dataset.
+fn output_samples(app: App, ds: &str, agent: &str, n: usize, seed: u64) -> Vec<f64> {
+    let profile = app.dataset(ds);
+    let p = profile.agent(agent);
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| p.sample_output(&mut rng) as f64).collect()
+}
+
+/// Isolated inference latency for a sampled request of an agent.
+fn latency_samples(app: App, ds: &str, agent: &str, n: usize, seed: u64) -> Vec<f64> {
+    let profile = app.dataset(ds);
+    let p = profile.agent(agent);
+    let cost = CostModel::new(ModelKind::Llama3_8B);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let prompt = p.sample_prompt(&mut rng);
+            let output = p.sample_output(&mut rng);
+            let prefill = cost.step_time(prompt, 0, 0);
+            let decode: f64 = cost.step_time(0, 1, prompt as u64 + output as u64 / 2)
+                * output as f64;
+            prefill + decode
+        })
+        .collect()
+}
+
+/// Fig 3: output-length distributions of the ten agents (P10/P50/P90).
+pub fn fig3(out_dir: &str) -> Result<()> {
+    let mut t = Table::new(&["app", "agent", "p10", "median", "p90", "mean"]);
+    let mut csv =
+        vec![vec!["app".to_string(), "agent".into(), "p10".into(), "p50".into(), "p90".into(), "mean".into()]];
+    for (i, (app, ds, agent)) in group1_agents().into_iter().enumerate() {
+        let s = Summary::from_samples(&output_samples(app, ds, agent, 4000, 30 + i as u64))
+            .unwrap();
+        t.row(vec![
+            app.name().into(),
+            agent.into(),
+            f3(s.percentile(10.0)),
+            f3(s.p50()),
+            f3(s.p90()),
+            f3(s.mean()),
+        ]);
+        csv.push(vec![
+            app.name().into(),
+            agent.into(),
+            s.percentile(10.0).to_string(),
+            s.p50().to_string(),
+            s.p90().to_string(),
+            s.mean().to_string(),
+        ]);
+    }
+    println!("Fig 3 — output length distributions (tokens):");
+    t.print();
+    write_csv(format!("{out_dir}/fig3.csv"), &csv)?;
+    Ok(())
+}
+
+/// Fig 4: inference latency distributions + decode share of total latency.
+pub fn fig4(out_dir: &str) -> Result<()> {
+    let cost = CostModel::new(ModelKind::Llama3_8B);
+    let mut t = Table::new(&["app", "agent", "p50 (s)", "p90 (s)", "decode share"]);
+    let mut csv = vec![vec![
+        "app".to_string(), "agent".into(), "p50".into(), "p90".into(), "decode_share".into(),
+    ]];
+    let mut min_share: f64 = 1.0;
+    for (i, (app, ds, agent)) in group1_agents().into_iter().enumerate() {
+        let lats = latency_samples(app, ds, agent, 4000, 60 + i as u64);
+        let s = Summary::from_samples(&lats).unwrap();
+        // Decode share at the agent's mean operating point.
+        let p = app.dataset(ds);
+        let prof = p.agent(agent);
+        let prompt = prof.prompt.mean();
+        let output = prof.output.mean();
+        let prefill = cost.step_time(prompt as u32, 0, 0);
+        let decode =
+            cost.step_time(0, 1, (prompt + output / 2.0) as u64) * output;
+        let share = decode / (decode + prefill);
+        min_share = min_share.min(share);
+        t.row(vec![
+            app.name().into(),
+            agent.into(),
+            f3(s.p50()),
+            f3(s.p90()),
+            format!("{:.1}%", share * 100.0),
+        ]);
+        csv.push(vec![
+            app.name().into(),
+            agent.into(),
+            s.p50().to_string(),
+            s.p90().to_string(),
+            share.to_string(),
+        ]);
+    }
+    println!("Fig 4 — inference latency distributions (A40/Llama3-8B cost model):");
+    t.print();
+    println!("minimum decode share across agents: {:.1}% (paper: >96.6%)", min_share * 100.0);
+    write_csv(format!("{out_dir}/fig4.csv"), &csv)?;
+    Ok(())
+}
+
+/// Fig 5/6 shared sweep: per (group, app, agent) → (mean output, mean latency).
+fn group_sweep() -> Vec<(usize, App, &'static str, f64, f64)> {
+    let mut rows = Vec::new();
+    for group in 1..=3 {
+        let (qa, rg, cg) = group_datasets(group);
+        for (app, ds) in [(App::Qa, qa), (App::Rg, rg), (App::Cg, cg)] {
+            for a in app.dataset(ds).agents {
+                let outs = output_samples(app, ds, a.agent, 3000, group as u64 * 97);
+                let lats = latency_samples(app, ds, a.agent, 3000, group as u64 * 131);
+                let mean_out = outs.iter().sum::<f64>() / outs.len() as f64;
+                let mean_lat = lats.iter().sum::<f64>() / lats.len() as f64;
+                rows.push((group, app, a.agent, mean_out, mean_lat));
+            }
+        }
+    }
+    rows
+}
+
+/// Fig 5: average output lengths across dataset Groups 1–3.
+pub fn fig5(out_dir: &str) -> Result<()> {
+    let mut t = Table::new(&["group", "app", "agent", "avg output (tok)"]);
+    let mut csv =
+        vec![vec!["group".to_string(), "app".into(), "agent".into(), "avg_output".into()]];
+    for (g, app, agent, out, _) in group_sweep() {
+        t.row(vec![g.to_string(), app.name().into(), agent.into(), f3(out)]);
+        csv.push(vec![g.to_string(), app.name().into(), agent.into(), out.to_string()]);
+    }
+    println!("Fig 5 — average output lengths across Groups 1-3:");
+    t.print();
+    write_csv(format!("{out_dir}/fig5.csv"), &csv)?;
+    Ok(())
+}
+
+/// Fig 6: average inference latency across dataset Groups 1–3.
+pub fn fig6(out_dir: &str) -> Result<()> {
+    let mut t = Table::new(&["group", "app", "agent", "avg latency (s)"]);
+    let mut csv =
+        vec![vec!["group".to_string(), "app".into(), "agent".into(), "avg_latency".into()]];
+    for (g, app, agent, _, lat) in group_sweep() {
+        t.row(vec![g.to_string(), app.name().into(), agent.into(), f3(lat)]);
+        csv.push(vec![g.to_string(), app.name().into(), agent.into(), lat.to_string()]);
+    }
+    println!("Fig 6 — average inference latency across Groups 1-3:");
+    t.print();
+    write_csv(format!("{out_dir}/fig6.csv"), &csv)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_agents_in_group1() {
+        assert_eq!(group1_agents().len(), 10);
+    }
+
+    #[test]
+    fn decode_dominates_aggregate_and_experts() {
+        // Fig-4 claim: >96.6% of inference time is decoding. That is an
+        // aggregate over requests — short-output agents (Router) sit lower
+        // individually, expert agents higher.
+        let cost = CostModel::new(ModelKind::Llama3_8B);
+        let mut total_prefill = 0.0;
+        let mut total_decode = 0.0;
+        for (app, ds, agent) in group1_agents() {
+            let p = app.dataset(ds);
+            let prof = p.agent(agent);
+            let prompt = prof.prompt.mean();
+            let output = prof.output.mean();
+            let prefill = cost.step_time(prompt as u32, 0, 0);
+            let decode = cost.step_time(0, 1, (prompt + output / 2.0) as u64) * output;
+            total_prefill += prefill;
+            total_decode += decode;
+            if output > 100.0 {
+                let share = decode / (decode + prefill);
+                assert!(share > 0.95, "expert {agent}: {share}");
+            }
+        }
+        let agg = total_decode / (total_decode + total_prefill);
+        assert!(agg > 0.96, "aggregate decode share {agg} (paper: 0.966)");
+    }
+
+    #[test]
+    fn agent_behaviour_stable_across_groups() {
+        // Fig 5: per-agent means vary < 2x across groups while inter-agent
+        // spread within a group is much larger.
+        let rows = group_sweep();
+        let router: Vec<f64> = rows
+            .iter()
+            .filter(|(_, _, a, _, _)| *a == "Router")
+            .map(|(_, _, _, o, _)| *o)
+            .collect();
+        let max = router.iter().cloned().fold(f64::MIN, f64::max);
+        let min = router.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min < 2.0, "router across groups: {router:?}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Load-balancer scheduling layer (paper §5 + baselines).
+//!
+//! All requests enter a single central queue; a [`SchedulePolicy`] defines
+//! the total order in which they leave it:
+//!
+//! * [`policies::Fcfs`] — Parrot's First-Come-First-Serve baseline.
+//! * [`policies::Topo`] — Ayo's topology-depth priority (fewer remaining
+//!   stages first).
+//! * [`policies::KairosPolicy`] — the paper's workflow-aware priority:
+//!   agent-level order from the remaining-latency distributions
+//!   (Wasserstein → MDS → zero-anchor orientation, [`priority`]) and
+//!   intra-agent order by application-level start time (§5.2).
+//! * [`policies::Oracle`] — knows each request's true remaining latency
+//!   (upper bound used in the §2.2.2 / Fig 7-8 analyses).
+
+pub mod policies;
+pub mod priority;
+pub mod queue;
+
+pub use policies::{Fcfs, KairosPolicy, Oracle, SchedulePolicy, Topo};
+pub use priority::AgentPriorities;
+pub use queue::RequestQueue;

@@ -1,0 +1,193 @@
+//! The scheduling policies: Kairos and the baselines it is evaluated
+//! against (paper §7.1).
+
+use super::priority::AgentPriorities;
+use crate::engine::request::Request;
+use crate::orchestrator::Orchestrator;
+
+/// A total order over queued requests. Lower key = scheduled earlier.
+///
+/// Keys are a `(primary, secondary)` pair; ties on the primary fall back to
+/// the secondary (and then to arrival order inside the queue).
+pub trait SchedulePolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Ordering key for a queued request.
+    fn key(&self, req: &Request) -> (f64, f64);
+
+    /// Refresh internal state from the orchestrator (called periodically;
+    /// Kairos recomputes its agent priorities here — §7.7 notes this runs
+    /// asynchronously at fixed intervals).
+    fn refresh(&mut self, _orch: &Orchestrator) {}
+}
+
+/// Parrot: First-Come-First-Serve on stage arrival time.
+#[derive(Debug, Default, Clone)]
+pub struct Fcfs;
+
+impl SchedulePolicy for Fcfs {
+    fn name(&self) -> &'static str {
+        "parrot-fcfs"
+    }
+    fn key(&self, req: &Request) -> (f64, f64) {
+        (req.stage_arrival, 0.0)
+    }
+}
+
+/// Ayo: topology-depth priority — requests with fewer remaining workflow
+/// stages first; FCFS within a depth.
+#[derive(Debug, Default, Clone)]
+pub struct Topo;
+
+impl SchedulePolicy for Topo {
+    fn name(&self) -> &'static str {
+        "ayo-topo"
+    }
+    fn key(&self, req: &Request) -> (f64, f64) {
+        (req.remaining_stages as f64, req.stage_arrival)
+    }
+}
+
+/// Kairos: agent-level priority from remaining-latency distributions
+/// (Wasserstein + MDS + zero anchor), intra-agent by application-level
+/// start time (earlier app start = more accumulated delay = higher
+/// priority, §5.2).
+#[derive(Debug, Default)]
+pub struct KairosPolicy {
+    priorities: AgentPriorities,
+    refreshes: u64,
+}
+
+impl KairosPolicy {
+    pub fn new() -> KairosPolicy {
+        KairosPolicy::default()
+    }
+
+    pub fn priorities(&self) -> &AgentPriorities {
+        &self.priorities
+    }
+
+    pub fn refresh_count(&self) -> u64 {
+        self.refreshes
+    }
+}
+
+impl SchedulePolicy for KairosPolicy {
+    fn name(&self) -> &'static str {
+        "kairos"
+    }
+    fn key(&self, req: &Request) -> (f64, f64) {
+        (self.priorities.coord(req.agent), req.app_start)
+    }
+    fn refresh(&mut self, orch: &Orchestrator) {
+        self.priorities = AgentPriorities::compute(&orch.profiler);
+        self.refreshes += 1;
+    }
+}
+
+/// Oracle: schedules by the request's true remaining workflow latency
+/// (shortest-remaining-time-first with perfect information).
+#[derive(Debug, Default, Clone)]
+pub struct Oracle;
+
+impl SchedulePolicy for Oracle {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+    fn key(&self, req: &Request) -> (f64, f64) {
+        (req.true_remaining_latency, req.app_start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestrator::ids::AgentId;
+
+    fn req(agent: u32, arrival: f64, app_start: f64, stages: u32, rem: f64) -> Request {
+        Request {
+            id: 0,
+            msg_id: 0,
+            agent: AgentId(agent),
+            upstream: None,
+            prompt_tokens: 10,
+            true_output_tokens: 10,
+            true_remaining_latency: rem,
+            remaining_stages: stages,
+            app_start,
+            stage_arrival: arrival,
+        }
+    }
+
+    #[test]
+    fn fcfs_orders_by_arrival() {
+        let p = Fcfs;
+        assert!(p.key(&req(0, 1.0, 0.0, 1, 0.0)) < p.key(&req(1, 2.0, 0.0, 1, 0.0)));
+    }
+
+    #[test]
+    fn topo_orders_by_depth_then_arrival() {
+        let p = Topo;
+        let shallow = req(0, 5.0, 0.0, 1, 0.0);
+        let deep = req(1, 1.0, 0.0, 3, 0.0);
+        assert!(p.key(&shallow) < p.key(&deep), "fewer stages wins despite later arrival");
+        let a = req(0, 1.0, 0.0, 2, 0.0);
+        let b = req(1, 2.0, 0.0, 2, 0.0);
+        assert!(p.key(&a) < p.key(&b), "ties broken FCFS");
+    }
+
+    #[test]
+    fn oracle_orders_by_true_remaining() {
+        let p = Oracle;
+        assert!(
+            p.key(&req(0, 9.0, 0.0, 5, 1.0)) < p.key(&req(1, 0.0, 0.0, 1, 2.0)),
+            "only remaining latency matters"
+        );
+    }
+
+    #[test]
+    fn kairos_intra_agent_prefers_older_app_start() {
+        // Same agent: priority coordinate equal, so app_start decides.
+        let p = KairosPolicy::new();
+        let older = req(0, 5.0, 1.0, 1, 0.0);
+        let newer = req(0, 1.0, 8.0, 1, 0.0);
+        assert!(p.key(&older) < p.key(&newer));
+    }
+
+    #[test]
+    fn kairos_refresh_picks_up_profiles() {
+        use crate::orchestrator::graph::ExecRecord;
+        let mut orch = Orchestrator::new();
+        let fast = orch.registry.intern("fast");
+        let slow = orch.registry.intern("slow");
+        // Build workflows so remaining latency differs 10x.
+        for m in 0..64 {
+            let msg = m as u64;
+            orch.record_execution(ExecRecord {
+                msg_id: msg,
+                agent: fast,
+                upstream: None,
+                start: 0.0,
+                end: 1.0,
+            });
+            orch.record_workflow_done(msg, 1.0);
+        }
+        for m in 100..164 {
+            let msg = m as u64;
+            orch.record_execution(ExecRecord {
+                msg_id: msg,
+                agent: slow,
+                upstream: None,
+                start: 0.0,
+                end: 10.0,
+            });
+            orch.record_workflow_done(msg, 10.0);
+        }
+        let mut p = KairosPolicy::new();
+        p.refresh(&orch);
+        assert_eq!(p.refresh_count(), 1);
+        let kf = p.key(&Request { agent: fast, ..req(0, 0.0, 0.0, 1, 0.0) });
+        let ks = p.key(&Request { agent: slow, ..req(0, 0.0, 0.0, 1, 0.0) });
+        assert!(kf < ks, "fast agent must rank before slow: {kf:?} vs {ks:?}");
+    }
+}

@@ -1,0 +1,206 @@
+//! The central request queue the load balancer schedules from.
+//!
+//! The queue is a binary heap keyed by the active
+//! [`SchedulePolicy`](super::policies::SchedulePolicy)'s ordering key, so a
+//! dispatch is O(log n) even under deep backlogs (the §7.7 scheduling
+//! overhead). Policy keys are captured at push time; when a refresh moves
+//! the agent priorities, [`RequestQueue::resort`] re-keys the heap (the
+//! paper's priority updates run at fixed intervals, so re-keying is rare
+//! relative to dispatching — EXPERIMENTS.md §Perf).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::policies::SchedulePolicy;
+use crate::engine::request::Request;
+
+struct Entry {
+    key: (f64, f64),
+    seq: u64,
+    req: Request,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse: BinaryHeap is a max-heap; we want the MIN key on top,
+        // with arrival sequence as the deterministic tiebreaker.
+        other
+            .key
+            .partial_cmp(&self.key)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Priority queue over requests, keyed by the scheduling policy.
+#[derive(Default)]
+pub struct RequestQueue {
+    heap: BinaryHeap<Entry>,
+    next_seq: u64,
+    /// Peak occupancy (diagnostics).
+    pub peak_len: usize,
+}
+
+impl RequestQueue {
+    pub fn new() -> RequestQueue {
+        RequestQueue::default()
+    }
+
+    pub fn push(&mut self, req: Request, policy: &dyn SchedulePolicy) {
+        let key = policy.key(&req);
+        self.heap.push(Entry { key, seq: self.next_seq, req });
+        self.next_seq += 1;
+        self.peak_len = self.peak_len.max(self.heap.len());
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Remove and return the highest-priority request.
+    pub fn pop_best(&mut self) -> Option<Request> {
+        self.heap.pop().map(|e| e.req)
+    }
+
+    /// Peek at the highest-priority request without removing it.
+    pub fn peek_best(&self) -> Option<&Request> {
+        self.heap.peek().map(|e| &e.req)
+    }
+
+    /// Re-key every queued request against the (refreshed) policy.
+    pub fn resort(&mut self, policy: &dyn SchedulePolicy) {
+        let entries: Vec<Entry> = std::mem::take(&mut self.heap).into_vec();
+        self.heap = entries
+            .into_iter()
+            .map(|mut e| {
+                e.key = policy.key(&e.req);
+                e
+            })
+            .collect();
+    }
+
+    /// Snapshot of queued requests in arbitrary order (analysis).
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.heap.iter().map(|e| &e.req)
+    }
+
+    /// Drain the queue in policy order (used by the Fig 7/8/16 analyses).
+    pub fn drain_ordered(&mut self, policy: &dyn SchedulePolicy) -> Vec<Request> {
+        self.resort(policy);
+        let mut out = Vec::with_capacity(self.heap.len());
+        while let Some(r) = self.pop_best() {
+            out.push(r);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lb::policies::{Fcfs, Oracle};
+    use crate::orchestrator::ids::AgentId;
+
+    fn req(id: u64, arrival: f64, rem: f64) -> Request {
+        Request {
+            id,
+            msg_id: id,
+            agent: AgentId(0),
+            upstream: None,
+            prompt_tokens: 1,
+            true_output_tokens: 1,
+            true_remaining_latency: rem,
+            remaining_stages: 1,
+            app_start: arrival,
+            stage_arrival: arrival,
+        }
+    }
+
+    #[test]
+    fn fcfs_pops_in_arrival_order() {
+        let mut q = RequestQueue::new();
+        for (id, arr) in [(1u64, 3.0), (2, 1.0), (3, 2.0)] {
+            q.push(req(id, arr, 0.0), &Fcfs);
+        }
+        let order: Vec<u64> = q.drain_ordered(&Fcfs).iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn oracle_pops_shortest_remaining_first() {
+        let mut q = RequestQueue::new();
+        for (id, rem) in [(1u64, 9.0), (2, 1.0), (3, 5.0)] {
+            q.push(req(id, id as f64, rem), &Oracle);
+        }
+        let order: Vec<u64> = q.drain_ordered(&Oracle).iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn ties_fall_back_to_insertion_order() {
+        let mut q = RequestQueue::new();
+        q.push(req(1, 5.0, 1.0), &Fcfs);
+        q.push(req(2, 5.0, 1.0), &Fcfs);
+        let order: Vec<u64> = q.drain_ordered(&Fcfs).iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 2]);
+    }
+
+    #[test]
+    fn peek_does_not_remove() {
+        let mut q = RequestQueue::new();
+        q.push(req(1, 1.0, 1.0), &Fcfs);
+        assert_eq!(q.peek_best().unwrap().id, 1);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn resort_applies_new_policy() {
+        // Push under FCFS keys, then re-key under Oracle.
+        let mut q = RequestQueue::new();
+        q.push(req(1, 0.0, 9.0), &Fcfs);
+        q.push(req(2, 1.0, 1.0), &Fcfs);
+        assert_eq!(q.peek_best().unwrap().id, 1);
+        q.resort(&Oracle);
+        assert_eq!(q.peek_best().unwrap().id, 2);
+    }
+
+    #[test]
+    fn peak_len_tracks_high_water() {
+        let mut q = RequestQueue::new();
+        for i in 0..5 {
+            q.push(req(i, i as f64, 0.0), &Fcfs);
+        }
+        q.pop_best();
+        q.push(req(9, 9.0, 0.0), &Fcfs);
+        assert_eq!(q.peak_len, 5);
+    }
+
+    #[test]
+    fn heap_pop_is_total_order() {
+        use crate::stats::rng::Rng;
+        let mut rng = Rng::new(5);
+        let mut q = RequestQueue::new();
+        for i in 0..500 {
+            q.push(req(i, rng.f64() * 100.0, rng.f64()), &Fcfs);
+        }
+        let drained = q.drain_ordered(&Fcfs);
+        for w in drained.windows(2) {
+            assert!(w[0].stage_arrival <= w[1].stage_arrival);
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! # Kairos — low-latency multi-agent LLM serving
+//!
+//! A reproduction of *"Kairos: Low-latency Multi-Agent Serving with Shared
+//! LLMs and Excessive Loads in the Public Cloud"* (Chen et al., 2025) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: a
+//!   [`orchestrator`] that reconstructs multi-agent workflows online, a
+//!   workflow-aware priority scheduler ([`lb`]), and a memory-aware
+//!   time-slot dispatcher ([`dispatch`]), running over a from-scratch
+//!   vLLM-like [`engine`] substrate (continuous batching, paged KV blocks,
+//!   recompute-preemption) and a Kafka-like in-process [`bus`].
+//! * **Layer 2/1 (python, build time only)** — a tiny Llama-style LM whose
+//!   decode hot path goes through Pallas kernels, AOT-lowered to HLO text
+//!   that [`runtime`] loads and executes through the PJRT C API.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod agents;
+pub mod bus;
+pub mod cli;
+pub mod config;
+pub mod dispatch;
+pub mod engine;
+pub mod figures;
+pub mod lb;
+pub mod metrics;
+pub mod orchestrator;
+pub mod runtime;
+pub mod server;
+pub mod simcore;
+pub mod stats;
+pub mod testing;
+pub mod util;
+pub mod workload;
+
+/// Simulation / wall-clock time in seconds.
+pub type Time = f64;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

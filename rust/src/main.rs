@@ -1,0 +1,5 @@
+//! `kairos` binary — CLI for serving simulations, figure regeneration, and
+//! the PJRT quickstart. See `kairos --help` / README.md.
+fn main() -> anyhow::Result<()> {
+    kairos::cli::run(std::env::args().skip(1).collect())
+}

@@ -1,0 +1,207 @@
+//! Serving metrics (paper §7.1 "Metrics").
+//!
+//! The headline metric is **program-level token latency** [37]: a
+//! workflow's end-to-end response time divided by the total tokens it
+//! generated. Averages and P90/P95/P99 tails are reported per run, plus the
+//! queueing-time ratio used to calibrate load levels, and per-request
+//! records for the Fig. 8 / Fig. 16 ordering analyses.
+
+use crate::agents::apps::App;
+use crate::orchestrator::ids::{AgentId, MsgId};
+use crate::stats::summary::Summary;
+use crate::Time;
+
+/// Per-request (stage-level) record.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub msg_id: MsgId,
+    pub agent: AgentId,
+    pub stage_arrival: Time,
+    pub dispatched_at: Time,
+    pub finished_at: Time,
+    pub output_tokens: u32,
+    pub preempt_count: u32,
+    /// Ground-truth remaining workflow latency at scheduling time (for the
+    /// ordering-accuracy analyses only).
+    pub true_remaining: f64,
+}
+
+impl RequestRecord {
+    pub fn queue_time(&self) -> f64 {
+        self.dispatched_at - self.stage_arrival
+    }
+    pub fn exec_time(&self) -> f64 {
+        self.finished_at - self.dispatched_at
+    }
+}
+
+/// Per-workflow (program-level) record.
+#[derive(Debug, Clone)]
+pub struct WorkflowRecord {
+    pub msg_id: MsgId,
+    pub app: App,
+    pub app_start: Time,
+    pub finished_at: Time,
+    pub output_tokens: u64,
+    pub queue_time: f64,
+}
+
+impl WorkflowRecord {
+    pub fn e2e(&self) -> f64 {
+        self.finished_at - self.app_start
+    }
+
+    /// Program-level token latency: e2e seconds per generated token.
+    pub fn token_latency(&self) -> f64 {
+        self.e2e() / self.output_tokens.max(1) as f64
+    }
+
+    pub fn queue_ratio(&self) -> f64 {
+        (self.queue_time / self.e2e().max(1e-9)).clamp(0.0, 1.0)
+    }
+}
+
+/// Collected metrics of one simulation / serving run.
+#[derive(Debug, Default)]
+pub struct MetricsCollector {
+    pub requests: Vec<RequestRecord>,
+    pub workflows: Vec<WorkflowRecord>,
+    pub preemptions: u64,
+    pub recomputed_tokens: u64,
+    pub total_tokens: u64,
+}
+
+/// Summary of a run, in the paper's reporting terms.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub n_workflows: usize,
+    pub avg_token_latency: f64,
+    pub p50_token_latency: f64,
+    pub p90_token_latency: f64,
+    pub p95_token_latency: f64,
+    pub p99_token_latency: f64,
+    pub mean_queue_ratio: f64,
+    pub preemption_rate: f64,
+    pub recompute_waste: f64,
+}
+
+impl MetricsCollector {
+    pub fn new() -> MetricsCollector {
+        MetricsCollector::default()
+    }
+
+    pub fn record_request(&mut self, r: RequestRecord) {
+        self.total_tokens += r.output_tokens as u64;
+        self.requests.push(r);
+    }
+
+    pub fn record_workflow(&mut self, w: WorkflowRecord) {
+        self.workflows.push(w);
+    }
+
+    /// Summarize workflows finishing at or after `from_time` (warmup skip).
+    pub fn summary_from(&self, from_time: Time) -> Option<RunSummary> {
+        let lats: Vec<f64> = self
+            .workflows
+            .iter()
+            .filter(|w| w.app_start >= from_time)
+            .map(|w| w.token_latency())
+            .collect();
+        let s = Summary::from_samples(&lats)?;
+        let qr: Vec<f64> = self
+            .workflows
+            .iter()
+            .filter(|w| w.app_start >= from_time)
+            .map(|w| w.queue_ratio())
+            .collect();
+        let mean_queue_ratio = qr.iter().sum::<f64>() / qr.len() as f64;
+        let preempted = self.requests.iter().filter(|r| r.preempt_count > 0).count();
+        Some(RunSummary {
+            n_workflows: lats.len(),
+            avg_token_latency: s.mean(),
+            p50_token_latency: s.p50(),
+            p90_token_latency: s.p90(),
+            p95_token_latency: s.p95(),
+            p99_token_latency: s.p99(),
+            mean_queue_ratio,
+            preemption_rate: preempted as f64 / self.requests.len().max(1) as f64,
+            recompute_waste: self.recomputed_tokens as f64
+                / self.total_tokens.max(1) as f64,
+        })
+    }
+
+    pub fn summary(&self) -> Option<RunSummary> {
+        self.summary_from(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wf(msg: u64, start: f64, end: f64, tokens: u64, queue: f64) -> WorkflowRecord {
+        WorkflowRecord {
+            msg_id: msg,
+            app: App::Qa,
+            app_start: start,
+            finished_at: end,
+            output_tokens: tokens,
+            queue_time: queue,
+        }
+    }
+
+    #[test]
+    fn token_latency_definition() {
+        let w = wf(1, 0.0, 10.0, 100, 2.0);
+        assert!((w.token_latency() - 0.1).abs() < 1e-12);
+        assert!((w.queue_ratio() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let mut m = MetricsCollector::new();
+        for i in 1..=100u64 {
+            m.record_workflow(wf(i, 0.0, i as f64, 100, 0.0));
+        }
+        let s = m.summary().unwrap();
+        assert_eq!(s.n_workflows, 100);
+        assert!((s.avg_token_latency - 0.505).abs() < 1e-9);
+        assert!(s.p99_token_latency > s.p90_token_latency);
+        assert!(s.p90_token_latency > s.avg_token_latency);
+    }
+
+    #[test]
+    fn warmup_filtering() {
+        let mut m = MetricsCollector::new();
+        m.record_workflow(wf(1, 0.0, 100.0, 1, 0.0)); // warmup straggler
+        m.record_workflow(wf(2, 50.0, 60.0, 10, 0.0));
+        let s = m.summary_from(10.0).unwrap();
+        assert_eq!(s.n_workflows, 1);
+        assert!((s.avg_token_latency - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_none() {
+        assert!(MetricsCollector::new().summary().is_none());
+    }
+
+    #[test]
+    fn preemption_rate() {
+        let mut m = MetricsCollector::new();
+        for i in 0..4 {
+            m.record_request(RequestRecord {
+                msg_id: i,
+                agent: AgentId(0),
+                stage_arrival: 0.0,
+                dispatched_at: 1.0,
+                finished_at: 2.0,
+                output_tokens: 10,
+                preempt_count: u32::from(i == 0),
+                true_remaining: 0.0,
+            });
+        }
+        m.record_workflow(wf(1, 0.0, 1.0, 1, 0.0));
+        let s = m.summary().unwrap();
+        assert!((s.preemption_rate - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,289 @@
+//! Automated workflow analysis (paper §4.2).
+//!
+//! Kairos reconstructs the application call graph at runtime from two
+//! signals carried by the system identifiers:
+//!
+//! * **Upstream names** give direct caller→callee edges.
+//! * **Execution timestamps** disambiguate whether a node's multiple
+//!   downstream calls run in *parallel* or *sequentially* — a sweep-line
+//!   over the downstream execution spans: overlapping spans ⇒ parallel
+//!   fan-out (Fig. 11a/b), disjoint spans ⇒ sequential re-invocations
+//!   (Fig. 11c/d).
+//!
+//! The graph also maintains per-agent *remaining stage depth* (the longest
+//! downstream path), which is exactly the signal the Ayo baseline schedules
+//! on.
+
+use std::collections::HashMap;
+
+use super::ids::{AgentId, MsgId};
+use crate::Time;
+
+/// One completed agent-stage execution (ingest unit).
+#[derive(Debug, Clone)]
+pub struct ExecRecord {
+    pub msg_id: MsgId,
+    pub agent: AgentId,
+    pub upstream: Option<AgentId>,
+    /// LLM execution start / completion timestamps (paper §4.1).
+    pub start: Time,
+    pub end: Time,
+}
+
+/// How a parent invokes multiple downstream agents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Only downstream call observed from this parent in an instance.
+    Simple,
+    /// Downstream spans overlap in time: parallel fan-out.
+    Parallel,
+    /// Downstream spans are disjoint: sequential calls from the parent.
+    Sequential,
+}
+
+/// Aggregated edge statistics.
+#[derive(Debug, Clone)]
+pub struct EdgeStats {
+    pub kind: EdgeKind,
+    /// Observation count (edge traversals across instances).
+    pub count: u64,
+}
+
+/// The reconstructed workflow call graph, aggregated across instances.
+#[derive(Debug, Default)]
+pub struct WorkflowGraph {
+    /// (upstream, downstream) -> stats
+    edges: HashMap<(AgentId, AgentId), EdgeStats>,
+    /// Per-instance execution records awaiting workflow completion.
+    instances: HashMap<MsgId, Vec<ExecRecord>>,
+    /// Agents observed as workflow entry points (no upstream).
+    entries: HashMap<AgentId, u64>,
+}
+
+impl WorkflowGraph {
+    pub fn new() -> WorkflowGraph {
+        WorkflowGraph::default()
+    }
+
+    /// Ingest one execution record; updates edges incrementally.
+    pub fn ingest(&mut self, rec: ExecRecord) {
+        match rec.upstream {
+            None => *self.entries.entry(rec.agent).or_insert(0) += 1,
+            Some(up) => {
+                let e = self
+                    .edges
+                    .entry((up, rec.agent))
+                    .or_insert(EdgeStats { kind: EdgeKind::Simple, count: 0 });
+                e.count += 1;
+            }
+        }
+        let msg_id = rec.msg_id;
+        self.instances.entry(msg_id).or_default().push(rec);
+        // Re-classify the parent's outgoing calls within this instance.
+        self.classify_instance_edges(msg_id);
+    }
+
+    /// Sweep-line classification of multi-downstream call patterns for one
+    /// instance (paper Fig. 11b/d).
+    fn classify_instance_edges(&mut self, msg_id: MsgId) {
+        let Some(records) = self.instances.get(&msg_id) else { return };
+        // Group downstream spans by parent.
+        let mut by_parent: HashMap<AgentId, Vec<&ExecRecord>> = HashMap::new();
+        for r in records {
+            if let Some(up) = r.upstream {
+                by_parent.entry(up).or_default().push(r);
+            }
+        }
+        for (parent, spans) in by_parent {
+            if spans.len() < 2 {
+                continue;
+            }
+            // Sweep line: sort by start; any span starting before the
+            // previous maximum end overlaps ⇒ parallel.
+            let mut sorted: Vec<&ExecRecord> = spans.clone();
+            sorted.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            let mut overlap = false;
+            let mut max_end = sorted[0].end;
+            for r in &sorted[1..] {
+                if r.start < max_end {
+                    overlap = true;
+                    break;
+                }
+                max_end = max_end.max(r.end);
+            }
+            let kind = if overlap { EdgeKind::Parallel } else { EdgeKind::Sequential };
+            for r in spans {
+                if let Some(e) = self.edges.get_mut(&(parent, r.agent)) {
+                    e.kind = kind;
+                }
+            }
+        }
+    }
+
+    /// Remove and return the execution records of a finished instance.
+    pub fn take_instance(&mut self, msg_id: MsgId) -> Option<Vec<ExecRecord>> {
+        self.instances.remove(&msg_id)
+    }
+
+    /// Number of instances still being tracked.
+    pub fn open_instances(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn edge(&self, up: AgentId, down: AgentId) -> Option<&EdgeStats> {
+        self.edges.get(&(up, down))
+    }
+
+    pub fn edges(&self) -> impl Iterator<Item = (&(AgentId, AgentId), &EdgeStats)> {
+        self.edges.iter()
+    }
+
+    /// Downstream successors of `agent` with traversal counts.
+    pub fn successors(&self, agent: AgentId) -> Vec<(AgentId, u64)> {
+        self.edges
+            .iter()
+            .filter(|((up, _), _)| *up == agent)
+            .map(|((_, down), st)| (*down, st.count))
+            .collect()
+    }
+
+    /// Remaining stage depth of `agent`: the longest downstream path length
+    /// including the agent's own stage (≥ 1 for any observed agent). This
+    /// is the Ayo baseline's priority signal. Cycles (dynamic feedback
+    /// loops, Fig. 2c) are cut by visit marking.
+    pub fn remaining_depth(&self, agent: AgentId) -> u32 {
+        let mut memo: HashMap<AgentId, u32> = HashMap::new();
+        let mut visiting: Vec<AgentId> = Vec::new();
+        self.depth_rec(agent, &mut memo, &mut visiting)
+    }
+
+    fn depth_rec(
+        &self,
+        agent: AgentId,
+        memo: &mut HashMap<AgentId, u32>,
+        visiting: &mut Vec<AgentId>,
+    ) -> u32 {
+        if let Some(&d) = memo.get(&agent) {
+            return d;
+        }
+        if visiting.contains(&agent) {
+            return 1; // feedback loop: cut the cycle
+        }
+        visiting.push(agent);
+        let best_down = self
+            .successors(agent)
+            .into_iter()
+            .map(|(down, _)| self.depth_rec(down, memo, visiting))
+            .max()
+            .unwrap_or(0);
+        visiting.pop();
+        let d = 1 + best_down;
+        memo.insert(agent, d);
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A: AgentId = AgentId(0);
+    const B: AgentId = AgentId(1);
+    const C: AgentId = AgentId(2);
+    const D: AgentId = AgentId(3);
+
+    fn rec(msg: MsgId, agent: AgentId, up: Option<AgentId>, start: f64, end: f64) -> ExecRecord {
+        ExecRecord { msg_id: msg, agent, upstream: up, start, end }
+    }
+
+    #[test]
+    fn linear_chain_reconstruction() {
+        let mut g = WorkflowGraph::new();
+        g.ingest(rec(1, A, None, 0.0, 1.0));
+        g.ingest(rec(1, B, Some(A), 1.0, 2.0));
+        g.ingest(rec(1, C, Some(B), 2.0, 3.0));
+        assert!(g.edge(A, B).is_some());
+        assert!(g.edge(B, C).is_some());
+        assert!(g.edge(A, C).is_none());
+        assert_eq!(g.remaining_depth(A), 3);
+        assert_eq!(g.remaining_depth(B), 2);
+        assert_eq!(g.remaining_depth(C), 1);
+    }
+
+    #[test]
+    fn parallel_fanout_detected_by_overlap() {
+        // Fig 11a: A calls B, C, D which execute concurrently.
+        let mut g = WorkflowGraph::new();
+        g.ingest(rec(1, A, None, 0.0, 1.0));
+        g.ingest(rec(1, B, Some(A), 1.0, 3.0));
+        g.ingest(rec(1, C, Some(A), 1.2, 2.5));
+        g.ingest(rec(1, D, Some(A), 1.1, 4.0));
+        assert_eq!(g.edge(A, B).unwrap().kind, EdgeKind::Parallel);
+        assert_eq!(g.edge(A, C).unwrap().kind, EdgeKind::Parallel);
+        assert_eq!(g.edge(A, D).unwrap().kind, EdgeKind::Parallel);
+    }
+
+    #[test]
+    fn sequential_fanout_detected_by_disjoint_spans() {
+        // Fig 11c: A calls B, then C, then D — same upstream, disjoint
+        // spans. Pure-timestamp ordering would misread this as A→B→C→D.
+        let mut g = WorkflowGraph::new();
+        g.ingest(rec(1, A, None, 0.0, 1.0));
+        g.ingest(rec(1, B, Some(A), 1.0, 2.0));
+        g.ingest(rec(1, C, Some(A), 2.5, 3.5));
+        g.ingest(rec(1, D, Some(A), 4.0, 5.0));
+        assert_eq!(g.edge(A, B).unwrap().kind, EdgeKind::Sequential);
+        // The upstream signal prevents the A→B→C chain misinterpretation:
+        assert!(g.edge(B, C).is_none());
+        // Sequential fan-out still counts each stage for depth: A has 3
+        // one-hop children, so depth(A) = 2.
+        assert_eq!(g.remaining_depth(A), 2);
+    }
+
+    #[test]
+    fn branching_takes_longest_path() {
+        // A -> B (leaf), A -> C -> D.
+        let mut g = WorkflowGraph::new();
+        g.ingest(rec(1, A, None, 0.0, 1.0));
+        g.ingest(rec(1, B, Some(A), 1.0, 2.0));
+        g.ingest(rec(2, A, None, 0.0, 1.0));
+        g.ingest(rec(2, C, Some(A), 1.0, 2.0));
+        g.ingest(rec(2, D, Some(C), 2.0, 3.0));
+        assert_eq!(g.remaining_depth(A), 3);
+    }
+
+    #[test]
+    fn feedback_cycle_does_not_hang() {
+        // CG-style loop: Engineer -> QA -> Engineer.
+        let mut g = WorkflowGraph::new();
+        g.ingest(rec(1, A, None, 0.0, 1.0));
+        g.ingest(rec(1, B, Some(A), 1.0, 2.0)); // engineer
+        g.ingest(rec(1, C, Some(B), 2.0, 3.0)); // qa
+        g.ingest(rec(1, B, Some(C), 3.0, 4.0)); // redevelopment
+        let d = g.remaining_depth(A);
+        assert!(d >= 3, "depth accounts for the loop body once, got {d}");
+    }
+
+    #[test]
+    fn instance_take_removes_tracking() {
+        let mut g = WorkflowGraph::new();
+        g.ingest(rec(1, A, None, 0.0, 1.0));
+        g.ingest(rec(1, B, Some(A), 1.0, 2.0));
+        assert_eq!(g.open_instances(), 1);
+        let recs = g.take_instance(1).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(g.open_instances(), 0);
+        assert!(g.take_instance(1).is_none());
+    }
+
+    #[test]
+    fn edge_counts_accumulate_across_instances() {
+        let mut g = WorkflowGraph::new();
+        for msg in 0..5 {
+            g.ingest(rec(msg, A, None, 0.0, 1.0));
+            g.ingest(rec(msg, B, Some(A), 1.0, 2.0));
+        }
+        assert_eq!(g.edge(A, B).unwrap().count, 5);
+        assert_eq!(g.successors(A), vec![(B, 5)]);
+    }
+}

@@ -1,0 +1,110 @@
+//! System identifiers (paper §4.1): agent names, message ids, upstream
+//! names and execution timestamps — the contextual information Kairos
+//! propagates transparently through the communication layer.
+
+use std::collections::HashMap;
+
+/// Globally unique id of one user task / workflow instance ("Message ID").
+pub type MsgId = u64;
+
+/// Interned agent identity ("Agent Name"). Cheap to copy through the hot
+/// path; resolved to names via [`AgentRegistry`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AgentId(pub u32);
+
+/// Bidirectional agent-name interner.
+#[derive(Debug, Default, Clone)]
+pub struct AgentRegistry {
+    names: Vec<String>,
+    by_name: HashMap<String, AgentId>,
+}
+
+impl AgentRegistry {
+    pub fn new() -> AgentRegistry {
+        AgentRegistry::default()
+    }
+
+    /// Intern `name`, returning its stable id.
+    pub fn intern(&mut self, name: &str) -> AgentId {
+        if let Some(&id) = self.by_name.get(name) {
+            return id;
+        }
+        let id = AgentId(self.names.len() as u32);
+        self.names.push(name.to_string());
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn get(&self, name: &str) -> Option<AgentId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn name(&self, id: AgentId) -> &str {
+        &self.names[id.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn all(&self) -> impl Iterator<Item = AgentId> + '_ {
+        (0..self.names.len() as u32).map(AgentId)
+    }
+}
+
+/// Monotonic message-id generator (frontend-assigned).
+#[derive(Debug, Default)]
+pub struct MsgIdGen {
+    next: MsgId,
+}
+
+impl MsgIdGen {
+    pub fn new() -> MsgIdGen {
+        MsgIdGen { next: 1 }
+    }
+
+    pub fn next(&mut self) -> MsgId {
+        let id = self.next;
+        self.next += 1;
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_stable() {
+        let mut r = AgentRegistry::new();
+        let a = r.intern("Router");
+        let b = r.intern("MathAgent");
+        assert_eq!(r.intern("Router"), a);
+        assert_ne!(a, b);
+        assert_eq!(r.name(a), "Router");
+        assert_eq!(r.get("MathAgent"), Some(b));
+        assert_eq!(r.get("Nope"), None);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn msg_ids_unique_and_monotonic() {
+        let mut g = MsgIdGen::new();
+        let a = g.next();
+        let b = g.next();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn all_iterates_in_intern_order() {
+        let mut r = AgentRegistry::new();
+        r.intern("A");
+        r.intern("B");
+        let ids: Vec<AgentId> = r.all().collect();
+        assert_eq!(ids, vec![AgentId(0), AgentId(1)]);
+    }
+}

@@ -1,0 +1,65 @@
+//! The Workflow Orchestrator (paper §4).
+//!
+//! Collects the system identifiers riding on every agent request
+//! ([`ids`]), reconstructs the application call graph online from
+//! upstream/downstream causality + execution-span overlap ([`graph`]), and
+//! maintains per-agent latency distributions — single-request execution and
+//! remaining-workflow — with the doubling/Wasserstein convergence test
+//! ([`profiler`]).
+
+pub mod graph;
+pub mod ids;
+pub mod profiler;
+
+pub use graph::{EdgeKind, ExecRecord, WorkflowGraph};
+pub use ids::{AgentId, AgentRegistry, MsgId};
+pub use profiler::{DistributionProfiler, LatencyProfile};
+
+use crate::Time;
+
+/// The orchestrator facade: ingest completion records, expose workflow
+/// structure and latency profiles to the scheduler and dispatcher.
+pub struct Orchestrator {
+    pub registry: AgentRegistry,
+    pub graph: WorkflowGraph,
+    pub profiler: DistributionProfiler,
+}
+
+impl Default for Orchestrator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Orchestrator {
+    pub fn new() -> Orchestrator {
+        Orchestrator {
+            registry: AgentRegistry::new(),
+            graph: WorkflowGraph::new(),
+            profiler: DistributionProfiler::new(),
+        }
+    }
+
+    /// Record one completed agent-stage execution (paper step ④: "once a
+    /// request is completed, the Workflow Orchestrator collects its
+    /// execution information and incrementally updates the Workflow
+    /// Analyzer and the Distribution Profiler").
+    pub fn record_execution(&mut self, rec: ExecRecord) {
+        self.profiler.record_execution(rec.agent, rec.end - rec.start);
+        self.graph.ingest(rec);
+    }
+
+    /// Record the completion of an entire workflow instance: back-fills the
+    /// remaining-latency samples for every stage of that instance.
+    pub fn record_workflow_done(&mut self, msg_id: MsgId, done_at: Time) {
+        if let Some(stages) = self.graph.take_instance(msg_id) {
+            for rec in &stages {
+                // Remaining latency measured from the START of the stage's
+                // execution to the end of the workflow: the quantity the
+                // scheduler wants to minimize queueing against.
+                self.profiler
+                    .record_remaining(rec.agent, (done_at - rec.start).max(0.0));
+            }
+        }
+    }
+}

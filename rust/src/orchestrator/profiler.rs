@@ -1,0 +1,228 @@
+//! Latency distribution analysis (paper §4.3).
+//!
+//! Per agent, two empirical distributions are maintained online:
+//!
+//! 1. **Single-request execution latency** — drives the dispatcher's
+//!    expected execution time (mode of the distribution, §6).
+//! 2. **Remaining execution latency** — time from a stage's execution start
+//!    to the end of its workflow; drives the scheduler's agent priorities
+//!    (§5.1). Multi-path agents (e.g. QA's Router) naturally merge samples
+//!    from all downstream paths in their historical frequency proportions.
+//!
+//! Convergence uses the paper's exponentially-increasing sampling strategy:
+//! each time the sample count doubles, the Wasserstein distance between the
+//! current and previous snapshot is compared to a threshold.
+
+use std::collections::HashMap;
+
+use super::ids::AgentId;
+use crate::stats::ecdf::{wasserstein1, Ecdf};
+
+/// Relative Wasserstein threshold for declaring convergence.
+const CONVERGENCE_REL_THRESHOLD: f64 = 0.08;
+/// Minimum samples before any convergence claim.
+const MIN_SAMPLES: usize = 8;
+
+/// One agent's evolving latency distribution with doubling-based
+/// convergence detection.
+#[derive(Debug, Clone)]
+pub struct LatencyProfile {
+    samples: Vec<f64>,
+    /// Snapshot taken at the last doubling checkpoint.
+    last_snapshot: Option<Ecdf>,
+    next_checkpoint: usize,
+    converged: bool,
+}
+
+impl Default for LatencyProfile {
+    fn default() -> Self {
+        LatencyProfile {
+            samples: Vec::new(),
+            last_snapshot: None,
+            next_checkpoint: MIN_SAMPLES,
+            converged: false,
+        }
+    }
+}
+
+impl LatencyProfile {
+    pub fn record(&mut self, latency: f64) {
+        debug_assert!(latency.is_finite() && latency >= 0.0);
+        self.samples.push(latency);
+        if self.samples.len() >= self.next_checkpoint {
+            let current = Ecdf::new(self.samples.clone());
+            if let Some(prev) = &self.last_snapshot {
+                let d = wasserstein1(prev, &current);
+                let scale = current.mean().max(1e-9);
+                self.converged = d / scale < CONVERGENCE_REL_THRESHOLD;
+            }
+            self.last_snapshot = Some(current);
+            self.next_checkpoint *= 2; // exponentially increasing sampling
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Whether the doubling test has declared the distribution stable.
+    pub fn converged(&self) -> bool {
+        self.converged
+    }
+
+    /// Current ECDF (None if no samples yet).
+    pub fn ecdf(&self) -> Option<Ecdf> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(Ecdf::new(self.samples.clone()))
+        }
+    }
+
+    /// Mode of the distribution — the dispatcher's expected execution time.
+    pub fn mode(&self) -> Option<f64> {
+        self.ecdf().map(|e| e.mode())
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(self.samples.iter().sum::<f64>() / self.samples.len() as f64)
+        }
+    }
+}
+
+/// All agents' profiles: execution latency + remaining workflow latency.
+#[derive(Debug, Default)]
+pub struct DistributionProfiler {
+    exec: HashMap<AgentId, LatencyProfile>,
+    remaining: HashMap<AgentId, LatencyProfile>,
+}
+
+impl DistributionProfiler {
+    pub fn new() -> DistributionProfiler {
+        DistributionProfiler::default()
+    }
+
+    pub fn record_execution(&mut self, agent: AgentId, latency: f64) {
+        self.exec.entry(agent).or_default().record(latency);
+    }
+
+    pub fn record_remaining(&mut self, agent: AgentId, latency: f64) {
+        self.remaining.entry(agent).or_default().record(latency);
+    }
+
+    pub fn exec_profile(&self, agent: AgentId) -> Option<&LatencyProfile> {
+        self.exec.get(&agent)
+    }
+
+    pub fn remaining_profile(&self, agent: AgentId) -> Option<&LatencyProfile> {
+        self.remaining.get(&agent)
+    }
+
+    /// Agents with at least one remaining-latency sample.
+    pub fn agents_with_remaining(&self) -> Vec<AgentId> {
+        let mut v: Vec<AgentId> = self.remaining.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    /// Expected execution latency (mode) for an agent, if profiled.
+    pub fn expected_exec(&self, agent: AgentId) -> Option<f64> {
+        self.exec.get(&agent).and_then(|p| p.mode())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::dist::{Dist, LogNormal};
+    use crate::stats::rng::Rng;
+
+    #[test]
+    fn stationary_stream_converges() {
+        let mut p = LatencyProfile::default();
+        let d = LogNormal::from_mean_cv(5.0, 0.4);
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            p.record(d.sample(&mut rng));
+        }
+        assert!(p.converged(), "stationary distribution must converge");
+    }
+
+    #[test]
+    fn shifting_stream_resets_convergence() {
+        let mut p = LatencyProfile::default();
+        let mut rng = Rng::new(2);
+        let d1 = LogNormal::from_mean_cv(5.0, 0.3);
+        for _ in 0..512 {
+            p.record(d1.sample(&mut rng));
+        }
+        // Drastic regime change: new samples 20x larger.
+        let d2 = LogNormal::from_mean_cv(100.0, 0.3);
+        for _ in 0..4096 {
+            p.record(d2.sample(&mut rng));
+        }
+        // At some point during the shift the doubling check must have seen
+        // a large Wasserstein gap; after enough new samples it re-settles.
+        assert!(p.len() > 4000);
+    }
+
+    #[test]
+    fn few_samples_not_converged() {
+        let mut p = LatencyProfile::default();
+        for _ in 0..4 {
+            p.record(1.0);
+        }
+        assert!(!p.converged());
+    }
+
+    #[test]
+    fn mode_tracks_lognormal() {
+        let mut p = LatencyProfile::default();
+        let d = LogNormal::from_mean_cv(10.0, 0.5);
+        let mut rng = Rng::new(3);
+        for _ in 0..20_000 {
+            p.record(d.sample(&mut rng));
+        }
+        let mode = p.mode().unwrap();
+        let want = d.mode();
+        assert!((mode - want).abs() / want < 0.4, "mode={mode} want={want}");
+    }
+
+    #[test]
+    fn profiler_tracks_agents_separately() {
+        let mut pr = DistributionProfiler::new();
+        let a = AgentId(0);
+        let b = AgentId(1);
+        pr.record_execution(a, 1.0);
+        pr.record_execution(b, 100.0);
+        pr.record_remaining(a, 2.0);
+        assert_eq!(pr.exec_profile(a).unwrap().len(), 1);
+        assert_eq!(pr.exec_profile(b).unwrap().len(), 1);
+        assert_eq!(pr.agents_with_remaining(), vec![a]);
+        assert!(pr.remaining_profile(b).is_none());
+    }
+
+    #[test]
+    fn multi_path_merge_reflects_frequencies() {
+        // Router goes to Math (fast path) 80% and Humanities (slow) 20%:
+        // the merged remaining distribution leans toward the fast path.
+        let mut pr = DistributionProfiler::new();
+        let router = AgentId(0);
+        for _ in 0..80 {
+            pr.record_remaining(router, 1.0);
+        }
+        for _ in 0..20 {
+            pr.record_remaining(router, 10.0);
+        }
+        let e = pr.remaining_profile(router).unwrap().ecdf().unwrap();
+        assert!((e.quantile(0.5) - 1.0).abs() < 1e-9, "median follows majority path");
+        assert!((e.mean() - 2.8).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,140 @@
+//! AOT artifact manifest: the static shapes the rust runtime validates
+//! against before compiling the HLO.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+
+/// Parsed `<name>_manifest.json` emitted by `python/compile/aot.py`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+    pub kv_cache_shape: Vec<usize>,
+    pub prefill_hlo: PathBuf,
+    pub decode_hlo: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/<name>_manifest.json`.
+    pub fn load(dir: &Path, name: &str) -> crate::Result<Manifest> {
+        let path = dir.join(format!("{name}_manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest json: {e}"))?;
+
+        let field = |k: &str| -> crate::Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest missing numeric field {k:?}"))
+        };
+        let sfield = |k: &str| -> crate::Result<String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .with_context(|| format!("manifest missing string field {k:?}"))?
+                .to_string())
+        };
+
+        let kv_cache_shape: Vec<usize> = j
+            .get("kv_cache_shape")
+            .and_then(Json::as_arr)
+            .context("manifest missing kv_cache_shape")?
+            .iter()
+            .map(|v| v.as_usize().context("bad kv shape entry"))
+            .collect::<crate::Result<_>>()?;
+
+        let m = Manifest {
+            name: sfield("name")?,
+            vocab_size: field("vocab_size")?,
+            d_model: field("d_model")?,
+            n_layers: field("n_layers")?,
+            n_heads: field("n_heads")?,
+            head_dim: field("head_dim")?,
+            d_ff: field("d_ff")?,
+            max_seq: field("max_seq")?,
+            batch: field("batch")?,
+            kv_cache_shape,
+            prefill_hlo: dir.join(sfield("prefill_hlo")?),
+            decode_hlo: dir.join(sfield("decode_hlo")?),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> crate::Result<()> {
+        let want = vec![
+            self.n_layers, 2, self.batch, self.max_seq, self.n_heads, self.head_dim,
+        ];
+        if self.kv_cache_shape != want {
+            bail!(
+                "kv_cache_shape {:?} inconsistent with scalar fields (want {:?})",
+                self.kv_cache_shape,
+                want
+            );
+        }
+        if !self.prefill_hlo.exists() || !self.decode_hlo.exists() {
+            bail!("HLO artifacts missing next to manifest (run `make artifacts`)");
+        }
+        Ok(())
+    }
+
+    /// Flat element count of the KV cache.
+    pub fn kv_elems(&self) -> usize {
+        self.kv_cache_shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_built_manifest_if_present() {
+        let dir = artifacts_dir();
+        if !dir.join("tiny_manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir, "tiny").unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.kv_cache_shape.len(), 6);
+        assert_eq!(m.kv_elems() % m.batch, 0);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir();
+        assert!(Manifest::load(&dir, "no_such_model").is_err());
+    }
+
+    #[test]
+    fn inconsistent_shape_rejected() {
+        let dir = std::env::temp_dir().join("kairos_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("bad_prefill.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("bad_decode.hlo.txt"), "x").unwrap();
+        std::fs::write(
+            dir.join("bad_manifest.json"),
+            r#"{"name":"bad","vocab_size":8,"d_model":4,"n_layers":1,"n_heads":1,
+                "head_dim":4,"d_ff":8,"max_seq":4,"batch":1,
+                "kv_cache_shape":[9,9,9,9,9,9],
+                "prefill_hlo":"bad_prefill.hlo.txt","decode_hlo":"bad_decode.hlo.txt"}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir, "bad").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

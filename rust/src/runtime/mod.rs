@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them.
+//!
+//! The python side (`python/compile/aot.py`) lowers the tiny served LM to
+//! HLO **text** once at build time; this module loads that text, compiles it
+//! on the PJRT CPU client, and drives prefill/decode from the rust hot path.
+//! Python never runs at serving time.
+
+pub mod manifest;
+pub mod model;
+pub mod tokenizer;
+
+pub use manifest::Manifest;
+pub use model::{DecodeOut, PrefillOut, TinyModel};
+pub use tokenizer::ByteTokenizer;

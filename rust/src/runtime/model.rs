@@ -1,0 +1,160 @@
+//! The served model: compiled prefill/decode executables over PJRT.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Both entry points return a 3-tuple
+//! `(logits, next_token, kv_cache)`; the KV cache is threaded functionally
+//! by the caller between calls.
+
+use std::path::Path;
+
+use anyhow::Context;
+
+use super::manifest::Manifest;
+
+/// Output of a prefill call.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    /// (B, V) logits for the next token of every row.
+    pub logits: Vec<f32>,
+    /// (B,) greedy next token per row.
+    pub next_token: Vec<i32>,
+    /// Flat KV cache to thread into the next decode call.
+    pub kv_cache: Vec<f32>,
+}
+
+/// Output of a decode step.
+pub type DecodeOut = PrefillOut;
+
+/// A loaded, compiled tiny LM bound to a PJRT client.
+pub struct TinyModel {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+}
+
+impl TinyModel {
+    /// Load artifacts `<dir>/<name>_{prefill,decode}.hlo.txt` and compile.
+    pub fn load(dir: &Path, name: &str) -> crate::Result<TinyModel> {
+        let manifest = Manifest::load(dir, name)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |path: &Path| -> crate::Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp).with_context(|| format!("compiling {path:?}"))?)
+        };
+        let prefill_exe = compile(&manifest.prefill_hlo)?;
+        let decode_exe = compile(&manifest.decode_hlo)?;
+        Ok(TinyModel { manifest, client, prefill_exe, decode_exe })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fresh zeroed flat KV cache.
+    pub fn empty_kv(&self) -> Vec<f32> {
+        vec![0.0; self.manifest.kv_elems()]
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        tokens: xla::Literal,
+        seq_lens: &[i32],
+        kv_cache: &[f32],
+    ) -> crate::Result<PrefillOut> {
+        let m = &self.manifest;
+        anyhow::ensure!(seq_lens.len() == m.batch, "seq_lens must be (batch,)");
+        anyhow::ensure!(kv_cache.len() == m.kv_elems(), "kv cache size mismatch");
+        let lens = xla::Literal::vec1(seq_lens);
+        let kv_dims: Vec<i64> = m.kv_cache_shape.iter().map(|&d| d as i64).collect();
+        let kv = xla::Literal::vec1(kv_cache).reshape(&kv_dims)?;
+
+        let result = exe.execute::<xla::Literal>(&[tokens, lens, kv])?[0][0]
+            .to_literal_sync()?;
+        // Lowered with return_tuple=True: (logits, next_token, kv_cache).
+        let (logits_l, next_l, kv_l) = result.to_tuple3()?;
+        Ok(PrefillOut {
+            logits: logits_l.to_vec::<f32>()?,
+            next_token: next_l.to_vec::<i32>()?,
+            kv_cache: kv_l.to_vec::<f32>()?,
+        })
+    }
+
+    /// Prefill: `tokens` is (B * S) row-major padded prompts.
+    pub fn prefill(
+        &self,
+        tokens: &[i32],
+        seq_lens: &[i32],
+        kv_cache: &[f32],
+    ) -> crate::Result<PrefillOut> {
+        let m = &self.manifest;
+        anyhow::ensure!(
+            tokens.len() == m.batch * m.max_seq,
+            "prefill tokens must be (batch * max_seq)"
+        );
+        let lit = xla::Literal::vec1(tokens)
+            .reshape(&[m.batch as i64, m.max_seq as i64])?;
+        self.run(&self.prefill_exe, lit, seq_lens, kv_cache)
+    }
+
+    /// Decode one token per row. `seq_lens[b]` = valid cache rows before
+    /// this token (the position the token is written to).
+    pub fn decode(
+        &self,
+        tokens: &[i32],
+        seq_lens: &[i32],
+        kv_cache: &[f32],
+    ) -> crate::Result<DecodeOut> {
+        let m = &self.manifest;
+        anyhow::ensure!(tokens.len() == m.batch, "decode tokens must be (batch,)");
+        let lit = xla::Literal::vec1(tokens);
+        self.run(&self.decode_exe, lit, seq_lens, kv_cache)
+    }
+
+    /// Greedy-generate `steps` tokens after prefilling `prompts` (one vec of
+    /// tokens per row; rows beyond `prompts.len()` are padded). Returns the
+    /// generated tokens per row. Convenience for examples/tests.
+    pub fn generate(
+        &self,
+        prompts: &[Vec<i32>],
+        steps: usize,
+    ) -> crate::Result<Vec<Vec<i32>>> {
+        let m = &self.manifest;
+        anyhow::ensure!(prompts.len() <= m.batch, "too many prompts for batch");
+        anyhow::ensure!(
+            prompts.iter().all(|p| !p.is_empty() && p.len() <= m.max_seq / 2),
+            "prompts must be non-empty and fit half the context"
+        );
+        let mut tokens = vec![0i32; m.batch * m.max_seq];
+        let mut lens = vec![1i32; m.batch]; // padded rows run with len 1
+        for (b, p) in prompts.iter().enumerate() {
+            tokens[b * m.max_seq..b * m.max_seq + p.len()].copy_from_slice(p);
+            lens[b] = p.len() as i32;
+        }
+        let out = self.prefill(&tokens, &lens, &self.empty_kv())?;
+        let mut kv = out.kv_cache;
+        let mut cur = out.next_token;
+        let mut generated: Vec<Vec<i32>> = vec![vec![]; prompts.len()];
+        for (b, g) in generated.iter_mut().enumerate() {
+            g.push(cur[b]);
+        }
+        for _ in 1..steps {
+            let out = self.decode(&cur, &lens, &kv)?;
+            kv = out.kv_cache;
+            cur = out.next_token;
+            for l in lens.iter_mut() {
+                *l = (*l + 1).min(m.max_seq as i32 - 1);
+            }
+            for (b, g) in generated.iter_mut().enumerate() {
+                g.push(cur[b]);
+            }
+        }
+        Ok(generated)
+    }
+}

@@ -1,0 +1,68 @@
+//! Byte-level tokenizer for the tiny served model (vocab = 256 bytes).
+//!
+//! Real deployments use BPE; the serving experiments only care about token
+//! *counts*, so bytes are the faithful minimal choice and keep the runtime
+//! dependency-free.
+
+/// Maps text to byte tokens and back, clamping to the model vocabulary.
+#[derive(Debug, Clone)]
+pub struct ByteTokenizer {
+    vocab_size: usize,
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab_size: usize) -> ByteTokenizer {
+        assert!(vocab_size >= 2);
+        ByteTokenizer { vocab_size }
+    }
+
+    /// Encode text; bytes outside the vocab are folded into range.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| (b as usize % self.vocab_size) as i32).collect()
+    }
+
+    /// Decode tokens to a lossy string (non-printable bytes become '?').
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| {
+                let b = (t.max(0) as usize % self.vocab_size) as u8;
+                if (0x20..0x7f).contains(&b) {
+                    b as char
+                } else {
+                    '?'
+                }
+            })
+            .collect()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_round_trips() {
+        let t = ByteTokenizer::new(256);
+        let s = "Solve 17 * 23 step by step.";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn folds_into_small_vocab() {
+        let t = ByteTokenizer::new(64);
+        for tok in t.encode("hello, world ΩΩ") {
+            assert!((0..64).contains(&tok));
+        }
+    }
+
+    #[test]
+    fn length_preserved() {
+        let t = ByteTokenizer::new(256);
+        assert_eq!(t.encode("abcd").len(), 4);
+    }
+}

@@ -1,0 +1,14 @@
+//! The full serving system.
+//!
+//! * [`sim`] — the virtual-time system: workload arrivals → frontend →
+//!   central queue → priority scheduler → dispatcher → vLLM-like engine
+//!   instances → orchestrator feedback loop. Every figure/bench harness
+//!   runs through this driver.
+//! * [`real`] — the wall-clock system: the same coordination stack driving
+//!   real PJRT compute (the AOT-compiled tiny model) for the end-to-end
+//!   quickstart.
+
+pub mod real;
+pub mod sim;
+
+pub use sim::{SimConfig, SimResult, SimServer};

@@ -1,0 +1,585 @@
+//! Virtual-time full-system simulation driver.
+//!
+//! A discrete-event loop composes the paper's architecture end to end:
+//! user tasks arrive (bursty trace), each workflow emits its stages as LLM
+//! requests into the central queue, the active [`SchedulePolicy`] picks the
+//! next request, the active [`DispatchPolicy`] places it on an engine
+//! instance, engines run continuous-batching iterations under the
+//! calibrated cost model, and completions feed the orchestrator, whose
+//! profiles in turn drive Kairos' scheduler/dispatcher refreshes.
+
+use std::collections::HashMap;
+
+use crate::agents::apps::WorkflowPlan;
+use crate::dispatch::DispatchPolicy;
+use crate::engine::core::{EngineConfig, EngineCore, SimBackend, StepOutcome};
+use crate::engine::cost_model::{CostModel, ModelKind};
+use crate::engine::request::{Request, RequestId};
+use crate::lb::policies::SchedulePolicy;
+use crate::lb::queue::RequestQueue;
+use crate::metrics::{MetricsCollector, RequestRecord, RunSummary, WorkflowRecord};
+use crate::orchestrator::graph::ExecRecord;
+use crate::orchestrator::ids::{AgentId, MsgId};
+use crate::orchestrator::Orchestrator;
+use crate::simcore::EventQueue;
+use crate::workload::ArrivalEvent;
+use crate::Time;
+
+/// Simulation configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    pub n_instances: usize,
+    pub model: ModelKind,
+    pub block_size: u32,
+    /// vLLM max_num_seqs per instance.
+    pub max_batch: usize,
+    /// Priority/profile refresh period (paper §7.7: fixed intervals,
+    /// asynchronous).
+    pub refresh_interval: f64,
+    /// Fraction of the trace treated as warmup (profiles learn; metrics
+    /// reported from the remainder).
+    pub warmup_frac: f64,
+    /// Scale factor on the per-instance KV pool (< 1.0 models co-tenant
+    /// memory pressure; 1.0 = full A40 budget).
+    pub kv_scale: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_instances: 4, // the paper's 4× A40 testbed
+            model: ModelKind::Llama3_8B,
+            block_size: 16,
+            max_batch: 256, // vLLM's default max_num_seqs
+            refresh_interval: 5.0,
+            warmup_frac: 0.2,
+            // The paper's shared public-cloud instances run under real KV
+            // pressure (18.4% of requests preempted at 8 req/s under RR,
+            // §2.2.3). A full 30 GB pool never fills at these request
+            // sizes, so the default models the co-tenant-occupied pool
+            // that makes memory a binding resource.
+            kv_scale: 0.12,
+        }
+    }
+}
+
+/// Final result of a simulation run.
+#[derive(Debug)]
+pub struct SimResult {
+    pub summary: RunSummary,
+    pub metrics: MetricsCollector,
+    pub sim_duration: Time,
+    pub events_processed: u64,
+    pub dropped_requests: u64,
+    pub scheduler_name: &'static str,
+    pub dispatcher_name: &'static str,
+}
+
+enum Ev {
+    Arrival(usize),
+    Step(usize),
+    StepDone(usize, StepOutcome),
+    Refresh,
+}
+
+struct WfState {
+    plan: WorkflowPlan,
+    next_stage: usize,
+    app_start: Time,
+    queue_time: f64,
+    /// Isolated per-stage latency estimates (suffix sums give the ground
+    /// truth remaining latency for Oracle/analysis).
+    stage_latency: Vec<f64>,
+}
+
+struct Pending {
+    msg_id: MsgId,
+    agent: AgentId,
+    stage_arrival: Time,
+    dispatched_at: Time,
+    output_tokens: u32,
+    true_remaining: f64,
+    upstream: Option<AgentId>,
+}
+
+/// The composed system under simulation.
+pub struct SimServer {
+    cfg: SimConfig,
+    cost: CostModel,
+    pub queue: RequestQueue,
+    pub policy: Box<dyn SchedulePolicy>,
+    pub dispatcher: Box<dyn DispatchPolicy>,
+    engines: Vec<EngineCore<SimBackend>>,
+    engine_busy: Vec<bool>,
+    pub orch: Orchestrator,
+    pub metrics: MetricsCollector,
+    workflows: HashMap<MsgId, WfState>,
+    pending: HashMap<RequestId, Pending>,
+    next_req_id: RequestId,
+    next_msg_id: MsgId,
+    dropped: u64,
+}
+
+impl SimServer {
+    pub fn new(
+        cfg: SimConfig,
+        policy: Box<dyn SchedulePolicy>,
+        dispatcher: Box<dyn DispatchPolicy>,
+    ) -> SimServer {
+        let cost = CostModel::new(cfg.model);
+        let mut ecfg = EngineConfig::for_model(&cost, cfg.block_size);
+        ecfg.max_batch = cfg.max_batch;
+        ecfg.total_blocks =
+            ((ecfg.total_blocks as f64) * cfg.kv_scale).max(1.0) as u32;
+        let engines = (0..cfg.n_instances)
+            .map(|i| EngineCore::new(i, ecfg, SimBackend::new(cost)))
+            .collect();
+        SimServer {
+            cfg,
+            cost,
+            queue: RequestQueue::new(),
+            policy,
+            dispatcher,
+            engines,
+            engine_busy: vec![false; cfg.n_instances],
+            orch: Orchestrator::new(),
+            metrics: MetricsCollector::new(),
+            workflows: HashMap::new(),
+            pending: HashMap::new(),
+            next_req_id: 1,
+            next_msg_id: 1,
+            dropped: 0,
+        }
+    }
+
+    /// Isolated (uncontended) execution latency of one stage — prefill plus
+    /// single-stream decode under the cost model. Used for the ground-truth
+    /// remaining-latency annotations.
+    fn stage_isolated_latency(cost: &CostModel, prompt: u32, output: u32) -> f64 {
+        let prefill = cost.step_time(prompt, 0, 0);
+        let avg_ctx = prompt as u64 + output as u64 / 2;
+        let per_tok = cost.step_time(0, 1, avg_ctx);
+        prefill + per_tok * output.saturating_sub(1) as f64
+    }
+
+    fn make_request(&mut self, msg_id: MsgId, now: Time) -> Request {
+        let wf = self.workflows.get_mut(&msg_id).expect("workflow exists");
+        let i = wf.next_stage;
+        let stage = &wf.plan.stages[i];
+        let agent = self.orch.registry.intern(stage.agent);
+        let upstream = if i > 0 {
+            Some(self.orch.registry.intern(wf.plan.stages[i - 1].agent))
+        } else {
+            None
+        };
+        let true_remaining: f64 = wf.stage_latency[i..].iter().sum();
+        let id = self.next_req_id;
+        self.next_req_id += 1;
+        self.pending.insert(
+            id,
+            Pending {
+                msg_id,
+                agent,
+                stage_arrival: now,
+                dispatched_at: now,
+                output_tokens: stage.output_tokens,
+                true_remaining,
+                upstream,
+            },
+        );
+        Request {
+            id,
+            msg_id,
+            agent,
+            upstream,
+            prompt_tokens: stage.prompt_tokens,
+            true_output_tokens: stage.output_tokens,
+            true_remaining_latency: true_remaining,
+            remaining_stages: wf.plan.remaining_stages(i),
+            app_start: wf.app_start,
+            stage_arrival: now,
+        }
+    }
+
+    fn pump(&mut self, now: Time, events: &mut EventQueue<Ev>) {
+        if self.queue.is_empty() {
+            return;
+        }
+        // Snapshot instance statuses once per pump; only the engine that
+        // received the previous dispatch changes, so refresh just that one.
+        let mut statuses: Vec<_> = self.engines.iter().map(|e| e.status()).collect();
+        loop {
+            if self.queue.is_empty() {
+                return;
+            }
+            // Schedule the highest-priority request; the dispatcher picks
+            // its instance. Baseline dispatchers (Round-Robin) hand it over
+            // immediately — the engine-side queue absorbs the backlog, as
+            // vLLM does — while Kairos' time-slot packer may defer
+            // ("the request remains in the scheduling queue", §6).
+            let Some(best) = self.queue.peek_best() else {
+                return;
+            };
+            // A prompt that can never fit any instance is rejected outright.
+            let need_tokens = best.prompt_tokens as u64 + 1;
+            if statuses.iter().all(|s| need_tokens > s.capacity_tokens) {
+                let req = self.queue.pop_best().unwrap();
+                self.pending.remove(&req.id);
+                self.workflows.remove(&req.msg_id);
+                self.dropped += 1;
+                continue;
+            }
+            let Some(j) = self.dispatcher.choose(best, &statuses, now) else {
+                return;
+            };
+            let req = self.queue.pop_best().expect("peeked request still queued");
+            self.dispatcher.on_dispatch(&req, j, now);
+            self.engines[j].submit(req, now);
+            self.wake_engine(j, now, events);
+            statuses[j] = self.engines[j].status();
+        }
+    }
+
+    fn wake_engine(&mut self, j: usize, now: Time, events: &mut EventQueue<Ev>) {
+        if !self.engine_busy[j] && self.engines[j].has_work() {
+            self.engine_busy[j] = true;
+            events.schedule(now, Ev::Step(j));
+        }
+    }
+
+    fn handle_completion(
+        &mut self,
+        seq: crate::engine::request::SeqState,
+        instance: usize,
+        now: Time,
+        events: &mut EventQueue<Ev>,
+    ) {
+        let req = seq.req.clone();
+        let Some(mut p) = self.pending.remove(&req.id) else { return };
+        // Queueing ends at FIRST admission into the running batch (the LLM
+        // execution start); everything before is queue time, wherever the
+        // request physically waited (LB queue or engine queue).
+        p.dispatched_at = seq.first_admitted_at.unwrap_or(now);
+        self.dispatcher.on_complete(req.id, instance, now);
+        if let Some(wf) = self.workflows.get_mut(&req.msg_id) {
+            wf.queue_time += p.dispatched_at - p.stage_arrival;
+        }
+        self.metrics.record_request(RequestRecord {
+            msg_id: p.msg_id,
+            agent: p.agent,
+            stage_arrival: p.stage_arrival,
+            dispatched_at: p.dispatched_at,
+            finished_at: now,
+            output_tokens: p.output_tokens,
+            preempt_count: seq.preempt_count,
+            true_remaining: p.true_remaining,
+        });
+        self.orch.record_execution(ExecRecord {
+            msg_id: p.msg_id,
+            agent: p.agent,
+            upstream: p.upstream,
+            start: p.dispatched_at,
+            end: now,
+        });
+        // Advance the workflow.
+        let done = {
+            let wf = self.workflows.get_mut(&p.msg_id).expect("workflow");
+            wf.next_stage += 1;
+            wf.next_stage >= wf.plan.stages.len()
+        };
+        if done {
+            let wf = self.workflows.get(&p.msg_id).unwrap();
+            self.metrics.record_workflow(WorkflowRecord {
+                msg_id: p.msg_id,
+                app: wf.plan.app,
+                app_start: wf.app_start,
+                finished_at: now,
+                output_tokens: wf.plan.total_output_tokens(),
+                queue_time: wf.queue_time,
+            });
+            self.orch.record_workflow_done(p.msg_id, now);
+            self.workflows.remove(&p.msg_id);
+        } else {
+            let req = self.make_request(p.msg_id, now);
+            self.queue.push(req, self.policy.as_ref());
+        }
+        let _ = events;
+    }
+
+    /// Run the full trace to completion; returns the run summary filtered
+    /// past the warmup fraction.
+    pub fn run(mut self, arrivals: Vec<ArrivalEvent>) -> SimResult {
+        let mut events: EventQueue<Ev> = EventQueue::new();
+        let warmup_time = arrivals
+            .get(((arrivals.len() as f64 * self.cfg.warmup_frac) as usize)
+                .min(arrivals.len().saturating_sub(1)))
+            .map(|a| a.at)
+            .unwrap_or(0.0);
+        for (i, a) in arrivals.iter().enumerate() {
+            events.schedule(a.at, Ev::Arrival(i));
+        }
+        events.schedule(self.cfg.refresh_interval, Ev::Refresh);
+
+        let event_cap: u64 = 200_000_000;
+        while let Some((now, ev)) = events.pop() {
+            match ev {
+                Ev::Arrival(i) => {
+                    let plan = arrivals[i].plan.clone();
+                    let stage_latency: Vec<f64> = plan
+                        .stages
+                        .iter()
+                        .map(|s| {
+                            Self::stage_isolated_latency(
+                                &self.cost,
+                                s.prompt_tokens,
+                                s.output_tokens,
+                            )
+                        })
+                        .collect();
+                    let msg_id = self.next_msg_id;
+                    self.next_msg_id += 1;
+                    self.workflows.insert(
+                        msg_id,
+                        WfState {
+                            plan,
+                            next_stage: 0,
+                            app_start: now,
+                            queue_time: 0.0,
+                            stage_latency,
+                        },
+                    );
+                    let req = self.make_request(msg_id, now);
+                    self.queue.push(req, self.policy.as_ref());
+                    self.pump(now, &mut events);
+                }
+                Ev::Step(j) => {
+                    // The scheduling policy governs the engine-side queue
+                    // (vLLM pluggable scheduling): re-order before admission
+                    // whenever membership changed or priorities refreshed.
+                    if self.engines[j].waiting_dirty {
+                        let policy = &self.policy;
+                        self.engines[j].sort_waiting_by(|r| policy.key(r));
+                    }
+                    let out = self.engines[j].step(now);
+                    if out.duration > 0.0 {
+                        events.schedule(now + out.duration, Ev::StepDone(j, out));
+                    } else {
+                        self.engine_busy[j] = false;
+                        // Idle with queued work that can never fit: the
+                        // front request alone exceeds the pool. Drop it.
+                        if self.engines[j].batch_len() == 0
+                            && self.engines[j].waiting_len() > 0
+                        {
+                            for req in self.engines[j].drain() {
+                                self.pending.remove(&req.id);
+                                self.workflows.remove(&req.msg_id);
+                                self.dropped += 1;
+                            }
+                        }
+                    }
+                }
+                Ev::StepDone(j, out) => {
+                    if out.preempted > 0 {
+                        self.metrics.preemptions += out.preempted as u64;
+                        self.dispatcher.on_preemption(j, now);
+                    }
+                    for seq in out.completed {
+                        self.handle_completion(seq, j, now, &mut events);
+                    }
+                    self.engine_busy[j] = false;
+                    self.wake_engine(j, now, &mut events);
+                    self.pump(now, &mut events);
+                }
+                Ev::Refresh => {
+                    self.policy.refresh(&self.orch);
+                    self.dispatcher.refresh(&self.orch);
+                    // Re-key the central queue under the moved priorities.
+                    self.queue.resort(self.policy.as_ref());
+                    // Priorities may have moved: every engine queue is stale.
+                    for e in self.engines.iter_mut() {
+                        e.waiting_dirty = true;
+                    }
+                    if !self.workflows.is_empty() || !events.is_empty() {
+                        events.schedule(now + self.cfg.refresh_interval, Ev::Refresh);
+                    }
+                }
+            }
+            if events.processed() > event_cap {
+                panic!("simulation exceeded event cap (livelock?)");
+            }
+            // Refresh events keep themselves alive only while work remains;
+            // drain them if they are the only thing left.
+            if self.workflows.is_empty()
+                && self.queue.is_empty()
+                && events.len() >= 1
+                && self.engines.iter().all(|e| !e.has_work())
+            {
+                let arrivals_left = {
+                    // any future arrivals still scheduled?
+                    // (cheap check: events may hold Refresh only)
+                    events.len()
+                };
+                let _ = arrivals_left;
+            }
+        }
+
+        // Aggregate engine counters.
+        for e in &self.engines {
+            self.metrics.recomputed_tokens += e.recomputed_tokens;
+            self.metrics.total_tokens += 0; // already counted per request
+        }
+        let sim_duration = events.now();
+        let summary = self
+            .metrics
+            .summary_from(warmup_time)
+            .or_else(|| self.metrics.summary())
+            .expect("no workflows completed");
+        SimResult {
+            summary,
+            sim_duration,
+            events_processed: events.processed(),
+            dropped_requests: self.dropped,
+            scheduler_name: self.policy.name(),
+            dispatcher_name: self.dispatcher.name(),
+            metrics: self.metrics,
+        }
+    }
+}
+
+/// Build a scheduler by name: "parrot" (FCFS), "ayo" (topo), "kairos",
+/// "oracle".
+pub fn make_policy(name: &str) -> Box<dyn SchedulePolicy> {
+    use crate::lb::policies::*;
+    match name {
+        "parrot" | "fcfs" => Box::new(Fcfs),
+        "ayo" | "topo" => Box::new(Topo),
+        "kairos" => Box::new(KairosPolicy::new()),
+        "oracle" => Box::new(Oracle),
+        other => panic!("unknown scheduler {other:?}"),
+    }
+}
+
+/// Build a dispatcher by name: "rr", "kairos", "oracle", "least".
+pub fn make_dispatcher(name: &str, cfg: &SimConfig) -> Box<dyn DispatchPolicy> {
+    use crate::dispatch::*;
+    let cost = CostModel::new(cfg.model);
+    match name {
+        "rr" | "round-robin" => Box::new(RoundRobin::new()),
+        "kairos" | "timeslot" => {
+            let mut ts = crate::dispatch::timeslot::TimeSlotConfig::for_cost_model(&cost);
+            ts.capacity_bytes *= cfg.kv_scale;
+            Box::new(TimeSlotDispatcher::new(cfg.n_instances, ts))
+        }
+        "oracle" => Box::new(OracleFit::new(cfg.n_instances)),
+        "least" | "least-loaded" => Box::new(LeastLoaded::new()),
+        other => panic!("unknown dispatcher {other:?}"),
+    }
+}
+
+/// Convenience: run `(scheduler, dispatcher)` over a trace with `cfg`.
+pub fn run_system(
+    cfg: SimConfig,
+    scheduler: &str,
+    dispatcher: &str,
+    arrivals: Vec<ArrivalEvent>,
+) -> SimResult {
+    let policy = make_policy(scheduler);
+    let disp = make_dispatcher(dispatcher, &cfg);
+    SimServer::new(cfg, policy, disp).run(arrivals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::apps::App;
+    use crate::stats::rng::Rng;
+    use crate::workload::{TraceGen, WorkloadMix};
+
+    fn trace(n: usize, rate: f64, seed: u64) -> Vec<ArrivalEvent> {
+        TraceGen::default().generate(&WorkloadMix::colocated(), rate, n, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn all_workflows_complete_under_light_load() {
+        let cfg = SimConfig { n_instances: 2, ..Default::default() };
+        let arrivals = trace(60, 1.0, 1);
+        let res = run_system(cfg, "parrot", "rr", arrivals);
+        assert_eq!(res.dropped_requests, 0);
+        assert!(res.summary.n_workflows > 0);
+        assert!(res.summary.avg_token_latency > 0.0);
+        // Light load: queueing should be a small share.
+        assert!(res.summary.mean_queue_ratio < 0.5, "{}", res.summary.mean_queue_ratio);
+    }
+
+    #[test]
+    fn heavy_load_queues_more_than_light() {
+        let cfg = SimConfig { n_instances: 2, ..Default::default() };
+        let light = run_system(cfg, "parrot", "rr", trace(60, 0.5, 2));
+        let heavy = run_system(cfg, "parrot", "rr", trace(300, 12.0, 2));
+        assert!(
+            heavy.summary.mean_queue_ratio > light.summary.mean_queue_ratio,
+            "heavy {} vs light {}",
+            heavy.summary.mean_queue_ratio,
+            light.summary.mean_queue_ratio
+        );
+    }
+
+    #[test]
+    fn kairos_beats_fcfs_under_excessive_load() {
+        // The headline claim (directionally): under heavy queuing, Kairos'
+        // scheduling+dispatching reduces avg token latency vs Parrot.
+        let cfg = SimConfig { n_instances: 2, ..Default::default() };
+        let parrot = run_system(cfg, "parrot", "rr", trace(400, 10.0, 3));
+        let kairos = run_system(cfg, "kairos", "kairos", trace(400, 10.0, 3));
+        assert!(
+            kairos.summary.avg_token_latency < parrot.summary.avg_token_latency,
+            "kairos {} !< parrot {}",
+            kairos.summary.avg_token_latency,
+            parrot.summary.avg_token_latency
+        );
+    }
+
+    #[test]
+    fn orchestrator_learns_workflow_structure_online() {
+        let cfg = SimConfig { n_instances: 2, ..Default::default() };
+        let arrivals = TraceGen::default().generate(
+            &WorkloadMix::single(App::Qa, "G+M"),
+            2.0,
+            80,
+            &mut Rng::new(4),
+        );
+        let policy = make_policy("kairos");
+        let disp = make_dispatcher("rr", &cfg);
+        let server = SimServer::new(cfg, policy, disp);
+        // run consumes server; inspect through the result's metrics +
+        // rebuild a server to inspect the orchestrator... instead assert on
+        // request records: both experts appear downstream of the router.
+        let res = server.run(arrivals);
+        assert!(res.summary.n_workflows > 10);
+        // Each QA workflow contributed exactly 2 stage records.
+        assert_eq!(res.metrics.requests.len() % 2, 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SimConfig { n_instances: 2, ..Default::default() };
+        let a = run_system(cfg, "kairos", "kairos", trace(100, 6.0, 7));
+        let b = run_system(cfg, "kairos", "kairos", trace(100, 6.0, 7));
+        assert_eq!(a.summary.n_workflows, b.summary.n_workflows);
+        assert!((a.summary.avg_token_latency - b.summary.avg_token_latency).abs() < 1e-12);
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    #[test]
+    fn oracle_scheduler_at_least_as_good_as_fcfs() {
+        let cfg = SimConfig { n_instances: 2, ..Default::default() };
+        let fcfs = run_system(cfg, "parrot", "rr", trace(300, 10.0, 8));
+        let oracle = run_system(cfg, "oracle", "rr", trace(300, 10.0, 8));
+        assert!(
+            oracle.summary.avg_token_latency <= fcfs.summary.avg_token_latency * 1.05,
+            "oracle {} vs fcfs {}",
+            oracle.summary.avg_token_latency,
+            fcfs.summary.avg_token_latency
+        );
+    }
+}

@@ -1,0 +1,174 @@
+//! Discrete-event simulation core: a virtual clock and an event queue.
+//!
+//! The figure/bench harnesses run the whole serving system under virtual
+//! time (thousands of simulated seconds per wall-clock second); the
+//! quickstart/real mode uses the wall clock with the same engine code.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::Time;
+
+/// A queued event: fires at `time`, carrying a payload. `seq` breaks ties
+/// FIFO so simulation order is deterministic.
+struct Entry<E> {
+    time: Time,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for a min-heap on (time, seq).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap event queue with a monotonically advancing virtual clock.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    now: Time,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+
+    /// Current virtual time (the time of the last popped event).
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Number of events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at absolute time `at`. Events scheduled in the
+    /// past are clamped to `now` (they fire immediately, in FIFO order).
+    pub fn schedule(&mut self, at: Time, payload: E) {
+        let t = if at < self.now { self.now } else { at };
+        self.seq += 1;
+        self.heap.push(Entry { time: t, seq: self.seq, payload });
+    }
+
+    /// Schedule `payload` after a delay relative to `now`.
+    pub fn schedule_in(&mut self, delay: Time, payload: E) {
+        debug_assert!(delay >= 0.0, "negative delay");
+        self.schedule(self.now + delay, payload);
+    }
+
+    /// Pop the next event, advancing the clock to its time.
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        let e = self.heap.pop()?;
+        debug_assert!(e.time >= self.now, "time went backwards");
+        self.now = e.time;
+        self.processed += 1;
+        Some((e.time, e.payload))
+    }
+
+    /// Peek at the next event time without advancing.
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        q.schedule(1.0, 2);
+        q.schedule(1.0, 3);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, ());
+        q.schedule(2.0, ());
+        let (t1, _) = q.pop().unwrap();
+        assert_eq!(t1, 2.0);
+        assert_eq!(q.now(), 2.0);
+        // Scheduling in the past clamps to now.
+        q.schedule(1.0, ());
+        let (t2, _) = q.pop().unwrap();
+        assert_eq!(t2, 2.0);
+        let (t3, _) = q.pop().unwrap();
+        assert_eq!(t3, 5.0);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule(10.0, "x");
+        q.pop();
+        q.schedule_in(5.0, "y");
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 15.0);
+    }
+
+    #[test]
+    fn empty_pop_is_none() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn processed_counter() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule(i as f64, i);
+        }
+        while q.pop().is_some() {}
+        assert_eq!(q.processed(), 10);
+    }
+}

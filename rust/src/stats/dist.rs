@@ -1,0 +1,306 @@
+//! Sampling distributions built on [`Rng`](super::rng::Rng).
+//!
+//! LogNormal models agent output lengths (paper Fig. 3 shows heavy-tailed,
+//! roughly log-normal per-agent length distributions); Gamma mixtures model
+//! bursty inter-arrival times; Exponential/Categorical support the workload
+//! generator and branch decisions.
+
+use super::rng::Rng;
+
+/// A sampleable distribution over `f64`.
+pub trait Dist {
+    /// Draw one sample.
+    fn sample(&self, rng: &mut Rng) -> f64;
+
+    /// Analytic mean, if defined.
+    fn mean(&self) -> f64;
+}
+
+/// Uniform over `[lo, hi)`.
+#[derive(Debug, Clone, Copy)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi >= lo);
+        Uniform { lo, hi }
+    }
+}
+
+impl Dist for Uniform {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.f64()
+    }
+    fn mean(&self) -> f64 {
+        0.5 * (self.lo + self.hi)
+    }
+}
+
+/// Normal(mu, sigma) via Box–Muller (single-value variant).
+#[derive(Debug, Clone, Copy)]
+pub struct Normal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Normal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma >= 0.0);
+        Normal { mu, sigma }
+    }
+
+    /// Standard normal sample.
+    #[inline]
+    pub fn std_sample(rng: &mut Rng) -> f64 {
+        let u1 = rng.f64_open();
+        let u2 = rng.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+impl Dist for Normal {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        self.mu + self.sigma * Normal::std_sample(rng)
+    }
+    fn mean(&self) -> f64 {
+        self.mu
+    }
+}
+
+/// LogNormal parameterized by the *underlying* normal's (mu, sigma).
+///
+/// `LogNormal::from_mean_cv` is the ergonomic constructor used by the
+/// dataset models: specify the real-space mean and coefficient of variation.
+#[derive(Debug, Clone, Copy)]
+pub struct LogNormal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl LogNormal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma >= 0.0);
+        LogNormal { mu, sigma }
+    }
+
+    /// Construct from the real-space mean `m` and coefficient of variation
+    /// `cv = std/mean`.
+    pub fn from_mean_cv(m: f64, cv: f64) -> Self {
+        assert!(m > 0.0 && cv >= 0.0);
+        let sigma2 = (1.0 + cv * cv).ln();
+        let mu = m.ln() - 0.5 * sigma2;
+        LogNormal { mu, sigma: sigma2.sqrt() }
+    }
+
+    /// Real-space mode (highest-density point): `exp(mu - sigma^2)`.
+    /// The paper's dispatcher uses the mode of the latency distribution as
+    /// the expected execution time (§6).
+    pub fn mode(&self) -> f64 {
+        (self.mu - self.sigma * self.sigma).exp()
+    }
+}
+
+impl Dist for LogNormal {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        (self.mu + self.sigma * Normal::std_sample(rng)).exp()
+    }
+    fn mean(&self) -> f64 {
+        (self.mu + 0.5 * self.sigma * self.sigma).exp()
+    }
+}
+
+/// Exponential with rate `lambda` (mean `1/lambda`).
+#[derive(Debug, Clone, Copy)]
+pub struct Exponential {
+    pub lambda: f64,
+}
+
+impl Exponential {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0);
+        Exponential { lambda }
+    }
+}
+
+impl Dist for Exponential {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        -rng.f64_open().ln() / self.lambda
+    }
+    fn mean(&self) -> f64 {
+        1.0 / self.lambda
+    }
+}
+
+/// Gamma(shape k, scale theta) via Marsaglia–Tsang; k < 1 handled by the
+/// boosting identity.
+#[derive(Debug, Clone, Copy)]
+pub struct Gamma {
+    pub shape: f64,
+    pub scale: f64,
+}
+
+impl Gamma {
+    pub fn new(shape: f64, scale: f64) -> Self {
+        assert!(shape > 0.0 && scale > 0.0);
+        Gamma { shape, scale }
+    }
+
+    fn sample_shape_ge1(k: f64, rng: &mut Rng) -> f64 {
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = Normal::std_sample(rng);
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = rng.f64_open();
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v;
+            }
+        }
+    }
+}
+
+impl Dist for Gamma {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        let k = self.shape;
+        let raw = if k >= 1.0 {
+            Gamma::sample_shape_ge1(k, rng)
+        } else {
+            // Gamma(k) = Gamma(k+1) * U^(1/k)
+            Gamma::sample_shape_ge1(k + 1.0, rng) * rng.f64_open().powf(1.0 / k)
+        };
+        raw * self.scale
+    }
+    fn mean(&self) -> f64 {
+        self.shape * self.scale
+    }
+}
+
+/// Categorical over `0..weights.len()` with the given non-negative weights.
+#[derive(Debug, Clone)]
+pub struct Categorical {
+    cumulative: Vec<f64>,
+}
+
+impl Categorical {
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty());
+        assert!(weights.iter().all(|&w| w >= 0.0));
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0);
+        let mut acc = 0.0;
+        let cumulative = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        Categorical { cumulative }
+    }
+
+    /// Draw an index.
+    pub fn sample_index(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        // cumulative is sorted; linear scan is fine for the small fans used.
+        self.cumulative
+            .iter()
+            .position(|&c| u < c)
+            .unwrap_or(self.cumulative.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_stats(d: &impl Dist, n: usize, seed: u64) -> (f64, f64) {
+        let mut rng = Rng::new(seed);
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        (mean, var)
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let (m, _) = sample_stats(&Uniform::new(2.0, 6.0), 50_000, 1);
+        assert!((m - 4.0).abs() < 0.05, "m={m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let (m, v) = sample_stats(&Normal::new(3.0, 2.0), 100_000, 2);
+        assert!((m - 3.0).abs() < 0.05, "m={m}");
+        assert!((v - 4.0).abs() < 0.15, "v={v}");
+    }
+
+    #[test]
+    fn lognormal_mean_matches_analytic() {
+        let d = LogNormal::from_mean_cv(100.0, 0.8);
+        let (m, _) = sample_stats(&d, 200_000, 3);
+        assert!((m - 100.0).abs() / 100.0 < 0.03, "m={m}");
+        assert!((d.mean() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lognormal_mode_below_mean() {
+        let d = LogNormal::from_mean_cv(100.0, 0.8);
+        assert!(d.mode() < d.mean());
+        assert!(d.mode() > 0.0);
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let d = LogNormal::from_mean_cv(10.0, 2.0);
+        let mut rng = Rng::new(4);
+        for _ in 0..10_000 {
+            assert!(d.sample(&mut rng) > 0.0);
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let (m, _) = sample_stats(&Exponential::new(0.25), 100_000, 5);
+        assert!((m - 4.0).abs() < 0.1, "m={m}");
+    }
+
+    #[test]
+    fn gamma_mean_shape_ge1() {
+        let (m, v) = sample_stats(&Gamma::new(4.0, 0.5), 100_000, 6);
+        assert!((m - 2.0).abs() < 0.05, "m={m}");
+        assert!((v - 1.0).abs() < 0.1, "v={v}"); // k*theta^2
+    }
+
+    #[test]
+    fn gamma_mean_shape_lt1() {
+        let (m, _) = sample_stats(&Gamma::new(0.5, 2.0), 200_000, 7);
+        assert!((m - 1.0).abs() < 0.05, "m={m}");
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let c = Categorical::new(&[1.0, 3.0, 6.0]);
+        let mut rng = Rng::new(8);
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[c.sample_index(&mut rng)] += 1;
+        }
+        let freqs: Vec<f64> = counts.iter().map(|&c| c as f64 / n as f64).collect();
+        assert!((freqs[0] - 0.1).abs() < 0.01);
+        assert!((freqs[1] - 0.3).abs() < 0.01);
+        assert!((freqs[2] - 0.6).abs() < 0.01);
+    }
+
+    #[test]
+    #[should_panic]
+    fn categorical_rejects_empty() {
+        Categorical::new(&[]);
+    }
+}

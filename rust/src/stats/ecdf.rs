@@ -1,0 +1,299 @@
+//! Empirical distributions and the Wasserstein-1 distance between them.
+//!
+//! The paper uses Wasserstein-1 twice: to test convergence of an agent's
+//! latency distribution as samples double (§4.3), and as the pairwise
+//! distance the MDS priority embedding is built from (§5.1).
+
+/// An empirical CDF over collected samples (sorted on construction).
+#[derive(Debug, Clone)]
+pub struct Ecdf {
+    sorted: Vec<f64>,
+}
+
+impl Ecdf {
+    /// Build from samples; must be non-empty.
+    pub fn new(mut samples: Vec<f64>) -> Ecdf {
+        assert!(!samples.is_empty(), "ECDF needs at least one sample");
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ecdf { sorted: samples }
+    }
+
+    /// The degenerate "ideal zero-latency" distribution (paper §5.1 anchor).
+    pub fn zero() -> Ecdf {
+        Ecdf { sorted: vec![0.0] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // construction guarantees >= 1 sample
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.sorted
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sorted.iter().sum::<f64>() / self.sorted.len() as f64
+    }
+
+    /// Quantile by inverse-CDF with linear interpolation, `q` in `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.sorted.len();
+        if n == 1 {
+            return self.sorted[0];
+        }
+        let rank = q.clamp(0.0, 1.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
+    }
+
+    /// Real-space mode estimate: the densest point via a histogram over the
+    /// sample range (the paper's "point with the highest probability
+    /// density" used as the dispatcher's expected execution time, §6).
+    pub fn mode(&self) -> f64 {
+        let n = self.sorted.len();
+        if n < 4 {
+            return self.quantile(0.5);
+        }
+        let lo = self.sorted[0];
+        let hi = *self.sorted.last().unwrap();
+        if hi - lo < f64::EPSILON {
+            return lo;
+        }
+        // Freedman–Diaconis-ish bin count, clamped.
+        let bins = ((n as f64).sqrt().ceil() as usize).clamp(4, 64);
+        let width = (hi - lo) / bins as f64;
+        let mut counts = vec![0usize; bins];
+        for &x in &self.sorted {
+            let b = (((x - lo) / width) as usize).min(bins - 1);
+            counts[b] += 1;
+        }
+        let best = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(i, _)| i)
+            .unwrap();
+        lo + (best as f64 + 0.5) * width
+    }
+}
+
+/// A fixed-grid quantile sketch of an ECDF: `K` evenly spaced quantiles.
+///
+/// `W1(a, b) = ∫ |F⁻¹_a(q) − F⁻¹_b(q)| dq ≈ mean_k |sketch_a[k] − sketch_b[k]|`
+/// — a branch-free O(K) distance used for the large pairwise matrices of
+/// the priority update (§7.7 evaluates up to 5000 agents ⇒ 12.5M pairs;
+/// the exact merge would dominate the refresh — EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    q: Vec<f64>,
+}
+
+impl QuantileSketch {
+    pub const DEFAULT_K: usize = 64;
+
+    pub fn of(ecdf: &Ecdf, k: usize) -> QuantileSketch {
+        assert!(k >= 2);
+        let q = (0..k)
+            .map(|i| ecdf.quantile(i as f64 / (k - 1) as f64))
+            .collect();
+        QuantileSketch { q }
+    }
+
+    /// Sketch of the ideal zero-latency anchor.
+    pub fn zero(k: usize) -> QuantileSketch {
+        QuantileSketch { q: vec![0.0; k] }
+    }
+
+    /// Approximate Wasserstein-1 distance between two sketches.
+    #[inline]
+    pub fn w1(&self, other: &QuantileSketch) -> f64 {
+        debug_assert_eq!(self.q.len(), other.q.len());
+        let sum: f64 = self
+            .q
+            .iter()
+            .zip(&other.q)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        sum / self.q.len() as f64
+    }
+}
+
+/// Wasserstein-1 distance between two ECDFs: the integral of |F⁻¹_a − F⁻¹_b|
+/// over quantiles, computed exactly via the merged-support formulation
+/// `∫ |F_a(x) − F_b(x)| dx`.
+pub fn wasserstein1(a: &Ecdf, b: &Ecdf) -> f64 {
+    let xa = &a.sorted;
+    let xb = &b.sorted;
+    let (na, nb) = (xa.len() as f64, xb.len() as f64);
+    let (mut ia, mut ib) = (0usize, 0usize);
+    let mut dist = 0.0;
+    let mut prev = f64::NAN;
+
+    while ia < xa.len() || ib < xb.len() {
+        let x = match (xa.get(ia), xb.get(ib)) {
+            (Some(&va), Some(&vb)) => va.min(vb),
+            (Some(&va), None) => va,
+            (None, Some(&vb)) => vb,
+            (None, None) => break,
+        };
+        if !prev.is_nan() && x > prev {
+            let fa = ia as f64 / na;
+            let fb = ib as f64 / nb;
+            dist += (fa - fb).abs() * (x - prev);
+        }
+        while ia < xa.len() && xa[ia] <= x {
+            ia += 1;
+        }
+        while ib < xb.len() && xb[ib] <= x {
+            ib += 1;
+        }
+        prev = x;
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::dist::{Dist, LogNormal};
+    use crate::stats::rng::Rng;
+
+    fn ecdf_of(vals: &[f64]) -> Ecdf {
+        Ecdf::new(vals.to_vec())
+    }
+
+    #[test]
+    fn identity_distance_zero() {
+        let a = ecdf_of(&[1.0, 2.0, 3.0]);
+        assert!(wasserstein1(&a, &a) < 1e-12);
+    }
+
+    #[test]
+    fn symmetry() {
+        let a = ecdf_of(&[1.0, 2.0, 3.0, 10.0]);
+        let b = ecdf_of(&[2.0, 2.5, 7.0]);
+        assert!((wasserstein1(&a, &b) - wasserstein1(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn point_masses_distance_is_gap() {
+        let a = ecdf_of(&[0.0]);
+        let b = ecdf_of(&[5.0]);
+        assert!((wasserstein1(&a, &b) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shift_equals_offset() {
+        // W1 between X and X + c is exactly c.
+        let xs: Vec<f64> = (0..100).map(|i| i as f64 * 0.1).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x + 2.5).collect();
+        let d = wasserstein1(&ecdf_of(&xs), &ecdf_of(&ys));
+        assert!((d - 2.5).abs() < 1e-9, "d={d}");
+    }
+
+    #[test]
+    fn triangle_inequality_on_samples() {
+        let mut rng = Rng::new(17);
+        let d1 = LogNormal::from_mean_cv(5.0, 0.5);
+        let d2 = LogNormal::from_mean_cv(9.0, 0.9);
+        let d3 = LogNormal::from_mean_cv(2.0, 0.3);
+        let take = |d: &LogNormal, rng: &mut Rng| {
+            Ecdf::new((0..200).map(|_| d.sample(rng)).collect())
+        };
+        let (a, b, c) = (take(&d1, &mut rng), take(&d2, &mut rng), take(&d3, &mut rng));
+        let ab = wasserstein1(&a, &b);
+        let bc = wasserstein1(&b, &c);
+        let ac = wasserstein1(&a, &c);
+        assert!(ac <= ab + bc + 1e-9);
+    }
+
+    #[test]
+    fn distance_to_zero_anchor_orders_by_magnitude() {
+        // Agents with larger remaining latency must be farther from the
+        // zero anchor — the property Kairos' priority direction relies on.
+        let zero = Ecdf::zero();
+        let small = ecdf_of(&[1.0, 1.5, 2.0]);
+        let large = ecdf_of(&[10.0, 15.0, 20.0]);
+        assert!(wasserstein1(&small, &zero) < wasserstein1(&large, &zero));
+    }
+
+    #[test]
+    fn quantiles() {
+        let e = ecdf_of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((e.quantile(0.0) - 1.0).abs() < 1e-12);
+        assert!((e.quantile(0.5) - 3.0).abs() < 1e-12);
+        assert!((e.quantile(1.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mode_finds_dense_region() {
+        let mut vals = vec![10.0; 50];
+        vals.extend((0..10).map(|i| 100.0 + i as f64));
+        // jitter the dense cluster a bit
+        for (i, v) in vals.iter_mut().enumerate().take(50) {
+            *v += (i % 7) as f64 * 0.1;
+        }
+        let e = Ecdf::new(vals);
+        let m = e.mode();
+        assert!(m < 30.0, "mode should be near the dense cluster, got {m}");
+    }
+
+    #[test]
+    fn lognormal_mode_estimate_close_to_analytic() {
+        let d = LogNormal::from_mean_cv(10.0, 0.6);
+        let mut rng = Rng::new(23);
+        let e = Ecdf::new((0..20_000).map(|_| d.sample(&mut rng)).collect());
+        let est = e.mode();
+        let true_mode = d.mode();
+        assert!(
+            (est - true_mode).abs() / true_mode < 0.35,
+            "est={est} true={true_mode}"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        Ecdf::new(vec![]);
+    }
+
+    #[test]
+    fn sketch_w1_close_to_exact() {
+        let mut rng = Rng::new(31);
+        let d1 = LogNormal::from_mean_cv(5.0, 0.7);
+        let d2 = LogNormal::from_mean_cv(12.0, 0.9);
+        let a = Ecdf::new((0..500).map(|_| d1.sample(&mut rng)).collect());
+        let b = Ecdf::new((0..500).map(|_| d2.sample(&mut rng)).collect());
+        let exact = wasserstein1(&a, &b);
+        let sa = QuantileSketch::of(&a, QuantileSketch::DEFAULT_K);
+        let sb = QuantileSketch::of(&b, QuantileSketch::DEFAULT_K);
+        let approx = sa.w1(&sb);
+        assert!(
+            (approx - exact).abs() / exact < 0.1,
+            "approx={approx} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn sketch_anchor_distance_orders_by_mean() {
+        let small = Ecdf::new(vec![1.0, 2.0, 3.0]);
+        let large = Ecdf::new(vec![10.0, 20.0, 30.0]);
+        let z = QuantileSketch::zero(16);
+        let ds = QuantileSketch::of(&small, 16).w1(&z);
+        let dl = QuantileSketch::of(&large, 16).w1(&z);
+        assert!(ds < dl);
+    }
+
+    #[test]
+    fn sketch_self_distance_zero() {
+        let a = Ecdf::new(vec![1.0, 5.0, 9.0]);
+        let s = QuantileSketch::of(&a, 32);
+        assert!(s.w1(&s) < 1e-12);
+    }
+}

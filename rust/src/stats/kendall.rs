@@ -1,0 +1,151 @@
+//! Kendall rank correlation — used by the Fig. 8 analysis to quantify how
+//! well a scheduling order tracks true inference latency.
+
+/// Kendall's tau-a over paired observations (O(n²), fine for analysis sizes).
+///
+/// Returns a value in `[-1, 1]`; 1 means the orders agree perfectly, 0 means
+/// no association (what FCFS produces between queue position and latency).
+pub fn kendall_tau(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut concordant = 0i64;
+    let mut discordant = 0i64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dx = xs[i] - xs[j];
+            let dy = ys[i] - ys[j];
+            let s = dx * dy;
+            if s > 0.0 {
+                concordant += 1;
+            } else if s < 0.0 {
+                discordant += 1;
+            }
+        }
+    }
+    let pairs = (n * (n - 1) / 2) as f64;
+    (concordant - discordant) as f64 / pairs
+}
+
+/// Pairwise sorting accuracy (paper §7.4): the proportion of pairs whose
+/// relative order in `order` (smaller = scheduled earlier) matches the order
+/// of their true remaining latencies `latency`. Ties in either count as half.
+pub fn pairwise_sorting_accuracy(order: &[f64], latency: &[f64]) -> f64 {
+    assert_eq!(order.len(), latency.len());
+    let n = order.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut correct = 0.0;
+    let mut total = 0.0;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            total += 1.0;
+            let do_ = order[i] - order[j];
+            let dl = latency[i] - latency[j];
+            if do_ == 0.0 || dl == 0.0 {
+                correct += 0.5;
+            } else if do_ * dl > 0.0 {
+                correct += 1.0;
+            }
+        }
+    }
+    correct / total
+}
+
+/// Pairwise sorting accuracy restricted to pairs from DIFFERENT groups
+/// (the paper's §7.4 measure compares each request "with all other agent
+/// requests" — inter-agent pairs, which is what agent-level priorities can
+/// order). Ties count half.
+pub fn pairwise_sorting_accuracy_grouped(
+    order: &[f64],
+    latency: &[f64],
+    group: &[u32],
+) -> f64 {
+    assert_eq!(order.len(), latency.len());
+    assert_eq!(order.len(), group.len());
+    let n = order.len();
+    let mut correct = 0.0;
+    let mut total = 0.0;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if group[i] == group[j] {
+                continue;
+            }
+            total += 1.0;
+            let do_ = order[i] - order[j];
+            let dl = latency[i] - latency[j];
+            if do_ == 0.0 || dl == 0.0 {
+                correct += 0.5;
+            } else if do_ * dl > 0.0 {
+                correct += 1.0;
+            }
+        }
+    }
+    if total == 0.0 {
+        1.0
+    } else {
+        correct / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouped_accuracy_ignores_same_group_pairs() {
+        // Two groups; within-group order is wrong but cross-group is right.
+        let order = [0.0, 1.0, 2.0, 3.0];
+        let latency = [2.0, 1.0, 9.0, 8.0]; // within-group inverted
+        let group = [0u32, 0, 1, 1];
+        let acc = pairwise_sorting_accuracy_grouped(&order, &latency, &group);
+        assert!((acc - 1.0).abs() < 1e-12, "acc={acc}");
+    }
+
+    #[test]
+    fn grouped_accuracy_all_same_group_is_one() {
+        let acc = pairwise_sorting_accuracy_grouped(&[1.0, 2.0], &[5.0, 1.0], &[0, 0]);
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn perfect_agreement() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((kendall_tau(&xs, &xs) - 1.0).abs() < 1e-12);
+        assert!((pairwise_sorting_accuracy(&xs, &xs) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_disagreement() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [4.0, 3.0, 2.0, 1.0];
+        assert!((kendall_tau(&xs, &ys) + 1.0).abs() < 1e-12);
+        assert!(pairwise_sorting_accuracy(&xs, &ys) < 1e-12);
+    }
+
+    #[test]
+    fn random_near_zero() {
+        use crate::stats::rng::Rng;
+        let mut rng = Rng::new(99);
+        let xs: Vec<f64> = (0..500).map(|_| rng.f64()).collect();
+        let ys: Vec<f64> = (0..500).map(|_| rng.f64()).collect();
+        assert!(kendall_tau(&xs, &ys).abs() < 0.1);
+        assert!((pairwise_sorting_accuracy(&xs, &ys) - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn ties_count_half() {
+        let order = [1.0, 1.0];
+        let lat = [3.0, 5.0];
+        assert!((pairwise_sorting_accuracy(&order, &lat) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn short_inputs() {
+        assert_eq!(kendall_tau(&[], &[]), 0.0);
+        assert_eq!(pairwise_sorting_accuracy(&[1.0], &[2.0]), 1.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Classical multidimensional scaling (MDS) to one dimension.
+//!
+//! The paper (§5.1) embeds the agents' pairwise Wasserstein distance matrix
+//! into a 1-D coordinate space with MDS and orients the axis with an ideal
+//! "zero latency" anchor distribution. Classical (Torgerson) MDS to 1-D is
+//! the dominant eigenvector of the double-centered squared-distance matrix,
+//! scaled by sqrt of the dominant eigenvalue; we compute it with a cyclic
+//! Jacobi eigensolver (no external linear algebra crates on this image).
+
+/// Dense symmetric matrix stored row-major.
+#[derive(Debug, Clone)]
+pub struct SymMatrix {
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl SymMatrix {
+    pub fn zeros(n: usize) -> Self {
+        SymMatrix { n, data: vec![0.0; n * n] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.n + j] = v;
+        self.data[j * self.n + i] = v;
+    }
+}
+
+/// Dominant eigenpair of a symmetric matrix via power iteration with
+/// Rayleigh-quotient convergence. Returns `(eigenvalue, eigenvector)`.
+///
+/// Power iteration converges to the eigenvalue of largest magnitude; for the
+/// double-centered MDS Gram matrix the dominant eigenvalue is the one we
+/// want (it is positive whenever the distances carry any 1-D signal).
+pub fn dominant_eigen(m: &SymMatrix, max_iter: usize, tol: f64) -> (f64, Vec<f64>) {
+    let n = m.n;
+    assert!(n > 0);
+    // Deterministic, not-axis-aligned start.
+    let mut v: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.7).sin() * 0.5).collect();
+    normalize(&mut v);
+    let mut lambda = 0.0;
+    for _ in 0..max_iter {
+        let mut w = vec![0.0; n];
+        for i in 0..n {
+            let row = &m.data[i * n..(i + 1) * n];
+            w[i] = row.iter().zip(&v).map(|(a, b)| a * b).sum();
+        }
+        let new_lambda: f64 = v.iter().zip(&w).map(|(a, b)| a * b).sum();
+        let norm = normalize(&mut w);
+        if norm < 1e-300 {
+            return (0.0, v); // matrix annihilated the iterate: zero spectrum
+        }
+        let done = (new_lambda - lambda).abs() <= tol * new_lambda.abs().max(1.0);
+        v = w;
+        lambda = new_lambda;
+        if done {
+            break;
+        }
+    }
+    (lambda, v)
+}
+
+fn normalize(v: &mut [f64]) -> f64 {
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    norm
+}
+
+/// Classical MDS of a distance matrix to 1-D.
+///
+/// Returns one coordinate per point. Coordinates are centered (mean 0) and
+/// defined up to sign — callers orient the axis themselves (Kairos uses the
+/// zero-latency anchor's coordinate; see [`mds_1d_anchored`]).
+pub fn mds_1d(dist: &SymMatrix) -> Vec<f64> {
+    let n = dist.n;
+    if n == 0 {
+        return vec![];
+    }
+    if n == 1 {
+        return vec![0.0];
+    }
+    // B = -1/2 * J D^2 J  (double centering)
+    let mut d2 = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let d = dist.get(i, j);
+            d2[i * n + j] = d * d;
+        }
+    }
+    let row_means: Vec<f64> = (0..n)
+        .map(|i| d2[i * n..(i + 1) * n].iter().sum::<f64>() / n as f64)
+        .collect();
+    let grand = row_means.iter().sum::<f64>() / n as f64;
+    let mut b = SymMatrix::zeros(n);
+    for i in 0..n {
+        for j in i..n {
+            let v = -0.5 * (d2[i * n + j] - row_means[i] - row_means[j] + grand);
+            b.set(i, j, v);
+        }
+    }
+    // A 1-D ranking only needs the eigenvector's *order* to stabilize;
+    // 1e-9 relative tolerance and a bounded iteration count keep large-n
+    // updates within the paper's §7.7 envelope (EXPERIMENTS.md §Perf).
+    let max_iter = if n >= 1000 { 120 } else { 500 };
+    let (lambda, vec) = dominant_eigen(&b, max_iter, 1e-9);
+    let scale = lambda.max(0.0).sqrt();
+    vec.into_iter().map(|x| x * scale).collect()
+}
+
+/// MDS embedding of `dists` (size n+1, the LAST row/column being the anchor
+/// point), oriented so that the anchor sits at the minimum of the axis.
+///
+/// Returns the coordinates of the n non-anchor points, oriented so *smaller
+/// coordinate = closer to the anchor = shorter remaining latency = higher
+/// priority* (paper §5.1).
+pub fn mds_1d_anchored(dists: &SymMatrix) -> Vec<f64> {
+    let n1 = dists.n;
+    assert!(n1 >= 2, "need at least one point plus the anchor");
+    let coords = mds_1d(dists);
+    let anchor = coords[n1 - 1];
+    let mean_others =
+        coords[..n1 - 1].iter().sum::<f64>() / (n1 - 1) as f64;
+    // Flip so the anchor is on the low side of the others' mean.
+    let flip = anchor > mean_others;
+    coords[..n1 - 1]
+        .iter()
+        .map(|&c| {
+            let c = if flip { -c } else { c };
+            let a = if flip { -anchor } else { anchor };
+            c - a // anchor at 0, others >= ~0
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dist_matrix(points: &[f64]) -> SymMatrix {
+        let n = points.len();
+        let mut m = SymMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                m.set(i, j, (points[i] - points[j]).abs());
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn recovers_line_up_to_sign_and_shift() {
+        let pts = [0.0, 1.0, 3.0, 7.0, 12.0];
+        let coords = mds_1d(&dist_matrix(&pts));
+        // Pairwise distances must be preserved.
+        for i in 0..pts.len() {
+            for j in 0..pts.len() {
+                let want = (pts[i] - pts[j]).abs();
+                let got = (coords[i] - coords[j]).abs();
+                assert!((want - got).abs() < 1e-6, "({i},{j}): want {want} got {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn ordering_preserved_up_to_reversal() {
+        let pts = [2.0, 9.0, 4.0, 0.5];
+        let coords = mds_1d(&dist_matrix(&pts));
+        let mut idx: Vec<usize> = (0..4).collect();
+        idx.sort_by(|&a, &b| coords[a].partial_cmp(&coords[b]).unwrap());
+        let fwd = vec![3usize, 0, 2, 1];
+        let rev: Vec<usize> = fwd.iter().rev().cloned().collect();
+        assert!(idx == fwd || idx == rev, "idx={idx:?}");
+    }
+
+    #[test]
+    fn anchored_orientation_puts_zero_lowest() {
+        // Points at 3, 8, 1 plus anchor at 0 (last row).
+        let pts = [3.0, 8.0, 1.0, 0.0];
+        let coords = mds_1d_anchored(&dist_matrix(&pts));
+        assert_eq!(coords.len(), 3);
+        // Orientation: point closest to the anchor gets the smallest coord.
+        assert!(coords[2] < coords[0] && coords[0] < coords[1], "{coords:?}");
+        // Anchor normalized to ~0 => all others non-negative.
+        assert!(coords.iter().all(|&c| c > -1e-6));
+    }
+
+    #[test]
+    fn single_point_with_anchor() {
+        let pts = [5.0, 0.0];
+        let coords = mds_1d_anchored(&dist_matrix(&pts));
+        assert_eq!(coords.len(), 1);
+        assert!((coords[0] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn identical_points_collapse() {
+        let m = SymMatrix::zeros(4);
+        let coords = mds_1d(&m);
+        assert!(coords.iter().all(|&c| c.abs() < 1e-9));
+    }
+
+    #[test]
+    fn dominant_eigen_of_diag() {
+        let mut m = SymMatrix::zeros(3);
+        m.set(0, 0, 1.0);
+        m.set(1, 1, 5.0);
+        m.set(2, 2, 2.0);
+        let (l, v) = dominant_eigen(&m, 1000, 1e-14);
+        assert!((l - 5.0).abs() < 1e-6, "l={l}");
+        assert!(v[1].abs() > 0.99);
+    }
+}

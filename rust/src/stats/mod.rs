@@ -1,0 +1,22 @@
+//! Statistics substrate: PRNG, distributions, ECDFs, Wasserstein-1 distance,
+//! classical MDS, rank correlation and streaming summaries.
+//!
+//! The offline toolchain ships no `rand`/`statrs`/`nalgebra`, so everything
+//! here is implemented from scratch (DESIGN.md §3). These primitives are the
+//! mathematical core of the paper: the scheduler's agent priorities are
+//! `Wasserstein-1 → distance matrix → MDS → 1-D ranking` (paper §5.1) and the
+//! dispatcher's expected execution times are distribution modes (paper §6).
+
+pub mod dist;
+pub mod ecdf;
+pub mod kendall;
+pub mod mds;
+pub mod rng;
+pub mod summary;
+
+pub use dist::{Categorical, Dist, Exponential, Gamma, LogNormal, Normal, Uniform};
+pub use ecdf::Ecdf;
+pub use kendall::kendall_tau;
+pub use mds::mds_1d;
+pub use rng::Rng;
+pub use summary::Summary;

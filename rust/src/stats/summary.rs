@@ -1,0 +1,169 @@
+//! Latency summaries: mean + percentile statistics over sample sets.
+
+/// Summary statistics of a sample set. Construction sorts a copy once; all
+/// queries are O(1) afterwards.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    sorted: Vec<f64>,
+    mean: f64,
+}
+
+impl Summary {
+    /// Build from raw samples. Returns `None` for an empty input.
+    pub fn from_samples(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+        Some(Summary { sorted, mean })
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted[0]
+    }
+
+    pub fn max(&self) -> f64 {
+        *self.sorted.last().unwrap()
+    }
+
+    /// Linear-interpolated percentile, `p` in `[0, 100]`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let n = self.sorted.len();
+        if n == 1 {
+            return self.sorted[0];
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p90(&self) -> f64 {
+        self.percentile(90.0)
+    }
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean;
+        (self.sorted.iter().map(|x| (x - m).powi(2)).sum::<f64>() / self.len() as f64)
+            .sqrt()
+    }
+}
+
+/// Streaming mean/variance (Welford) for O(1)-memory monitoring counters.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_none() {
+        assert!(Summary::from_samples(&[]).is_none());
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::from_samples(&[5.0]).unwrap();
+        assert_eq!(s.mean(), 5.0);
+        assert_eq!(s.p99(), 5.0);
+        assert_eq!(s.min(), 5.0);
+        assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn percentiles_of_known_set() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let s = Summary::from_samples(&xs).unwrap();
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.p90() - 90.1).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let s = Summary::from_samples(&xs).unwrap();
+        let mut prev = f64::NEG_INFINITY;
+        for p in 0..=100 {
+            let v = s.percentile(p as f64);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut o = OnlineStats::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - 5.0).abs() < 1e-12);
+        assert!((o.std() - 2.0).abs() < 1e-12);
+        assert_eq!(o.count(), 8);
+    }
+}

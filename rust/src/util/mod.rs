@@ -1,0 +1,9 @@
+//! Small utilities: a minimal JSON parser/writer (no serde on this image),
+//! CSV output, and aligned table printing for the figure harnesses.
+
+pub mod csv;
+pub mod json;
+pub mod table;
+
+pub use json::Json;
+pub use table::Table;

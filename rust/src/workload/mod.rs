@@ -1,0 +1,146 @@
+//! Workload generation (paper §7.1 "Loads").
+//!
+//! The paper replays a production LLM inference trace (Splitwise [41]),
+//! proportionally scaled so the queueing-time ratio spans 0–90%. The trace
+//! itself is not public, so we generate arrivals with the property that
+//! matters: **burstiness**. Inter-arrival gaps are Gamma-distributed with
+//! shape < 1 (CV ≈ 1.8, matching the reported heavy burst structure of
+//! production LLM traces), scaled to a target mean rate.
+
+use crate::agents::apps::{App, WorkflowPlan};
+use crate::stats::dist::{Dist, Gamma};
+use crate::stats::rng::Rng;
+use crate::Time;
+
+/// Mix of applications in a workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadMix {
+    /// (app, dataset, weight)
+    pub entries: Vec<(App, &'static str, f64)>,
+}
+
+impl WorkloadMix {
+    /// Single application on one dataset (§7.2 experiments).
+    pub fn single(app: App, dataset: &'static str) -> WorkloadMix {
+        WorkloadMix { entries: vec![(app, dataset, 1.0)] }
+    }
+
+    /// The co-located workload (§7.3): QA/G+M + RG/TQ + CG/HE, equal share.
+    pub fn colocated() -> WorkloadMix {
+        WorkloadMix {
+            entries: vec![
+                (App::Qa, "G+M", 1.0),
+                (App::Rg, "TQ", 1.0),
+                (App::Cg, "HE", 1.0),
+            ],
+        }
+    }
+}
+
+/// One arriving user task.
+#[derive(Debug, Clone)]
+pub struct ArrivalEvent {
+    pub at: Time,
+    pub plan: WorkflowPlan,
+}
+
+/// Bursty trace generator.
+#[derive(Debug, Clone)]
+pub struct TraceGen {
+    /// Gamma shape for inter-arrival gaps; < 1 = bursty. CV = 1/sqrt(shape).
+    pub burst_shape: f64,
+}
+
+impl Default for TraceGen {
+    fn default() -> Self {
+        // CV ≈ 1.8 like production LLM traces.
+        TraceGen { burst_shape: 0.31 }
+    }
+}
+
+impl TraceGen {
+    /// Generate `n` arrivals at `rate` tasks/second from `mix`.
+    pub fn generate(
+        &self,
+        mix: &WorkloadMix,
+        rate: f64,
+        n: usize,
+        rng: &mut Rng,
+    ) -> Vec<ArrivalEvent> {
+        assert!(rate > 0.0);
+        let mean_gap = 1.0 / rate;
+        let gap_dist = Gamma::new(self.burst_shape, mean_gap / self.burst_shape);
+        let weights: Vec<f64> = mix.entries.iter().map(|e| e.2).collect();
+        let cat = crate::stats::dist::Categorical::new(&weights);
+
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            t += gap_dist.sample(rng);
+            let (app, ds, _) = mix.entries[cat.sample_index(rng)];
+            out.push(ArrivalEvent { at: t, plan: WorkflowPlan::sample(app, ds, rng) });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_rate_matches_target() {
+        let gen = TraceGen::default();
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let evs = gen.generate(&WorkloadMix::colocated(), 8.0, n, &mut rng);
+        let span = evs.last().unwrap().at;
+        let rate = n as f64 / span;
+        assert!((rate - 8.0).abs() / 8.0 < 0.1, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_are_bursty() {
+        // CV of inter-arrival gaps should be >> 1 (Poisson would be 1).
+        let gen = TraceGen::default();
+        let mut rng = Rng::new(2);
+        let evs = gen.generate(&WorkloadMix::single(App::Rg, "TQ"), 4.0, 20_000, &mut rng);
+        let gaps: Vec<f64> = evs.windows(2).map(|w| w[1].at - w[0].at).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var =
+            gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!(cv > 1.4, "cv={cv}");
+    }
+
+    #[test]
+    fn arrival_times_monotone() {
+        let gen = TraceGen::default();
+        let mut rng = Rng::new(3);
+        let evs = gen.generate(&WorkloadMix::colocated(), 2.0, 500, &mut rng);
+        for w in evs.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+    }
+
+    #[test]
+    fn mix_respected() {
+        let gen = TraceGen::default();
+        let mut rng = Rng::new(4);
+        let evs = gen.generate(&WorkloadMix::colocated(), 5.0, 6000, &mut rng);
+        let qa = evs.iter().filter(|e| e.plan.app == App::Qa).count() as f64 / 6000.0;
+        assert!((qa - 1.0 / 3.0).abs() < 0.05, "qa share {qa}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let gen = TraceGen::default();
+        let a = gen.generate(&WorkloadMix::colocated(), 5.0, 100, &mut Rng::new(7));
+        let b = gen.generate(&WorkloadMix::colocated(), 5.0, 100, &mut Rng::new(7));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.plan.stages.len(), y.plan.stages.len());
+        }
+    }
+}

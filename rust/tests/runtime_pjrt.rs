@@ -1,0 +1,111 @@
+//! Integration: the rust PJRT runtime reproduces the python reference
+//! generation token-for-token from the AOT artifacts.
+//!
+//! Requires `make artifacts` to have run; tests skip (with a notice) if the
+//! artifacts are missing so `cargo test` stays runnable pre-build.
+
+use std::path::{Path, PathBuf};
+
+use kairos::runtime::TinyModel;
+use kairos::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts(name: &str) -> bool {
+    artifacts_dir().join(format!("{name}_manifest.json")).exists()
+}
+
+fn golden(name: &str) -> Json {
+    let text =
+        std::fs::read_to_string(artifacts_dir().join(format!("{name}_golden.json"))).unwrap();
+    Json::parse(&text).unwrap()
+}
+
+#[test]
+fn micro_model_matches_python_golden() {
+    if !have_artifacts("micro") {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let model = TinyModel::load(&artifacts_dir(), "micro").unwrap();
+    let g = golden("micro");
+    let prompts: Vec<Vec<i32>> = g
+        .get("prompts")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| p.as_arr().unwrap().iter().map(|t| t.as_f64().unwrap() as i32).collect())
+        .collect();
+    let steps = g.get("steps").unwrap().as_usize().unwrap();
+    let want: Vec<Vec<i32>> = g
+        .get("generated")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| p.as_arr().unwrap().iter().map(|t| t.as_f64().unwrap() as i32).collect())
+        .collect();
+
+    let got = model.generate(&prompts, steps).unwrap();
+    assert_eq!(got, want, "rust PJRT generation diverged from python golden");
+}
+
+#[test]
+fn tiny_model_matches_python_golden() {
+    if !have_artifacts("tiny") {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let model = TinyModel::load(&artifacts_dir(), "tiny").unwrap();
+    let g = golden("tiny");
+    let prompts: Vec<Vec<i32>> = g
+        .get("prompts")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| p.as_arr().unwrap().iter().map(|t| t.as_f64().unwrap() as i32).collect())
+        .collect();
+    let steps = g.get("steps").unwrap().as_usize().unwrap();
+    let want: Vec<Vec<i32>> = g
+        .get("generated")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| p.as_arr().unwrap().iter().map(|t| t.as_f64().unwrap() as i32).collect())
+        .collect();
+
+    let got = model.generate(&prompts, steps).unwrap();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn generation_is_deterministic() {
+    if !have_artifacts("micro") {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let model = TinyModel::load(&artifacts_dir(), "micro").unwrap();
+    let prompts = vec![vec![1, 2, 3], vec![4, 5]];
+    let a = model.generate(&prompts, 4).unwrap();
+    let b = model.generate(&prompts, 4).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn rejects_bad_shapes() {
+    if !have_artifacts("micro") {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let model = TinyModel::load(&artifacts_dir(), "micro").unwrap();
+    let m = &model.manifest;
+    // Wrong token count for prefill.
+    assert!(model.prefill(&[0; 3], &vec![1; m.batch], &model.empty_kv()).is_err());
+    // Wrong kv size for decode.
+    assert!(model.decode(&vec![0; m.batch], &vec![1; m.batch], &[0.0; 7]).is_err());
+}
