@@ -7,7 +7,7 @@
 mod common;
 
 use common::{bench, black_box};
-use kairos::figures::overhead::{mds_time, packing_time, sort_time};
+use kairos::figures::overhead::{mds_time, packing_time, pump_time, sort_time};
 
 fn main() {
     println!("== §7.7 overheads ==");
@@ -19,6 +19,14 @@ fn main() {
     for inst in [4usize, 8, 16] {
         bench(&format!("timeslot_packing/instances={inst}"), 20, || {
             black_box(packing_time(inst, 200, 2));
+        });
+    }
+    // Coordinator pump: full schedule+dispatch of a backlog. The status
+    // snapshot is a reusable buffer (no per-pump Vec allocation), so cost
+    // should scale with decisions, not instances × pumps.
+    for n in [1_000usize, 10_000] {
+        bench(&format!("coordinator_pump/backlog={n}"), 10, || {
+            black_box(pump_time(4, n, 3));
         });
     }
     // MDS scaling: report the measured update time directly (one-shot per

@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! kairos serve   [--config file.toml] [--scheduler S] [--dispatcher D]
-//!                [--rate R] [--tasks N] [--instances I] [--model M] [--seed X]
+//!                [--rate R] [--tasks N] [--instances I] [--model M]
+//!                [--fleet SPEC] [--seed X]
+//! kairos fleet-sweep [--fleet SPEC] [--scheduler S] [--rate R] [--tasks N]
 //! kairos figures <id|all> [--out results/]
 //! kairos quickstart [--artifacts DIR] [--model NAME]
 //! ```
@@ -12,7 +14,8 @@ use std::collections::HashMap;
 use crate::agents::apps::App;
 use crate::config::ServingConfig;
 use crate::engine::cost_model::ModelKind;
-use crate::server::sim::run_system;
+use crate::server::coordinator::FleetSpec;
+use crate::server::sim::{run_fleet, FleetConfig};
 use crate::stats::rng::Rng;
 use crate::workload::{TraceGen, WorkloadMix};
 
@@ -56,12 +59,20 @@ const USAGE: &str = "\
 kairos — low-latency multi-agent LLM serving (paper reproduction)
 
 USAGE:
-  kairos serve      [--config F] [--scheduler kairos|parrot|ayo|oracle]
-                    [--dispatcher kairos|rr|oracle|least] [--rate R]
-                    [--tasks N] [--instances I] [--model llama3-8b|llama2-13b]
-                    [--seed S] [--workload colocated|qa|rg|cg]
-  kairos figures    <table1|fig3..fig18|overhead|all> [--out results]
-  kairos quickstart [--artifacts artifacts] [--model tiny]
+  kairos serve       [--config F] [--scheduler kairos|parrot|ayo|oracle]
+                     [--dispatcher kairos|rr|oracle|least] [--rate R]
+                     [--tasks N] [--instances I] [--model llama3-8b|llama2-13b]
+                     [--fleet SPEC] [--seed S] [--workload colocated|qa|rg|cg]
+  kairos fleet-sweep [--fleet SPEC] [--scheduler S] [--rate R] [--tasks N]
+                     [--seed S] [--workload W]
+  kairos figures     <table1|fig3..fig18|overhead|all> [--out results]
+  kairos quickstart  [--artifacts artifacts] [--model tiny]
+
+FLEET SPEC — comma-separated `[COUNT*]MODEL[@KV_SCALE][:MAX_BATCH]`, e.g.
+  `2*llama3-8b@0.12,2*llama3-8b@0.04:128` (uneven co-tenant pressure) or
+  `llama3-8b,llama2-13b@0.5` (mixed models). Per-instance KV budgets flow
+  to the dispatchers, so memory-aware policies pack each instance against
+  its own capacity.
 ";
 
 /// CLI entrypoint.
@@ -69,6 +80,7 @@ pub fn run(raw: Vec<String>) -> crate::Result<()> {
     let args = Args::parse(&raw).map_err(|e| anyhow::anyhow!(e))?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("serve") => serve(&args),
+        Some("fleet-sweep") => fleet_sweep(&args),
         Some("figures") => {
             let id = args
                 .positional
@@ -111,22 +123,29 @@ fn serve(args: &Args) -> crate::Result<()> {
             other => anyhow::bail!("unknown model {other:?}"),
         };
     }
-    let mix = match args.get("workload").unwrap_or("colocated") {
-        "colocated" => WorkloadMix::colocated(),
-        "qa" => WorkloadMix::single(App::Qa, "G+M"),
-        "rg" => WorkloadMix::single(App::Rg, "TQ"),
-        "cg" => WorkloadMix::single(App::Cg, "HE"),
-        other => anyhow::bail!("unknown workload {other:?}"),
-    };
+    if let Some(f) = args.get("fleet") {
+        cfg.fleet = Some(f.to_string());
+    }
+    let fleet = cfg.resolve_fleet().map_err(|e| anyhow::anyhow!(e))?;
+    let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
 
     println!(
-        "serving {} tasks at {} req/s on {} instances ({:?}) — scheduler={} dispatcher={}",
-        cfg.n_tasks, cfg.rate, cfg.sim.n_instances, cfg.sim.model, cfg.scheduler,
+        "serving {} tasks at {} req/s on {} instances{} — scheduler={} dispatcher={}",
+        cfg.n_tasks,
+        cfg.rate,
+        fleet.len(),
+        if fleet.is_heterogeneous() { " (heterogeneous)" } else { "" },
+        cfg.scheduler,
         cfg.dispatcher
     );
     let arrivals =
         TraceGen::default().generate(&mix, cfg.rate, cfg.n_tasks, &mut Rng::new(cfg.seed));
-    let res = run_system(cfg.sim, &cfg.scheduler, &cfg.dispatcher, arrivals);
+    let fc = FleetConfig {
+        fleet,
+        refresh_interval: cfg.sim.refresh_interval,
+        warmup_frac: cfg.sim.warmup_frac,
+    };
+    let res = run_fleet(fc, &cfg.scheduler, &cfg.dispatcher, arrivals);
     let s = &res.summary;
     println!("\ncompleted {} workflows over {:.1} sim-seconds", s.n_workflows, res.sim_duration);
     println!("program-level token latency:");
@@ -136,6 +155,54 @@ fn serve(args: &Args) -> crate::Result<()> {
     println!("queueing-time ratio: {:.1}%", s.mean_queue_ratio * 100.0);
     println!("preempted requests:  {:.1}%", s.preemption_rate * 100.0);
     println!("dropped requests:    {}", res.dropped_requests);
+    Ok(())
+}
+
+fn workload_mix(name: &str) -> crate::Result<WorkloadMix> {
+    Ok(match name {
+        "colocated" => WorkloadMix::colocated(),
+        "qa" => WorkloadMix::single(App::Qa, "G+M"),
+        "rg" => WorkloadMix::single(App::Rg, "TQ"),
+        "cg" => WorkloadMix::single(App::Cg, "HE"),
+        other => anyhow::bail!("unknown workload {other:?}"),
+    })
+}
+
+/// End-to-end heterogeneous-fleet scenario: one fleet, every dispatcher.
+/// Shows how memory-aware dispatching degrades (or not) when half the
+/// fleet runs under heavier co-tenant KV pressure.
+fn fleet_sweep(args: &Args) -> crate::Result<()> {
+    let spec = args
+        .get("fleet")
+        .unwrap_or("2*llama3-8b@0.12,2*llama3-8b@0.04:128");
+    let fleet = FleetSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+    let scheduler = args.get("scheduler").unwrap_or("kairos");
+    let rate = args.num("rate", 6.0);
+    let n_tasks = args.num("tasks", 400.0) as usize;
+    let seed = args.num("seed", 42.0) as u64;
+    let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
+
+    println!("fleet sweep over {spec:?} — {} instances, scheduler={scheduler}", fleet.len());
+    println!("{} tasks at {rate} req/s (seed {seed})\n", n_tasks);
+    let mut t = crate::util::table::Table::new(&[
+        "dispatcher", "avg s/tok", "P99 s/tok", "queue%", "preempt%", "dropped",
+    ]);
+    for disp in ["rr", "least", "oracle", "kairos"] {
+        let arrivals =
+            TraceGen::default().generate(&mix, rate, n_tasks, &mut Rng::new(seed));
+        let fc = FleetConfig::from(fleet.clone());
+        let res = run_fleet(fc, scheduler, disp, arrivals);
+        let s = &res.summary;
+        t.row(vec![
+            res.dispatcher_name.to_string(),
+            format!("{:.4}", s.avg_token_latency),
+            format!("{:.4}", s.p99_token_latency),
+            format!("{:.1}%", s.mean_queue_ratio * 100.0),
+            format!("{:.1}%", s.preemption_rate * 100.0),
+            res.dropped_requests.to_string(),
+        ]);
+    }
+    t.print();
     Ok(())
 }
 

@@ -105,6 +105,10 @@ impl TomlDoc {
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
     pub sim: SimConfig,
+    /// Optional heterogeneous fleet spec (`[cluster] fleet = "..."`), in
+    /// [`crate::server::coordinator::FleetSpec::parse`] syntax. When set it
+    /// overrides `instances`/`model`/`max_batch`/`kv_scale`.
+    pub fleet: Option<String>,
     pub scheduler: String,
     pub dispatcher: String,
     pub rate: f64,
@@ -116,6 +120,7 @@ impl Default for ServingConfig {
     fn default() -> Self {
         ServingConfig {
             sim: SimConfig::default(),
+            fleet: None,
             scheduler: "kairos".into(),
             dispatcher: "kairos".into(),
             rate: 8.0,
@@ -141,12 +146,29 @@ impl ServingConfig {
             "tiny" => ModelKind::Tiny,
             other => return Err(format!("unknown model {other:?}")),
         };
+        cfg.fleet = doc
+            .get("cluster", "fleet")
+            .and_then(TomlValue::as_str)
+            .map(|s| s.to_string());
+        if let Some(spec) = &cfg.fleet {
+            // Validate eagerly so a bad config fails at load, not dispatch.
+            crate::server::coordinator::FleetSpec::parse(spec)?;
+        }
         cfg.scheduler = doc.str("policy", "scheduler", "kairos");
         cfg.dispatcher = doc.str("policy", "dispatcher", "kairos");
         cfg.rate = doc.num("workload", "rate", 8.0);
         cfg.n_tasks = doc.num("workload", "tasks", 400.0) as usize;
         cfg.seed = doc.num("workload", "seed", 42.0) as u64;
         Ok(cfg)
+    }
+
+    /// The resolved fleet: the explicit `fleet` spec when present,
+    /// otherwise the homogeneous fleet described by `sim`.
+    pub fn resolve_fleet(&self) -> Result<crate::server::coordinator::FleetSpec, String> {
+        match &self.fleet {
+            Some(s) => crate::server::coordinator::FleetSpec::parse(s),
+            None => Ok(self.sim.fleet()),
+        }
     }
 }
 
@@ -209,6 +231,25 @@ refresh_interval = 2.0
         assert!(TomlDoc::parse("keyonly\n").is_err());
         assert!(TomlDoc::parse("k = @bad\n").is_err());
         assert!(ServingConfig::from_toml("[cluster]\nmodel = \"gpt5\"\n").is_err());
+    }
+
+    #[test]
+    fn fleet_spec_parses_and_overrides() {
+        let cfg = ServingConfig::from_toml(
+            "[cluster]\ninstances = 2\nfleet = \"2*llama3-8b@0.12,llama2-13b@0.5\"\n",
+        )
+        .unwrap();
+        let fleet = cfg.resolve_fleet().unwrap();
+        assert_eq!(fleet.len(), 3);
+        assert!(fleet.is_heterogeneous());
+        // Without a fleet spec, the homogeneous sim config wins.
+        let cfg = ServingConfig::from_toml("[cluster]\ninstances = 2\n").unwrap();
+        assert_eq!(cfg.resolve_fleet().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn bad_fleet_spec_rejected_at_load() {
+        assert!(ServingConfig::from_toml("[cluster]\nfleet = \"gpt5@1.0\"\n").is_err());
     }
 
     #[test]

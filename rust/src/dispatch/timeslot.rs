@@ -37,7 +37,11 @@ pub struct TimeSlotConfig {
     pub kv_bytes_per_token: f64,
     /// Memory ramp slope `k` in bytes/second (decode rate × bytes/token).
     pub mem_slope: f64,
-    /// Per-instance KV capacity in bytes.
+    /// Fallback KV capacity in bytes, used only when an instance's live
+    /// status is unavailable. On every decision the packer reads each
+    /// instance's real budget from [`InstanceStatus::capacity_tokens`], so
+    /// heterogeneous fleets (mixed GPUs, uneven co-tenant pressure) are
+    /// packed against their actual per-instance capacities.
     pub capacity_bytes: f64,
     /// Fallback expected execution time before profiles exist (s).
     pub default_exec_time: f64,
@@ -189,10 +193,18 @@ impl TimeSlotDispatcher {
             * self.cfg.safety
     }
 
+    /// KV capacity of instance `j` in bytes: its live per-instance budget
+    /// when a status is available, the configured fallback otherwise.
+    fn capacity_of(&self, status: Option<&InstanceStatus>) -> f64 {
+        status
+            .map(|s| s.capacity_tokens as f64 * self.cfg.kv_bytes_per_token)
+            .unwrap_or(self.cfg.capacity_bytes)
+    }
+
     /// Evaluate placing `req` on instance `j` starting `now`; returns the
     /// resulting peak usage over the spanned slots, or None if any slot
-    /// would exceed capacity.
-    fn evaluate(&self, j: usize, req: &Request, now: Time) -> Option<f64> {
+    /// would exceed `capacity` (bytes).
+    fn evaluate(&self, j: usize, req: &Request, now: Time, capacity: f64) -> Option<f64> {
         let t_i = self.expected_time(req);
         let start = now;
         let end = now + t_i;
@@ -207,7 +219,7 @@ impl TimeSlotDispatcher {
                 continue;
             }
             let total = ring.get(s) + add;
-            if total > self.cfg.capacity_bytes {
+            if total > capacity {
                 return None; // this instance is temporarily unavailable
             }
             peak = peak.max(total);
@@ -254,7 +266,8 @@ impl DispatchPolicy for TimeSlotDispatcher {
             {
                 continue;
             }
-            if let Some(peak) = self.evaluate(j, req, now) {
+            let capacity = self.capacity_of(Some(st));
+            if let Some(peak) = self.evaluate(j, req, now, capacity) {
                 if best.map(|(_, p)| peak < p).unwrap_or(true) {
                     best = Some((j, peak));
                 }
@@ -469,6 +482,36 @@ mod tests {
         let mut ring = SlotRing::new(4);
         ring.add(1000, 9.0);
         assert_eq!(ring.get(3), 9.0);
+    }
+
+    #[test]
+    fn heterogeneous_budgets_respected_per_instance() {
+        // Instance 0 is squeezed by a co-tenant (150-token KV budget);
+        // instance 1 has the full 1000. The packer must read each budget
+        // from the statuses, not a fleet-wide constant.
+        let mut d = TimeSlotDispatcher::new(2, cfg());
+        let mut small = st(0);
+        small.capacity_tokens = 150;
+        let statuses = vec![small, st(1)];
+
+        // 500-token prompt exceeds the squeezed instance's entire budget.
+        let r1 = req(1, 0, 500);
+        let j1 = d.choose(&r1, &statuses, 0.0).unwrap();
+        assert_eq!(j1, 1, "oversized request must avoid the squeezed instance");
+        d.on_dispatch(&r1, j1, 0.0);
+
+        // A small request fits the squeezed instance (peak 140 <= 150) and
+        // prefers it over the loaded big one.
+        let r2 = req(2, 0, 100);
+        let j2 = d.choose(&r2, &statuses, 0.0).unwrap();
+        assert_eq!(j2, 0);
+        d.on_dispatch(&r2, j2, 0.0);
+
+        // A second small request would push the squeezed instance to 280 >
+        // 150, so it must go to the big instance despite its higher peak.
+        let r3 = req(3, 0, 100);
+        let j3 = d.choose(&r3, &statuses, 0.0).unwrap();
+        assert_eq!(j3, 1, "per-instance budget must bound packing");
     }
 
     #[test]

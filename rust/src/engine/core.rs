@@ -211,17 +211,14 @@ impl<B: ExecBackend> EngineCore<B> {
             return;
         }
         let mut v: Vec<SeqState> = self.waiting.drain(..).collect();
+        // total_cmp keeps the comparator a total order even under NaN keys
+        // (sort_by may panic otherwise).
         v.sort_by(|a, b| {
             let ka = key(&a.req);
             let kb = key(&b.req);
-            ka.partial_cmp(&kb)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(
-                    a.req
-                        .stage_arrival
-                        .partial_cmp(&b.req.stage_arrival)
-                        .unwrap_or(std::cmp::Ordering::Equal),
-                )
+            ka.0.total_cmp(&kb.0)
+                .then(ka.1.total_cmp(&kb.1))
+                .then(a.req.stage_arrival.total_cmp(&b.req.stage_arrival))
         });
         self.waiting = v.into();
     }
@@ -280,10 +277,7 @@ impl<B: ExecBackend> EngineCore<B> {
                 .enumerate()
                 .filter(|(_, s)| s.phase == SeqPhase::Decoding)
                 .max_by(|(_, a), (_, b)| {
-                    a.req
-                        .stage_arrival
-                        .partial_cmp(&b.req.stage_arrival)
-                        .unwrap()
+                    a.req.stage_arrival.total_cmp(&b.req.stage_arrival)
                 })
                 .map(|(i, _)| i);
             let Some(vi) = victim_idx else { break };

@@ -34,11 +34,14 @@ impl PartialOrd for Entry {
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse: BinaryHeap is a max-heap; we want the MIN key on top,
-        // with arrival sequence as the deterministic tiebreaker.
+        // with arrival sequence as the deterministic tiebreaker. Keys use
+        // `f64::total_cmp` so a NaN from a policy (it sorts after +inf)
+        // yields a total order instead of silently corrupting the heap.
         other
             .key
-            .partial_cmp(&self.key)
-            .unwrap_or(Ordering::Equal)
+            .0
+            .total_cmp(&self.key.0)
+            .then(other.key.1.total_cmp(&self.key.1))
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -188,6 +191,36 @@ mod tests {
         q.pop_best();
         q.push(req(9, 9.0, 0.0), &Fcfs);
         assert_eq!(q.peak_len, 5);
+    }
+
+    #[test]
+    fn nan_key_sorts_last_and_preserves_order() {
+        // Regression: Entry::cmp used partial_cmp(..).unwrap_or(Equal), so
+        // one NaN key made the comparator non-total and could silently
+        // corrupt heap order for every other element. With total_cmp, NaN
+        // sorts after +inf (i.e. last in the min-queue) and all other
+        // elements keep their exact order.
+        struct NanPolicy;
+        impl SchedulePolicy for NanPolicy {
+            fn name(&self) -> &'static str {
+                "nan-test"
+            }
+            fn key(&self, r: &Request) -> (f64, f64) {
+                if r.id == 99 {
+                    (f64::NAN, f64::NAN)
+                } else {
+                    (r.stage_arrival, 0.0)
+                }
+            }
+        }
+        let mut q = RequestQueue::new();
+        q.push(req(1, 3.0, 0.0), &NanPolicy);
+        q.push(req(99, 0.0, 0.0), &NanPolicy); // NaN key
+        q.push(req(2, 1.0, 0.0), &NanPolicy);
+        q.push(req(3, 2.0, 0.0), &NanPolicy);
+        assert_eq!(q.len(), 4, "nothing lost");
+        let order: Vec<u64> = q.drain_ordered(&NanPolicy).iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![2, 3, 1, 99]);
     }
 
     #[test]

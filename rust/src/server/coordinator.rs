@@ -1,0 +1,840 @@
+//! The clock-agnostic serving runtime.
+//!
+//! [`Coordinator`] owns the paper's coordination cycle exactly once:
+//! central queue → priority scheduler → memory-aware dispatcher → engine
+//! fleet → orchestrator feedback. It never reads a clock — every method
+//! takes `now` from the caller — so the discrete-event harness
+//! ([`super::sim`] over [`crate::simcore`]) and the wall-clock PJRT path
+//! ([`super::real`]) are thin *drivers* over the same coordination code.
+//! The [`Clock`] trait is the drivers' seam: wall drivers read
+//! [`WallClock`], virtual-time drivers advance a [`ManualClock`] (or take
+//! times straight off the event queue).
+//!
+//! The fleet is heterogeneous: a [`FleetSpec`] gives every instance its own
+//! [`InstanceSpec`] — model, batch width and KV scale — modeling mixed GPU
+//! generations and uneven co-tenant memory pressure. Per-instance capacity
+//! flows to the dispatchers through [`InstanceStatus`], so packing decisions
+//! are made against each instance's real budget, not a fleet-wide constant.
+
+use std::cell::Cell;
+use std::collections::HashMap;
+
+use crate::agents::apps::WorkflowPlan;
+use crate::dispatch::DispatchPolicy;
+use crate::engine::core::{
+    EngineConfig, EngineCore, ExecBackend, InstanceStatus, SimBackend, StepOutcome,
+};
+use crate::engine::cost_model::{CostModel, ModelKind};
+use crate::engine::request::{Request, RequestId, SeqState};
+use crate::lb::policies::SchedulePolicy;
+use crate::lb::queue::RequestQueue;
+use crate::metrics::{MetricsCollector, RequestRecord, WorkflowRecord};
+use crate::orchestrator::graph::ExecRecord;
+use crate::orchestrator::ids::{AgentId, MsgId};
+use crate::orchestrator::Orchestrator;
+use crate::Time;
+
+// ---------------------------------------------------------------------------
+// Clock seam
+
+/// A source of the current time, in seconds. The coordinator itself is
+/// clock-agnostic; only drivers hold a clock.
+pub trait Clock {
+    fn now(&self) -> Time;
+}
+
+/// Wall-clock time since construction (the real-serving driver's clock).
+pub struct WallClock {
+    origin: std::time::Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { origin: std::time::Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Time {
+        self.origin.elapsed().as_secs_f64()
+    }
+}
+
+/// A manually advanced clock for virtual-time drivers and driver tests.
+#[derive(Debug, Default)]
+pub struct ManualClock {
+    now: Cell<Time>,
+}
+
+impl ManualClock {
+    pub fn new() -> ManualClock {
+        ManualClock { now: Cell::new(0.0) }
+    }
+
+    /// Advance to `t`. Time never moves backwards.
+    pub fn advance_to(&self, t: Time) {
+        if t > self.now.get() {
+            self.now.set(t);
+        }
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> Time {
+        self.now.get()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet specification
+
+/// Configuration of one engine instance — one GPU's worth of serving
+/// capacity, with its own model kind, batch width and KV budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstanceSpec {
+    pub model: ModelKind,
+    /// KV block size in tokens.
+    pub block_size: u32,
+    /// vLLM `max_num_seqs` for this instance.
+    pub max_batch: usize,
+    /// Scale factor on the instance's KV pool (< 1.0 models co-tenant
+    /// memory pressure or a smaller GPU; 1.0 = the model's full budget).
+    pub kv_scale: f64,
+}
+
+impl InstanceSpec {
+    pub fn new(model: ModelKind) -> InstanceSpec {
+        InstanceSpec { model, block_size: 16, max_batch: 256, kv_scale: 1.0 }
+    }
+
+    pub fn with_kv_scale(mut self, kv_scale: f64) -> InstanceSpec {
+        self.kv_scale = kv_scale;
+        self
+    }
+
+    pub fn with_max_batch(mut self, max_batch: usize) -> InstanceSpec {
+        self.max_batch = max_batch;
+        self
+    }
+
+    pub fn cost_model(&self) -> CostModel {
+        CostModel::new(self.model)
+    }
+
+    /// The engine config this spec resolves to: the model's full block pool
+    /// scaled by `kv_scale` (never below one block).
+    pub fn engine_config(&self) -> EngineConfig {
+        let cost = self.cost_model();
+        let mut cfg = EngineConfig::for_model(&cost, self.block_size);
+        cfg.max_batch = self.max_batch;
+        cfg.total_blocks = ((cfg.total_blocks as f64) * self.kv_scale).max(1.0) as u32;
+        cfg
+    }
+}
+
+/// Per-instance configuration of the whole fleet.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetSpec {
+    pub instances: Vec<InstanceSpec>,
+}
+
+impl FleetSpec {
+    /// `n` identical instances.
+    pub fn homogeneous(n: usize, spec: InstanceSpec) -> FleetSpec {
+        FleetSpec { instances: vec![spec; n] }
+    }
+
+    pub fn push(&mut self, spec: InstanceSpec) -> &mut Self {
+        self.instances.push(spec);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    /// True when any two instances differ (model, batch or KV budget).
+    pub fn is_heterogeneous(&self) -> bool {
+        self.instances.windows(2).any(|w| w[0] != w[1])
+    }
+
+    /// The reference cost model used for fleet-level annotations (ground
+    /// truth isolated latencies, time-slot ramp constants): the first
+    /// instance's model.
+    pub fn reference_cost(&self) -> CostModel {
+        CostModel::new(self.instances.first().map(|s| s.model).unwrap_or(ModelKind::Llama3_8B))
+    }
+
+    /// Parse a fleet from a compact CLI string.
+    ///
+    /// Grammar: comma-separated entries `[COUNT*]MODEL[@KV_SCALE][:MAX_BATCH]`
+    /// with models `llama3-8b`, `llama2-13b`, `tiny`. Examples:
+    ///
+    /// * `4*llama3-8b@0.12` — the paper's homogeneous testbed under
+    ///   co-tenant pressure.
+    /// * `2*llama3-8b@0.12,2*llama3-8b@0.04:128` — uneven pressure.
+    /// * `llama3-8b,llama2-13b@0.5` — mixed models.
+    pub fn parse(s: &str) -> Result<FleetSpec, String> {
+        let mut fleet = FleetSpec::default();
+        for raw in s.split(',') {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                return Err(format!("empty fleet entry in {s:?}"));
+            }
+            let (count, rest) = match entry.split_once('*') {
+                Some((n, rest)) => {
+                    let n: usize = n
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad instance count in {entry:?}"))?;
+                    if n == 0 {
+                        return Err(format!("zero instance count in {entry:?}"));
+                    }
+                    (n, rest.trim())
+                }
+                None => (1, entry),
+            };
+            let (rest, max_batch) = match rest.rsplit_once(':') {
+                Some((head, b)) => {
+                    let b: usize =
+                        b.parse().map_err(|_| format!("bad max_batch in {entry:?}"))?;
+                    if b == 0 {
+                        return Err(format!("zero max_batch in {entry:?}"));
+                    }
+                    (head, Some(b))
+                }
+                None => (rest, None),
+            };
+            let (model_name, kv_scale) = match rest.split_once('@') {
+                Some((m, k)) => {
+                    let k: f64 =
+                        k.parse().map_err(|_| format!("bad kv_scale in {entry:?}"))?;
+                    if !(k > 0.0) {
+                        return Err(format!("kv_scale must be > 0 in {entry:?}"));
+                    }
+                    (m, k)
+                }
+                None => (rest, 1.0),
+            };
+            let model = match model_name.trim() {
+                "llama3-8b" => ModelKind::Llama3_8B,
+                "llama2-13b" => ModelKind::Llama2_13B,
+                "tiny" => ModelKind::Tiny,
+                other => return Err(format!("unknown model {other:?}")),
+            };
+            let mut spec = InstanceSpec::new(model).with_kv_scale(kv_scale);
+            if let Some(b) = max_batch {
+                spec = spec.with_max_batch(b);
+            }
+            for _ in 0..count {
+                fleet.push(spec);
+            }
+        }
+        if fleet.is_empty() {
+            return Err("fleet has no instances".to_string());
+        }
+        Ok(fleet)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workflow bookkeeping
+
+struct WfState {
+    plan: WorkflowPlan,
+    next_stage: usize,
+    app_start: Time,
+    queue_time: f64,
+    /// Isolated per-stage latency estimates (suffix sums give the ground
+    /// truth remaining latency for Oracle/analysis).
+    stage_latency: Vec<f64>,
+}
+
+struct Pending {
+    msg_id: MsgId,
+    agent: AgentId,
+    stage_arrival: Time,
+    output_tokens: u32,
+    true_remaining: f64,
+    upstream: Option<AgentId>,
+}
+
+/// What one absorbed [`StepOutcome`] produced: the completed sequences (for
+/// drivers that post-process them, e.g. text extraction in real serving)
+/// and whether any workflow advanced or finished.
+#[derive(Debug, Default)]
+pub struct Absorbed {
+    pub completed: Vec<SeqState>,
+    pub preempted: u32,
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+
+/// The reusable serving runtime: one instance of the coordination cycle,
+/// generic over the engine execution backend. Drivers own the clock and the
+/// iteration discipline (event queue, polling loop, threads); the
+/// coordinator owns every scheduling, dispatching and feedback decision.
+pub struct Coordinator<B: ExecBackend> {
+    pub fleet: FleetSpec,
+    pub queue: RequestQueue,
+    pub policy: Box<dyn SchedulePolicy>,
+    pub dispatcher: Box<dyn DispatchPolicy>,
+    pub engines: Vec<EngineCore<B>>,
+    pub orch: Orchestrator,
+    pub metrics: MetricsCollector,
+    workflows: HashMap<MsgId, WfState>,
+    pending: HashMap<RequestId, Pending>,
+    next_req_id: RequestId,
+    next_msg_id: MsgId,
+    /// Requests rejected because no instance could ever hold them.
+    pub dropped: u64,
+    /// Every dispatch decision `(request, instance)` in order — the
+    /// driver-equivalence contract (two drivers over the same trace must
+    /// produce the same log).
+    pub dispatch_log: Vec<(RequestId, usize)>,
+    /// Reusable per-instance status snapshot: refreshed in place, only for
+    /// instances whose engine changed since the last pump (no per-pump
+    /// allocation — see `benches/bench_overhead.rs`).
+    status_buf: Vec<InstanceStatus>,
+    status_dirty: Vec<bool>,
+    /// Cost model used for fleet-level ground-truth annotations.
+    reference_cost: CostModel,
+}
+
+impl Coordinator<SimBackend> {
+    /// A coordinator whose engines execute under the calibrated cost model
+    /// of their own instance spec (virtual-time fleet).
+    pub fn sim(
+        fleet: FleetSpec,
+        policy: Box<dyn SchedulePolicy>,
+        dispatcher: Box<dyn DispatchPolicy>,
+    ) -> Coordinator<SimBackend> {
+        Coordinator::new(fleet, policy, dispatcher, |spec| {
+            SimBackend::new(spec.cost_model())
+        })
+    }
+}
+
+impl<B: ExecBackend> Coordinator<B> {
+    /// Build the fleet: `make_backend` constructs each instance's execution
+    /// backend from its spec.
+    pub fn new(
+        fleet: FleetSpec,
+        policy: Box<dyn SchedulePolicy>,
+        dispatcher: Box<dyn DispatchPolicy>,
+        mut make_backend: impl FnMut(&InstanceSpec) -> B,
+    ) -> Coordinator<B> {
+        let engines: Vec<EngineCore<B>> = fleet
+            .instances
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| EngineCore::new(i, spec.engine_config(), make_backend(spec)))
+            .collect();
+        Coordinator::from_engines(fleet, policy, dispatcher, engines)
+    }
+
+    /// Build a coordinator over pre-constructed engines (backends whose
+    /// engine configs come from elsewhere than the cost model, e.g. the
+    /// PJRT tiny-model manifest). `fleet` stays the nominal description.
+    pub fn from_engines(
+        fleet: FleetSpec,
+        policy: Box<dyn SchedulePolicy>,
+        dispatcher: Box<dyn DispatchPolicy>,
+        engines: Vec<EngineCore<B>>,
+    ) -> Coordinator<B> {
+        assert!(!engines.is_empty(), "fleet must have at least one instance");
+        assert_eq!(fleet.len(), engines.len(), "fleet spec must match engines");
+        let status_buf: Vec<InstanceStatus> = engines.iter().map(|e| e.status()).collect();
+        let n = engines.len();
+        let reference_cost = fleet.reference_cost();
+        Coordinator {
+            fleet,
+            queue: RequestQueue::new(),
+            policy,
+            dispatcher,
+            engines,
+            orch: Orchestrator::new(),
+            metrics: MetricsCollector::new(),
+            workflows: HashMap::new(),
+            pending: HashMap::new(),
+            next_req_id: 1,
+            next_msg_id: 1,
+            dropped: 0,
+            dispatch_log: Vec::new(),
+            status_buf,
+            status_dirty: vec![false; n],
+            reference_cost,
+        }
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Whether any stage is queued, resident in an engine, or mid-workflow.
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty()
+            || !self.workflows.is_empty()
+            || self.engines.iter().any(|e| e.has_work())
+    }
+
+    /// Isolated (uncontended) execution latency of one stage — prefill plus
+    /// single-stream decode under the reference cost model. Used for the
+    /// ground-truth remaining-latency annotations.
+    fn stage_isolated_latency(cost: &CostModel, prompt: u32, output: u32) -> f64 {
+        let prefill = cost.step_time(prompt, 0, 0);
+        let avg_ctx = prompt as u64 + output as u64 / 2;
+        let per_tok = cost.step_time(0, 1, avg_ctx);
+        prefill + per_tok * output.saturating_sub(1) as f64
+    }
+
+    /// Admit a resolved workflow: registers its state and pushes its first
+    /// stage into the central queue. Returns the workflow's message id.
+    pub fn submit_plan(&mut self, plan: WorkflowPlan, now: Time) -> MsgId {
+        let stage_latency: Vec<f64> = plan
+            .stages
+            .iter()
+            .map(|s| {
+                Self::stage_isolated_latency(
+                    &self.reference_cost,
+                    s.prompt_tokens,
+                    s.output_tokens,
+                )
+            })
+            .collect();
+        let msg_id = self.next_msg_id;
+        self.next_msg_id += 1;
+        self.workflows.insert(
+            msg_id,
+            WfState { plan, next_stage: 0, app_start: now, queue_time: 0.0, stage_latency },
+        );
+        let req = self.make_request(msg_id, now);
+        self.queue.push(req, self.policy.as_ref());
+        msg_id
+    }
+
+    /// Admit a single free-standing request (no workflow plan) — the real
+    /// serving frontend's path. `agent` is interned into the orchestrator's
+    /// registry so profiles still accumulate.
+    pub fn submit_external(
+        &mut self,
+        agent: &str,
+        prompt_tokens: u32,
+        output_tokens: u32,
+        now: Time,
+    ) -> RequestId {
+        let agent = self.orch.registry.intern(agent);
+        let id = self.next_req_id;
+        self.next_req_id += 1;
+        let msg_id = self.next_msg_id;
+        self.next_msg_id += 1;
+        self.pending.insert(
+            id,
+            Pending {
+                msg_id,
+                agent,
+                stage_arrival: now,
+                output_tokens,
+                true_remaining: 0.0,
+                upstream: None,
+            },
+        );
+        let req = Request {
+            id,
+            msg_id,
+            agent,
+            upstream: None,
+            prompt_tokens,
+            true_output_tokens: output_tokens,
+            true_remaining_latency: 0.0,
+            remaining_stages: 1,
+            app_start: now,
+            stage_arrival: now,
+        };
+        self.queue.push(req, self.policy.as_ref());
+        id
+    }
+
+    fn make_request(&mut self, msg_id: MsgId, now: Time) -> Request {
+        let wf = self.workflows.get_mut(&msg_id).expect("workflow exists");
+        let i = wf.next_stage;
+        let stage = &wf.plan.stages[i];
+        let agent = self.orch.registry.intern(stage.agent);
+        let upstream = if i > 0 {
+            Some(self.orch.registry.intern(wf.plan.stages[i - 1].agent))
+        } else {
+            None
+        };
+        let true_remaining: f64 = wf.stage_latency[i..].iter().sum();
+        let id = self.next_req_id;
+        self.next_req_id += 1;
+        self.pending.insert(
+            id,
+            Pending {
+                msg_id,
+                agent,
+                stage_arrival: now,
+                output_tokens: stage.output_tokens,
+                true_remaining,
+                upstream,
+            },
+        );
+        Request {
+            id,
+            msg_id,
+            agent,
+            upstream,
+            prompt_tokens: stage.prompt_tokens,
+            true_output_tokens: stage.output_tokens,
+            true_remaining_latency: true_remaining,
+            remaining_stages: wf.plan.remaining_stages(i),
+            app_start: wf.app_start,
+            stage_arrival: now,
+        }
+    }
+
+    /// Refresh stale entries of the status snapshot in place.
+    fn refresh_statuses(&mut self) {
+        for (j, dirty) in self.status_dirty.iter_mut().enumerate() {
+            if *dirty {
+                self.status_buf[j] = self.engines[j].status();
+                *dirty = false;
+            }
+        }
+    }
+
+    /// The current per-instance status snapshot (refreshing stale entries).
+    pub fn statuses(&mut self) -> &[InstanceStatus] {
+        self.refresh_statuses();
+        &self.status_buf
+    }
+
+    /// Run the schedule→dispatch half of the cycle: repeatedly pick the
+    /// highest-priority request and place it, until the queue drains or the
+    /// dispatcher defers ("the request remains in the scheduling queue",
+    /// paper §6). Returns the instances that received at least one request,
+    /// in first-dispatch order, so the driver can wake them.
+    pub fn pump(&mut self, now: Time) -> Vec<usize> {
+        let mut woken: Vec<usize> = Vec::new();
+        if self.queue.is_empty() {
+            return woken;
+        }
+        self.refresh_statuses();
+        loop {
+            if self.queue.is_empty() {
+                return woken;
+            }
+            let Some(best) = self.queue.peek_best() else {
+                return woken;
+            };
+            // A prompt that can never fit any instance is rejected outright.
+            let need_tokens = best.prompt_tokens as u64 + 1;
+            if self.status_buf.iter().all(|s| need_tokens > s.capacity_tokens) {
+                let req = self.queue.pop_best().unwrap();
+                self.pending.remove(&req.id);
+                self.workflows.remove(&req.msg_id);
+                self.dropped += 1;
+                continue;
+            }
+            let Some(j) = self.dispatcher.choose(best, &self.status_buf, now) else {
+                return woken;
+            };
+            let req = self.queue.pop_best().expect("peeked request still queued");
+            self.dispatch_log.push((req.id, j));
+            self.dispatcher.on_dispatch(&req, j, now);
+            self.engines[j].submit(req, now);
+            self.status_buf[j] = self.engines[j].status();
+            if !woken.contains(&j) {
+                woken.push(j);
+            }
+        }
+    }
+
+    /// Run one continuous-batching iteration on instance `j`, re-ordering
+    /// its waiting queue under the scheduling policy first if it went stale
+    /// (vLLM pluggable scheduling). The driver decides when the returned
+    /// outcome's duration has elapsed and then calls [`Self::absorb`].
+    pub fn step_engine(&mut self, j: usize, now: Time) -> StepOutcome {
+        if self.engines[j].waiting_dirty {
+            let policy = &self.policy;
+            self.engines[j].sort_waiting_by(|r| policy.key(r));
+        }
+        let out = self.engines[j].step(now);
+        self.status_dirty[j] = true;
+        out
+    }
+
+    /// Feed one finished engine iteration back into the system: record
+    /// preemptions, complete sequences (metrics + orchestrator feedback),
+    /// and advance workflows, pushing successor stages into the queue.
+    pub fn absorb(&mut self, j: usize, out: StepOutcome, now: Time) -> Absorbed {
+        if out.preempted > 0 {
+            self.metrics.preemptions += out.preempted as u64;
+            self.dispatcher.on_preemption(j, now);
+        }
+        for seq in &out.completed {
+            self.handle_completion(seq, j, now);
+        }
+        self.status_dirty[j] = true;
+        Absorbed { completed: out.completed, preempted: out.preempted }
+    }
+
+    fn handle_completion(&mut self, seq: &SeqState, instance: usize, now: Time) {
+        let req = &seq.req;
+        let Some(p) = self.pending.remove(&req.id) else { return };
+        // Queueing ends at FIRST admission into the running batch (the LLM
+        // execution start); everything before is queue time, wherever the
+        // request physically waited (LB queue or engine queue).
+        let dispatched_at = seq.first_admitted_at.unwrap_or(now);
+        self.dispatcher.on_complete(req.id, instance, now);
+        if let Some(wf) = self.workflows.get_mut(&req.msg_id) {
+            wf.queue_time += dispatched_at - p.stage_arrival;
+        }
+        self.metrics.record_request(RequestRecord {
+            msg_id: p.msg_id,
+            agent: p.agent,
+            stage_arrival: p.stage_arrival,
+            dispatched_at,
+            finished_at: now,
+            output_tokens: p.output_tokens,
+            preempt_count: seq.preempt_count,
+            true_remaining: p.true_remaining,
+        });
+        self.orch.record_execution(ExecRecord {
+            msg_id: p.msg_id,
+            agent: p.agent,
+            upstream: p.upstream,
+            start: dispatched_at,
+            end: now,
+        });
+        // Advance the workflow, if this request belongs to one (external
+        // requests are single free-standing stages).
+        let done = match self.workflows.get_mut(&p.msg_id) {
+            Some(wf) => {
+                wf.next_stage += 1;
+                wf.next_stage >= wf.plan.stages.len()
+            }
+            None => return,
+        };
+        if done {
+            let wf = self.workflows.get(&p.msg_id).unwrap();
+            self.metrics.record_workflow(WorkflowRecord {
+                msg_id: p.msg_id,
+                app: wf.plan.app,
+                app_start: wf.app_start,
+                finished_at: now,
+                output_tokens: wf.plan.total_output_tokens(),
+                queue_time: wf.queue_time,
+            });
+            self.orch.record_workflow_done(p.msg_id, now);
+            self.workflows.remove(&p.msg_id);
+        } else {
+            let req = self.make_request(p.msg_id, now);
+            self.queue.push(req, self.policy.as_ref());
+        }
+    }
+
+    /// Drop everything queued on an instance that is idle yet cannot admit
+    /// its front request (the request alone exceeds the pool). Returns the
+    /// number of requests dropped.
+    pub fn drain_stuck(&mut self, j: usize) -> usize {
+        if self.engines[j].batch_len() != 0 || self.engines[j].waiting_len() == 0 {
+            return 0;
+        }
+        let reqs = self.engines[j].drain();
+        let n = reqs.len();
+        for req in reqs {
+            self.pending.remove(&req.id);
+            self.workflows.remove(&req.msg_id);
+            self.dropped += 1;
+        }
+        self.status_dirty[j] = true;
+        n
+    }
+
+    /// Periodic priority/profile refresh (paper §7.7: fixed intervals,
+    /// asynchronous): recompute policy and dispatcher state from the
+    /// orchestrator, re-key the central queue, and mark every engine-side
+    /// queue stale.
+    pub fn refresh(&mut self, _now: Time) {
+        self.policy.refresh(&self.orch);
+        self.dispatcher.refresh(&self.orch);
+        self.queue.resort(self.policy.as_ref());
+        for e in self.engines.iter_mut() {
+            e.waiting_dirty = true;
+        }
+    }
+
+    /// Sum per-engine counters into the metrics (end of run).
+    pub fn fold_engine_counters(&mut self) {
+        for e in &self.engines {
+            self.metrics.recomputed_tokens += e.recomputed_tokens;
+        }
+    }
+
+    /// Number of workflows still in flight.
+    pub fn open_workflows(&self) -> usize {
+        self.workflows.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::RoundRobin;
+    use crate::lb::policies::Fcfs;
+    use crate::stats::rng::Rng;
+
+    #[test]
+    fn fleet_parse_roundtrip() {
+        let f = FleetSpec::parse("2*llama3-8b@0.12,llama2-13b@0.5:64,tiny").unwrap();
+        assert_eq!(f.len(), 4);
+        assert_eq!(f.instances[0].model, ModelKind::Llama3_8B);
+        assert!((f.instances[0].kv_scale - 0.12).abs() < 1e-12);
+        assert_eq!(f.instances[0].max_batch, 256);
+        assert_eq!(f.instances[2].model, ModelKind::Llama2_13B);
+        assert_eq!(f.instances[2].max_batch, 64);
+        assert!((f.instances[2].kv_scale - 0.5).abs() < 1e-12);
+        assert_eq!(f.instances[3].model, ModelKind::Tiny);
+        assert!(f.is_heterogeneous());
+        assert!(!FleetSpec::homogeneous(4, InstanceSpec::new(ModelKind::Llama3_8B))
+            .is_heterogeneous());
+    }
+
+    #[test]
+    fn fleet_parse_rejects_garbage() {
+        assert!(FleetSpec::parse("").is_err());
+        assert!(FleetSpec::parse("gpt5").is_err());
+        assert!(FleetSpec::parse("0*llama3-8b").is_err());
+        assert!(FleetSpec::parse("llama3-8b@-1").is_err());
+        assert!(FleetSpec::parse("llama3-8b@nope").is_err());
+        assert!(FleetSpec::parse("llama3-8b:0").is_err());
+        assert!(FleetSpec::parse("llama3-8b,,tiny").is_err());
+    }
+
+    #[test]
+    fn instance_spec_scales_blocks() {
+        let full = InstanceSpec::new(ModelKind::Llama3_8B).engine_config();
+        let half = InstanceSpec::new(ModelKind::Llama3_8B)
+            .with_kv_scale(0.5)
+            .engine_config();
+        assert!(half.total_blocks < full.total_blocks);
+        assert!(half.total_blocks >= full.total_blocks / 2 - 1);
+        let tiny = InstanceSpec::new(ModelKind::Llama3_8B)
+            .with_kv_scale(1e-9)
+            .engine_config();
+        assert!(tiny.total_blocks >= 1, "never below one block");
+    }
+
+    #[test]
+    fn manual_clock_is_monotone() {
+        let c = ManualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(3.0);
+        c.advance_to(1.0);
+        assert_eq!(c.now(), 3.0);
+    }
+
+    #[test]
+    fn wall_clock_advances() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    fn small_fleet(n: usize, kv_scale: f64) -> FleetSpec {
+        FleetSpec::homogeneous(
+            n,
+            InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(kv_scale),
+        )
+    }
+
+    #[test]
+    fn external_requests_complete_without_workflows() {
+        let mut c = Coordinator::sim(
+            small_fleet(1, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        let id = c.submit_external("AgentA", 64, 8, 0.0);
+        let woken = c.pump(0.0);
+        assert_eq!(woken, vec![0]);
+        let mut now = 0.0;
+        let mut done = Vec::new();
+        for _ in 0..100 {
+            let out = c.step_engine(0, now);
+            if out.duration == 0.0 {
+                break;
+            }
+            now += out.duration;
+            let abs = c.absorb(0, out, now);
+            done.extend(abs.completed);
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].req.id, id);
+        assert_eq!(c.metrics.requests.len(), 1);
+        assert_eq!(c.metrics.workflows.len(), 0, "no workflow record for external");
+        assert!(!c.has_work());
+    }
+
+    #[test]
+    fn pump_logs_every_dispatch_and_reuses_snapshot() {
+        let mut c = Coordinator::sim(
+            small_fleet(2, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        let mut rng = Rng::new(1);
+        for i in 0..6 {
+            let plan = WorkflowPlan::sample(crate::agents::apps::App::Rg, "TQ", &mut rng);
+            c.submit_plan(plan, i as f64 * 0.01);
+        }
+        let woken = c.pump(0.1);
+        assert_eq!(c.dispatch_log.len(), 6, "all first stages dispatched");
+        // Round-robin alternates, so both instances received work.
+        assert_eq!(woken.len(), 2);
+        let picks: Vec<usize> = c.dispatch_log.iter().map(|&(_, j)| j).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn oversized_prompt_dropped_with_workflow() {
+        use crate::agents::apps::{App, PlannedStage};
+        // One instance with a near-zero pool (one 16-token block): a
+        // 1000-token prompt can never fit, so the whole workflow drops.
+        let mut c = Coordinator::sim(
+            small_fleet(1, 1e-9),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        let plan = WorkflowPlan {
+            app: App::Rg,
+            dataset: "TQ",
+            stages: vec![
+                PlannedStage {
+                    agent: "ResearchAgent",
+                    prompt_tokens: 1000,
+                    output_tokens: 5,
+                },
+                PlannedStage { agent: "WriterAgent", prompt_tokens: 10, output_tokens: 5 },
+            ],
+        };
+        c.submit_plan(plan, 0.0);
+        c.pump(0.0);
+        assert_eq!(c.dropped, 1);
+        assert_eq!(c.open_workflows(), 0, "whole workflow rejected");
+        assert!(c.queue.is_empty());
+    }
+}

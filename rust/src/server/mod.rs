@@ -1,14 +1,19 @@
 //! The full serving system.
 //!
-//! * [`sim`] — the virtual-time system: workload arrivals → frontend →
-//!   central queue → priority scheduler → dispatcher → vLLM-like engine
-//!   instances → orchestrator feedback loop. Every figure/bench harness
-//!   runs through this driver.
-//! * [`real`] — the wall-clock system: the same coordination stack driving
-//!   real PJRT compute (the AOT-compiled tiny model) for the end-to-end
+//! * [`coordinator`] — the clock-agnostic runtime: the
+//!   queue→schedule→dispatch→engine→orchestrator-feedback cycle, generic
+//!   over the engine backend, plus the heterogeneous [`FleetSpec`] and the
+//!   [`Clock`] seam. All coordination decisions live here, exactly once.
+//! * [`sim`] — the virtual-time driver: a discrete-event loop (workload
+//!   arrivals, engine iterations, periodic refreshes) over the coordinator.
+//!   Every figure/bench harness runs through this driver.
+//! * [`real`] — the wall-clock driver: the same coordinator driving real
+//!   PJRT compute (the AOT-compiled tiny model) for the end-to-end
 //!   quickstart.
 
+pub mod coordinator;
 pub mod real;
 pub mod sim;
 
-pub use sim::{SimConfig, SimResult, SimServer};
+pub use coordinator::{Clock, Coordinator, FleetSpec, InstanceSpec, ManualClock, WallClock};
+pub use sim::{FleetConfig, SimConfig, SimResult, SimServer};

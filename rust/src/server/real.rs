@@ -1,22 +1,21 @@
-//! Wall-clock serving over real PJRT compute.
+//! Wall-clock driver over the shared serving runtime, on real PJRT compute.
 //!
-//! The same coordination stack as [`super::sim`] — central queue, priority
-//! scheduler, dispatcher, continuous-batching engines — but the engines run
-//! the AOT-compiled tiny model through [`PjrtExecBackend`] and the clock is
-//! `std::time::Instant`. This is what `examples/quickstart.rs` drives: a
-//! real small model serving batched requests end to end with Python nowhere
-//! on the request path.
+//! The same [`Coordinator`](super::coordinator::Coordinator) as the
+//! virtual-time driver — central queue, priority scheduler, dispatcher,
+//! continuous-batching engines — but the engines run the AOT-compiled tiny
+//! model through [`PjrtExecBackend`] and the clock is a [`WallClock`]. This
+//! is what `examples/quickstart.rs` drives: a real small model serving
+//! batched requests end to end with Python nowhere on the request path.
 
 use std::path::Path;
-use std::time::Instant;
 
 use crate::dispatch::DispatchPolicy;
 use crate::engine::core::{EngineConfig, EngineCore};
 use crate::engine::pjrt_backend::PjrtExecBackend;
-use crate::engine::request::Request;
+use crate::engine::request::RequestId;
 use crate::lb::policies::SchedulePolicy;
-use crate::lb::queue::RequestQueue;
 use crate::runtime::{ByteTokenizer, TinyModel};
+use crate::server::coordinator::{Clock, Coordinator, FleetSpec, InstanceSpec, WallClock};
 use crate::Time;
 
 /// One serving response.
@@ -52,12 +51,10 @@ pub struct ServeRequest {
     pub max_tokens: usize,
 }
 
-/// The real-mode server: N PJRT engine instances behind one queue.
+/// The real-mode server: N PJRT engine instances behind one coordinator.
 pub struct RealServer {
-    engines: Vec<EngineCore<PjrtExecBackend>>,
+    coord: Coordinator<PjrtExecBackend>,
     tokenizer: ByteTokenizer,
-    policy: Box<dyn SchedulePolicy>,
-    dispatcher: Box<dyn DispatchPolicy>,
 }
 
 impl RealServer {
@@ -72,26 +69,34 @@ impl RealServer {
         anyhow::ensure!(n_instances > 0);
         let mut engines = Vec::new();
         let mut vocab = 256;
+        let mut fleet = FleetSpec::default();
         for i in 0..n_instances {
             let model = TinyModel::load(artifacts, model_name)?;
             vocab = model.manifest.vocab_size;
             let max_seq = model.manifest.max_seq as u32;
             let batch = model.manifest.batch;
             let backend = PjrtExecBackend::new(model);
+            // Engine geometry comes from the compiled model's manifest, not
+            // the cost model; the fleet spec stays the nominal description.
             let cfg = EngineConfig {
                 block_size: 4,
                 total_blocks: batch as u32 * max_seq / 4,
                 max_batch: batch,
                 max_prefill_tokens: 1 << 20,
             };
+            fleet.push(
+                InstanceSpec::new(crate::engine::cost_model::ModelKind::Tiny)
+                    .with_max_batch(batch),
+            );
             engines.push(EngineCore::new(i, cfg, backend));
         }
-        Ok(RealServer {
-            engines,
-            tokenizer: ByteTokenizer::new(vocab),
-            policy,
-            dispatcher,
-        })
+        let coord = Coordinator::from_engines(fleet, policy, dispatcher, engines);
+        Ok(RealServer { coord, tokenizer: ByteTokenizer::new(vocab) })
+    }
+
+    /// The underlying runtime (inspection in tests).
+    pub fn coordinator(&self) -> &Coordinator<PjrtExecBackend> {
+        &self.coord
     }
 
     /// Serve a batch of requests to completion; returns responses in
@@ -100,43 +105,29 @@ impl RealServer {
         &mut self,
         requests: Vec<ServeRequest>,
     ) -> crate::Result<(Vec<Response>, ServeStats)> {
-        let t0 = Instant::now();
-        let now = |t0: Instant| -> Time { t0.elapsed().as_secs_f64() };
+        let clock = WallClock::new();
 
-        let mut queue = RequestQueue::new();
-        let mut meta: std::collections::HashMap<u64, (String, String, Time)> =
+        let mut meta: std::collections::HashMap<RequestId, (String, String, Time)> =
             std::collections::HashMap::new();
         let max_tokens_cap = self
+            .coord
             .engines
             .first()
             .map(|e| e.backend.max_tokens())
             .unwrap_or(16);
-        for (i, r) in requests.into_iter().enumerate() {
-            let id = i as u64 + 1;
+        for r in requests {
             let tokens = self.tokenizer.encode(&r.prompt);
             let prompt_len = tokens.len().clamp(1, max_tokens_cap / 2);
             let tokens = tokens[..prompt_len].to_vec();
             let output = r.max_tokens.clamp(1, max_tokens_cap - prompt_len);
-            for e in self.engines.iter_mut() {
-                // every instance could host it; register prompt lazily at
-                // dispatch instead — but registration is cheap, do it now.
+            let t = clock.now();
+            let id = self.coord.submit_external(&r.agent, prompt_len as u32, output as u32, t);
+            // Every instance could host the request: register its prompt
+            // with each backend (registration is cheap).
+            for e in self.coord.engines.iter_mut() {
                 e.backend.set_prompt(id, tokens.clone());
             }
-            let t = now(t0);
-            meta.insert(id, (r.agent.clone(), r.prompt.clone(), t));
-            let request = Request {
-                id,
-                msg_id: id,
-                agent: crate::orchestrator::ids::AgentId(0),
-                upstream: None,
-                prompt_tokens: prompt_len as u32,
-                true_output_tokens: output as u32,
-                true_remaining_latency: 0.0,
-                remaining_stages: 1,
-                app_start: t,
-                stage_arrival: t,
-            };
-            queue.push(request, self.policy.as_ref());
+            meta.insert(id, (r.agent, r.prompt, t));
         }
 
         let mut responses = Vec::new();
@@ -144,41 +135,29 @@ impl RealServer {
         loop {
             guard += 1;
             anyhow::ensure!(guard < 1_000_000, "serve loop guard tripped");
-            // Dispatch as much as possible.
-            loop {
-                if queue.is_empty() {
-                    break;
-                }
-                let statuses: Vec<_> = self.engines.iter().map(|e| e.status()).collect();
-                let t = now(t0);
-                let Some(best) = queue.peek_best() else { break };
-                // Instances are slot-limited: skip dispatch when full.
-                let Some(j) = self
-                    .dispatcher
-                    .choose(best, &statuses, t)
-                    .filter(|&j| statuses[j].n_running + statuses[j].n_waiting
-                        < self.engines[j].backend.max_batch())
-                else {
-                    break;
-                };
-                let req = queue.pop_best().unwrap();
-                self.dispatcher.on_dispatch(&req, j, t);
-                self.engines[j].submit(req, t);
-            }
-            // Step every engine with work.
+            // Dispatch as much as possible, then step every engine with
+            // work — the coordination decisions all live in the runtime.
+            self.coord.pump(clock.now());
             let mut any = false;
-            for j in 0..self.engines.len() {
-                if !self.engines[j].has_work() {
+            for j in 0..self.coord.n_instances() {
+                if !self.coord.engines[j].has_work() {
                     continue;
                 }
                 any = true;
-                let t = now(t0);
-                let out = self.engines[j].step(t);
-                let t_done = now(t0);
-                for seq in out.completed {
+                let out = self.coord.step_engine(j, clock.now());
+                let t_done = clock.now();
+                if out.prefill_tokens == 0 && out.n_decode == 0 {
+                    // The iteration did nothing (the wall-clock backend
+                    // still reports a tiny positive duration): the engine
+                    // is idle with unadmittable work — shed it instead of
+                    // spinning.
+                    self.coord.drain_stuck(j);
+                    continue;
+                }
+                let absorbed = self.coord.absorb(j, out, t_done);
+                for seq in absorbed.completed {
                     let id = seq.req.id;
-                    self.dispatcher.on_complete(id, j, t_done);
-                    let gen = self.engines[j]
+                    let gen = self.coord.engines[j]
                         .backend
                         .take_generation(id)
                         .expect("generation state");
@@ -192,20 +171,25 @@ impl RealServer {
                         prompt_tokens: gen.prompt.len(),
                         output_tokens: gen.generated.len(),
                         e2e_seconds: t_done - arrived,
-                        queue_seconds: seq.admitted_at - arrived,
+                        queue_seconds: seq.first_admitted_at.unwrap_or(t_done) - arrived,
                     });
                 }
             }
-            if !any && queue.is_empty() {
+            if !any && self.coord.queue.is_empty() {
                 break;
             }
         }
 
-        let wall = now(t0);
+        let wall = clock.now();
         let total_tokens: usize = responses.iter().map(|r| r.output_tokens).sum();
         let e2es: Vec<f64> = responses.iter().map(|r| r.e2e_seconds).collect();
         let summary = crate::stats::summary::Summary::from_samples(&e2es);
-        let compute: f64 = self.engines.iter().map(|e| e.backend.compute_seconds).sum();
+        let compute: f64 = self
+            .coord
+            .engines
+            .iter()
+            .map(|e| e.backend.compute_seconds)
+            .sum();
         let stats = ServeStats {
             n_requests: responses.len(),
             total_tokens,
@@ -261,5 +245,9 @@ mod tests {
             assert!(r.output_tokens > 0);
             assert!(!r.completion.is_empty());
         }
+        // The coordination stack recorded every request through the same
+        // metrics path as the virtual-time driver.
+        assert_eq!(server.coordinator().metrics.requests.len(), 5);
+        assert_eq!(server.coordinator().dispatch_log.len(), 5);
     }
 }

@@ -30,11 +30,12 @@ impl<E> PartialOrd for Entry<E> {
 }
 impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for a min-heap on (time, seq).
+        // Reverse for a min-heap on (time, seq). `total_cmp` keeps the
+        // order total even for NaN times (which schedule() clamps away),
+        // so heap invariants can never be corrupted by a bad key.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -77,9 +78,11 @@ impl<E> EventQueue<E> {
     }
 
     /// Schedule `payload` at absolute time `at`. Events scheduled in the
-    /// past are clamped to `now` (they fire immediately, in FIFO order).
+    /// past — or at NaN — are clamped to `now` (they fire immediately, in
+    /// FIFO order), so the clock stays monotone no matter what a buggy
+    /// cost model produces.
     pub fn schedule(&mut self, at: Time, payload: E) {
-        let t = if at < self.now { self.now } else { at };
+        let t = if at >= self.now { at } else { self.now };
         self.seq += 1;
         self.heap.push(Entry { time: t, seq: self.seq, payload });
     }
@@ -153,6 +156,23 @@ mod tests {
         q.schedule_in(5.0, "y");
         let (t, _) = q.pop().unwrap();
         assert_eq!(t, 15.0);
+    }
+
+    #[test]
+    fn nan_time_cannot_corrupt_heap_or_clock() {
+        // Regression: Entry::cmp used partial_cmp(..).unwrap_or(Equal), so
+        // a NaN time made the order non-total and could corrupt the heap.
+        let mut q = EventQueue::new();
+        q.schedule(2.0, "b");
+        q.schedule(f64::NAN, "nan");
+        q.schedule(1.0, "a");
+        // NaN clamps to now (0.0): it fires first, and the clock stays a
+        // real number throughout.
+        let (t0, e0) = q.pop().unwrap();
+        assert_eq!((t0, e0), (0.0, "nan"));
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b"]);
+        assert!(q.now().is_finite());
     }
 
     #[test]
