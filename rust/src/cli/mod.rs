@@ -3,8 +3,10 @@
 //! ```text
 //! kairos serve   [--config file.toml] [--scheduler S] [--dispatcher D]
 //!                [--rate R] [--tasks N] [--instances I] [--model M]
-//!                [--fleet SPEC] [--seed X]
+//!                [--fleet SPEC] [--seed X] [--autoscale] [--pressure TRACE]
 //! kairos fleet-sweep [--fleet SPEC] [--scheduler S] [--rate R] [--tasks N]
+//! kairos elastic-sweep [--fleet SPEC] [--rate R] [--tasks N] [--min N]
+//!                [--max N] [--pressure TRACE]
 //! kairos figures <id|all> [--out results/]
 //! kairos quickstart [--artifacts DIR] [--model NAME]
 //! ```
@@ -14,10 +16,16 @@ use std::collections::HashMap;
 use crate::agents::apps::App;
 use crate::config::ServingConfig;
 use crate::engine::cost_model::ModelKind;
+use crate::server::autoscale::AutoscaleConfig;
 use crate::server::coordinator::FleetSpec;
+use crate::server::pressure::PressureTrace;
 use crate::server::sim::{run_fleet, FleetConfig};
 use crate::stats::rng::Rng;
 use crate::workload::{TraceGen, WorkloadMix};
+
+/// Flags that take no value (`--flag` alone means `true`; an explicit
+/// `--flag false` still parses).
+const BOOL_FLAGS: &[&str] = &["autoscale"];
 
 /// Parsed `--key value` flags plus positional args.
 #[derive(Debug, Default)]
@@ -33,9 +41,29 @@ impl Args {
         while i < args.len() {
             let a = &args[i];
             if let Some(key) = a.strip_prefix("--") {
-                let val = args
-                    .get(i + 1)
-                    .ok_or_else(|| format!("flag --{key} needs a value"))?;
+                // `--key=value` form: split here so the value flows through
+                // the same validation as `--key value` (the ISSUE's
+                // `--tasks=4OO` must error in num(), not corrupt parsing).
+                if let Some((k, v)) = key.split_once('=') {
+                    if k.is_empty() {
+                        return Err(format!("malformed flag {a:?}"));
+                    }
+                    out.flags.insert(k.to_string(), v.to_string());
+                    i += 1;
+                    continue;
+                }
+                let next = args.get(i + 1);
+                let next_is_flag = match next {
+                    None => true,
+                    Some(v) => v.starts_with("--"),
+                };
+                if BOOL_FLAGS.contains(&key) && next_is_flag {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                    continue;
+                }
+                let val =
+                    next.ok_or_else(|| format!("flag --{key} needs a value"))?;
                 out.flags.insert(key.to_string(), val.clone());
                 i += 2;
             } else {
@@ -50,8 +78,30 @@ impl Args {
         self.flags.get(key).map(|s| s.as_str())
     }
 
-    pub fn num(&self, key: &str, default: f64) -> f64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Numeric flag: the default when absent — and an error naming the
+    /// flag and the offending text when present but malformed. (This used
+    /// to fall back to the default silently, so `--tasks=4OO` typos ran
+    /// with a config the user never asked for.)
+    pub fn num(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("flag --{key}: invalid numeric value {v:?}")),
+        }
+    }
+
+    /// Boolean flag: false when absent, true for bare `--flag` or a
+    /// truthy value — and an error naming the flag and the offending text
+    /// otherwise (same contract as [`Args::num`]: a typo must not silently
+    /// run a config the user never asked for).
+    pub fn bool_flag(&self, key: &str) -> Result<bool, String> {
+        match self.get(key) {
+            None => Ok(false),
+            Some("true" | "1" | "on" | "yes") => Ok(true),
+            Some("false" | "0" | "off" | "no") => Ok(false),
+            Some(v) => Err(format!("flag --{key}: invalid boolean value {v:?}")),
+        }
     }
 }
 
@@ -63,8 +113,12 @@ USAGE:
                      [--dispatcher kairos|rr|oracle|least] [--rate R]
                      [--tasks N] [--instances I] [--model llama3-8b|llama2-13b]
                      [--fleet SPEC] [--seed S] [--workload colocated|qa|rg|cg]
+                     [--autoscale] [--pressure TRACE]
   kairos fleet-sweep [--fleet SPEC] [--scheduler S] [--rate R] [--tasks N]
                      [--seed S] [--workload W]
+  kairos elastic-sweep
+                     [--fleet SPEC] [--rate R] [--tasks N] [--seed S]
+                     [--workload W] [--min N] [--max N] [--pressure TRACE]
   kairos figures     <table1|fig3..fig18|overhead|all> [--out results]
   kairos quickstart  [--artifacts artifacts] [--model tiny]
 
@@ -73,6 +127,12 @@ FLEET SPEC — comma-separated `[COUNT*]MODEL[@KV_SCALE][:MAX_BATCH]`, e.g.
   `llama3-8b,llama2-13b@0.5` (mixed models). Per-instance KV budgets flow
   to the dispatchers, so memory-aware policies pack each instance against
   its own capacity.
+
+PRESSURE TRACE — `;`-separated `TARGET:TIME=MULT,...` with TARGET an
+  instance index or `*`: piecewise co-tenant KV-pressure multipliers, e.g.
+  `*:0=1.0,30=0.5,90=1.0;2:0=0.8`. `--autoscale` (or `[autoscale]` in the
+  config) lets the fleet grow under load bursts and drain back down;
+  `elastic-sweep` compares the fixed and elastic fleets side by side.
 ";
 
 /// CLI entrypoint.
@@ -81,6 +141,7 @@ pub fn run(raw: Vec<String>) -> crate::Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("serve") => serve(&args),
         Some("fleet-sweep") => fleet_sweep(&args),
+        Some("elastic-sweep") => elastic_sweep(&args),
         Some("figures") => {
             let id = args
                 .positional
@@ -98,6 +159,41 @@ pub fn run(raw: Vec<String>) -> crate::Result<()> {
     }
 }
 
+/// `args.num` with the error lifted into the CLI's anyhow result.
+fn numf(args: &Args, key: &str, default: f64) -> crate::Result<f64> {
+    args.num(key, default).map_err(|e| anyhow::anyhow!(e))
+}
+
+/// Count-like flag (tasks, instances, fleet bounds): a positive integer.
+/// `--tasks -5` or `--instances 2.5` must error, not saturate through an
+/// `as usize` cast into a run the user never asked for.
+fn num_count(args: &Args, key: &str, default: usize) -> crate::Result<usize> {
+    let v = numf(args, key, default as f64)?;
+    if !v.is_finite() || v < 1.0 || v.fract() != 0.0 {
+        anyhow::bail!("flag --{key}: expected a positive integer, got {v}");
+    }
+    Ok(v as usize)
+}
+
+/// Seed-like flag: a non-negative integer.
+fn num_u64(args: &Args, key: &str, default: u64) -> crate::Result<u64> {
+    let v = numf(args, key, default as f64)?;
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
+        anyhow::bail!("flag --{key}: expected a non-negative integer, got {v}");
+    }
+    Ok(v as u64)
+}
+
+/// Rate-like flag: a positive number (the trace generator asserts
+/// `rate > 0`, so reject it here with the flag's name instead).
+fn num_rate(args: &Args, key: &str, default: f64) -> crate::Result<f64> {
+    let v = numf(args, key, default)?;
+    if !v.is_finite() || v <= 0.0 {
+        anyhow::bail!("flag --{key}: expected a positive number, got {v}");
+    }
+    Ok(v)
+}
+
 fn serve(args: &Args) -> crate::Result<()> {
     let mut cfg = match args.get("config") {
         Some(path) => {
@@ -112,10 +208,10 @@ fn serve(args: &Args) -> crate::Result<()> {
     if let Some(d) = args.get("dispatcher") {
         cfg.dispatcher = d.to_string();
     }
-    cfg.rate = args.num("rate", cfg.rate);
-    cfg.n_tasks = args.num("tasks", cfg.n_tasks as f64) as usize;
-    cfg.seed = args.num("seed", cfg.seed as f64) as u64;
-    cfg.sim.n_instances = args.num("instances", cfg.sim.n_instances as f64) as usize;
+    cfg.rate = num_rate(args, "rate", cfg.rate)?;
+    cfg.n_tasks = num_count(args, "tasks", cfg.n_tasks)?;
+    cfg.seed = num_u64(args, "seed", cfg.seed)?;
+    cfg.sim.n_instances = num_count(args, "instances", cfg.sim.n_instances)?;
     if let Some(m) = args.get("model") {
         cfg.sim.model = match m {
             "llama3-8b" => ModelKind::Llama3_8B,
@@ -126,15 +222,53 @@ fn serve(args: &Args) -> crate::Result<()> {
     if let Some(f) = args.get("fleet") {
         cfg.fleet = Some(f.to_string());
     }
+    if let Some(p) = args.get("pressure") {
+        cfg.pressure = Some(p.to_string());
+    }
     let fleet = cfg.resolve_fleet().map_err(|e| anyhow::anyhow!(e))?;
+    // `--autoscale` overrides the config like every other flag: bare/true
+    // enables (with the requested fleet as the floor when the config has
+    // no `[autoscale]` thresholds), an explicit `--autoscale false`
+    // disables a config-enabled autoscaler.
+    let mut autoscale = cfg.autoscale;
+    if args.get("autoscale").is_some() {
+        if !args.bool_flag("autoscale").map_err(|e| anyhow::anyhow!(e))? {
+            autoscale = None;
+        } else if autoscale.is_none() {
+            let d = AutoscaleConfig::default();
+            autoscale = Some(AutoscaleConfig {
+                // Never drain below what the user explicitly asked for via
+                // --instances/--fleet — and leave burst headroom above it
+                // (2x) so a large fleet doesn't silently build min == max
+                // bounds where no scale event can ever fire.
+                min_instances: fleet.len().max(1),
+                max_instances: d.max_instances.max(fleet.len() * 2),
+                ..d
+            });
+        }
+    }
+    if let Some(a) = autoscale.as_mut() {
+        a.template = fleet.instances[0];
+        // A configured floor is honored as-is: a fleet starting below it
+        // simply never drains further (the autoscaler only grows on load).
+        a.min_instances = a.min_instances.max(1);
+    }
+    let pressure = cfg
+        .pressure
+        .as_deref()
+        .map(PressureTrace::parse)
+        .transpose()
+        .map_err(|e| anyhow::anyhow!(e))?;
     let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
 
     println!(
-        "serving {} tasks at {} req/s on {} instances{} — scheduler={} dispatcher={}",
+        "serving {} tasks at {} req/s on {} instances{}{}{} — scheduler={} dispatcher={}",
         cfg.n_tasks,
         cfg.rate,
         fleet.len(),
         if fleet.is_heterogeneous() { " (heterogeneous)" } else { "" },
+        if autoscale.is_some() { " (elastic)" } else { "" },
+        if pressure.is_some() { " (co-tenant pressure)" } else { "" },
         cfg.scheduler,
         cfg.dispatcher
     );
@@ -144,6 +278,8 @@ fn serve(args: &Args) -> crate::Result<()> {
         fleet,
         refresh_interval: cfg.sim.refresh_interval,
         warmup_frac: cfg.sim.warmup_frac,
+        autoscale,
+        pressure,
     };
     let res = run_fleet(fc, &cfg.scheduler, &cfg.dispatcher, arrivals);
     let s = &res.summary;
@@ -155,6 +291,13 @@ fn serve(args: &Args) -> crate::Result<()> {
     println!("queueing-time ratio: {:.1}%", s.mean_queue_ratio * 100.0);
     println!("preempted requests:  {:.1}%", s.preemption_rate * 100.0);
     println!("dropped requests:    {}", res.dropped_requests);
+    if !res.scale_log.is_empty() {
+        let (grows, shrinks) = res.scale_counts();
+        println!(
+            "fleet scaling:       {grows} grow(s), {shrinks} retire(s), {} active at end",
+            res.final_active_instances
+        );
+    }
     Ok(())
 }
 
@@ -177,9 +320,9 @@ fn fleet_sweep(args: &Args) -> crate::Result<()> {
         .unwrap_or("2*llama3-8b@0.12,2*llama3-8b@0.04:128");
     let fleet = FleetSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
     let scheduler = args.get("scheduler").unwrap_or("kairos");
-    let rate = args.num("rate", 6.0);
-    let n_tasks = args.num("tasks", 400.0) as usize;
-    let seed = args.num("seed", 42.0) as u64;
+    let rate = num_rate(args, "rate", 6.0)?;
+    let n_tasks = num_count(args, "tasks", 400)?;
+    let seed = num_u64(args, "seed", 42)?;
     let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
 
     println!("fleet sweep over {spec:?} — {} instances, scheduler={scheduler}", fleet.len());
@@ -201,6 +344,75 @@ fn fleet_sweep(args: &Args) -> crate::Result<()> {
             format!("{:.1}%", s.preemption_rate * 100.0),
             res.dropped_requests.to_string(),
         ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Elastic-fleet scenario: the same bursty overload served by a fixed
+/// fleet and by an elastic one (autoscaler growing under the burst,
+/// draining back down), optionally under a co-tenant pressure trace.
+fn elastic_sweep(args: &Args) -> crate::Result<()> {
+    let spec = args.get("fleet").unwrap_or("2*llama3-8b@0.12");
+    let fleet = FleetSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+    let rate = num_rate(args, "rate", 12.0)?;
+    let n_tasks = num_count(args, "tasks", 500)?;
+    let seed = num_u64(args, "seed", 42)?;
+    let min = num_count(args, "min", fleet.len())?;
+    let max = num_count(args, "max", fleet.len() * 3)?;
+    let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
+    let pressure = args
+        .get("pressure")
+        .map(PressureTrace::parse)
+        .transpose()
+        .map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut auto = AutoscaleConfig::for_template(fleet.instances[0]);
+    auto.min_instances = min.max(1);
+    auto.max_instances = max.max(auto.min_instances);
+    auto.up_after = 1;
+    auto.down_after = 2;
+    auto.cooldown = 5.0;
+
+    println!(
+        "elastic sweep over {spec:?} — {} tasks at {rate} req/s (seed {seed}), bounds [{}, {}]{}",
+        n_tasks,
+        auto.min_instances,
+        auto.max_instances,
+        if pressure.is_some() { ", with co-tenant pressure" } else { "" },
+    );
+    let mut t = crate::util::table::Table::new(&[
+        "fleet", "avg s/tok", "P99 s/tok", "queue%", "dropped", "grows", "retires",
+        "active@end",
+    ]);
+    for (label, autoscale) in [("fixed", None), ("elastic", Some(auto))] {
+        let arrivals =
+            TraceGen::default().generate(&mix, rate, n_tasks, &mut Rng::new(seed));
+        let mut fc = FleetConfig::from(fleet.clone());
+        fc.autoscale = autoscale;
+        fc.pressure = pressure.clone();
+        let res = run_fleet(fc, "kairos", "kairos", arrivals);
+        let (grows, shrinks) = res.scale_counts();
+        let s = &res.summary;
+        t.row(vec![
+            label.to_string(),
+            format!("{:.4}", s.avg_token_latency),
+            format!("{:.4}", s.p99_token_latency),
+            format!("{:.1}%", s.mean_queue_ratio * 100.0),
+            res.dropped_requests.to_string(),
+            grows.to_string(),
+            shrinks.to_string(),
+            res.final_active_instances.to_string(),
+        ]);
+        if !res.scale_log.is_empty() {
+            println!("  {label} scale events:");
+            for ev in &res.scale_log {
+                println!(
+                    "    t={:7.2}s  instance {}  {:?}",
+                    ev.at, ev.instance, ev.kind
+                );
+            }
+        }
     }
     t.print();
     Ok(())
@@ -267,6 +479,18 @@ mod tests {
     }
 
     #[test]
+    fn equals_form_flags_parse_and_validate() {
+        let a = Args::parse(&sv(&["serve", "--tasks=400", "--rate", "3"])).unwrap();
+        assert_eq!(a.num("tasks", 1.0), Ok(400.0));
+        assert_eq!(a.num("rate", 1.0), Ok(3.0));
+        // The ISSUE's motivating typo: `--tasks=4OO` must error, not run
+        // 400 tasks (nor corrupt the flags that follow).
+        let b = Args::parse(&sv(&["serve", "--tasks=4OO"])).unwrap();
+        assert!(b.num("tasks", 400.0).is_err());
+        assert!(Args::parse(&sv(&["serve", "--=x"])).is_err());
+    }
+
+    #[test]
     fn missing_flag_value_errors() {
         assert!(Args::parse(&sv(&["serve", "--rate"])).is_err());
     }
@@ -274,7 +498,57 @@ mod tests {
     #[test]
     fn num_parses_with_default() {
         let a = Args::parse(&sv(&["serve", "--rate", "3.5"])).unwrap();
-        assert_eq!(a.num("rate", 1.0), 3.5);
-        assert_eq!(a.num("missing", 9.0), 9.0);
+        assert_eq!(a.num("rate", 1.0), Ok(3.5));
+        assert_eq!(a.num("missing", 9.0), Ok(9.0));
+    }
+
+    #[test]
+    fn malformed_numeric_flag_is_an_error_naming_the_flag() {
+        // Regression: `--tasks 4OO` used to fall back to the default
+        // silently and run a job the user never asked for.
+        let a = Args::parse(&sv(&["serve", "--tasks", "4OO"])).unwrap();
+        let err = a.num("tasks", 400.0).unwrap_err();
+        assert!(err.contains("--tasks"), "error must name the flag: {err}");
+        assert!(err.contains("4OO"), "error must show the bad value: {err}");
+        // And the serve path surfaces it instead of serving 400 tasks.
+        assert!(serve(&a).is_err());
+    }
+
+    #[test]
+    fn integer_flags_reject_negative_and_fractional_values() {
+        // `as usize` saturation must never turn `--tasks -5` into a run of
+        // zero tasks (or `--instances -1` into an empty-fleet panic).
+        let a = Args::parse(&sv(&["serve", "--tasks", "-5"])).unwrap();
+        assert!(serve(&a).is_err());
+        let b = Args::parse(&sv(&["serve", "--instances", "2.5"])).unwrap();
+        assert!(serve(&b).is_err());
+        let c = Args::parse(&sv(&["serve", "--rate", "-3"])).unwrap();
+        assert!(serve(&c).is_err());
+        let d = Args::parse(&sv(&["serve", "--seed", "-1"])).unwrap();
+        assert!(serve(&d).is_err());
+    }
+
+    #[test]
+    fn bare_autoscale_flag_parses_as_bool() {
+        let a = Args::parse(&sv(&["serve", "--autoscale", "--rate", "3.0"])).unwrap();
+        assert_eq!(a.bool_flag("autoscale"), Ok(true));
+        assert_eq!(a.num("rate", 1.0), Ok(3.0));
+        let b = Args::parse(&sv(&["serve", "--autoscale"])).unwrap();
+        assert_eq!(b.bool_flag("autoscale"), Ok(true));
+        let c = Args::parse(&sv(&["serve", "--autoscale", "false"])).unwrap();
+        assert_eq!(c.bool_flag("autoscale"), Ok(false));
+        let d = Args::parse(&sv(&["serve"])).unwrap();
+        assert_eq!(d.bool_flag("autoscale"), Ok(false));
+    }
+
+    #[test]
+    fn malformed_boolean_flag_is_an_error_naming_the_flag() {
+        // Same contract as the numeric fix: a typo'd value must error,
+        // not silently run the non-elastic config.
+        let a = Args::parse(&sv(&["serve", "--autoscale", "enabld"])).unwrap();
+        let err = a.bool_flag("autoscale").unwrap_err();
+        assert!(err.contains("--autoscale"), "error must name the flag: {err}");
+        assert!(err.contains("enabld"), "error must show the bad value: {err}");
+        assert!(serve(&a).is_err());
     }
 }

@@ -7,6 +7,9 @@
 use std::collections::BTreeMap;
 
 use crate::engine::cost_model::ModelKind;
+use crate::server::autoscale::AutoscaleConfig;
+use crate::server::coordinator::InstanceSpec;
+use crate::server::pressure::PressureTrace;
 use crate::server::sim::SimConfig;
 
 /// A parsed flat TOML-subset document: section -> key -> raw value.
@@ -101,6 +104,46 @@ impl TomlDoc {
     }
 }
 
+/// Strict numeric read: the default when the key is absent — and an error
+/// naming section/key when present but not a number (a typo must not
+/// silently run a config the user never asked for; same contract as the
+/// CLI's `Args::num`).
+fn num_key(doc: &TomlDoc, section: &str, key: &str, default: f64) -> Result<f64, String> {
+    match doc.get(section, key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| format!("[{section}] {key}: expected a number, got {v:?}")),
+    }
+}
+
+/// Strict count read: a positive integer. `-1` or `0.5` must error at
+/// load, not saturate through an `as usize` cast into an empty fleet or a
+/// zero-task run.
+fn count_key(
+    doc: &TomlDoc,
+    section: &str,
+    key: &str,
+    default: usize,
+) -> Result<usize, String> {
+    let v = num_key(doc, section, key, default as f64)?;
+    if !v.is_finite() || v < 1.0 || v.fract() != 0.0 {
+        return Err(format!("[{section}] {key}: expected a positive integer, got {v}"));
+    }
+    Ok(v as usize)
+}
+
+/// Strict non-negative-integer read (seeds).
+fn u64_key(doc: &TomlDoc, section: &str, key: &str, default: u64) -> Result<u64, String> {
+    let v = num_key(doc, section, key, default as f64)?;
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
+        return Err(format!(
+            "[{section}] {key}: expected a non-negative integer, got {v}"
+        ));
+    }
+    Ok(v as u64)
+}
+
 /// Top-level serving configuration (CLI `--config <file>`).
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
@@ -114,6 +157,13 @@ pub struct ServingConfig {
     pub rate: f64,
     pub n_tasks: usize,
     pub seed: u64,
+    /// Elastic-fleet policy (`[autoscale] enabled = true` + thresholds).
+    /// The template spec for new instances is resolved against the fleet
+    /// at serve time (first instance's spec).
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Co-tenant pressure trace (`[pressure] trace = "..."`), in
+    /// [`PressureTrace::parse`] syntax. Validated eagerly at load.
+    pub pressure: Option<String>,
 }
 
 impl Default for ServingConfig {
@@ -126,6 +176,8 @@ impl Default for ServingConfig {
             rate: 8.0,
             n_tasks: 400,
             seed: 42,
+            autoscale: None,
+            pressure: None,
         }
     }
 }
@@ -134,12 +186,29 @@ impl ServingConfig {
     pub fn from_toml(text: &str) -> Result<ServingConfig, String> {
         let doc = TomlDoc::parse(text)?;
         let mut cfg = ServingConfig::default();
-        cfg.sim.n_instances = doc.num("cluster", "instances", 4.0) as usize;
-        cfg.sim.block_size = doc.num("cluster", "block_size", 16.0) as u32;
-        cfg.sim.max_batch = doc.num("cluster", "max_batch", 64.0) as usize;
-        cfg.sim.kv_scale = doc.num("cluster", "kv_scale", 1.0);
-        cfg.sim.refresh_interval = doc.num("kairos", "refresh_interval", 5.0);
-        cfg.sim.warmup_frac = doc.num("workload", "warmup_frac", 0.2);
+        cfg.sim.n_instances = count_key(&doc, "cluster", "instances", 4)?;
+        cfg.sim.block_size = count_key(&doc, "cluster", "block_size", 16)? as u32;
+        cfg.sim.max_batch = count_key(&doc, "cluster", "max_batch", 64)?;
+        cfg.sim.kv_scale = num_key(&doc, "cluster", "kv_scale", 1.0)?;
+        if !cfg.sim.kv_scale.is_finite() || cfg.sim.kv_scale <= 0.0 {
+            return Err(format!("[cluster] kv_scale invalid: {}", cfg.sim.kv_scale));
+        }
+        cfg.sim.refresh_interval = num_key(&doc, "kairos", "refresh_interval", 5.0)?;
+        if !cfg.sim.refresh_interval.is_finite() || cfg.sim.refresh_interval <= 0.0 {
+            // A zero interval would re-schedule the refresh event at the
+            // same timestamp forever.
+            return Err(format!(
+                "[kairos] refresh_interval invalid: {}",
+                cfg.sim.refresh_interval
+            ));
+        }
+        cfg.sim.warmup_frac = num_key(&doc, "workload", "warmup_frac", 0.2)?;
+        if !(0.0..=1.0).contains(&cfg.sim.warmup_frac) {
+            return Err(format!(
+                "[workload] warmup_frac must be in [0, 1], got {}",
+                cfg.sim.warmup_frac
+            ));
+        }
         cfg.sim.model = match doc.str("cluster", "model", "llama3-8b").as_str() {
             "llama3-8b" => ModelKind::Llama3_8B,
             "llama2-13b" => ModelKind::Llama2_13B,
@@ -156,9 +225,81 @@ impl ServingConfig {
         }
         cfg.scheduler = doc.str("policy", "scheduler", "kairos");
         cfg.dispatcher = doc.str("policy", "dispatcher", "kairos");
-        cfg.rate = doc.num("workload", "rate", 8.0);
-        cfg.n_tasks = doc.num("workload", "tasks", 400.0) as usize;
-        cfg.seed = doc.num("workload", "seed", 42.0) as u64;
+        cfg.rate = num_key(&doc, "workload", "rate", 8.0)?;
+        if !cfg.rate.is_finite() || cfg.rate <= 0.0 {
+            return Err(format!("[workload] rate must be positive, got {}", cfg.rate));
+        }
+        cfg.n_tasks = count_key(&doc, "workload", "tasks", 400)?;
+        cfg.seed = u64_key(&doc, "workload", "seed", 42)?;
+        let autoscale_enabled = match doc.get("autoscale", "enabled") {
+            None => false,
+            Some(v) => v.as_bool().ok_or_else(|| {
+                format!("[autoscale] enabled: expected a boolean, got {v:?}")
+            })?,
+        };
+        if autoscale_enabled {
+            let num = |key: &str, default: f64| num_key(&doc, "autoscale", key, default);
+            // Counts (bounds, hysteresis streaks) must be positive
+            // integers: a zero/negative streak would make the hysteresis
+            // trivially true and flap the fleet on every refresh.
+            let count =
+                |key: &str, default: usize| count_key(&doc, "autoscale", key, default);
+            let template =
+                InstanceSpec::new(cfg.sim.model).with_kv_scale(cfg.sim.kv_scale);
+            let d = AutoscaleConfig::for_template(template);
+            let a = AutoscaleConfig {
+                min_instances: count("min", d.min_instances)?,
+                max_instances: count("max", d.max_instances)?,
+                queue_high: num("queue_high", d.queue_high)?,
+                queue_low: num("queue_low", d.queue_low)?,
+                ratio_high: num("ratio_high", d.ratio_high)?,
+                up_after: count("up_after", d.up_after as usize)? as u32,
+                down_after: count("down_after", d.down_after as usize)? as u32,
+                cooldown: num("cooldown", d.cooldown)?,
+                template,
+            };
+            if a.max_instances < a.min_instances {
+                return Err(format!(
+                    "[autoscale] bounds invalid: min={} max={}",
+                    a.min_instances, a.max_instances
+                ));
+            }
+            // Thresholds must be finite and non-negative BEFORE the band
+            // comparison — a NaN sails through `queue_low > queue_high`
+            // (all NaN comparisons are false) and then disarms or forces
+            // the scaler at runtime with no error ever reported.
+            for (name, v) in [
+                ("queue_high", a.queue_high),
+                ("queue_low", a.queue_low),
+                ("ratio_high", a.ratio_high),
+                ("cooldown", a.cooldown),
+            ] {
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!("[autoscale] {name} invalid: {v}"));
+                }
+            }
+            if a.queue_low > a.queue_high {
+                return Err(format!(
+                    "[autoscale] queue_low ({}) must not exceed queue_high ({})",
+                    a.queue_low, a.queue_high
+                ));
+            }
+            cfg.autoscale = Some(a);
+        }
+        cfg.pressure = match doc.get("pressure", "trace") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| {
+                        format!("[pressure] trace: expected a string, got {v:?}")
+                    })?
+                    .to_string(),
+            ),
+        };
+        if let Some(spec) = &cfg.pressure {
+            // Validate eagerly so a bad trace fails at load, not mid-run.
+            PressureTrace::parse(spec)?;
+        }
         Ok(cfg)
     }
 
@@ -250,6 +391,94 @@ refresh_interval = 2.0
     #[test]
     fn bad_fleet_spec_rejected_at_load() {
         assert!(ServingConfig::from_toml("[cluster]\nfleet = \"gpt5@1.0\"\n").is_err());
+    }
+
+    #[test]
+    fn autoscale_section_parses_with_defaults() {
+        let cfg = ServingConfig::from_toml(
+            "[autoscale]\nenabled = true\nmin = 2\nmax = 6\nqueue_high = 12\n",
+        )
+        .unwrap();
+        let a = cfg.autoscale.expect("autoscale enabled");
+        assert_eq!(a.min_instances, 2);
+        assert_eq!(a.max_instances, 6);
+        assert!((a.queue_high - 12.0).abs() < 1e-12);
+        // Unset thresholds fall back to the defaults.
+        assert!((a.cooldown - 10.0).abs() < 1e-12);
+        // Absent or disabled section: no autoscaler.
+        let off = ServingConfig::from_toml("[autoscale]\nenabled = false\n").unwrap();
+        assert!(off.autoscale.is_none());
+        assert!(ServingConfig::from_toml("").unwrap().autoscale.is_none());
+        // Mis-typed `enabled`/`trace` must error, never silently drop the
+        // whole section.
+        assert!(ServingConfig::from_toml("[autoscale]\nenabled = 1\n").is_err());
+        assert!(ServingConfig::from_toml("[pressure]\ntrace = 5\n").is_err());
+    }
+
+    #[test]
+    fn autoscale_bad_bounds_rejected() {
+        assert!(ServingConfig::from_toml(
+            "[autoscale]\nenabled = true\nmin = 4\nmax = 2\n"
+        )
+        .is_err());
+        assert!(ServingConfig::from_toml("[autoscale]\nenabled = true\nmin = 0\n")
+            .is_err());
+    }
+
+    #[test]
+    fn autoscale_non_numeric_threshold_is_an_error_not_a_default() {
+        // A string where a number belongs must fail at load, not silently
+        // run with the default threshold.
+        let err = ServingConfig::from_toml(
+            "[autoscale]\nenabled = true\nqueue_high = \"12x\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("queue_high"), "error must name the key: {err}");
+        assert!(
+            ServingConfig::from_toml("[autoscale]\nenabled = true\nup_after = \"l\"\n")
+                .is_err()
+        );
+        // Zero/negative streaks and inverted hysteresis bands are rejected.
+        assert!(ServingConfig::from_toml(
+            "[autoscale]\nenabled = true\nup_after = 0\n"
+        )
+        .is_err());
+        assert!(ServingConfig::from_toml(
+            "[autoscale]\nenabled = true\ndown_after = -1\n"
+        )
+        .is_err());
+        assert!(ServingConfig::from_toml(
+            "[autoscale]\nenabled = true\nqueue_low = 9\nqueue_high = 4\n"
+        )
+        .is_err());
+        assert!(ServingConfig::from_toml(
+            "[autoscale]\nenabled = true\nratio_high = -1\n"
+        )
+        .is_err());
+        assert!(ServingConfig::from_toml(
+            "[autoscale]\nenabled = true\nqueue_high = nan\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn cluster_and_workload_numerics_are_strict_too() {
+        // The strict-parse contract covers every numeric key, not just
+        // [autoscale]: a string where a number belongs fails at load.
+        let err =
+            ServingConfig::from_toml("[workload]\nrate = \"12x\"\n").unwrap_err();
+        assert!(err.contains("rate"), "error must name the key: {err}");
+        assert!(ServingConfig::from_toml("[cluster]\ninstances = \"two\"\n").is_err());
+    }
+
+    #[test]
+    fn pressure_trace_validated_at_load() {
+        let cfg = ServingConfig::from_toml(
+            "[pressure]\ntrace = \"*:0=1.0,30=0.5;1:0=0.8\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.pressure.as_deref(), Some("*:0=1.0,30=0.5;1:0=0.8"));
+        assert!(ServingConfig::from_toml("[pressure]\ntrace = \"*:0=-1\"\n").is_err());
     }
 
     #[test]

@@ -31,6 +31,7 @@ impl DispatchPolicy for LeastLoaded {
         statuses
             .iter()
             .enumerate()
+            .filter(|(_, s)| s.accepting)
             .min_by_key(|(_, s)| s.committed_tokens + s.n_waiting as u64 * 256)
             .map(|(i, _)| i)
     }
@@ -54,6 +55,7 @@ mod tests {
             committed_tokens: committed,
             capacity_tokens: 160_000,
             preemptions: 0,
+            accepting: true,
         }
     }
 
@@ -85,6 +87,16 @@ mod tests {
         let mut a = st(0, 100);
         a.n_waiting = 10;
         let statuses = vec![a, st(1, 200)];
+        assert_eq!(d.choose(&req(), &statuses, 0.0), Some(1));
+    }
+
+    #[test]
+    fn draining_instance_never_chosen() {
+        let mut d = LeastLoaded::new();
+        // The emptiest instance is draining: it must be skipped.
+        let mut idle = st(0, 0);
+        idle.accepting = false;
+        let statuses = vec![idle, st(1, 900)];
         assert_eq!(d.choose(&req(), &statuses, 0.0), Some(1));
     }
 }

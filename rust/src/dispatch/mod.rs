@@ -43,6 +43,14 @@ pub trait DispatchPolicy: Send {
     /// Engine reported a preemption on `instance` (OOM-suspect signal).
     fn on_preemption(&mut self, _instance: usize, _now: Time) {}
 
+    /// The fleet was resized (an instance registered live or began
+    /// retiring). `statuses` is the new full per-instance snapshot —
+    /// instance indices are stable (retired slots stay as non-accepting
+    /// tombstones), so stateful policies must grow (or truncate) their
+    /// instance-indexed state to `statuses.len()` here instead of panicking
+    /// or mis-indexing on the next [`DispatchPolicy::choose`].
+    fn on_fleet_change(&mut self, _statuses: &[InstanceStatus]) {}
+
     /// Refresh internal state from the orchestrator's profiles (Kairos
     /// pulls each agent's expected execution time — the distribution mode —
     /// here; baselines ignore it).

@@ -39,12 +39,15 @@ impl DispatchPolicy for OracleFit {
             self.outstanding.resize(statuses.len(), 0);
         }
         let demand = req.total_tokens() as u64;
-        // Feasible instances: true peak (outstanding + demand) within
-        // capacity. Choose the one with the smallest resulting peak.
+        // Feasible instances: accepting dispatches, with the true peak
+        // (outstanding + demand) within capacity. Choose the one with the
+        // smallest resulting peak.
         statuses
             .iter()
             .enumerate()
-            .filter(|(i, s)| self.outstanding[*i] + demand <= s.capacity_tokens)
+            .filter(|(i, s)| {
+                s.accepting && self.outstanding[*i] + demand <= s.capacity_tokens
+            })
             .min_by_key(|(i, _)| self.outstanding[*i] + demand)
             .map(|(i, _)| i)
     }
@@ -60,7 +63,22 @@ impl DispatchPolicy for OracleFit {
 
     fn on_complete(&mut self, req: RequestId, _instance: usize, _now: Time) {
         if let Some((inst, demand)) = self.placed.remove(&req) {
-            self.outstanding[inst] = self.outstanding[inst].saturating_sub(demand);
+            if inst < self.outstanding.len() {
+                self.outstanding[inst] = self.outstanding[inst].saturating_sub(demand);
+            }
+        }
+    }
+
+    fn on_fleet_change(&mut self, statuses: &[InstanceStatus]) {
+        // Indices are stable (retired slots become tombstones), so growing
+        // with zeroed demand is always safe; truncation drops tombstone
+        // tails along with their placements.
+        let n = statuses.len();
+        if self.outstanding.len() < n {
+            self.outstanding.resize(n, 0);
+        } else if self.outstanding.len() > n {
+            self.outstanding.truncate(n);
+            self.placed.retain(|_, (inst, _)| *inst < n);
         }
     }
 }
@@ -83,6 +101,7 @@ mod tests {
             committed_tokens: 0,
             capacity_tokens: capacity,
             preemptions: 0,
+            accepting: true,
         }
     }
 
@@ -132,5 +151,20 @@ mod tests {
         assert_eq!(d.choose(&req(2, 100, 100), &statuses, 0.0), None);
         d.on_complete(1, 0, 1.0);
         assert_eq!(d.choose(&req(2, 100, 100), &statuses, 0.0), Some(0));
+    }
+
+    #[test]
+    fn fleet_change_resizes_and_draining_excluded() {
+        let mut d = OracleFit::new(1);
+        let mut statuses = vec![st(0, 1000), st(1, 1000), st(2, 1000)];
+        d.on_fleet_change(&statuses);
+        assert_eq!(d.outstanding.len(), 3);
+        // Load instance 0, then start draining instance 1: despite being
+        // empty it must never be chosen.
+        let r1 = req(1, 100, 400);
+        d.on_dispatch(&r1, 0, 0.0);
+        statuses[1].accepting = false;
+        let pick = d.choose(&req(2, 10, 10), &statuses, 0.0).unwrap();
+        assert_eq!(pick, 2, "draining instance chosen over an active one");
     }
 }

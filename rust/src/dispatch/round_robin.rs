@@ -29,12 +29,20 @@ impl DispatchPolicy for RoundRobin {
         statuses: &[InstanceStatus],
         _now: Time,
     ) -> Option<usize> {
-        if statuses.is_empty() {
+        let n = statuses.len();
+        if n == 0 {
             return None;
         }
-        let pick = self.next % statuses.len();
-        self.next = (self.next + 1) % statuses.len();
-        Some(pick)
+        // Blind to load, but never to fleet membership: skip instances that
+        // are draining toward retirement (or retired tombstones).
+        for k in 0..n {
+            let pick = (self.next + k) % n;
+            if statuses[pick].accepting {
+                self.next = (pick + 1) % n;
+                return Some(pick);
+            }
+        }
+        None
     }
 }
 
@@ -56,6 +64,7 @@ mod tests {
             committed_tokens: 0,
             capacity_tokens: 1600,
             preemptions: 0,
+            accepting: true,
         }
     }
 
@@ -100,5 +109,33 @@ mod tests {
     fn empty_cluster_returns_none() {
         let mut rr = RoundRobin::new();
         assert_eq!(rr.choose(&req(), &[], 0.0), None);
+    }
+
+    #[test]
+    fn skips_draining_instances_and_still_cycles() {
+        let mut rr = RoundRobin::new();
+        let mut statuses = vec![st(0), st(1), st(2)];
+        statuses[1].accepting = false;
+        let picks: Vec<usize> = (0..4)
+            .map(|_| rr.choose(&req(), &statuses, 0.0).unwrap())
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+        // All draining: nothing to pick, request stays queued.
+        statuses[0].accepting = false;
+        statuses[2].accepting = false;
+        assert_eq!(rr.choose(&req(), &statuses, 0.0), None);
+    }
+
+    #[test]
+    fn fleet_growth_brings_new_instance_into_rotation() {
+        let mut rr = RoundRobin::new();
+        let two = vec![st(0), st(1)];
+        assert_eq!(rr.choose(&req(), &two, 0.0), Some(0));
+        let three = vec![st(0), st(1), st(2)];
+        rr.on_fleet_change(&three);
+        let picks: Vec<usize> = (0..3)
+            .map(|_| rr.choose(&req(), &three, 0.0).unwrap())
+            .collect();
+        assert_eq!(picks, vec![1, 2, 0]);
     }
 }

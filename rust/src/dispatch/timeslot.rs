@@ -67,6 +67,14 @@ struct Placement {
     start: Time,
     end: Time,
     prefill_bytes: f64,
+    /// Ring window `[base, last]` at dispatch time. Out-of-window
+    /// contributions were folded into this range by [`SlotRing::fold`];
+    /// the release must recompute placement against the SAME fold rule, or
+    /// (once the ring base advances) the negative release lands in a
+    /// different absolute slot than the positive add and phantom KV load
+    /// accumulates in the last slot, starving dispatch.
+    fold_base: i64,
+    fold_limit: i64,
 }
 
 /// Per-instance future memory profile as a slot ring.
@@ -93,20 +101,43 @@ impl SlotRing {
         }
     }
 
+    /// Absolute index of the last live slot.
+    fn horizon_end(&self) -> i64 {
+        self.base_slot + self.slots.len() as i64 - 1
+    }
+
+    /// The fold rule for out-of-window predictions: past slots charge the
+    /// current base, beyond-horizon slots fold into the last slot
+    /// (conservative). Adds and releases must both go through this rule so
+    /// a prediction is released from the exact slot it was charged to.
+    fn fold(&self, abs_slot: i64) -> i64 {
+        abs_slot.max(self.base_slot).min(self.horizon_end())
+    }
+
     /// Advance the ring so `abs_slot` becomes the base; expired slots reset.
+    /// Cost is bounded by the ring length: a gap of one idle hour (~7200
+    /// slots at 0.5 s) must not spin per-slot — once the gap covers the
+    /// whole window, every live slot has expired and the base jumps.
     fn advance_to(&mut self, abs_slot: i64) {
-        while self.base_slot < abs_slot {
+        if abs_slot <= self.base_slot {
+            return;
+        }
+        let gap = abs_slot - self.base_slot;
+        if gap >= self.slots.len() as i64 {
+            self.slots.fill(0.0);
+            self.cursor = 0;
+            self.base_slot = abs_slot;
+            return;
+        }
+        for _ in 0..gap {
             self.slots[self.cursor] = 0.0;
             self.cursor = (self.cursor + 1) % self.slots.len();
-            self.base_slot += 1;
         }
+        self.base_slot = abs_slot;
     }
 
     fn add(&mut self, abs_slot: i64, v: f64) {
-        // Beyond-horizon predictions fold into the last slot (conservative).
-        let clamped = abs_slot
-            .max(self.base_slot)
-            .min(self.base_slot + self.slots.len() as i64 - 1);
+        let clamped = self.fold(abs_slot);
         if let Some(i) = self.idx(clamped) {
             self.slots[i] += v;
             if self.slots[i] < 0.0 {
@@ -239,7 +270,11 @@ impl DispatchPolicy for TimeSlotDispatcher {
         statuses: &[InstanceStatus],
         now: Time,
     ) -> Option<usize> {
-        debug_assert_eq!(statuses.len(), self.rings.len());
+        if statuses.len() != self.rings.len() {
+            // Defensive resize: a driver that skipped `on_fleet_change`
+            // must still never make us mis-index the rings.
+            self.on_fleet_change(statuses);
+        }
         let cur = self.abs_slot(now);
         for ring in self.rings.iter_mut() {
             ring.advance_to(cur);
@@ -252,6 +287,9 @@ impl DispatchPolicy for TimeSlotDispatcher {
                 as u64;
         let mut best: Option<(usize, f64)> = None;
         for j in 0..self.rings.len() {
+            if !statuses[j].accepting {
+                continue; // draining toward retirement / retired tombstone
+            }
             if now < self.suspended_until[j] {
                 continue; // OOM-suspect cooldown
             }
@@ -286,33 +324,62 @@ impl DispatchPolicy for TimeSlotDispatcher {
         let prefill_bytes = req.prompt_tokens as f64 * self.cfg.kv_bytes_per_token;
         let s0 = self.abs_slot(start);
         let s1 = self.abs_slot(end) + 1;
+        // Record the fold window so the release recomputes the exact slots
+        // the adds landed in (see `Placement::fold_limit`).
+        let fold_base = self.rings[instance].base_slot;
+        let fold_limit = self.rings[instance].horizon_end();
         for s in s0..=s1 {
             let add = self.ramp_at(prefill_bytes, start, end, s);
             if add > 0.0 {
                 self.rings[instance].add(s, add);
             }
         }
-        self.placements
-            .insert(req.id, Placement { instance, start, end, prefill_bytes });
+        self.placements.insert(
+            req.id,
+            Placement { instance, start, end, prefill_bytes, fold_base, fold_limit },
+        );
     }
 
-    fn on_complete(&mut self, req: RequestId, _instance: usize, now: Time) {
+    fn on_complete(&mut self, req: RequestId, _instance: usize, _now: Time) {
         // Early (or late) completion: remove the request's remaining
-        // predicted usage from all future slots (§6 adaptive measure).
+        // predicted usage (§6 adaptive measure). Each contribution was
+        // charged at `fold(s)` under the dispatch-time window, so the
+        // release re-applies the same rule; slots the ring base has already
+        // passed were cleared by `advance_to` and are skipped.
         let Some(p) = self.placements.remove(&req) else { return };
-        let cur = self.abs_slot(now);
+        let s0 = self.abs_slot(p.start);
         let s1 = self.abs_slot(p.end) + 1;
-        for s in cur..=s1 {
+        for s in s0..=s1 {
             let v = self.ramp_at(p.prefill_bytes, p.start, p.end, s);
-            if v > 0.0 {
-                self.rings[p.instance].add(s, -v);
+            if v <= 0.0 {
+                continue;
             }
+            let target = s.clamp(p.fold_base, p.fold_limit);
+            if target < self.rings[p.instance].base_slot {
+                continue; // expired with the ring; nothing left to release
+            }
+            self.rings[p.instance].add(target, -v);
         }
     }
 
     fn on_preemption(&mut self, instance: usize, now: Time) {
         // OOM-suspect: temporarily suspend new dispatches to this instance.
-        self.suspended_until[instance] = now + self.cfg.suspend_cooldown;
+        if instance < self.suspended_until.len() {
+            self.suspended_until[instance] = now + self.cfg.suspend_cooldown;
+        }
+    }
+
+    fn on_fleet_change(&mut self, statuses: &[InstanceStatus]) {
+        let n = statuses.len();
+        while self.rings.len() < n {
+            self.rings.push(SlotRing::new(self.cfg.horizon_slots));
+            self.suspended_until.push(0.0);
+        }
+        if self.rings.len() > n {
+            self.rings.truncate(n);
+            self.suspended_until.truncate(n);
+            self.placements.retain(|_, p| p.instance < n);
+        }
     }
 
     fn refresh(&mut self, orch: &crate::orchestrator::Orchestrator) {
@@ -373,6 +440,7 @@ mod tests {
             committed_tokens: 0,
             capacity_tokens: 1000,
             preemptions: 0,
+            accepting: true,
         }
     }
 
@@ -482,6 +550,93 @@ mod tests {
         let mut ring = SlotRing::new(4);
         ring.add(1000, 9.0);
         assert_eq!(ring.get(3), 9.0);
+    }
+
+    #[test]
+    fn beyond_horizon_release_lands_in_fold_slot() {
+        // Regression for the fold leak: with a 4-slot horizon (2 s) and a
+        // 4 s expected execution, most of the prediction folds into the
+        // last slot (abs slot 3). By completion time the ring base has
+        // advanced past that slot's original position, so the old release
+        // (recomputed against the CURRENT window) subtracted from different
+        // absolute slots, was floor-clamped to 0, and left the folded mass
+        // stranded: phantom KV load that starves dispatch forever.
+        let mut c = cfg();
+        c.horizon_slots = 4; // 2 s window, default_exec_time = 4 s
+        let mut d = TimeSlotDispatcher::new(1, c);
+        let statuses = vec![st(0)];
+        let r1 = req(1, 0, 100);
+        let j = d.choose(&r1, &statuses, 0.0).unwrap();
+        d.on_dispatch(&r1, j, 0.0);
+        assert!(d.rings[0].peak() > 0.0);
+        // Time passes: a later scheduling round advances the ring base
+        // (the dispatch-time fold slot, abs slot 3, is still live, but the
+        // CURRENT window's last slot is now abs slot 5).
+        let _ = d.choose(&req(2, 0, 900), &statuses, 1.0);
+        assert_eq!(d.rings[0].base_slot, 2);
+        // The request finishes; every charged slot must be released.
+        d.on_complete(1, 0, 1.0);
+        assert!(
+            d.rings[0].peak() < 1e-6,
+            "phantom KV load left in the ring: peak={}",
+            d.rings[0].peak()
+        );
+        // And a near-capacity request can now be placed again.
+        assert_eq!(d.choose(&req(3, 0, 900), &statuses, 1.0), Some(0));
+    }
+
+    #[test]
+    fn advance_to_jumps_large_gaps() {
+        // A wall-clock driver idle for an hour advances ~7200 slots per
+        // ring per pump; advance_to must clear at most slots.len() entries
+        // and jump the base directly. With the old O(Δslots) loop this
+        // multi-billion-slot gap would effectively hang the test.
+        let mut ring = SlotRing::new(8);
+        ring.add(3, 5.0);
+        ring.add(7, 2.0);
+        ring.advance_to(10_000_000_000);
+        assert_eq!(ring.base_slot, 10_000_000_000);
+        assert_eq!(ring.peak(), 0.0, "all live slots expired across the gap");
+        ring.add(10_000_000_001, 2.5);
+        assert_eq!(ring.get(10_000_000_001), 2.5);
+        // A moderate (sub-window) gap still expires exactly the slots it
+        // covers and keeps the future ones.
+        ring.add(10_000_000_006, 1.5);
+        ring.advance_to(10_000_000_004);
+        assert_eq!(ring.get(10_000_000_001), 0.0);
+        assert_eq!(ring.get(10_000_000_006), 1.5);
+    }
+
+    #[test]
+    fn fleet_change_resizes_rings_and_skips_non_accepting() {
+        let mut d = TimeSlotDispatcher::new(1, cfg());
+        // The fleet grows to 3 instances; choose must not mis-index.
+        let mut statuses = vec![st(0), st(1), st(2)];
+        d.on_fleet_change(&statuses);
+        assert_eq!(d.rings.len(), 3);
+        assert_eq!(d.suspended_until.len(), 3);
+        // Load up instance 0 so the packer prefers the new empty ones.
+        let r = req(1, 0, 500);
+        let j = d.choose(&r, &statuses, 0.0).unwrap();
+        d.on_dispatch(&r, j, 0.0);
+        // Instance 1 starts draining: it must never be chosen again even
+        // when it has the lowest expected peak.
+        statuses[1].accepting = false;
+        for k in 2..8 {
+            let pick = d.choose(&req(k, 0, 100), &statuses, 0.0).unwrap();
+            assert_ne!(pick, 1, "dispatched to a draining instance");
+            d.on_dispatch(&req(k, 0, 100), pick, 0.0);
+        }
+    }
+
+    #[test]
+    fn choose_resizes_defensively_without_fleet_change() {
+        // A driver that forgot on_fleet_change still must not panic.
+        let mut d = TimeSlotDispatcher::new(1, cfg());
+        let statuses = vec![st(0), st(1), st(2), st(3)];
+        let pick = d.choose(&req(1, 0, 10), &statuses, 0.0);
+        assert!(pick.is_some());
+        assert_eq!(d.rings.len(), 4);
     }
 
     #[test]

@@ -78,9 +78,17 @@ pub struct InstanceStatus {
     pub waiting_tokens: u64,
     /// KV tokens currently committed (running context).
     pub committed_tokens: u64,
-    /// Token capacity of the KV pool.
+    /// Token capacity of the KV pool. Under a co-tenant
+    /// [`PressureTrace`](crate::server::pressure::PressureTrace) the
+    /// coordinator scales this down from the engine's physical pool, so
+    /// dispatchers always pack against the *currently available* budget.
     pub capacity_tokens: u64,
     pub preemptions: u64,
+    /// Whether the instance accepts new dispatches. The engine itself is
+    /// always accepting; the coordinator clears this for instances that are
+    /// draining toward retirement or already retired, and every dispatcher
+    /// must skip non-accepting instances.
+    pub accepting: bool,
 }
 
 impl InstanceStatus {
@@ -187,6 +195,7 @@ impl<B: ExecBackend> EngineCore<B> {
             capacity_tokens: self.blocks.total_blocks() as u64
                 * self.blocks.block_size() as u64,
             preemptions: self.preemptions,
+            accepting: true,
         }
     }
 

@@ -93,6 +93,7 @@ pub fn packing_time(n_instances: usize, live_requests: usize, seed: u64) -> f64 
             committed_tokens: 0,
             capacity_tokens: 1 << 24,
             preemptions: 0,
+            accepting: true,
         })
         .collect();
     // Pre-commit a realistic number of live predictions.

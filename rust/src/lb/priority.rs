@@ -81,11 +81,21 @@ impl AgentPriorities {
         self.coords.get(&agent).copied().unwrap_or(self.default_coord)
     }
 
-    /// Agents ranked by priority (highest priority first).
+    /// Agents ranked by priority (highest priority first). The comparator
+    /// is total even if a degenerate MDS embedding yields a NaN coordinate
+    /// (no panic in the refresh), and NaN of EITHER sign ranks last —
+    /// `total_cmp` alone orders by sign bit, so the negative quiet NaN
+    /// that `0.0 / 0.0` actually produces on x86-64 would otherwise rank
+    /// first and hand the degenerate agent top scheduling priority.
     pub fn ranking(&self) -> Vec<AgentId> {
         let mut v: Vec<(AgentId, f64)> =
             self.coords.iter().map(|(&a, &c)| (a, c)).collect();
-        v.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0).into()));
+        v.sort_by(|a, b| {
+            a.1.is_nan()
+                .cmp(&b.1.is_nan())
+                .then(a.1.total_cmp(&b.1))
+                .then(a.0.cmp(&b.0))
+        });
         v.into_iter().map(|(a, _)| a).collect()
     }
 
@@ -156,6 +166,24 @@ mod tests {
         let p = AgentPriorities::from_ecdfs(&[], &[]);
         assert!(p.is_empty());
         assert_eq!(p.coord(AgentId(0)), 0.0);
+    }
+
+    #[test]
+    fn ranking_survives_nan_coordinate() {
+        // Regression: a NaN coordinate out of a degenerate MDS embedding
+        // panicked the scheduler refresh via partial_cmp().unwrap(). Now
+        // it ranks last — including the NEGATIVE quiet NaN that real
+        // 0.0/0.0 arithmetic produces, which raw total_cmp would rank
+        // first (it orders by sign bit).
+        let mut p = AgentPriorities::default();
+        p.coords.insert(AgentId(0), 1.0);
+        p.coords.insert(AgentId(1), f64::NAN);
+        p.coords.insert(AgentId(2), 0.5);
+        p.coords.insert(AgentId(3), -f64::NAN);
+        let r = p.ranking();
+        assert_eq!(r[0], AgentId(2));
+        assert_eq!(r[1], AgentId(0));
+        assert!(r[2..].contains(&AgentId(1)) && r[2..].contains(&AgentId(3)));
     }
 
     #[test]

@@ -101,7 +101,7 @@ impl WorkflowGraph {
             // Sweep line: sort by start; any span starting before the
             // previous maximum end overlaps ⇒ parallel.
             let mut sorted: Vec<&ExecRecord> = spans.clone();
-            sorted.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            sorted.sort_by(|a, b| a.start.total_cmp(&b.start));
             let mut overlap = false;
             let mut max_end = sorted[0].end;
             for r in &sorted[1..] {

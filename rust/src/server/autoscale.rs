@@ -1,0 +1,280 @@
+//! Elastic fleet autoscaling policy.
+//!
+//! The paper's public-cloud setting pairs excessive, bursty loads with
+//! capacity that is *rented*, not fixed: when the central queue deepens
+//! past what the active instances can drain, the operator adds instances;
+//! when the burst passes, surplus instances are drained and released. This
+//! module is the pure decision layer — queue-depth and queuing-ratio
+//! thresholds with hysteresis, min/max fleet bounds and a cooldown — while
+//! the mechanics (registering engines live, draining in-flight work) live
+//! in [`super::coordinator::Coordinator::add_instance`] /
+//! [`retire_instance`](super::coordinator::Coordinator::retire_instance).
+//! The coordinator consults the autoscaler on every periodic
+//! [`refresh`](super::coordinator::Coordinator::refresh), so decisions are
+//! deterministic functions of the observed serving state — the
+//! driver-equivalence contract (`tests/runtime_seam.rs`) extends to scale
+//! events.
+
+use super::coordinator::InstanceSpec;
+use crate::engine::cost_model::ModelKind;
+use crate::Time;
+
+/// Thresholds and bounds of the autoscaling policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Never drain below this many active instances.
+    pub min_instances: usize,
+    /// Never grow above this many active instances.
+    pub max_instances: usize,
+    /// Scale up when queued requests per active instance exceed this.
+    pub queue_high: f64,
+    /// Scale down only when queued requests per active instance fall
+    /// below this (kept well under `queue_high`: the gap is the hysteresis
+    /// band that stops grow/shrink flapping on a noisy queue).
+    pub queue_low: f64,
+    /// Queuing-time ratio (queue wait share of stage e2e, the paper's load
+    /// calibration metric) that also triggers scale-up.
+    pub ratio_high: f64,
+    /// Consecutive hot observations required before growing.
+    pub up_after: u32,
+    /// Consecutive cold observations required before shrinking (higher
+    /// than `up_after` by default: growing is urgent, shrinking is not).
+    pub down_after: u32,
+    /// Minimum time between scale actions (seconds).
+    pub cooldown: f64,
+    /// Spec for newly added instances.
+    pub template: InstanceSpec,
+}
+
+impl AutoscaleConfig {
+    /// Conservative defaults around `template` for new instances.
+    pub fn for_template(template: InstanceSpec) -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_instances: 1,
+            max_instances: 8,
+            queue_high: 8.0,
+            queue_low: 1.0,
+            ratio_high: 0.5,
+            up_after: 1,
+            down_after: 3,
+            cooldown: 10.0,
+            template,
+        }
+    }
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig::for_template(
+            InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(0.12),
+        )
+    }
+}
+
+/// What the autoscaler sees at one observation point.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetObservation {
+    /// Depth of the central scheduling queue.
+    pub queue_len: usize,
+    /// Instances currently accepting dispatches.
+    pub active_instances: usize,
+    /// Instances draining toward retirement. Capacity that is already on
+    /// its way out: while any drain is in flight, `Shrink` is withheld so
+    /// the fleet sheds at most one instance per completed drain.
+    pub draining_instances: usize,
+    /// Mean queuing-time ratio of requests finished since the previous
+    /// observation (0 when none finished).
+    pub recent_queue_ratio: f64,
+    /// Whether the fleet can actually grow (it has a backend factory).
+    /// When false, `Grow` is never emitted — otherwise a factory-less
+    /// fleet would record phantom grows and burn the cooldown on actions
+    /// that cannot be applied.
+    pub can_grow: bool,
+}
+
+/// A scale decision. The coordinator maps `Shrink` to a concrete instance
+/// (the highest-index active one, deterministically).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    Grow,
+    Shrink,
+}
+
+/// Threshold-with-hysteresis autoscaler.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    hot_streak: u32,
+    cold_streak: u32,
+    last_action: Time,
+    /// Diagnostics.
+    pub grows: u64,
+    pub shrinks: u64,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Autoscaler {
+        Autoscaler {
+            cfg,
+            hot_streak: 0,
+            cold_streak: 0,
+            last_action: f64::NEG_INFINITY,
+            grows: 0,
+            shrinks: 0,
+        }
+    }
+
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// Feed one observation; returns the action to take now, if any.
+    pub fn observe(&mut self, obs: &FleetObservation, now: Time) -> Option<ScaleAction> {
+        let per_instance = obs.queue_len as f64 / obs.active_instances.max(1) as f64;
+        let hot =
+            per_instance > self.cfg.queue_high || obs.recent_queue_ratio > self.cfg.ratio_high;
+        let cold = per_instance < self.cfg.queue_low
+            && obs.recent_queue_ratio < self.cfg.ratio_high * 0.5;
+        if hot {
+            self.hot_streak += 1;
+            self.cold_streak = 0;
+        } else if cold {
+            self.cold_streak += 1;
+            self.hot_streak = 0;
+        } else {
+            // Inside the hysteresis band: hold position.
+            self.hot_streak = 0;
+            self.cold_streak = 0;
+        }
+        if now - self.last_action < self.cfg.cooldown {
+            return None;
+        }
+        if self.hot_streak >= self.cfg.up_after
+            && obs.can_grow
+            && obs.active_instances < self.cfg.max_instances
+        {
+            self.last_action = now;
+            self.hot_streak = 0;
+            self.grows += 1;
+            return Some(ScaleAction::Grow);
+        }
+        if self.cold_streak >= self.cfg.down_after
+            && obs.active_instances > self.cfg.min_instances
+            && obs.draining_instances == 0
+        {
+            self.last_action = now;
+            self.cold_streak = 0;
+            self.shrinks += 1;
+            return Some(ScaleAction::Shrink);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_instances: 1,
+            max_instances: 4,
+            queue_high: 8.0,
+            queue_low: 1.0,
+            ratio_high: 0.5,
+            up_after: 1,
+            down_after: 2,
+            cooldown: 10.0,
+            template: InstanceSpec::new(ModelKind::Llama3_8B),
+        }
+    }
+
+    fn obs(queue: usize, active: usize, ratio: f64) -> FleetObservation {
+        FleetObservation {
+            queue_len: queue,
+            active_instances: active,
+            draining_instances: 0,
+            recent_queue_ratio: ratio,
+            can_grow: true,
+        }
+    }
+
+    #[test]
+    fn grows_on_deep_queue_and_respects_max() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.observe(&obs(40, 2, 0.0), 0.0), Some(ScaleAction::Grow));
+        // At the max bound a hot fleet cannot grow further.
+        assert_eq!(a.observe(&obs(80, 4, 0.9), 100.0), None);
+        assert_eq!(a.grows, 1);
+    }
+
+    #[test]
+    fn queue_ratio_alone_triggers_growth() {
+        let mut a = Autoscaler::new(cfg());
+        // Shallow queue but requests spend 80% of their life queued.
+        assert_eq!(a.observe(&obs(2, 2, 0.8), 0.0), Some(ScaleAction::Grow));
+    }
+
+    #[test]
+    fn cooldown_blocks_back_to_back_actions() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.observe(&obs(40, 2, 0.0), 0.0), Some(ScaleAction::Grow));
+        assert_eq!(a.observe(&obs(40, 3, 0.0), 5.0), None, "inside cooldown");
+        assert_eq!(a.observe(&obs(40, 3, 0.0), 10.0), Some(ScaleAction::Grow));
+    }
+
+    #[test]
+    fn shrink_needs_a_cold_streak_and_respects_min() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.observe(&obs(0, 3, 0.0), 0.0), None, "one cold tick is not enough");
+        assert_eq!(a.observe(&obs(0, 3, 0.0), 5.0), Some(ScaleAction::Shrink));
+        // A fleet already at the min bound never shrinks.
+        let mut b = Autoscaler::new(cfg());
+        assert_eq!(b.observe(&obs(0, 1, 0.0), 0.0), None);
+        assert_eq!(b.observe(&obs(0, 1, 0.0), 5.0), None);
+        assert_eq!(b.observe(&obs(0, 1, 0.0), 15.0), None);
+    }
+
+    #[test]
+    fn shrink_waits_for_the_previous_drain_to_finish() {
+        let mut a = Autoscaler::new(cfg());
+        let mut cold = obs(0, 3, 0.0);
+        cold.draining_instances = 1;
+        assert_eq!(a.observe(&cold, 0.0), None);
+        assert_eq!(a.observe(&cold, 5.0), None, "drain in flight blocks shrink");
+        // Drain completed: the (still accumulated) cold streak fires.
+        assert_eq!(a.observe(&obs(0, 3, 0.0), 10.0), Some(ScaleAction::Shrink));
+    }
+
+    #[test]
+    fn factory_less_fleet_never_emits_grow_or_burns_cooldown() {
+        let mut a = Autoscaler::new(cfg());
+        let hot = FleetObservation { can_grow: false, ..obs(40, 2, 0.9) };
+        assert_eq!(a.observe(&hot, 0.0), None);
+        assert_eq!(a.observe(&hot, 20.0), None);
+        assert_eq!(a.grows, 0, "no phantom grows recorded");
+        // The cooldown was never consumed: a later genuine shrink signal
+        // fires as soon as its streak completes.
+        assert_eq!(a.observe(&obs(0, 3, 0.0), 25.0), None);
+        assert_eq!(a.observe(&obs(0, 3, 0.0), 30.0), Some(ScaleAction::Shrink));
+    }
+
+    #[test]
+    fn hysteresis_band_holds_position() {
+        let mut a = Autoscaler::new(cfg());
+        // Between queue_low and queue_high: neither streak accumulates.
+        for t in 0..10 {
+            assert_eq!(a.observe(&obs(4, 2, 0.1), t as f64 * 5.0), None);
+        }
+        assert_eq!(a.grows + a.shrinks, 0);
+    }
+
+    #[test]
+    fn mid_band_observation_resets_cold_streak() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.observe(&obs(0, 3, 0.0), 0.0), None); // cold 1
+        assert_eq!(a.observe(&obs(6, 3, 0.1), 5.0), None); // band: reset
+        assert_eq!(a.observe(&obs(0, 3, 0.0), 10.0), None, "cold streak restarted");
+        assert_eq!(a.observe(&obs(0, 3, 0.0), 15.0), Some(ScaleAction::Shrink));
+    }
+}

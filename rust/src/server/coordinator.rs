@@ -24,6 +24,8 @@ use crate::dispatch::DispatchPolicy;
 use crate::engine::core::{
     EngineConfig, EngineCore, ExecBackend, InstanceStatus, SimBackend, StepOutcome,
 };
+use crate::server::autoscale::{Autoscaler, FleetObservation, ScaleAction};
+use crate::server::pressure::PressureTrace;
 use crate::engine::cost_model::{CostModel, ModelKind};
 use crate::engine::request::{Request, RequestId, SeqState};
 use crate::lb::policies::SchedulePolicy;
@@ -248,6 +250,47 @@ impl FleetSpec {
 }
 
 // ---------------------------------------------------------------------------
+// Elastic fleet state
+
+/// Lifecycle state of one instance slot. Slots are stable: retirement
+/// never shifts the indices of other instances (dispatcher state, the
+/// dispatch log and scale events all key on the index), so a retired slot
+/// stays behind as a non-accepting tombstone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Accepting dispatches.
+    Active,
+    /// No new dispatches; in-flight requests run to completion.
+    Draining,
+    /// Drained and folded; the slot is a tombstone.
+    Retired,
+}
+
+/// What happened to the fleet, when.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScaleEventKind {
+    /// Instance registered live.
+    Grow,
+    /// Instance stopped accepting dispatches and began draining.
+    RetireStart,
+    /// Instance fully drained; counters folded into the run metrics.
+    RetireDone,
+}
+
+/// One fleet-change event, for analyses and the resize contract tests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleEvent {
+    pub at: Time,
+    pub instance: usize,
+    pub kind: ScaleEventKind,
+    /// Length of the dispatch log when the event fired: everything at or
+    /// after this index happened with the fleet in its post-event shape
+    /// (e.g. no dispatch past a `RetireStart`'s seq may target its
+    /// instance).
+    pub dispatch_seq: usize,
+}
+
+// ---------------------------------------------------------------------------
 // Workflow bookkeeping
 
 struct WfState {
@@ -310,6 +353,27 @@ pub struct Coordinator<B: ExecBackend> {
     status_dirty: Vec<bool>,
     /// Cost model used for fleet-level ground-truth annotations.
     reference_cost: CostModel,
+    /// Lifecycle state per instance slot (see [`InstanceState`]).
+    instance_state: Vec<InstanceState>,
+    /// Every fleet change, in order — grows, drain starts, drain
+    /// completions.
+    pub scale_log: Vec<ScaleEvent>,
+    /// Physical KV capacity per instance (tokens), before any co-tenant
+    /// pressure: the "could this request EVER fit" admission check reads
+    /// this, so transient pressure never causes permanent drops.
+    base_capacity: Vec<u64>,
+    /// Pressure multiplier last applied to each status entry; a moved
+    /// multiplier forces a snapshot refresh even for clean engines.
+    applied_pressure: Vec<f64>,
+    /// Time-varying co-tenant pressure on the per-instance KV budgets.
+    pressure: Option<PressureTrace>,
+    /// Elastic scaling policy, consulted on every [`Self::refresh`].
+    autoscaler: Option<Autoscaler>,
+    /// Factory for new instances' backends (None for fleets built from
+    /// pre-constructed engines, e.g. PJRT: those cannot autoscale up).
+    make_backend: Option<Box<dyn FnMut(&InstanceSpec) -> B>>,
+    /// First metrics record not yet folded into an autoscale observation.
+    scaler_seen_requests: usize,
 }
 
 impl Coordinator<SimBackend> {
@@ -333,7 +397,7 @@ impl<B: ExecBackend> Coordinator<B> {
         fleet: FleetSpec,
         policy: Box<dyn SchedulePolicy>,
         dispatcher: Box<dyn DispatchPolicy>,
-        mut make_backend: impl FnMut(&InstanceSpec) -> B,
+        mut make_backend: impl FnMut(&InstanceSpec) -> B + 'static,
     ) -> Coordinator<B> {
         let engines: Vec<EngineCore<B>> = fleet
             .instances
@@ -341,7 +405,10 @@ impl<B: ExecBackend> Coordinator<B> {
             .enumerate()
             .map(|(i, spec)| EngineCore::new(i, spec.engine_config(), make_backend(spec)))
             .collect();
-        Coordinator::from_engines(fleet, policy, dispatcher, engines)
+        let mut c = Coordinator::from_engines(fleet, policy, dispatcher, engines);
+        // Keep the factory: it is what lets the fleet grow live.
+        c.make_backend = Some(Box::new(make_backend));
+        c
     }
 
     /// Build a coordinator over pre-constructed engines (backends whose
@@ -356,6 +423,7 @@ impl<B: ExecBackend> Coordinator<B> {
         assert!(!engines.is_empty(), "fleet must have at least one instance");
         assert_eq!(fleet.len(), engines.len(), "fleet spec must match engines");
         let status_buf: Vec<InstanceStatus> = engines.iter().map(|e| e.status()).collect();
+        let base_capacity: Vec<u64> = status_buf.iter().map(|s| s.capacity_tokens).collect();
         let n = engines.len();
         let reference_cost = fleet.reference_cost();
         Coordinator {
@@ -375,11 +443,137 @@ impl<B: ExecBackend> Coordinator<B> {
             status_buf,
             status_dirty: vec![false; n],
             reference_cost,
+            instance_state: vec![InstanceState::Active; n],
+            scale_log: Vec::new(),
+            base_capacity,
+            applied_pressure: vec![1.0; n],
+            pressure: None,
+            autoscaler: None,
+            make_backend: None,
+            scaler_seen_requests: 0,
         }
     }
 
     pub fn n_instances(&self) -> usize {
         self.engines.len()
+    }
+
+    /// Instances currently accepting dispatches.
+    pub fn active_instances(&self) -> usize {
+        self.instance_state.iter().filter(|s| **s == InstanceState::Active).count()
+    }
+
+    /// Instances draining toward retirement.
+    pub fn draining_instances(&self) -> usize {
+        self.instance_state.iter().filter(|s| **s == InstanceState::Draining).count()
+    }
+
+    /// Lifecycle state of instance slot `j`.
+    pub fn instance_state(&self, j: usize) -> InstanceState {
+        self.instance_state[j]
+    }
+
+    /// Install a co-tenant pressure trace: from now on the per-instance
+    /// status snapshot reports `capacity_tokens` scaled by the trace's
+    /// multiplier at the current time.
+    pub fn set_pressure(&mut self, trace: PressureTrace) {
+        self.pressure = Some(trace);
+    }
+
+    /// Install (or replace) the autoscaling policy consulted on
+    /// [`Self::refresh`].
+    pub fn set_autoscaler(&mut self, autoscaler: Autoscaler) {
+        self.autoscaler = Some(autoscaler);
+    }
+
+    /// The installed autoscaler, if any (diagnostics).
+    pub fn autoscaler(&self) -> Option<&Autoscaler> {
+        self.autoscaler.as_ref()
+    }
+
+    /// Register a new instance live, building its backend with the fleet's
+    /// factory. Fails for coordinators assembled from pre-constructed
+    /// engines (no factory — e.g. the PJRT fleet).
+    pub fn add_instance(&mut self, spec: InstanceSpec, now: Time) -> Result<usize, String> {
+        let Some(make) = self.make_backend.as_mut() else {
+            return Err("no backend factory: this fleet cannot grow live".to_string());
+        };
+        let backend = make(&spec);
+        Ok(self.add_engine(spec, backend, now))
+    }
+
+    /// Register a pre-built backend as a new live instance; returns its
+    /// index. The new slot is immediately eligible for dispatch.
+    pub fn add_engine(&mut self, spec: InstanceSpec, backend: B, now: Time) -> usize {
+        let j = self.engines.len();
+        let engine = EngineCore::new(j, spec.engine_config(), backend);
+        let status = engine.status();
+        self.fleet.instances.push(spec);
+        self.base_capacity.push(status.capacity_tokens);
+        self.status_buf.push(status);
+        self.status_dirty.push(true);
+        self.applied_pressure.push(1.0);
+        self.instance_state.push(InstanceState::Active);
+        self.engines.push(engine);
+        self.scale_log.push(ScaleEvent {
+            at: now,
+            instance: j,
+            kind: ScaleEventKind::Grow,
+            dispatch_seq: self.dispatch_log.len(),
+        });
+        self.refresh_statuses(now);
+        self.dispatcher.on_fleet_change(&self.status_buf);
+        j
+    }
+
+    /// Begin retiring instance `j`: it stops accepting dispatches
+    /// immediately, its in-flight requests (engine queue + running batch)
+    /// run to completion, and once idle its counters fold into the run
+    /// metrics and the slot becomes a tombstone.
+    pub fn retire_instance(&mut self, j: usize, now: Time) -> Result<(), String> {
+        if j >= self.engines.len() {
+            return Err(format!("no instance {j} in a fleet of {}", self.engines.len()));
+        }
+        if self.instance_state[j] != InstanceState::Active {
+            return Err(format!("instance {j} is already {:?}", self.instance_state[j]));
+        }
+        self.instance_state[j] = InstanceState::Draining;
+        self.status_dirty[j] = true;
+        self.scale_log.push(ScaleEvent {
+            at: now,
+            instance: j,
+            kind: ScaleEventKind::RetireStart,
+            dispatch_seq: self.dispatch_log.len(),
+        });
+        self.refresh_statuses(now);
+        self.dispatcher.on_fleet_change(&self.status_buf);
+        // An idle instance retires on the spot.
+        self.finalize_drained(now);
+        Ok(())
+    }
+
+    /// Complete the retirement of any draining instance that has gone
+    /// idle: fold its counters and tombstone the slot. Called after every
+    /// absorb/refresh; drivers call it once more at end of run.
+    pub fn finalize_drained(&mut self, now: Time) {
+        for j in 0..self.engines.len() {
+            if self.instance_state[j] != InstanceState::Draining
+                || self.engines[j].has_work()
+            {
+                continue;
+            }
+            // Fold-and-zero keeps the end-of-run counter sweep idempotent.
+            self.metrics.recomputed_tokens += self.engines[j].recomputed_tokens;
+            self.engines[j].recomputed_tokens = 0;
+            self.instance_state[j] = InstanceState::Retired;
+            self.status_dirty[j] = true;
+            self.scale_log.push(ScaleEvent {
+                at: now,
+                instance: j,
+                kind: ScaleEventKind::RetireDone,
+                dispatch_seq: self.dispatch_log.len(),
+            });
+        }
     }
 
     /// Whether any stage is queued, resident in an engine, or mid-workflow.
@@ -504,19 +698,47 @@ impl<B: ExecBackend> Coordinator<B> {
         }
     }
 
-    /// Refresh stale entries of the status snapshot in place.
-    fn refresh_statuses(&mut self) {
-        for (j, dirty) in self.status_dirty.iter_mut().enumerate() {
-            if *dirty {
-                self.status_buf[j] = self.engines[j].status();
-                *dirty = false;
+    /// Refresh stale entries of the status snapshot in place. An entry is
+    /// stale when its engine changed since the last pump OR its co-tenant
+    /// pressure multiplier moved; everything else is reused untouched (no
+    /// per-pump allocation — see `benches/bench_overhead.rs`).
+    fn refresh_statuses(&mut self, now: Time) {
+        for j in 0..self.engines.len() {
+            // Retired tombstones are frozen (idle, non-accepting): skip
+            // them entirely so dead slots cost nothing per refresh beyond
+            // this state check. (Note: the engine itself is ~counters only
+            // — the sim's BlockManager holds no real pool — and reusing
+            // tombstone slots is a ROADMAP open item.)
+            if self.instance_state[j] == InstanceState::Retired && !self.status_dirty[j]
+            {
+                continue;
+            }
+            let mult =
+                self.pressure.as_ref().map_or(1.0, |p| p.multiplier(j, now));
+            if self.status_dirty[j] || mult != self.applied_pressure[j] {
+                self.refresh_one(j, mult);
             }
         }
     }
 
-    /// The current per-instance status snapshot (refreshing stale entries).
-    pub fn statuses(&mut self) -> &[InstanceStatus] {
-        self.refresh_statuses();
+    /// Rebuild one snapshot entry from its engine, applying the given
+    /// pressure multiplier and the slot's lifecycle state.
+    fn refresh_one(&mut self, j: usize, mult: f64) {
+        let mut st = self.engines[j].status();
+        self.base_capacity[j] = st.capacity_tokens;
+        if mult != 1.0 {
+            st.capacity_tokens = ((st.capacity_tokens as f64) * mult).max(1.0) as u64;
+        }
+        st.accepting = self.instance_state[j] == InstanceState::Active;
+        self.status_buf[j] = st;
+        self.status_dirty[j] = false;
+        self.applied_pressure[j] = mult;
+    }
+
+    /// The per-instance status snapshot at time `now` (refreshing stale
+    /// entries and re-sampling the pressure trace).
+    pub fn statuses(&mut self, now: Time) -> &[InstanceStatus] {
+        self.refresh_statuses(now);
         &self.status_buf
     }
 
@@ -530,7 +752,7 @@ impl<B: ExecBackend> Coordinator<B> {
         if self.queue.is_empty() {
             return woken;
         }
-        self.refresh_statuses();
+        self.refresh_statuses(now);
         loop {
             if self.queue.is_empty() {
                 return woken;
@@ -538,9 +760,27 @@ impl<B: ExecBackend> Coordinator<B> {
             let Some(best) = self.queue.peek_best() else {
                 return woken;
             };
-            // A prompt that can never fit any instance is rejected outright.
+            // A prompt that can never fit any accepting instance — judged
+            // against the PHYSICAL pools, so a transient co-tenant squeeze
+            // only defers — is rejected outright. With every instance
+            // draining there is nothing to judge against: defer instead.
             let need_tokens = best.prompt_tokens as u64 + 1;
-            if self.status_buf.iter().all(|s| need_tokens > s.capacity_tokens) {
+            let mut any_accepting = false;
+            let mut could_ever_fit = false;
+            for (j, s) in self.status_buf.iter().enumerate() {
+                if !s.accepting {
+                    continue;
+                }
+                any_accepting = true;
+                if need_tokens <= self.base_capacity[j] {
+                    could_ever_fit = true;
+                    break;
+                }
+            }
+            if !any_accepting {
+                return woken;
+            }
+            if !could_ever_fit {
                 let req = self.queue.pop_best().unwrap();
                 self.pending.remove(&req.id);
                 self.workflows.remove(&req.msg_id);
@@ -550,11 +790,19 @@ impl<B: ExecBackend> Coordinator<B> {
             let Some(j) = self.dispatcher.choose(best, &self.status_buf, now) else {
                 return woken;
             };
+            // Safety net over the policies' own filtering: work must never
+            // land on an instance that is draining or retired.
+            assert!(
+                j < self.engines.len() && self.status_buf[j].accepting,
+                "dispatcher chose non-accepting instance {j}"
+            );
             let req = self.queue.pop_best().expect("peeked request still queued");
             self.dispatch_log.push((req.id, j));
             self.dispatcher.on_dispatch(&req, j, now);
             self.engines[j].submit(req, now);
-            self.status_buf[j] = self.engines[j].status();
+            // Rebuild through refresh_one so pressure scaling and the
+            // accepting flag survive the in-loop snapshot update.
+            self.refresh_one(j, self.applied_pressure[j]);
             if !woken.contains(&j) {
                 woken.push(j);
             }
@@ -587,6 +835,9 @@ impl<B: ExecBackend> Coordinator<B> {
             self.handle_completion(seq, j, now);
         }
         self.status_dirty[j] = true;
+        // A draining instance whose last in-flight request just finished
+        // retires here.
+        self.finalize_drained(now);
         Absorbed { completed: out.completed, preempted: out.preempted }
     }
 
@@ -665,15 +916,71 @@ impl<B: ExecBackend> Coordinator<B> {
 
     /// Periodic priority/profile refresh (paper §7.7: fixed intervals,
     /// asynchronous): recompute policy and dispatcher state from the
-    /// orchestrator, re-key the central queue, and mark every engine-side
-    /// queue stale.
-    pub fn refresh(&mut self, _now: Time) {
+    /// orchestrator, re-key the central queue, mark every engine-side
+    /// queue stale — and give the elastic-fleet machinery its tick
+    /// (completing drains, consulting the autoscaler).
+    pub fn refresh(&mut self, now: Time) {
         self.policy.refresh(&self.orch);
         self.dispatcher.refresh(&self.orch);
         self.queue.resort(self.policy.as_ref());
         for e in self.engines.iter_mut() {
             e.waiting_dirty = true;
         }
+        self.finalize_drained(now);
+        self.autoscale(now);
+    }
+
+    /// Mean queuing-time ratio of requests finished since the previous
+    /// autoscale observation (the paper's load-calibration metric, here as
+    /// the scale-up pressure signal).
+    fn recent_queue_ratio(&mut self) -> f64 {
+        let reqs = &self.metrics.requests;
+        let start = self.scaler_seen_requests.min(reqs.len());
+        let window = &reqs[start..];
+        self.scaler_seen_requests = reqs.len();
+        if window.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = window
+            .iter()
+            .map(|r| {
+                let e2e = (r.finished_at - r.stage_arrival).max(1e-9);
+                (r.queue_time() / e2e).clamp(0.0, 1.0)
+            })
+            .sum();
+        sum / window.len() as f64
+    }
+
+    /// Consult the autoscaling policy and apply its decision: grow with
+    /// the backend factory, or start draining the highest-index active
+    /// instance (deterministic, so both drivers make identical choices).
+    fn autoscale(&mut self, now: Time) {
+        let Some(mut scaler) = self.autoscaler.take() else { return };
+        let obs = FleetObservation {
+            queue_len: self.queue.len(),
+            active_instances: self.active_instances(),
+            draining_instances: self.draining_instances(),
+            recent_queue_ratio: self.recent_queue_ratio(),
+            can_grow: self.make_backend.is_some(),
+        };
+        match scaler.observe(&obs, now) {
+            Some(ScaleAction::Grow) => {
+                let spec = scaler.config().template;
+                // observe() only emits Grow when `can_grow` held, so the
+                // factory is present and this cannot fail.
+                let _ = self.add_instance(spec, now);
+            }
+            Some(ScaleAction::Shrink) => {
+                if let Some(j) = (0..self.instance_state.len())
+                    .rev()
+                    .find(|&j| self.instance_state[j] == InstanceState::Active)
+                {
+                    let _ = self.retire_instance(j, now);
+                }
+            }
+            None => {}
+        }
+        self.autoscaler = Some(scaler);
     }
 
     /// Sum per-engine counters into the metrics (end of run).
@@ -807,6 +1114,123 @@ mod tests {
         assert_eq!(woken.len(), 2);
         let picks: Vec<usize> = c.dispatch_log.iter().map(|&(_, j)| j).collect();
         assert_eq!(picks, vec![0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn add_instance_registers_live_and_receives_work() {
+        let mut c = Coordinator::sim(
+            small_fleet(1, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        let spec = InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(0.12);
+        let j = c.add_instance(spec, 1.0).unwrap();
+        assert_eq!(j, 1);
+        assert_eq!(c.n_instances(), 2);
+        assert_eq!(c.active_instances(), 2);
+        assert_eq!(c.fleet.len(), 2);
+        assert_eq!(c.scale_log.len(), 1);
+        assert_eq!(c.scale_log[0].kind, ScaleEventKind::Grow);
+        // Round-robin immediately alternates across both instances.
+        for i in 0..4 {
+            c.submit_external("A", 16, 4, 1.0 + i as f64 * 0.001);
+        }
+        let woken = c.pump(1.1);
+        assert_eq!(woken.len(), 2, "new instance takes traffic");
+        let picks: Vec<usize> = c.dispatch_log.iter().map(|&(_, j)| j).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn retire_drains_then_folds_with_no_lost_requests() {
+        let mut c = Coordinator::sim(
+            small_fleet(2, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        for i in 0..4 {
+            c.submit_external("A", 32, 6, i as f64 * 0.001);
+        }
+        c.pump(0.1);
+        assert_eq!(c.dispatch_log.len(), 4);
+        // Instance 1 has in-flight work: retirement must drain, not drop.
+        c.retire_instance(1, 0.2).unwrap();
+        assert_eq!(c.instance_state(1), InstanceState::Draining);
+        assert!(c.retire_instance(1, 0.2).is_err(), "double retire rejected");
+        let before = c.dispatch_log.len();
+        // New work only lands on instance 0 while 1 drains.
+        for i in 0..3 {
+            c.submit_external("B", 16, 4, 0.3 + i as f64 * 0.001);
+        }
+        let woken = c.pump(0.4);
+        assert_eq!(woken, vec![0]);
+        assert!(c.dispatch_log[before..].iter().all(|&(_, j)| j == 0));
+        // Run both engines to completion; the drained instance retires.
+        let mut now = 0.4;
+        for _ in 0..200 {
+            let mut idle = true;
+            for j in 0..c.n_instances() {
+                if !c.engines[j].has_work() {
+                    continue;
+                }
+                idle = false;
+                let out = c.step_engine(j, now);
+                now += out.duration.max(1e-6);
+                c.absorb(j, out, now);
+            }
+            c.pump(now);
+            if idle {
+                break;
+            }
+        }
+        assert_eq!(c.instance_state(1), InstanceState::Retired);
+        assert_eq!(c.dropped, 0, "draining must not drop in-flight requests");
+        assert_eq!(c.metrics.requests.len(), 7, "every request completed");
+        assert!(c
+            .scale_log
+            .iter()
+            .any(|e| e.kind == ScaleEventKind::RetireDone && e.instance == 1));
+    }
+
+    #[test]
+    fn no_accepting_instances_defers_instead_of_dropping() {
+        let mut c = Coordinator::sim(
+            small_fleet(1, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        c.retire_instance(0, 0.0).unwrap();
+        c.submit_external("A", 32, 4, 0.1);
+        let woken = c.pump(0.2);
+        assert!(woken.is_empty());
+        assert_eq!(c.dropped, 0, "deferred, not dropped");
+        assert_eq!(c.queue.len(), 1);
+    }
+
+    #[test]
+    fn pressure_trace_moves_visible_capacity_but_not_drop_rule() {
+        use crate::server::pressure::PressureTrace;
+        let mut c = Coordinator::sim(
+            small_fleet(1, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        let full = c.statuses(0.0)[0].capacity_tokens;
+        c.set_pressure(PressureTrace::parse("*:10=0.5,20=1.0").unwrap());
+        assert_eq!(c.statuses(0.0)[0].capacity_tokens, full, "no pressure yet");
+        let squeezed = c.statuses(10.0)[0].capacity_tokens;
+        assert!(
+            squeezed < full && squeezed >= full / 2 - 1,
+            "squeezed={squeezed} full={full}"
+        );
+        assert_eq!(c.statuses(25.0)[0].capacity_tokens, full, "pressure lifted");
+        // A request larger than the squeezed budget but within the
+        // physical pool is deferred by dispatch, never dropped outright.
+        c.set_pressure(PressureTrace::parse("*:0=0.01").unwrap());
+        let prompt = (full / 2) as u32;
+        c.submit_external("A", prompt, 4, 0.0);
+        c.pump(0.0);
+        assert_eq!(c.dropped, 0, "transient squeeze must not drop");
     }
 
     #[test]

@@ -10,10 +10,23 @@
 //! * [`real`] — the wall-clock driver: the same coordinator driving real
 //!   PJRT compute (the AOT-compiled tiny model) for the end-to-end
 //!   quickstart.
+//! * [`autoscale`] — the elastic-fleet policy: queue-depth / queuing-ratio
+//!   thresholds with hysteresis deciding when the coordinator grows the
+//!   fleet or drains an instance back out.
+//! * [`pressure`] — co-tenant memory-pressure traces: piecewise
+//!   `kv_scale` multipliers that vary each instance's visible KV budget
+//!   over time.
 
+pub mod autoscale;
 pub mod coordinator;
+pub mod pressure;
 pub mod real;
 pub mod sim;
 
-pub use coordinator::{Clock, Coordinator, FleetSpec, InstanceSpec, ManualClock, WallClock};
+pub use autoscale::{AutoscaleConfig, Autoscaler, FleetObservation, ScaleAction};
+pub use coordinator::{
+    Clock, Coordinator, FleetSpec, InstanceSpec, InstanceState, ManualClock, ScaleEvent,
+    ScaleEventKind, WallClock,
+};
+pub use pressure::PressureTrace;
 pub use sim::{FleetConfig, SimConfig, SimResult, SimServer};

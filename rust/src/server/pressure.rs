@@ -1,0 +1,200 @@
+//! Co-tenant memory-pressure traces.
+//!
+//! In the paper's public cloud, each serving instance shares its GPU with
+//! co-tenant jobs whose memory footprint moves over time — the KV budget a
+//! dispatcher can actually use is not a constant. A [`PressureTrace`] is a
+//! piecewise-constant multiplier on each instance's KV capacity over time:
+//! the coordinator samples it whenever it refreshes the per-instance
+//! status snapshot and scales [`InstanceStatus::capacity_tokens`]
+//! accordingly, so the memory-aware dispatchers pack against the *moving*
+//! budgets instead of the construction-time ones.
+//!
+//! [`InstanceStatus::capacity_tokens`]: crate::engine::core::InstanceStatus::capacity_tokens
+//!
+//! Trace grammar (CLI `--pressure`, config `[pressure] trace = "..."`):
+//! `;`-separated entries of `TARGET:TIME=MULT,TIME=MULT,...` where TARGET
+//! is an instance index or `*` (every instance without its own entry), the
+//! times ascend, and each multiplier (> 0) applies from its time until the
+//! next step. Example — all instances squeezed to 50% between t=30 s and
+//! t=90 s while instance 2 is permanently down to 80%:
+//!
+//! ```text
+//! *:0=1.0,30=0.5,90=1.0;2:0=0.8
+//! ```
+
+use std::collections::HashMap;
+
+use crate::Time;
+
+/// Piecewise-constant per-instance `kv_scale` multipliers over time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PressureTrace {
+    /// Steps applying to every instance without a per-instance override.
+    global: Vec<(Time, f64)>,
+    /// Per-instance overrides (instance index → steps).
+    per: HashMap<usize, Vec<(Time, f64)>>,
+}
+
+fn step_at(steps: &[(Time, f64)], t: Time) -> f64 {
+    let mut m = 1.0;
+    for &(at, v) in steps {
+        if t >= at {
+            m = v;
+        } else {
+            break;
+        }
+    }
+    m
+}
+
+fn parse_steps(s: &str, entry: &str) -> Result<Vec<(Time, f64)>, String> {
+    let mut steps: Vec<(Time, f64)> = Vec::new();
+    for raw in s.split(',') {
+        let part = raw.trim();
+        let (t, m) = part
+            .split_once('=')
+            .ok_or_else(|| format!("expected TIME=MULT, got {part:?} in {entry:?}"))?;
+        let t: Time = t
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad time {t:?} in {entry:?}"))?;
+        let m: f64 = m
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad multiplier {m:?} in {entry:?}"))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(format!("bad time {t} in {entry:?}"));
+        }
+        if !m.is_finite() || m <= 0.0 || m > 1.0 {
+            // A co-tenant can only take capacity away: multipliers above
+            // 1.0 would report more KV than the engine physically has and
+            // drive the memory-aware dispatchers into preemption storms.
+            return Err(format!("multiplier must be in (0, 1], got {m} in {entry:?}"));
+        }
+        if let Some(&(prev, _)) = steps.last() {
+            if t <= prev {
+                return Err(format!("times must ascend in {entry:?}"));
+            }
+        }
+        steps.push((t, m));
+    }
+    Ok(steps)
+}
+
+impl PressureTrace {
+    /// Parse the compact trace grammar (see module docs).
+    pub fn parse(s: &str) -> Result<PressureTrace, String> {
+        let mut trace = PressureTrace::default();
+        for raw in s.split(';') {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                return Err(format!("empty pressure entry in {s:?}"));
+            }
+            let (target, steps) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("expected TARGET:STEPS, got {entry:?}"))?;
+            let steps = parse_steps(steps, entry)?;
+            if steps.is_empty() {
+                return Err(format!("no steps in {entry:?}"));
+            }
+            match target.trim() {
+                "*" => {
+                    if !trace.global.is_empty() {
+                        return Err(format!("duplicate `*` entry in {s:?}"));
+                    }
+                    trace.global = steps;
+                }
+                idx => {
+                    let j: usize = idx
+                        .parse()
+                        .map_err(|_| format!("bad instance index {idx:?} in {entry:?}"))?;
+                    if trace.per.insert(j, steps).is_some() {
+                        return Err(format!("duplicate entry for instance {j} in {s:?}"));
+                    }
+                }
+            }
+        }
+        Ok(trace)
+    }
+
+    /// A trace applying the same steps to every instance.
+    pub fn uniform(steps: Vec<(Time, f64)>) -> PressureTrace {
+        PressureTrace { global: steps, per: HashMap::new() }
+    }
+
+    /// Override the steps of one instance (builder style).
+    pub fn with_instance(mut self, instance: usize, steps: Vec<(Time, f64)>) -> Self {
+        self.per.insert(instance, steps);
+        self
+    }
+
+    /// Capacity multiplier of `instance` at time `t`. A per-instance entry
+    /// overrides the `*` steps; the `*` steps apply to every other
+    /// instance, including ones the autoscaler adds later. 1.0 before the
+    /// first applicable step and for instances no entry covers.
+    pub fn multiplier(&self, instance: usize, t: Time) -> f64 {
+        match self.per.get(&instance) {
+            Some(steps) => step_at(steps, t),
+            None => step_at(&self.global, t),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.global.is_empty() && self.per.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_global_and_overrides() {
+        let p = PressureTrace::parse("*:0=1.0,30=0.5,90=1.0;2:0=0.8").unwrap();
+        assert_eq!(p.multiplier(0, 0.0), 1.0);
+        assert_eq!(p.multiplier(0, 30.0), 0.5);
+        assert_eq!(p.multiplier(0, 89.9), 0.5);
+        assert_eq!(p.multiplier(0, 90.0), 1.0);
+        // Instance 2 is fully overridden — the global squeeze ignores it.
+        assert_eq!(p.multiplier(2, 45.0), 0.8);
+        // `*` covers instances beyond the overrides too — including ones
+        // the autoscaler registers later.
+        assert_eq!(p.multiplier(7, 45.0), 0.5);
+        // Without a `*` entry, untraced instances see no pressure.
+        let q = PressureTrace::parse("0:0=0.5").unwrap();
+        assert_eq!(q.multiplier(7, 45.0), 1.0);
+    }
+
+    #[test]
+    fn before_first_step_is_unpressured() {
+        let p = PressureTrace::parse("0:10=0.5").unwrap();
+        assert_eq!(p.multiplier(0, 5.0), 1.0);
+        assert_eq!(p.multiplier(0, 10.0), 0.5);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(PressureTrace::parse("").is_err());
+        assert!(PressureTrace::parse("*:").is_err());
+        assert!(PressureTrace::parse("*:0=0").is_err(), "zero multiplier");
+        assert!(PressureTrace::parse("*:0=-0.5").is_err());
+        assert!(
+            PressureTrace::parse("*:0=1.5").is_err(),
+            "co-tenants cannot add capacity"
+        );
+        assert!(PressureTrace::parse("*:5=0.5,5=0.6").is_err(), "non-ascending");
+        assert!(PressureTrace::parse("*:0=1;*:0=0.5").is_err(), "duplicate *");
+        assert!(PressureTrace::parse("x:0=1").is_err(), "bad index");
+        assert!(PressureTrace::parse("0:0=1;0:1=0.5").is_err(), "duplicate index");
+        assert!(PressureTrace::parse("*:nope").is_err());
+    }
+
+    #[test]
+    fn uniform_builder_matches_parse() {
+        let a = PressureTrace::uniform(vec![(0.0, 1.0), (30.0, 0.5)]);
+        let b = PressureTrace::parse("*:0=1.0,30=0.5").unwrap();
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert!(PressureTrace::default().is_empty());
+    }
+}

@@ -16,7 +16,9 @@ use crate::engine::core::{SimBackend, StepOutcome};
 use crate::engine::cost_model::ModelKind;
 use crate::lb::policies::SchedulePolicy;
 use crate::metrics::{MetricsCollector, RunSummary};
-use crate::server::coordinator::{Coordinator, FleetSpec, InstanceSpec};
+use crate::server::autoscale::{AutoscaleConfig, Autoscaler};
+use crate::server::coordinator::{Coordinator, FleetSpec, InstanceSpec, ScaleEvent};
+use crate::server::pressure::PressureTrace;
 use crate::simcore::EventQueue;
 use crate::workload::ArrivalEvent;
 use crate::Time;
@@ -74,12 +76,17 @@ impl SimConfig {
 }
 
 /// Full simulation configuration: an arbitrary (possibly heterogeneous)
-/// fleet plus the run parameters.
+/// fleet plus the run parameters, optionally elastic (autoscaling) and
+/// under a time-varying co-tenant pressure trace.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
     pub fleet: FleetSpec,
     pub refresh_interval: f64,
     pub warmup_frac: f64,
+    /// When set, the coordinator grows/drains the fleet on refresh ticks.
+    pub autoscale: Option<AutoscaleConfig>,
+    /// When set, per-instance KV budgets move over time.
+    pub pressure: Option<PressureTrace>,
 }
 
 impl From<SimConfig> for FleetConfig {
@@ -88,6 +95,8 @@ impl From<SimConfig> for FleetConfig {
             fleet: cfg.fleet(),
             refresh_interval: cfg.refresh_interval,
             warmup_frac: cfg.warmup_frac,
+            autoscale: None,
+            pressure: None,
         }
     }
 }
@@ -99,6 +108,8 @@ impl From<FleetSpec> for FleetConfig {
             fleet,
             refresh_interval: d.refresh_interval,
             warmup_frac: d.warmup_frac,
+            autoscale: None,
+            pressure: None,
         }
     }
 }
@@ -115,6 +126,28 @@ pub struct SimResult {
     pub dispatcher_name: &'static str,
     /// Every dispatch decision `(request, instance)` in order.
     pub dispatch_log: Vec<(u64, usize)>,
+    /// Every fleet change (grow / drain start / drain done), in order.
+    pub scale_log: Vec<ScaleEvent>,
+    /// Instances still active when the run ended.
+    pub final_active_instances: usize,
+}
+
+impl SimResult {
+    /// `(grows, completed retirements)` of the run's scale log.
+    pub fn scale_counts(&self) -> (usize, usize) {
+        use crate::server::coordinator::ScaleEventKind;
+        let grows = self
+            .scale_log
+            .iter()
+            .filter(|e| e.kind == ScaleEventKind::Grow)
+            .count();
+        let retires = self
+            .scale_log
+            .iter()
+            .filter(|e| e.kind == ScaleEventKind::RetireDone)
+            .count();
+        (grows, retires)
+    }
 }
 
 enum Ev {
@@ -141,13 +174,21 @@ impl SimServer {
         SimServer::with_fleet(cfg.into(), policy, dispatcher)
     }
 
-    /// Build a driver over an arbitrary (possibly heterogeneous) fleet.
+    /// Build a driver over an arbitrary (possibly heterogeneous) fleet,
+    /// elastic when the config carries an autoscaler, under co-tenant
+    /// pressure when it carries a trace.
     pub fn with_fleet(
         cfg: FleetConfig,
         policy: Box<dyn SchedulePolicy>,
         dispatcher: Box<dyn DispatchPolicy>,
     ) -> SimServer {
-        let coord = Coordinator::sim(cfg.fleet.clone(), policy, dispatcher);
+        let mut coord = Coordinator::sim(cfg.fleet.clone(), policy, dispatcher);
+        if let Some(a) = cfg.autoscale {
+            coord.set_autoscaler(Autoscaler::new(a));
+        }
+        if let Some(p) = cfg.pressure.clone() {
+            coord.set_pressure(p);
+        }
         let n = coord.n_instances();
         SimServer { cfg, coord, engine_busy: vec![false; n] }
     }
@@ -210,6 +251,12 @@ impl SimServer {
                 }
                 Ev::Refresh => {
                     self.coord.refresh(now);
+                    // The autoscaler may have grown the fleet on this tick:
+                    // track the new engines before waking anything.
+                    let n = self.coord.n_instances();
+                    if self.engine_busy.len() < n {
+                        self.engine_busy.resize(n, false);
+                    }
                     // Re-keyed priorities may unblock deferred requests:
                     // give them a dispatch chance without waiting for the
                     // next completion.
@@ -224,8 +271,11 @@ impl SimServer {
             }
         }
 
-        self.coord.fold_engine_counters();
         let sim_duration = events.now();
+        // Close out any instance still draining when the trace ended, then
+        // sweep the (idempotent) per-engine counters.
+        self.coord.finalize_drained(sim_duration);
+        self.coord.fold_engine_counters();
         let summary = self
             .coord
             .metrics
@@ -240,6 +290,8 @@ impl SimServer {
             scheduler_name: self.coord.policy.name(),
             dispatcher_name: self.coord.dispatcher.name(),
             dispatch_log: std::mem::take(&mut self.coord.dispatch_log),
+            scale_log: std::mem::take(&mut self.coord.scale_log),
+            final_active_instances: self.coord.active_instances(),
             metrics: self.coord.metrics,
         }
     }

@@ -11,10 +11,14 @@ pub struct Ecdf {
 }
 
 impl Ecdf {
-    /// Build from samples; must be non-empty.
+    /// Build from samples; must be non-empty. The sort is total, so a
+    /// stray NaN sample no longer panics the caller (the scheduler
+    /// refresh builds these from live profiles); NaN of either sign sorts
+    /// last (raw `total_cmp` would put negative NaN first and poison the
+    /// low quantiles).
     pub fn new(mut samples: Vec<f64>) -> Ecdf {
         assert!(!samples.is_empty(), "ECDF needs at least one sample");
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.is_nan().cmp(&b.is_nan()).then(a.total_cmp(b)));
         Ecdf { sorted: samples }
     }
 
@@ -261,6 +265,18 @@ mod tests {
     #[should_panic]
     fn empty_panics() {
         Ecdf::new(vec![]);
+    }
+
+    #[test]
+    fn nan_sample_sorts_last_instead_of_panicking() {
+        // Both NaN signs: the negative quiet NaN real 0.0/0.0 arithmetic
+        // produces must not land FIRST (total_cmp orders by sign bit).
+        let e = Ecdf::new(vec![1.0, f64::NAN, 0.5, -f64::NAN]);
+        assert_eq!(e.len(), 4);
+        assert_eq!(e.samples()[0], 0.5);
+        assert_eq!(e.samples()[1], 1.0);
+        assert!(e.samples()[2].is_nan());
+        assert!(e.samples()[3].is_nan());
     }
 
     #[test]

@@ -9,13 +9,16 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Build from raw samples. Returns `None` for an empty input.
+    /// Build from raw samples. Returns `None` for an empty input. The sort
+    /// is total: a NaN sample (e.g. from a degenerate latency record)
+    /// sorts last — either sign; raw `total_cmp` would put negative NaN
+    /// first — instead of panicking mid-report.
     pub fn from_samples(samples: &[f64]) -> Option<Summary> {
         if samples.is_empty() {
             return None;
         }
         let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.is_nan().cmp(&b.is_nan()).then(a.total_cmp(b)));
         let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
         Some(Summary { sorted, mean })
     }
@@ -153,6 +156,14 @@ mod tests {
             assert!(v >= prev);
             prev = v;
         }
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic() {
+        let s = Summary::from_samples(&[2.0, f64::NAN, 1.0, -f64::NAN]).unwrap();
+        assert_eq!(s.min(), 1.0, "negative NaN must not displace the min");
+        assert!(s.max().is_nan(), "NaN sorts last");
+        assert_eq!(s.len(), 4);
     }
 
     #[test]

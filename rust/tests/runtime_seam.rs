@@ -8,7 +8,11 @@
 //! through `InstanceStatus` into the dispatchers from both drivers.
 
 use kairos::engine::core::StepOutcome;
-use kairos::server::coordinator::{Clock, Coordinator, FleetSpec, ManualClock};
+use kairos::server::autoscale::{AutoscaleConfig, Autoscaler};
+use kairos::server::coordinator::{
+    Clock, Coordinator, FleetSpec, ManualClock, ScaleEventKind,
+};
+use kairos::server::pressure::PressureTrace;
 use kairos::server::sim::{
     make_dispatcher_for_fleet, make_policy, run_fleet, FleetConfig,
 };
@@ -19,10 +23,27 @@ fn trace(rate: f64, n: usize, seed: u64) -> Vec<ArrivalEvent> {
     TraceGen::default().generate(&WorkloadMix::colocated(), rate, n, &mut Rng::new(seed))
 }
 
-/// Outcome of one driver run, reduced to the seam contract.
+/// A burst (overload) followed by a calm tail — the shape that makes an
+/// autoscaler grow and then drain back down.
+fn burst_then_calm(seed: u64) -> Vec<ArrivalEvent> {
+    let gen = TraceGen::default();
+    let mut rng = Rng::new(seed);
+    let mut arrivals = gen.generate(&WorkloadMix::colocated(), 14.0, 260, &mut rng);
+    let burst_end = arrivals.last().map(|a| a.at).unwrap_or(0.0);
+    for mut a in gen.generate(&WorkloadMix::colocated(), 0.8, 60, &mut rng) {
+        a.at += burst_end;
+        arrivals.push(a);
+    }
+    arrivals
+}
+
+/// Outcome of one driver run, reduced to the seam contract. Scale events
+/// are compared by (kind, instance, dispatch-log position): both drivers
+/// must reshape the fleet at the same points of the dispatch stream.
 #[derive(Debug, PartialEq)]
 struct DriverTrace {
     dispatch_log: Vec<(u64, usize)>,
+    scale_log: Vec<(ScaleEventKind, usize, usize)>,
     dropped: u64,
     workflows_completed: usize,
     requests_completed: usize,
@@ -35,14 +56,28 @@ fn drive_sim(
     dispatcher: &str,
     arrivals: Vec<ArrivalEvent>,
 ) -> DriverTrace {
-    let res = run_fleet(
-        FleetConfig::from(fleet.clone()),
-        scheduler,
-        dispatcher,
-        arrivals,
-    );
+    drive_sim_elastic(fleet, scheduler, dispatcher, arrivals, None, None)
+}
+
+fn drive_sim_elastic(
+    fleet: &FleetSpec,
+    scheduler: &str,
+    dispatcher: &str,
+    arrivals: Vec<ArrivalEvent>,
+    autoscale: Option<AutoscaleConfig>,
+    pressure: Option<PressureTrace>,
+) -> DriverTrace {
+    let mut cfg = FleetConfig::from(fleet.clone());
+    cfg.autoscale = autoscale;
+    cfg.pressure = pressure;
+    let res = run_fleet(cfg, scheduler, dispatcher, arrivals);
     DriverTrace {
         dispatch_log: res.dispatch_log,
+        scale_log: res
+            .scale_log
+            .iter()
+            .map(|e| (e.kind, e.instance, e.dispatch_seq))
+            .collect(),
         dropped: res.dropped_requests,
         workflows_completed: res.metrics.workflows.len(),
         requests_completed: res.metrics.requests.len(),
@@ -62,11 +97,29 @@ fn drive_polling(
     arrivals: Vec<ArrivalEvent>,
     refresh_interval: f64,
 ) -> DriverTrace {
+    drive_polling_elastic(fleet, scheduler, dispatcher, arrivals, refresh_interval, None, None)
+}
+
+fn drive_polling_elastic(
+    fleet: &FleetSpec,
+    scheduler: &str,
+    dispatcher: &str,
+    arrivals: Vec<ArrivalEvent>,
+    refresh_interval: f64,
+    autoscale: Option<AutoscaleConfig>,
+    pressure: Option<PressureTrace>,
+) -> DriverTrace {
     let mut coord = Coordinator::sim(
         fleet.clone(),
         make_policy(scheduler),
         make_dispatcher_for_fleet(dispatcher, fleet),
     );
+    if let Some(a) = autoscale {
+        coord.set_autoscaler(Autoscaler::new(a));
+    }
+    if let Some(p) = pressure {
+        coord.set_pressure(p);
+    }
     let clock = ManualClock::new();
     let n = coord.n_instances();
     // Per-engine in-flight iteration: completes at `.0`, with outcome `.1`.
@@ -127,6 +180,10 @@ fn drive_polling(
             start_idle(&mut coord, &mut in_flight, now);
         } else {
             coord.refresh(now);
+            // The autoscaler may have grown the fleet on this tick.
+            while in_flight.len() < coord.n_instances() {
+                in_flight.push(None);
+            }
             coord.pump(now);
             start_idle(&mut coord, &mut in_flight, now);
             let more = next_arrival < arrivals.len()
@@ -139,8 +196,17 @@ fn drive_polling(
         }
     }
 
+    // Mirror the discrete-event driver: close out still-draining
+    // instances at end of run.
+    coord.finalize_drained(clock.now());
+
     DriverTrace {
         dispatch_log: std::mem::take(&mut coord.dispatch_log),
+        scale_log: coord
+            .scale_log
+            .iter()
+            .map(|e| (e.kind, e.instance, e.dispatch_seq))
+            .collect(),
         dropped: coord.dropped,
         workflows_completed: coord.metrics.workflows.len(),
         requests_completed: coord.metrics.requests.len(),
@@ -172,6 +238,89 @@ fn seam_holds_on_heterogeneous_fleet() {
     let b = drive_polling(&fleet, "kairos", "kairos", arrivals, 5.0);
     assert!(!a.dispatch_log.is_empty());
     assert_eq!(a, b);
+}
+
+fn elastic_config(fleet: &FleetSpec) -> AutoscaleConfig {
+    AutoscaleConfig {
+        min_instances: fleet.len(),
+        max_instances: fleet.len() + 2,
+        queue_high: 4.0,
+        queue_low: 1.0,
+        ratio_high: 0.6,
+        up_after: 1,
+        down_after: 2,
+        cooldown: 5.0,
+        template: fleet.instances[0],
+    }
+}
+
+#[test]
+fn fleet_resize_seam_holds_across_drivers() {
+    // The resize contract: the same trace + the same (deterministic,
+    // refresh-driven) scale events through the event-driven and polling
+    // drivers produce identical dispatch logs — and identical fleet
+    // reshaping relative to the dispatch stream.
+    let fleet = FleetSpec::parse("2*llama3-8b@0.12").unwrap();
+    let auto = elastic_config(&fleet);
+    let pressure = PressureTrace::parse("*:0=1.0,15=0.7,45=1.0").unwrap();
+    let arrivals = burst_then_calm(31);
+    let a = drive_sim_elastic(
+        &fleet,
+        "kairos",
+        "kairos",
+        arrivals.clone(),
+        Some(auto),
+        Some(pressure.clone()),
+    );
+    let b = drive_polling_elastic(
+        &fleet,
+        "kairos",
+        "kairos",
+        arrivals,
+        5.0,
+        Some(auto),
+        Some(pressure),
+    );
+    assert!(!a.dispatch_log.is_empty());
+    assert!(
+        a.scale_log.iter().any(|&(k, _, _)| k == ScaleEventKind::Grow),
+        "burst must grow the fleet: {:?}",
+        a.scale_log
+    );
+    assert_eq!(a, b, "drivers diverged over the elastic coordinator");
+}
+
+#[test]
+fn no_request_ever_dispatched_to_a_retired_instance() {
+    let fleet = FleetSpec::parse("2*llama3-8b@0.12").unwrap();
+    let auto = elastic_config(&fleet);
+    let res = {
+        let mut cfg = FleetConfig::from(fleet.clone());
+        cfg.autoscale = Some(auto);
+        run_fleet(cfg, "kairos", "kairos", burst_then_calm(32))
+    };
+    assert_eq!(res.dropped_requests, 0, "draining must not drop requests");
+    let retire_starts: Vec<_> = res
+        .scale_log
+        .iter()
+        .filter(|e| e.kind == ScaleEventKind::RetireStart)
+        .collect();
+    assert!(
+        !retire_starts.is_empty(),
+        "calm tail must drain the grown fleet: {:?}",
+        res.scale_log
+    );
+    // Slots never reactivate, so from each retire-start onward its
+    // instance must be absent from the dispatch log.
+    for ev in retire_starts {
+        assert!(
+            res.dispatch_log[ev.dispatch_seq..]
+                .iter()
+                .all(|&(_, j)| j != ev.instance),
+            "request dispatched to instance {} after its retirement",
+            ev.instance
+        );
+    }
 }
 
 #[test]
