@@ -7,7 +7,7 @@ mod common;
 
 use common::{bench, black_box};
 use kairos::engine::core::{EngineConfig, EngineCore, SimBackend};
-use kairos::engine::cost_model::{CostModel, ModelKind};
+use kairos::engine::cost_model::{CostModel, ModelClass, ModelKind};
 use kairos::engine::request::Request;
 use kairos::orchestrator::ids::AgentId;
 
@@ -16,6 +16,7 @@ fn mk_req(id: u64, prompt: u32, output: u32) -> Request {
         id,
         msg_id: id,
         agent: AgentId((id % 8) as u32),
+        model_class: ModelClass::Any,
         upstream: None,
         prompt_tokens: prompt,
         true_output_tokens: output,
@@ -28,7 +29,7 @@ fn mk_req(id: u64, prompt: u32, output: u32) -> Request {
 
 fn engine(max_batch: usize) -> EngineCore<SimBackend> {
     let cost = CostModel::new(ModelKind::Llama3_8B);
-    let mut cfg = EngineConfig::for_model(&cost, 16);
+    let mut cfg = EngineConfig::for_model(ModelKind::Llama3_8B, 16);
     cfg.max_batch = max_batch;
     EngineCore::new(0, cfg, SimBackend::new(cost))
 }
@@ -66,6 +67,7 @@ fn main() {
     bench("engine_lifecycle/preemption_pressure", 50, || {
         let cost = CostModel::new(ModelKind::Llama3_8B);
         let cfg = EngineConfig {
+            model: ModelKind::Llama3_8B,
             block_size: 16,
             total_blocks: 64,
             max_batch: 32,

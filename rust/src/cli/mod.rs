@@ -4,9 +4,11 @@
 //! kairos serve   [--config file.toml] [--scheduler S] [--dispatcher D]
 //!                [--rate R] [--tasks N] [--instances I] [--model M]
 //!                [--fleet SPEC] [--seed X] [--autoscale] [--pressure TRACE]
+//!                [--affinity SPEC]
 //! kairos fleet-sweep [--fleet SPEC] [--scheduler S] [--rate R] [--tasks N]
 //! kairos elastic-sweep [--fleet SPEC] [--rate R] [--tasks N] [--min N]
 //!                [--max N] [--pressure TRACE]
+//! kairos shard-sweep [--fleet SPEC] [--affinity SPEC] [--rate R] [--tasks N]
 //! kairos figures <id|all> [--out results/]
 //! kairos quickstart [--artifacts DIR] [--model NAME]
 //! ```
@@ -16,10 +18,11 @@ use std::collections::HashMap;
 use crate::agents::apps::App;
 use crate::config::ServingConfig;
 use crate::engine::cost_model::ModelKind;
+use crate::orchestrator::affinity::AffinitySpec;
 use crate::server::autoscale::AutoscaleConfig;
 use crate::server::coordinator::FleetSpec;
 use crate::server::pressure::PressureTrace;
-use crate::server::sim::{run_fleet, FleetConfig};
+use crate::server::sim::{run_fleet, FleetConfig, SimResult};
 use crate::stats::rng::Rng;
 use crate::workload::{TraceGen, WorkloadMix};
 
@@ -113,12 +116,15 @@ USAGE:
                      [--dispatcher kairos|rr|oracle|least] [--rate R]
                      [--tasks N] [--instances I] [--model llama3-8b|llama2-13b]
                      [--fleet SPEC] [--seed S] [--workload colocated|qa|rg|cg]
-                     [--autoscale] [--pressure TRACE]
+                     [--autoscale] [--pressure TRACE] [--affinity SPEC]
   kairos fleet-sweep [--fleet SPEC] [--scheduler S] [--rate R] [--tasks N]
                      [--seed S] [--workload W]
   kairos elastic-sweep
                      [--fleet SPEC] [--rate R] [--tasks N] [--seed S]
                      [--workload W] [--min N] [--max N] [--pressure TRACE]
+  kairos shard-sweep [--fleet SPEC] [--affinity SPEC] [--scheduler S]
+                     [--dispatcher D] [--rate R] [--tasks N] [--seed S]
+                     [--workload W]
   kairos figures     <table1|fig3..fig18|overhead|all> [--out results]
   kairos quickstart  [--artifacts artifacts] [--model tiny]
 
@@ -127,6 +133,13 @@ FLEET SPEC — comma-separated `[COUNT*]MODEL[@KV_SCALE][:MAX_BATCH]`, e.g.
   `llama3-8b,llama2-13b@0.5` (mixed models). Per-instance KV budgets flow
   to the dispatchers, so memory-aware policies pack each instance against
   its own capacity.
+
+AFFINITY SPEC — comma-separated `AGENT=CLASS` with CLASS a model name or
+  `any`; `*=CLASS` sets the default for unpinned agents, e.g.
+  `*=llama3-8b,Engineer=llama2-13b`. Pinned requests are routed through
+  per-model-family queue shards and only dispatch to instances of their
+  family; `shard-sweep` compares the sharded and unsharded configurations
+  on the same trace.
 
 PRESSURE TRACE — `;`-separated `TARGET:TIME=MULT,...` with TARGET an
   instance index or `*`: piecewise co-tenant KV-pressure multipliers, e.g.
@@ -142,6 +155,7 @@ pub fn run(raw: Vec<String>) -> crate::Result<()> {
         Some("serve") => serve(&args),
         Some("fleet-sweep") => fleet_sweep(&args),
         Some("elastic-sweep") => elastic_sweep(&args),
+        Some("shard-sweep") => shard_sweep(&args),
         Some("figures") => {
             let id = args
                 .positional
@@ -213,17 +227,16 @@ fn serve(args: &Args) -> crate::Result<()> {
     cfg.seed = num_u64(args, "seed", cfg.seed)?;
     cfg.sim.n_instances = num_count(args, "instances", cfg.sim.n_instances)?;
     if let Some(m) = args.get("model") {
-        cfg.sim.model = match m {
-            "llama3-8b" => ModelKind::Llama3_8B,
-            "llama2-13b" => ModelKind::Llama2_13B,
-            other => anyhow::bail!("unknown model {other:?}"),
-        };
+        cfg.sim.model = ModelKind::parse(m).map_err(|e| anyhow::anyhow!(e))?;
     }
     if let Some(f) = args.get("fleet") {
         cfg.fleet = Some(f.to_string());
     }
     if let Some(p) = args.get("pressure") {
         cfg.pressure = Some(p.to_string());
+    }
+    if let Some(a) = args.get("affinity") {
+        cfg.affinity = Some(a.to_string());
     }
     let fleet = cfg.resolve_fleet().map_err(|e| anyhow::anyhow!(e))?;
     // `--autoscale` overrides the config like every other flag: bare/true
@@ -259,16 +272,23 @@ fn serve(args: &Args) -> crate::Result<()> {
         .map(PressureTrace::parse)
         .transpose()
         .map_err(|e| anyhow::anyhow!(e))?;
+    let affinity = cfg
+        .affinity
+        .as_deref()
+        .map(AffinitySpec::parse)
+        .transpose()
+        .map_err(|e| anyhow::anyhow!(e))?;
     let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
 
     println!(
-        "serving {} tasks at {} req/s on {} instances{}{}{} — scheduler={} dispatcher={}",
+        "serving {} tasks at {} req/s on {} instances{}{}{}{} — scheduler={} dispatcher={}",
         cfg.n_tasks,
         cfg.rate,
         fleet.len(),
         if fleet.is_heterogeneous() { " (heterogeneous)" } else { "" },
         if autoscale.is_some() { " (elastic)" } else { "" },
         if pressure.is_some() { " (co-tenant pressure)" } else { "" },
+        if affinity.is_some() { " (model-affine)" } else { "" },
         cfg.scheduler,
         cfg.dispatcher
     );
@@ -280,7 +300,9 @@ fn serve(args: &Args) -> crate::Result<()> {
         warmup_frac: cfg.sim.warmup_frac,
         autoscale,
         pressure,
+        affinity,
     };
+    let affine = fc.affinity.is_some();
     let res = run_fleet(fc, &cfg.scheduler, &cfg.dispatcher, arrivals);
     let s = &res.summary;
     println!("\ncompleted {} workflows over {:.1} sim-seconds", s.n_workflows, res.sim_duration);
@@ -291,6 +313,9 @@ fn serve(args: &Args) -> crate::Result<()> {
     println!("queueing-time ratio: {:.1}%", s.mean_queue_ratio * 100.0);
     println!("preempted requests:  {:.1}%", s.preemption_rate * 100.0);
     println!("dropped requests:    {}", res.dropped_requests);
+    if affine {
+        println!("cross-model dispatches: {}", res.cross_model_dispatches());
+    }
     if !res.scale_log.is_empty() {
         let (grows, shrinks) = res.scale_counts();
         println!(
@@ -415,6 +440,68 @@ fn elastic_sweep(args: &Args) -> crate::Result<()> {
         }
     }
     t.print();
+    Ok(())
+}
+
+/// Serving-group scenario: the same mixed-model trace served unsharded
+/// (every request may land anywhere — including on a model it was never
+/// meant for) and sharded (agents pinned to model families, one queue
+/// shard per group). Reports queuing delay, cross-model dispatches and
+/// per-group dispatch counts.
+fn shard_sweep(args: &Args) -> crate::Result<()> {
+    let spec = args.get("fleet").unwrap_or("3*llama3-8b@0.12,llama2-13b@0.12");
+    let fleet = FleetSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+    let aff_spec = args.get("affinity").unwrap_or("*=llama3-8b");
+    let affinity = AffinitySpec::parse(aff_spec).map_err(|e| anyhow::anyhow!(e))?;
+    let scheduler = args.get("scheduler").unwrap_or("kairos");
+    let dispatcher = args.get("dispatcher").unwrap_or("rr");
+    let rate = num_rate(args, "rate", 4.0)?;
+    let n_tasks = num_count(args, "tasks", 300)?;
+    let seed = num_u64(args, "seed", 42)?;
+    let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
+
+    println!(
+        "shard sweep over {spec:?} — affinity {aff_spec:?}, \
+         scheduler={scheduler} dispatcher={dispatcher}"
+    );
+    println!("{n_tasks} tasks at {rate} req/s (seed {seed})\n");
+    let mut t = crate::util::table::Table::new(&[
+        "queue", "avg s/tok", "P99 s/tok", "mean queue s", "cross-model", "dropped",
+    ]);
+    let mut sharded_res: Option<SimResult> = None;
+    for (label, aff) in [("unsharded", None), ("sharded", Some(affinity.clone()))] {
+        let arrivals =
+            TraceGen::default().generate(&mix, rate, n_tasks, &mut Rng::new(seed));
+        let mut fc = FleetConfig::from(fleet.clone());
+        fc.affinity = aff;
+        let res = run_fleet(fc, scheduler, dispatcher, arrivals);
+        let s = &res.summary;
+        t.row(vec![
+            label.to_string(),
+            format!("{:.4}", s.avg_token_latency),
+            format!("{:.4}", s.p99_token_latency),
+            format!("{:.3}", res.mean_queue_delay()),
+            res.cross_model_dispatches().to_string(),
+            res.dropped_requests.to_string(),
+        ]);
+        if label == "sharded" {
+            sharded_res = Some(res);
+        }
+    }
+    t.print();
+    if let Some(res) = sharded_res {
+        println!("\nsharded per-group dispatches:");
+        let mut seen: Vec<(crate::engine::cost_model::ModelClass, usize)> = Vec::new();
+        for g in &res.group_log {
+            match seen.iter_mut().find(|(c, _)| *c == g.class) {
+                Some((_, n)) => *n += 1,
+                None => seen.push((g.class, 1)),
+            }
+        }
+        for (class, n) in seen {
+            println!("  {:<12} {n}", class.name());
+        }
+    }
     Ok(())
 }
 

@@ -7,6 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::engine::cost_model::ModelKind;
+use crate::orchestrator::affinity::AffinitySpec;
 use crate::server::autoscale::AutoscaleConfig;
 use crate::server::coordinator::InstanceSpec;
 use crate::server::pressure::PressureTrace;
@@ -164,6 +165,9 @@ pub struct ServingConfig {
     /// Co-tenant pressure trace (`[pressure] trace = "..."`), in
     /// [`PressureTrace::parse`] syntax. Validated eagerly at load.
     pub pressure: Option<String>,
+    /// Agent → model-class pins (`[workload] affinity = "..."`), in
+    /// [`AffinitySpec::parse`] syntax. Validated eagerly at load.
+    pub affinity: Option<String>,
 }
 
 impl Default for ServingConfig {
@@ -178,6 +182,7 @@ impl Default for ServingConfig {
             seed: 42,
             autoscale: None,
             pressure: None,
+            affinity: None,
         }
     }
 }
@@ -209,12 +214,7 @@ impl ServingConfig {
                 cfg.sim.warmup_frac
             ));
         }
-        cfg.sim.model = match doc.str("cluster", "model", "llama3-8b").as_str() {
-            "llama3-8b" => ModelKind::Llama3_8B,
-            "llama2-13b" => ModelKind::Llama2_13B,
-            "tiny" => ModelKind::Tiny,
-            other => return Err(format!("unknown model {other:?}")),
-        };
+        cfg.sim.model = ModelKind::parse(doc.str("cluster", "model", "llama3-8b").as_str())?;
         cfg.fleet = doc
             .get("cluster", "fleet")
             .and_then(TomlValue::as_str)
@@ -299,6 +299,20 @@ impl ServingConfig {
         if let Some(spec) = &cfg.pressure {
             // Validate eagerly so a bad trace fails at load, not mid-run.
             PressureTrace::parse(spec)?;
+        }
+        cfg.affinity = match doc.get("workload", "affinity") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| {
+                        format!("[workload] affinity: expected a string, got {v:?}")
+                    })?
+                    .to_string(),
+            ),
+        };
+        if let Some(spec) = &cfg.affinity {
+            // Validate eagerly so a bad pin fails at load, not dispatch.
+            AffinitySpec::parse(spec)?;
         }
         Ok(cfg)
     }
@@ -469,6 +483,20 @@ refresh_interval = 2.0
             ServingConfig::from_toml("[workload]\nrate = \"12x\"\n").unwrap_err();
         assert!(err.contains("rate"), "error must name the key: {err}");
         assert!(ServingConfig::from_toml("[cluster]\ninstances = \"two\"\n").is_err());
+    }
+
+    #[test]
+    fn affinity_spec_validated_at_load() {
+        let cfg = ServingConfig::from_toml(
+            "[workload]\naffinity = \"*=llama3-8b,Engineer=llama2-13b\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.affinity.as_deref(), Some("*=llama3-8b,Engineer=llama2-13b"));
+        // Bad pins fail at load, and a mis-typed value never silently
+        // drops the key.
+        assert!(ServingConfig::from_toml("[workload]\naffinity = \"A=gpt5\"\n").is_err());
+        assert!(ServingConfig::from_toml("[workload]\naffinity = 5\n").is_err());
+        assert!(ServingConfig::from_toml("").unwrap().affinity.is_none());
     }
 
     #[test]

@@ -24,14 +24,14 @@ impl DispatchPolicy for LeastLoaded {
 
     fn choose(
         &mut self,
-        _req: &Request,
+        req: &Request,
         statuses: &[InstanceStatus],
         _now: Time,
     ) -> Option<usize> {
         statuses
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.accepting)
+            .filter(|(_, s)| s.accepting && req.model_class.matches(s.model))
             .min_by_key(|(_, s)| s.committed_tokens + s.n_waiting as u64 * 256)
             .map(|(i, _)| i)
     }
@@ -40,6 +40,7 @@ impl DispatchPolicy for LeastLoaded {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::cost_model::{ModelClass, ModelKind};
     use crate::orchestrator::ids::AgentId;
 
     fn st(id: usize, committed: u64) -> InstanceStatus {
@@ -56,6 +57,7 @@ mod tests {
             capacity_tokens: 160_000,
             preemptions: 0,
             accepting: true,
+            model: ModelKind::Llama3_8B,
         }
     }
 
@@ -64,6 +66,7 @@ mod tests {
             id: 0,
             msg_id: 0,
             agent: AgentId(0),
+            model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens: 1,
             true_output_tokens: 1,
@@ -88,6 +91,17 @@ mod tests {
         a.n_waiting = 10;
         let statuses = vec![a, st(1, 200)];
         assert_eq!(d.choose(&req(), &statuses, 0.0), Some(1));
+    }
+
+    #[test]
+    fn pinned_request_ignores_emptier_foreign_instance() {
+        let mut d = LeastLoaded::new();
+        // The emptiest instance serves the wrong family: skip it.
+        let mut statuses = vec![st(0, 0), st(1, 900)];
+        statuses[1].model = ModelKind::Llama2_13B;
+        let mut r = req();
+        r.model_class = ModelClass::Model(ModelKind::Llama2_13B);
+        assert_eq!(d.choose(&r, &statuses, 0.0), Some(1));
     }
 
     #[test]

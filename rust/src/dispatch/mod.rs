@@ -26,6 +26,11 @@ pub trait DispatchPolicy: Send {
     /// Choose an instance for `req`, or `None` to keep it queued for the
     /// next scheduling round (paper §6: "if none of the instances are
     /// available, the request remains in the scheduling queue").
+    ///
+    /// Group-aware candidate filtering is every policy's obligation: only
+    /// instances that are accepting AND whose [`InstanceStatus::model`]
+    /// matches `req.model_class` are candidates. The coordinator asserts
+    /// both on the chosen index.
     fn choose(
         &mut self,
         req: &Request,
@@ -50,6 +55,15 @@ pub trait DispatchPolicy: Send {
     /// instance-indexed state to `statuses.len()` here instead of panicking
     /// or mis-indexing on the next [`DispatchPolicy::choose`].
     fn on_fleet_change(&mut self, _statuses: &[InstanceStatus]) {}
+
+    /// Instance slot `instance` was re-initialized in place: a retired
+    /// tombstone re-filled with a fresh engine
+    /// ([`crate::server::coordinator::Coordinator::add_instance`] reuses
+    /// compatible tombstone slots instead of growing the fleet vector).
+    /// Stateful policies must clear every per-instance datum for the slot —
+    /// slot-ring predictions, suspensions, outstanding demand — as if it
+    /// were brand new.
+    fn on_instance_reset(&mut self, _instance: usize) {}
 
     /// Refresh internal state from the orchestrator's profiles (Kairos
     /// pulls each agent's expected execution time — the distribution mode —

@@ -39,14 +39,16 @@ impl DispatchPolicy for OracleFit {
             self.outstanding.resize(statuses.len(), 0);
         }
         let demand = req.total_tokens() as u64;
-        // Feasible instances: accepting dispatches, with the true peak
-        // (outstanding + demand) within capacity. Choose the one with the
-        // smallest resulting peak.
+        // Feasible instances: accepting dispatches, serving the request's
+        // model family, with the true peak (outstanding + demand) within
+        // capacity. Choose the one with the smallest resulting peak.
         statuses
             .iter()
             .enumerate()
             .filter(|(i, s)| {
-                s.accepting && self.outstanding[*i] + demand <= s.capacity_tokens
+                s.accepting
+                    && req.model_class.matches(s.model)
+                    && self.outstanding[*i] + demand <= s.capacity_tokens
             })
             .min_by_key(|(i, _)| self.outstanding[*i] + demand)
             .map(|(i, _)| i)
@@ -81,11 +83,21 @@ impl DispatchPolicy for OracleFit {
             self.placed.retain(|_, (inst, _)| *inst < n);
         }
     }
+
+    fn on_instance_reset(&mut self, instance: usize) {
+        // The slot holds a fresh engine: none of the demand tracked for the
+        // retired tenant applies anymore.
+        if instance < self.outstanding.len() {
+            self.outstanding[instance] = 0;
+        }
+        self.placed.retain(|_, (inst, _)| *inst != instance);
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::cost_model::{ModelClass, ModelKind};
     use crate::orchestrator::ids::AgentId;
 
     fn st(id: usize, capacity: u64) -> InstanceStatus {
@@ -102,6 +114,7 @@ mod tests {
             capacity_tokens: capacity,
             preemptions: 0,
             accepting: true,
+            model: ModelKind::Llama3_8B,
         }
     }
 
@@ -110,6 +123,7 @@ mod tests {
             id,
             msg_id: id,
             agent: AgentId(0),
+            model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens: prompt,
             true_output_tokens: output,
@@ -151,6 +165,36 @@ mod tests {
         assert_eq!(d.choose(&req(2, 100, 100), &statuses, 0.0), None);
         d.on_complete(1, 0, 1.0);
         assert_eq!(d.choose(&req(2, 100, 100), &statuses, 0.0), Some(0));
+    }
+
+    #[test]
+    fn pinned_request_only_fits_its_family() {
+        let mut d = OracleFit::new(2);
+        let mut statuses = vec![st(0, 1000), st(1, 1000)];
+        statuses[1].model = ModelKind::Llama2_13B;
+        let mut r = req(1, 100, 100);
+        r.model_class = ModelClass::Model(ModelKind::Llama2_13B);
+        assert_eq!(d.choose(&r, &statuses, 0.0), Some(1));
+        // Load up the 13B instance near capacity: the pinned request now
+        // defers instead of spilling onto the 8B instance.
+        d.on_dispatch(&req(2, 400, 500), 1, 0.0);
+        let mut big = req(3, 100, 100);
+        big.model_class = ModelClass::Model(ModelKind::Llama2_13B);
+        assert_eq!(d.choose(&big, &statuses, 0.0), None, "stays queued");
+    }
+
+    #[test]
+    fn instance_reset_clears_slot_demand() {
+        let mut d = OracleFit::new(2);
+        let statuses = vec![st(0, 600), st(1, 600)];
+        d.on_dispatch(&req(1, 100, 400), 0, 0.0);
+        assert_eq!(d.choose(&req(2, 100, 100), &statuses, 0.0), Some(1));
+        // Slot 0 is re-filled with a fresh engine: its demand vanishes and
+        // a late completion of the old tenant must not underflow.
+        d.on_instance_reset(0);
+        assert_eq!(d.choose(&req(2, 100, 100), &statuses, 0.0), Some(0));
+        d.on_complete(1, 0, 1.0);
+        assert_eq!(d.outstanding[0], 0, "stale completion is a no-op");
     }
 
     #[test]

@@ -25,7 +25,7 @@ impl DispatchPolicy for RoundRobin {
 
     fn choose(
         &mut self,
-        _req: &Request,
+        req: &Request,
         statuses: &[InstanceStatus],
         _now: Time,
     ) -> Option<usize> {
@@ -34,10 +34,12 @@ impl DispatchPolicy for RoundRobin {
             return None;
         }
         // Blind to load, but never to fleet membership: skip instances that
-        // are draining toward retirement (or retired tombstones).
+        // are draining toward retirement (or retired tombstones) and
+        // instances whose model family the request is not pinned to.
         for k in 0..n {
             let pick = (self.next + k) % n;
-            if statuses[pick].accepting {
+            let s = &statuses[pick];
+            if s.accepting && req.model_class.matches(s.model) {
                 self.next = (pick + 1) % n;
                 return Some(pick);
             }
@@ -49,6 +51,7 @@ impl DispatchPolicy for RoundRobin {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::cost_model::{ModelClass, ModelKind};
     use crate::orchestrator::ids::AgentId;
 
     fn st(id: usize) -> InstanceStatus {
@@ -65,6 +68,7 @@ mod tests {
             capacity_tokens: 1600,
             preemptions: 0,
             accepting: true,
+            model: ModelKind::Llama3_8B,
         }
     }
 
@@ -73,6 +77,7 @@ mod tests {
             id: 0,
             msg_id: 0,
             agent: AgentId(0),
+            model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens: 1,
             true_output_tokens: 1,
@@ -124,6 +129,23 @@ mod tests {
         statuses[0].accepting = false;
         statuses[2].accepting = false;
         assert_eq!(rr.choose(&req(), &statuses, 0.0), None);
+    }
+
+    #[test]
+    fn pinned_request_only_cycles_its_own_family() {
+        let mut rr = RoundRobin::new();
+        let mut statuses = vec![st(0), st(1), st(2)];
+        statuses[1].model = ModelKind::Llama2_13B;
+        let mut pinned = req();
+        pinned.model_class = ModelClass::Model(ModelKind::Llama2_13B);
+        // Every pick for the pinned request lands on the lone 13B instance.
+        for _ in 0..3 {
+            assert_eq!(rr.choose(&pinned, &statuses, 0.0), Some(1));
+        }
+        // A request pinned to a family with no instance defers.
+        let mut orphan = req();
+        orphan.model_class = ModelClass::Model(ModelKind::Tiny);
+        assert_eq!(rr.choose(&orphan, &statuses, 0.0), None);
     }
 
     #[test]

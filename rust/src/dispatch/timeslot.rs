@@ -23,6 +23,7 @@ use std::collections::HashMap;
 
 use super::DispatchPolicy;
 use crate::engine::core::InstanceStatus;
+use crate::engine::cost_model::{CostModel, ModelKind};
 use crate::engine::request::{Request, RequestId};
 use crate::Time;
 
@@ -67,6 +68,9 @@ struct Placement {
     start: Time,
     end: Time,
     prefill_bytes: f64,
+    /// Ramp slope charged at dispatch time (the instance's own slope; the
+    /// release must subtract exactly what was added).
+    mem_slope: f64,
     /// Ring window `[base, last]` at dispatch time. Out-of-window
     /// contributions were folded into this range by [`SlotRing::fold`];
     /// the release must recompute placement against the SAME fold rule, or
@@ -75,6 +79,35 @@ struct Placement {
     /// accumulates in the last slot, starving dispatch.
     fold_base: i64,
     fold_limit: i64,
+}
+
+/// Per-instance ramp constants from the instance's OWN cost model —
+/// per-instance cost awareness: a 13B co-tenant decodes slower and holds
+/// denser KV than an 8B neighbor, so both its prefill footprint and its
+/// ramp slope differ from the fleet's reference model.
+#[derive(Debug, Clone, Copy)]
+struct InstanceCost {
+    kv_bytes_per_token: f64,
+    mem_slope: f64,
+}
+
+impl InstanceCost {
+    /// Fallback constants from the packer config (the fleet reference
+    /// model) — used by [`TimeSlotDispatcher::new`] and in tests.
+    fn from_config(cfg: &TimeSlotConfig) -> InstanceCost {
+        InstanceCost { kv_bytes_per_token: cfg.kv_bytes_per_token, mem_slope: cfg.mem_slope }
+    }
+
+    /// Constants for an instance serving `model`, profiled at the same
+    /// representative operating point as
+    /// [`TimeSlotConfig::for_cost_model`].
+    fn for_model(model: ModelKind) -> InstanceCost {
+        let cost = CostModel::new(model);
+        InstanceCost {
+            kv_bytes_per_token: cost.kv_bytes_per_token as f64,
+            mem_slope: cost.mem_slope(16, 600) / 16.0,
+        }
+    }
 }
 
 /// Per-instance future memory profile as a slot ring.
@@ -159,6 +192,8 @@ impl SlotRing {
 pub struct TimeSlotDispatcher {
     cfg: TimeSlotConfig,
     rings: Vec<SlotRing>,
+    /// Per-instance ramp constants (each instance's own cost model).
+    costs: Vec<InstanceCost>,
     placements: HashMap<RequestId, Placement>,
     /// Expected exec-time provider: agent -> T_i (mode of the exec-latency
     /// distribution). Refreshed by the server from the orchestrator.
@@ -170,15 +205,31 @@ pub struct TimeSlotDispatcher {
 }
 
 impl TimeSlotDispatcher {
+    /// A packer whose every instance uses the config's reference ramp
+    /// constants (homogeneous fleet / unit tests). For mixed-model fleets
+    /// use [`TimeSlotDispatcher::for_models`].
     pub fn new(n_instances: usize, cfg: TimeSlotConfig) -> TimeSlotDispatcher {
         TimeSlotDispatcher {
             cfg,
             rings: (0..n_instances).map(|_| SlotRing::new(cfg.horizon_slots)).collect(),
+            costs: vec![InstanceCost::from_config(&cfg); n_instances],
             placements: HashMap::new(),
             expected_exec: HashMap::new(),
             suspended_until: vec![0.0; n_instances],
             rejected_rounds: 0,
         }
+    }
+
+    /// A packer that prices each instance with its OWN cost model: ramp
+    /// slope and KV density per `models[j]`, so packing on a mixed-model
+    /// fleet predicts each instance's real memory trajectory instead of
+    /// the fleet reference's.
+    pub fn for_models(models: &[ModelKind], cfg: TimeSlotConfig) -> TimeSlotDispatcher {
+        let mut d = TimeSlotDispatcher::new(models.len(), cfg);
+        for (j, model) in models.iter().enumerate() {
+            d.costs[j] = InstanceCost::for_model(*model);
+        }
+        d
     }
 
     pub fn config(&self) -> &TimeSlotConfig {
@@ -200,8 +251,16 @@ impl TimeSlotDispatcher {
     }
 
     /// The request's predicted memory in the slot covering `t`
-    /// (midpoint-evaluated linear ramp, clamped to [P_i, peak]).
-    fn ramp_at(&self, prefill_bytes: f64, start: Time, end: Time, slot: i64) -> f64 {
+    /// (midpoint-evaluated linear ramp with the given slope, clamped to
+    /// [P_i, peak]).
+    fn ramp_at(
+        &self,
+        prefill_bytes: f64,
+        mem_slope: f64,
+        start: Time,
+        end: Time,
+        slot: i64,
+    ) -> f64 {
         let mid = (slot as f64 + 0.5) * self.cfg.slot_len;
         if mid < start || mid >= end {
             // Slot partially covered at the edges: charge the boundary value
@@ -213,7 +272,7 @@ impl TimeSlotDispatcher {
             }
         }
         let t = mid.clamp(start, end);
-        prefill_bytes + self.cfg.mem_slope * (t - start)
+        prefill_bytes + mem_slope * (t - start)
     }
 
     fn expected_time(&self, req: &Request) -> f64 {
@@ -224,28 +283,30 @@ impl TimeSlotDispatcher {
             * self.cfg.safety
     }
 
-    /// KV capacity of instance `j` in bytes: its live per-instance budget
-    /// when a status is available, the configured fallback otherwise.
-    fn capacity_of(&self, status: Option<&InstanceStatus>) -> f64 {
+    /// KV capacity of instance `j` in bytes — the live per-instance token
+    /// budget priced at the instance's own KV density when a status is
+    /// available, the configured fallback otherwise.
+    fn capacity_of(&self, j: usize, status: Option<&InstanceStatus>) -> f64 {
         status
-            .map(|s| s.capacity_tokens as f64 * self.cfg.kv_bytes_per_token)
+            .map(|s| s.capacity_tokens as f64 * self.costs[j].kv_bytes_per_token)
             .unwrap_or(self.cfg.capacity_bytes)
     }
 
-    /// Evaluate placing `req` on instance `j` starting `now`; returns the
-    /// resulting peak usage over the spanned slots, or None if any slot
-    /// would exceed `capacity` (bytes).
+    /// Evaluate placing `req` on instance `j` starting `now`, under the
+    /// instance's own cost model; returns the resulting peak usage over the
+    /// spanned slots, or None if any slot would exceed `capacity` (bytes).
     fn evaluate(&self, j: usize, req: &Request, now: Time, capacity: f64) -> Option<f64> {
         let t_i = self.expected_time(req);
         let start = now;
         let end = now + t_i;
-        let prefill_bytes = req.prompt_tokens as f64 * self.cfg.kv_bytes_per_token;
+        let cost = self.costs[j];
+        let prefill_bytes = req.prompt_tokens as f64 * cost.kv_bytes_per_token;
         let s0 = self.abs_slot(start);
         let s1 = self.abs_slot(end) + 1;
         let ring = &self.rings[j];
         let mut peak: f64 = ring.peak();
         for s in s0..=s1 {
-            let add = self.ramp_at(prefill_bytes, start, end, s);
+            let add = self.ramp_at(prefill_bytes, cost.mem_slope, start, end, s);
             if add == 0.0 {
                 continue;
             }
@@ -281,30 +342,35 @@ impl DispatchPolicy for TimeSlotDispatcher {
         }
         // Evaluate all instances "in parallel" (paper §6 step 2) and pick
         // the lowest expected total peak among the available ones.
-        // Expected total KV tokens of this request over its lifetime.
-        let expected_tokens = req.prompt_tokens as u64
-            + (self.cfg.mem_slope * self.expected_time(req) / self.cfg.kv_bytes_per_token)
-                as u64;
+        let t_i = self.expected_time(req);
         let mut best: Option<(usize, f64)> = None;
         for j in 0..self.rings.len() {
-            if !statuses[j].accepting {
+            let st = &statuses[j];
+            if !st.accepting {
                 continue; // draining toward retirement / retired tombstone
+            }
+            if !req.model_class.matches(st.model) {
+                continue; // wrong serving group for a pinned request
             }
             if now < self.suspended_until[j] {
                 continue; // OOM-suspect cooldown
             }
+            // Expected total KV tokens of this request over its lifetime on
+            // THIS instance (per-instance decode rate and KV density).
+            let cost = self.costs[j];
+            let expected_tokens = req.prompt_tokens as u64
+                + (cost.mem_slope * t_i / cost.kv_bytes_per_token) as u64;
             // Live-status feasibility: dispatching is deferred while the
             // instance's committed + queued demand leaves no room — the
             // request "remains in the scheduling queue" (§6). This keeps
             // engine-side queues short so the slot-ramp predictions (which
             // assume execution starts at dispatch) stay accurate.
-            let st = &statuses[j];
             if st.committed_tokens + st.waiting_tokens + expected_tokens
                 > st.capacity_tokens
             {
                 continue;
             }
-            let capacity = self.capacity_of(Some(st));
+            let capacity = self.capacity_of(j, Some(st));
             if let Some(peak) = self.evaluate(j, req, now, capacity) {
                 if best.map(|(_, p)| peak < p).unwrap_or(true) {
                     best = Some((j, peak));
@@ -321,7 +387,9 @@ impl DispatchPolicy for TimeSlotDispatcher {
         let t_i = self.expected_time(req);
         let start = now;
         let end = now + t_i;
-        let prefill_bytes = req.prompt_tokens as f64 * self.cfg.kv_bytes_per_token;
+        let cost = self.costs[instance];
+        let prefill_bytes = req.prompt_tokens as f64 * cost.kv_bytes_per_token;
+        let mem_slope = cost.mem_slope;
         let s0 = self.abs_slot(start);
         let s1 = self.abs_slot(end) + 1;
         // Record the fold window so the release recomputes the exact slots
@@ -329,14 +397,14 @@ impl DispatchPolicy for TimeSlotDispatcher {
         let fold_base = self.rings[instance].base_slot;
         let fold_limit = self.rings[instance].horizon_end();
         for s in s0..=s1 {
-            let add = self.ramp_at(prefill_bytes, start, end, s);
+            let add = self.ramp_at(prefill_bytes, mem_slope, start, end, s);
             if add > 0.0 {
                 self.rings[instance].add(s, add);
             }
         }
         self.placements.insert(
             req.id,
-            Placement { instance, start, end, prefill_bytes, fold_base, fold_limit },
+            Placement { instance, start, end, prefill_bytes, mem_slope, fold_base, fold_limit },
         );
     }
 
@@ -344,13 +412,14 @@ impl DispatchPolicy for TimeSlotDispatcher {
         // Early (or late) completion: remove the request's remaining
         // predicted usage (§6 adaptive measure). Each contribution was
         // charged at `fold(s)` under the dispatch-time window, so the
-        // release re-applies the same rule; slots the ring base has already
-        // passed were cleared by `advance_to` and are skipped.
+        // release re-applies the same rule — with the dispatch-time slope;
+        // slots the ring base has already passed were cleared by
+        // `advance_to` and are skipped.
         let Some(p) = self.placements.remove(&req) else { return };
         let s0 = self.abs_slot(p.start);
         let s1 = self.abs_slot(p.end) + 1;
         for s in s0..=s1 {
-            let v = self.ramp_at(p.prefill_bytes, p.start, p.end, s);
+            let v = self.ramp_at(p.prefill_bytes, p.mem_slope, p.start, p.end, s);
             if v <= 0.0 {
                 continue;
             }
@@ -372,14 +441,29 @@ impl DispatchPolicy for TimeSlotDispatcher {
     fn on_fleet_change(&mut self, statuses: &[InstanceStatus]) {
         let n = statuses.len();
         while self.rings.len() < n {
+            let j = self.rings.len();
             self.rings.push(SlotRing::new(self.cfg.horizon_slots));
             self.suspended_until.push(0.0);
+            // New instances are priced with their own model's constants.
+            self.costs.push(InstanceCost::for_model(statuses[j].model));
         }
         if self.rings.len() > n {
             self.rings.truncate(n);
             self.suspended_until.truncate(n);
+            self.costs.truncate(n);
             self.placements.retain(|_, p| p.instance < n);
         }
+    }
+
+    fn on_instance_reset(&mut self, instance: usize) {
+        // The slot holds a fresh engine: drop the retired tenant's
+        // predictions and suspension. The ramp constants stay — tombstone
+        // reuse is same-family only, so the model did not change.
+        if instance < self.rings.len() {
+            self.rings[instance] = SlotRing::new(self.cfg.horizon_slots);
+            self.suspended_until[instance] = 0.0;
+        }
+        self.placements.retain(|_, p| p.instance != instance);
     }
 
     fn refresh(&mut self, orch: &crate::orchestrator::Orchestrator) {
@@ -412,6 +496,7 @@ impl TimeSlotConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::cost_model::ModelClass;
     use crate::orchestrator::ids::AgentId;
 
     fn cfg() -> TimeSlotConfig {
@@ -441,6 +526,7 @@ mod tests {
             capacity_tokens: 1000,
             preemptions: 0,
             accepting: true,
+            model: ModelKind::Llama3_8B,
         }
     }
 
@@ -449,6 +535,7 @@ mod tests {
             id,
             msg_id: id,
             agent: AgentId(agent),
+            model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens: prompt,
             true_output_tokens: 10,
@@ -667,6 +754,68 @@ mod tests {
         let r3 = req(3, 0, 100);
         let j3 = d.choose(&r3, &statuses, 0.0).unwrap();
         assert_eq!(j3, 1, "per-instance budget must bound packing");
+    }
+
+    #[test]
+    fn pinned_request_stays_in_its_serving_group() {
+        let mut d = TimeSlotDispatcher::new(2, cfg());
+        let mut statuses = vec![st(0), st(1)];
+        statuses[1].model = ModelKind::Llama2_13B;
+        // Load the 13B instance's ring so the 8B one has the lower peak:
+        // the pinned request must still land on the 13B instance.
+        let filler = req(1, 0, 400);
+        d.on_dispatch(&filler, 1, 0.0);
+        let mut pinned = req(2, 0, 100);
+        pinned.model_class = ModelClass::Model(ModelKind::Llama2_13B);
+        assert_eq!(d.choose(&pinned, &statuses, 0.0), Some(1));
+        // And a family with no instance defers rather than spilling over.
+        let mut orphan = req(3, 0, 100);
+        orphan.model_class = ModelClass::Model(ModelKind::Tiny);
+        assert_eq!(d.choose(&orphan, &statuses, 0.0), None);
+    }
+
+    #[test]
+    fn per_instance_cost_models_shape_the_ramp() {
+        // Same request, same cfg — but the 13B instance holds ~6x denser
+        // KV per token, so its predicted footprint must be larger than the
+        // 8B instance's for the identical placement.
+        let real_cfg = TimeSlotConfig::for_cost_model(&CostModel::new(ModelKind::Llama3_8B));
+        let models = [ModelKind::Llama3_8B, ModelKind::Llama2_13B];
+        let mut d = TimeSlotDispatcher::for_models(&models, real_cfg);
+        let r1 = req(1, 0, 200);
+        let r2 = req(2, 0, 200);
+        d.on_dispatch(&r1, 0, 0.0);
+        d.on_dispatch(&r2, 1, 0.0);
+        let peak8 = d.rings[0].peak();
+        let peak13 = d.rings[1].peak();
+        assert!(
+            peak13 > peak8 * 2.0,
+            "13B KV density must dominate: peak13={peak13} peak8={peak8}"
+        );
+        // Completion releases exactly what was charged on each instance.
+        d.on_complete(1, 0, 0.0);
+        d.on_complete(2, 1, 0.0);
+        assert!(d.rings[0].peak() < 1e-6);
+        assert!(d.rings[1].peak() < 1e-6);
+    }
+
+    #[test]
+    fn instance_reset_clears_ring_and_suspension() {
+        let mut d = TimeSlotDispatcher::new(2, cfg());
+        let statuses = vec![st(0), st(1)];
+        let r = req(1, 0, 900);
+        let j = d.choose(&r, &statuses, 0.0).unwrap();
+        d.on_dispatch(&r, j, 0.0);
+        d.on_preemption(j, 0.0);
+        assert!(d.rings[j].peak() > 0.0);
+        // The slot is re-filled with a fresh engine: predictions and the
+        // cooldown vanish, and the slot is immediately placeable again.
+        d.on_instance_reset(j);
+        assert!(d.rings[j].peak() < 1e-6);
+        assert_eq!(d.choose(&req(2, 0, 900), &statuses, 0.1), Some(j));
+        // A late completion of the evicted tenant is a no-op.
+        d.on_complete(1, j, 0.2);
+        assert!(d.rings[j].peak() >= 0.0);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 use std::collections::VecDeque;
 
 use super::block_manager::BlockManager;
-use super::cost_model::CostModel;
+use super::cost_model::{CostModel, ModelKind};
 use super::request::{Request, RequestId, SeqPhase, SeqState};
 use crate::Time;
 
@@ -89,6 +89,10 @@ pub struct InstanceStatus {
     /// draining toward retirement or already retired, and every dispatcher
     /// must skip non-accepting instances.
     pub accepting: bool,
+    /// Model family this instance serves. Dispatchers must only place a
+    /// request on an instance whose model its
+    /// [`ModelClass`](crate::engine::cost_model::ModelClass) matches.
+    pub model: ModelKind,
 }
 
 impl InstanceStatus {
@@ -100,6 +104,9 @@ impl InstanceStatus {
 /// Engine configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineConfig {
+    /// Model family this engine serves (reported through
+    /// [`InstanceStatus::model`] for group-aware dispatching).
+    pub model: ModelKind,
     pub block_size: u32,
     pub total_blocks: u32,
     /// Max sequences resident in a batch (vLLM `max_num_seqs`).
@@ -110,9 +117,12 @@ pub struct EngineConfig {
 }
 
 impl EngineConfig {
-    /// Config for a GPU instance serving `cost`'s model.
-    pub fn for_model(cost: &CostModel, block_size: u32) -> EngineConfig {
+    /// Config for a GPU instance serving `model`, with the full KV pool of
+    /// its calibrated cost model.
+    pub fn for_model(model: ModelKind, block_size: u32) -> EngineConfig {
+        let cost = CostModel::new(model);
         EngineConfig {
+            model,
             block_size,
             total_blocks: cost.total_blocks(block_size),
             max_batch: 256,
@@ -196,6 +206,7 @@ impl<B: ExecBackend> EngineCore<B> {
                 * self.blocks.block_size() as u64,
             preemptions: self.preemptions,
             accepting: true,
+            model: self.cfg.model,
         }
     }
 
@@ -382,7 +393,7 @@ impl<B: ExecBackend> EngineCore<B> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::cost_model::ModelKind;
+    use crate::engine::cost_model::{ModelClass, ModelKind};
     use crate::orchestrator::ids::AgentId;
 
     fn mk_req(id: u64, prompt: u32, output: u32, arrival: f64) -> Request {
@@ -390,6 +401,7 @@ mod tests {
             id,
             msg_id: id,
             agent: AgentId(0),
+            model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens: prompt,
             true_output_tokens: output,
@@ -402,6 +414,7 @@ mod tests {
 
     fn small_engine(total_blocks: u32) -> EngineCore<SimBackend> {
         let cfg = EngineConfig {
+            model: ModelKind::Llama3_8B,
             block_size: 16,
             total_blocks,
             max_batch: 64,
@@ -504,6 +517,7 @@ mod tests {
     #[test]
     fn max_batch_respected() {
         let cfg = EngineConfig {
+            model: ModelKind::Llama3_8B,
             block_size: 16,
             total_blocks: 10_000,
             max_batch: 4,
@@ -522,6 +536,7 @@ mod tests {
     #[test]
     fn prefill_token_budget_limits_admission() {
         let cfg = EngineConfig {
+            model: ModelKind::Llama3_8B,
             block_size: 16,
             total_blocks: 10_000,
             max_batch: 256,

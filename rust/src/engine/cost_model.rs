@@ -10,7 +10,7 @@
 //! width, and prefill admission momentarily stretches the iteration.
 
 /// Which served model's calibration to use.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum ModelKind {
     /// Llama3-8B on A40 (the paper's main configuration).
     Llama3_8B,
@@ -19,6 +19,67 @@ pub enum ModelKind {
     /// The tiny PJRT-served model (constants measured on this host by the
     /// quickstart; used only for unit-consistency, not experiments).
     Tiny,
+}
+
+impl ModelKind {
+    /// Parse a CLI/config model name (the single source of the name set:
+    /// `--model`, `--fleet` clauses, `[cluster] model` and affinity specs
+    /// all go through here).
+    pub fn parse(s: &str) -> Result<ModelKind, String> {
+        match s {
+            "llama3-8b" => Ok(ModelKind::Llama3_8B),
+            "llama2-13b" => Ok(ModelKind::Llama2_13B),
+            "tiny" => Ok(ModelKind::Tiny),
+            other => Err(format!("unknown model {other:?}")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Llama3_8B => "llama3-8b",
+            ModelKind::Llama2_13B => "llama2-13b",
+            ModelKind::Tiny => "tiny",
+        }
+    }
+}
+
+/// A request's serving-group requirement: which model family may execute
+/// it. Derived from the issuing agent's affinity annotation
+/// ([`crate::orchestrator::AffinitySpec`]); `Any` — the default — preserves
+/// the unsharded behavior where every instance is a candidate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModelClass {
+    /// Any instance may serve the request.
+    Any,
+    /// Only instances of this model family may serve the request.
+    Model(ModelKind),
+}
+
+impl ModelClass {
+    /// Whether an instance serving `model` can execute a request of this
+    /// class.
+    pub fn matches(&self, model: ModelKind) -> bool {
+        match self {
+            ModelClass::Any => true,
+            ModelClass::Model(k) => *k == model,
+        }
+    }
+
+    /// Parse a class name: a model name, or `any`/`*` for the unpinned
+    /// class.
+    pub fn parse(s: &str) -> Result<ModelClass, String> {
+        if s == "any" || s == "*" {
+            return Ok(ModelClass::Any);
+        }
+        ModelKind::parse(s).map(ModelClass::Model)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelClass::Any => "any",
+            ModelClass::Model(k) => k.name(),
+        }
+    }
 }
 
 /// Step-latency and memory constants for one (GPU, model) pair.
@@ -174,5 +235,33 @@ mod tests {
     fn mem_slope_positive() {
         let m = CostModel::new(ModelKind::Llama3_8B);
         assert!(m.mem_slope(16, 600) > 0.0);
+    }
+
+    #[test]
+    fn model_names_roundtrip() {
+        for kind in [ModelKind::Llama3_8B, ModelKind::Llama2_13B, ModelKind::Tiny] {
+            assert_eq!(ModelKind::parse(kind.name()), Ok(kind));
+        }
+        assert!(ModelKind::parse("gpt5").is_err());
+    }
+
+    #[test]
+    fn model_class_matching() {
+        assert!(ModelClass::Any.matches(ModelKind::Llama3_8B));
+        assert!(ModelClass::Any.matches(ModelKind::Tiny));
+        let pinned = ModelClass::Model(ModelKind::Llama2_13B);
+        assert!(pinned.matches(ModelKind::Llama2_13B));
+        assert!(!pinned.matches(ModelKind::Llama3_8B));
+    }
+
+    #[test]
+    fn model_class_parses_any_and_models() {
+        assert_eq!(ModelClass::parse("any"), Ok(ModelClass::Any));
+        assert_eq!(ModelClass::parse("*"), Ok(ModelClass::Any));
+        assert_eq!(
+            ModelClass::parse("llama2-13b"),
+            Ok(ModelClass::Model(ModelKind::Llama2_13B))
+        );
+        assert!(ModelClass::parse("gpt5").is_err());
     }
 }

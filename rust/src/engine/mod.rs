@@ -24,5 +24,5 @@ pub mod request;
 
 pub use block_manager::BlockManager;
 pub use core::{EngineCore, ExecBackend, InstanceStatus, SimBackend, StepOutcome};
-pub use cost_model::{CostModel, ModelKind};
+pub use cost_model::{CostModel, ModelClass, ModelKind};
 pub use request::{Request, RequestId, SeqPhase, SeqState};

@@ -176,6 +176,7 @@ impl ExecBackend for PjrtExecBackend {
 mod tests {
     use super::*;
     use crate::engine::core::{EngineConfig, EngineCore};
+    use crate::engine::cost_model::{ModelClass, ModelKind};
     use crate::engine::request::Request;
     use crate::orchestrator::ids::AgentId;
     use std::path::{Path, PathBuf};
@@ -189,6 +190,7 @@ mod tests {
             id,
             msg_id: id,
             agent: AgentId(0),
+            model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens,
             true_output_tokens: output,
@@ -212,6 +214,7 @@ mod tests {
         backend.set_prompt(2, vec![4, 5]);
 
         let cfg = EngineConfig {
+            model: ModelKind::Tiny,
             block_size: 4,
             total_blocks: 16, // micro: 2 rows × max 16 tokens
             max_batch,

@@ -1,6 +1,7 @@
 //! Request and sequence state shared by the engine, the load balancer and
 //! the dispatcher.
 
+use crate::engine::cost_model::ModelClass;
 use crate::orchestrator::ids::{AgentId, MsgId};
 use crate::Time;
 
@@ -28,6 +29,10 @@ pub struct Request {
     pub msg_id: MsgId,
     /// The agent issuing this request.
     pub agent: AgentId,
+    /// Serving-group requirement: which model family may execute this
+    /// request (from the agent's affinity annotation; `Any` = every
+    /// instance is a candidate, the unsharded behavior).
+    pub model_class: ModelClass,
     /// Immediate upstream agent in the workflow (None for the entry stage).
     pub upstream: Option<AgentId>,
     /// Prompt length in tokens (known at dispatch, as in the paper §2.3).
@@ -111,6 +116,7 @@ mod tests {
             id: 1,
             msg_id: 10,
             agent: AgentId(0),
+            model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens: 100,
             true_output_tokens: 50,

@@ -10,7 +10,7 @@ use std::time::Instant;
 use crate::dispatch::timeslot::{TimeSlotConfig, TimeSlotDispatcher};
 use crate::dispatch::DispatchPolicy;
 use crate::engine::core::InstanceStatus;
-use crate::engine::cost_model::{CostModel, ModelKind};
+use crate::engine::cost_model::{CostModel, ModelClass, ModelKind};
 use crate::engine::request::Request;
 use crate::lb::policies::{Fcfs, SchedulePolicy};
 use crate::lb::priority::AgentPriorities;
@@ -28,6 +28,7 @@ fn mk_req(id: u64, agent: u32, rng: &mut Rng) -> Request {
         id,
         msg_id: id,
         agent: AgentId(agent),
+        model_class: ModelClass::Any,
         upstream: None,
         prompt_tokens: 50 + rng.below(400) as u32,
         true_output_tokens: 50 + rng.below(500) as u32,
@@ -94,6 +95,7 @@ pub fn packing_time(n_instances: usize, live_requests: usize, seed: u64) -> f64 
             capacity_tokens: 1 << 24,
             preemptions: 0,
             accepting: true,
+            model: ModelKind::Llama3_8B,
         })
         .collect();
     // Pre-commit a realistic number of live predictions.

@@ -1,7 +1,11 @@
 //! Load-balancer scheduling layer (paper §5 + baselines).
 //!
-//! All requests enter a single central queue; a [`SchedulePolicy`] defines
-//! the total order in which they leave it:
+//! All requests enter the central queue — sharded into model-affine
+//! serving groups ([`sharded::ShardedQueue`]): one [`queue::RequestQueue`]
+//! per model family pinned by agent affinity, plus the `Any` shard for
+//! unpinned work. A [`SchedulePolicy`] defines the total order in which
+//! requests leave it (global across shards; a blocked group only stalls
+//! itself):
 //!
 //! * [`policies::Fcfs`] — Parrot's First-Come-First-Serve baseline.
 //! * [`policies::Topo`] — Ayo's topology-depth priority (fewer remaining
@@ -16,7 +20,9 @@
 pub mod policies;
 pub mod priority;
 pub mod queue;
+pub mod sharded;
 
 pub use policies::{Fcfs, KairosPolicy, Oracle, SchedulePolicy, Topo};
 pub use priority::AgentPriorities;
 pub use queue::RequestQueue;
+pub use sharded::ShardedQueue;

@@ -1,4 +1,6 @@
-//! The central request queue the load balancer schedules from.
+//! One shard of the central request queue the load balancer schedules
+//! from (the coordinator holds one per serving group — see
+//! [`super::sharded::ShardedQueue`]; analyses still use it standalone).
 //!
 //! The queue is a binary heap keyed by the active
 //! [`SchedulePolicy`](super::policies::SchedulePolicy)'s ordering key, so a
@@ -61,9 +63,18 @@ impl RequestQueue {
     }
 
     pub fn push(&mut self, req: Request, policy: &dyn SchedulePolicy) {
+        let seq = self.next_seq;
+        self.push_with_seq(req, policy, seq);
+    }
+
+    /// Push with an externally allocated insertion sequence. The sharded
+    /// queue ([`super::sharded::ShardedQueue`]) allocates one global
+    /// sequence across all shards so cross-shard priority ties still break
+    /// by arrival order.
+    pub fn push_with_seq(&mut self, req: Request, policy: &dyn SchedulePolicy, seq: u64) {
         let key = policy.key(&req);
-        self.heap.push(Entry { key, seq: self.next_seq, req });
-        self.next_seq += 1;
+        self.heap.push(Entry { key, seq, req });
+        self.next_seq = self.next_seq.max(seq + 1);
         self.peak_len = self.peak_len.max(self.heap.len());
     }
 
@@ -83,6 +94,13 @@ impl RequestQueue {
     /// Peek at the highest-priority request without removing it.
     pub fn peek_best(&self) -> Option<&Request> {
         self.heap.peek().map(|e| &e.req)
+    }
+
+    /// Priority rank `(key, insertion seq)` of the head entry — what the
+    /// sharded queue compares across shards to preserve the global
+    /// scheduling order. Lower sorts first.
+    pub fn head_rank(&self) -> Option<((f64, f64), u64)> {
+        self.heap.peek().map(|e| (e.key, e.seq))
     }
 
     /// Re-key every queued request against the (refreshed) policy.
@@ -124,6 +142,7 @@ mod tests {
             id,
             msg_id: id,
             agent: AgentId(0),
+            model_class: crate::engine::cost_model::ModelClass::Any,
             upstream: None,
             prompt_tokens: 1,
             true_output_tokens: 1,

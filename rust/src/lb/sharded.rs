@@ -1,0 +1,252 @@
+//! The central queue, sharded into model-affine serving groups.
+//!
+//! One [`RequestQueue`] shard per [`ModelClass`] that has seen traffic: a
+//! request pinned to a model family waits only behind requests of its own
+//! group, plus the `Any` shard for unpinned work. Cross-shard scheduling
+//! order is preserved by a single global insertion sequence and a
+//! rank comparison over the shard heads ([`ShardedQueue::best_shard`]), so
+//! a workload whose requests are all `Any` behaves exactly like the
+//! unsharded queue — while a group whose head cannot be placed no longer
+//! blocks every other group (per-group head-of-line blocking only).
+
+use super::policies::SchedulePolicy;
+use super::queue::RequestQueue;
+use crate::engine::cost_model::ModelClass;
+use crate::engine::request::Request;
+
+/// Total order over head ranks: policy key first (NaN-safe via
+/// `total_cmp`, like the heap itself), then global insertion sequence.
+fn rank_lt(a: ((f64, f64), u64), b: ((f64, f64), u64)) -> bool {
+    let ((a1, a2), aseq) = a;
+    let ((b1, b2), bseq) = b;
+    a1.total_cmp(&b1).then(a2.total_cmp(&b2)).then(aseq.cmp(&bseq)).is_lt()
+}
+
+/// Priority queue over requests, partitioned by serving group.
+pub struct ShardedQueue {
+    /// Shards in creation order (deterministic: same push sequence ⇒ same
+    /// shard layout, which the driver-equivalence contract relies on).
+    shards: Vec<(ModelClass, RequestQueue)>,
+    /// Global insertion sequence shared by all shards.
+    next_seq: u64,
+    /// Peak total occupancy across shards (diagnostics).
+    pub peak_len: usize,
+}
+
+impl Default for ShardedQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardedQueue {
+    /// A queue with the `Any` shard only (today's single-queue behavior
+    /// until a pinned request arrives).
+    pub fn new() -> ShardedQueue {
+        ShardedQueue {
+            shards: vec![(ModelClass::Any, RequestQueue::new())],
+            next_seq: 0,
+            peak_len: 0,
+        }
+    }
+
+    /// Index of the shard for `class`, creating it if absent.
+    pub fn ensure_shard(&mut self, class: ModelClass) -> usize {
+        if let Some(i) = self.shards.iter().position(|(c, _)| *c == class) {
+            return i;
+        }
+        self.shards.push((class, RequestQueue::new()));
+        self.shards.len() - 1
+    }
+
+    /// Route `req` to its group's shard.
+    pub fn push(&mut self, req: Request, policy: &dyn SchedulePolicy) {
+        let i = self.ensure_shard(req.model_class);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.shards[i].1.push_with_seq(req, policy, seq);
+        self.peak_len = self.peak_len.max(self.len());
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The group served by shard `i`.
+    pub fn class(&self, shard: usize) -> ModelClass {
+        self.shards[shard].0
+    }
+
+    /// Total queued requests across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|(_, q)| q.is_empty())
+    }
+
+    /// Queued requests pinned to `class` (0 when the shard does not exist).
+    pub fn shard_len(&self, class: ModelClass) -> usize {
+        self.shards
+            .iter()
+            .find(|(c, _)| *c == class)
+            .map_or(0, |(_, q)| q.len())
+    }
+
+    /// Peek at shard `i`'s highest-priority request.
+    pub fn peek_shard(&self, shard: usize) -> Option<&Request> {
+        self.shards[shard].1.peek_best()
+    }
+
+    /// Remove and return shard `i`'s highest-priority request.
+    pub fn pop_shard(&mut self, shard: usize) -> Option<Request> {
+        self.shards[shard].1.pop_best()
+    }
+
+    /// The shard whose head ranks first globally, skipping shards marked
+    /// blocked (a group whose head deferred this scheduling round). Rank is
+    /// the policy key with the global insertion sequence as tiebreaker —
+    /// exactly the unsharded queue's order.
+    pub fn best_shard(&self, blocked: &[bool]) -> Option<usize> {
+        let mut best: Option<(usize, ((f64, f64), u64))> = None;
+        for (i, (_, q)) in self.shards.iter().enumerate() {
+            if blocked.get(i).copied().unwrap_or(false) {
+                continue;
+            }
+            let Some(rank) = q.head_rank() else { continue };
+            let better = match best {
+                None => true,
+                Some((_, b)) => rank_lt(rank, b),
+            };
+            if better {
+                best = Some((i, rank));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Re-key every shard against the (refreshed) policy — the per-shard
+    /// priority resort of the periodic refresh.
+    pub fn resort(&mut self, policy: &dyn SchedulePolicy) {
+        for (_, q) in self.shards.iter_mut() {
+            q.resort(policy);
+        }
+    }
+
+    /// Snapshot of all queued requests in arbitrary order (analysis).
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.shards.iter().flat_map(|(_, q)| q.iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost_model::{ModelClass, ModelKind};
+    use crate::lb::policies::Fcfs;
+    use crate::orchestrator::ids::AgentId;
+
+    fn req(id: u64, arrival: f64, class: ModelClass) -> Request {
+        Request {
+            id,
+            msg_id: id,
+            agent: AgentId(0),
+            model_class: class,
+            upstream: None,
+            prompt_tokens: 1,
+            true_output_tokens: 1,
+            true_remaining_latency: 0.0,
+            remaining_stages: 1,
+            app_start: arrival,
+            stage_arrival: arrival,
+        }
+    }
+
+    const M8: ModelClass = ModelClass::Model(ModelKind::Llama3_8B);
+    const M13: ModelClass = ModelClass::Model(ModelKind::Llama2_13B);
+
+    #[test]
+    fn routes_by_model_class() {
+        let mut q = ShardedQueue::new();
+        q.push(req(1, 0.0, ModelClass::Any), &Fcfs);
+        q.push(req(2, 1.0, M8), &Fcfs);
+        q.push(req(3, 2.0, M13), &Fcfs);
+        q.push(req(4, 3.0, M8), &Fcfs);
+        assert_eq!(q.n_shards(), 3);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.shard_len(ModelClass::Any), 1);
+        assert_eq!(q.shard_len(M8), 2);
+        assert_eq!(q.shard_len(M13), 1);
+        assert_eq!(q.shard_len(ModelClass::Model(ModelKind::Tiny)), 0);
+    }
+
+    #[test]
+    fn best_shard_preserves_global_fcfs_order() {
+        let mut q = ShardedQueue::new();
+        // Interleave arrivals across three groups; the global pop order
+        // must equal plain arrival order.
+        let classes = [M8, ModelClass::Any, M13, M8, ModelClass::Any, M13];
+        for (i, c) in classes.iter().enumerate() {
+            q.push(req(i as u64 + 1, i as f64, *c), &Fcfs);
+        }
+        let blocked = vec![false; q.n_shards()];
+        let mut order = Vec::new();
+        while let Some(s) = q.best_shard(&blocked) {
+            order.push(q.pop_shard(s).unwrap().id);
+        }
+        assert_eq!(order, vec![1, 2, 3, 4, 5, 6]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn blocked_shards_are_skipped() {
+        let mut q = ShardedQueue::new();
+        q.push(req(1, 0.0, ModelClass::Any), &Fcfs); // shard 0, earliest
+        q.push(req(2, 1.0, M8), &Fcfs); // shard 1
+        let mut blocked = vec![false; q.n_shards()];
+        assert_eq!(q.best_shard(&blocked), Some(0));
+        blocked[0] = true;
+        assert_eq!(q.best_shard(&blocked), Some(1));
+        blocked[1] = true;
+        assert_eq!(q.best_shard(&blocked), None);
+    }
+
+    #[test]
+    fn cross_shard_ties_break_by_arrival_sequence() {
+        let mut q = ShardedQueue::new();
+        // Identical FCFS keys in two shards: the earlier push wins.
+        q.push(req(7, 5.0, M13), &Fcfs);
+        q.push(req(8, 5.0, M8), &Fcfs);
+        let blocked = vec![false; q.n_shards()];
+        let s = q.best_shard(&blocked).unwrap();
+        assert_eq!(q.peek_shard(s).unwrap().id, 7);
+    }
+
+    #[test]
+    fn resort_rekeys_every_shard() {
+        use crate::lb::policies::Oracle;
+        let mut q = ShardedQueue::new();
+        let mut a = req(1, 0.0, M8);
+        a.true_remaining_latency = 9.0;
+        let mut b = req(2, 1.0, M8);
+        b.true_remaining_latency = 1.0;
+        q.push(a, &Fcfs);
+        q.push(b, &Fcfs);
+        let shard = q.n_shards() - 1;
+        assert_eq!(q.peek_shard(shard).unwrap().id, 1, "FCFS keys");
+        q.resort(&Oracle);
+        assert_eq!(q.peek_shard(shard).unwrap().id, 2, "re-keyed to SRTF");
+    }
+
+    #[test]
+    fn any_only_workload_keeps_single_shard() {
+        let mut q = ShardedQueue::new();
+        for i in 0..5 {
+            q.push(req(i, i as f64, ModelClass::Any), &Fcfs);
+        }
+        assert_eq!(q.n_shards(), 1, "no pinned traffic, no extra shards");
+        assert_eq!(q.iter().count(), 5);
+        assert_eq!(q.peak_len, 5);
+    }
+}

@@ -1,0 +1,124 @@
+//! Agent → model-class affinity annotations.
+//!
+//! Kairos assumes one shared LLM; a heterogeneous fleet serves several
+//! model families at once, so each agent's profile carries the family that
+//! may execute its requests. The orchestrator owns the annotation (it owns
+//! everything agent-level); the coordinator stamps each request's
+//! [`ModelClass`] from it at submission, and the sharded queue routes on
+//! that stamp. Unpinned agents default to `Any` — the unsharded behavior.
+
+use crate::engine::cost_model::ModelClass;
+
+/// A parsed affinity specification: per-agent pins plus the default class
+/// for unpinned agents.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AffinitySpec {
+    /// Class of agents without an explicit pin.
+    pub default: ModelClass,
+    /// `(agent name, class)` pins, in spec order.
+    pub pins: Vec<(String, ModelClass)>,
+}
+
+impl Default for AffinitySpec {
+    fn default() -> Self {
+        AffinitySpec { default: ModelClass::Any, pins: Vec::new() }
+    }
+}
+
+impl AffinitySpec {
+    /// Parse a compact CLI/config string.
+    ///
+    /// Grammar: comma-separated `AGENT=CLASS` with classes `llama3-8b`,
+    /// `llama2-13b`, `tiny`, `any`; the agent `*` sets the default class
+    /// for unpinned agents. Examples:
+    ///
+    /// * `Engineer=llama2-13b,QAEngineer=llama2-13b` — pin the code
+    ///   agents to the 13B group, everything else goes anywhere.
+    /// * `*=llama3-8b` — pin every agent to the 8B group.
+    pub fn parse(s: &str) -> Result<AffinitySpec, String> {
+        if s.trim().is_empty() {
+            return Err("empty affinity spec".to_string());
+        }
+        let mut spec = AffinitySpec::default();
+        let mut saw_default = false;
+        for raw in s.split(',') {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                return Err(format!("empty affinity entry in {s:?}"));
+            }
+            let (agent, class) = entry
+                .split_once('=')
+                .ok_or_else(|| format!("expected AGENT=CLASS in {entry:?}"))?;
+            let class = ModelClass::parse(class.trim())
+                .map_err(|e| format!("{e} in {entry:?}"))?;
+            let agent = agent.trim();
+            if agent.is_empty() {
+                return Err(format!("empty agent name in {entry:?}"));
+            }
+            if agent == "*" {
+                // Same contract as duplicate agent pins: a conflicting
+                // spec must error at parse, not silently last-win.
+                if saw_default {
+                    return Err(format!("duplicate default pin in {s:?}"));
+                }
+                saw_default = true;
+                spec.default = class;
+            } else {
+                if spec.pins.iter().any(|(a, _)| a == agent) {
+                    return Err(format!("duplicate pin for agent {agent:?}"));
+                }
+                spec.pins.push((agent.to_string(), class));
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The class `agent` resolves to under this spec.
+    pub fn class_for(&self, agent: &str) -> ModelClass {
+        self.pins
+            .iter()
+            .find(|(a, _)| a == agent)
+            .map(|(_, c)| *c)
+            .unwrap_or(self.default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost_model::ModelKind;
+
+    #[test]
+    fn parses_pins_and_default() {
+        let s = AffinitySpec::parse("*=llama3-8b,Engineer=llama2-13b,Router=any").unwrap();
+        assert_eq!(s.default, ModelClass::Model(ModelKind::Llama3_8B));
+        assert_eq!(s.class_for("Engineer"), ModelClass::Model(ModelKind::Llama2_13B));
+        assert_eq!(s.class_for("Router"), ModelClass::Any);
+        assert_eq!(
+            s.class_for("WriterAgent"),
+            ModelClass::Model(ModelKind::Llama3_8B),
+            "unpinned agents take the default"
+        );
+    }
+
+    #[test]
+    fn default_spec_is_all_any() {
+        let s = AffinitySpec::default();
+        assert_eq!(s.class_for("anything"), ModelClass::Any);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(AffinitySpec::parse("").is_err());
+        assert!(AffinitySpec::parse("   ").is_err());
+        assert!(AffinitySpec::parse("Engineer").is_err(), "missing =CLASS");
+        assert!(AffinitySpec::parse("Engineer=gpt5").is_err(), "unknown model");
+        assert!(AffinitySpec::parse("=llama3-8b").is_err(), "empty agent");
+        assert!(AffinitySpec::parse("A=tiny,,B=tiny").is_err(), "empty entry");
+        assert!(AffinitySpec::parse("A=tiny,A=any").is_err(), "duplicate pin");
+        assert!(
+            AffinitySpec::parse("*=llama3-8b,A=any,*=llama2-13b").is_err(),
+            "duplicate default pin"
+        );
+    }
+}

@@ -2,27 +2,38 @@
 //!
 //! Collects the system identifiers riding on every agent request
 //! ([`ids`]), reconstructs the application call graph online from
-//! upstream/downstream causality + execution-span overlap ([`graph`]), and
+//! upstream/downstream causality + execution-span overlap ([`graph`]),
 //! maintains per-agent latency distributions — single-request execution and
 //! remaining-workflow — with the doubling/Wasserstein convergence test
-//! ([`profiler`]).
+//! ([`profiler`]), and carries each agent's model-class affinity
+//! annotation for serving-group routing ([`affinity`]).
 
+pub mod affinity;
 pub mod graph;
 pub mod ids;
 pub mod profiler;
 
+pub use affinity::AffinitySpec;
 pub use graph::{EdgeKind, ExecRecord, WorkflowGraph};
 pub use ids::{AgentId, AgentRegistry, MsgId};
 pub use profiler::{DistributionProfiler, LatencyProfile};
 
+use std::collections::HashMap;
+
+use crate::engine::cost_model::ModelClass;
 use crate::Time;
 
 /// The orchestrator facade: ingest completion records, expose workflow
-/// structure and latency profiles to the scheduler and dispatcher.
+/// structure, latency profiles and model-affinity annotations to the
+/// scheduler and dispatcher.
 pub struct Orchestrator {
     pub registry: AgentRegistry,
     pub graph: WorkflowGraph,
     pub profiler: DistributionProfiler,
+    /// Agent → serving-group requirement (explicit pins).
+    model_class: HashMap<AgentId, ModelClass>,
+    /// Class of agents without an explicit pin.
+    default_class: ModelClass,
 }
 
 impl Default for Orchestrator {
@@ -37,7 +48,31 @@ impl Orchestrator {
             registry: AgentRegistry::new(),
             graph: WorkflowGraph::new(),
             profiler: DistributionProfiler::new(),
+            model_class: HashMap::new(),
+            default_class: ModelClass::Any,
         }
+    }
+
+    /// Install an affinity spec: interns every pinned agent and records the
+    /// default class for unpinned ones. REPLACES any previously installed
+    /// spec — pins absent from the new spec fall back to its default.
+    pub fn apply_affinity(&mut self, spec: &AffinitySpec) {
+        self.model_class.clear();
+        self.default_class = spec.default;
+        for (name, class) in &spec.pins {
+            let id = self.registry.intern(name);
+            self.model_class.insert(id, *class);
+        }
+    }
+
+    /// Pin one agent's serving group directly.
+    pub fn set_model_class(&mut self, agent: AgentId, class: ModelClass) {
+        self.model_class.insert(agent, class);
+    }
+
+    /// The serving group `agent`'s requests require.
+    pub fn model_class(&self, agent: AgentId) -> ModelClass {
+        self.model_class.get(&agent).copied().unwrap_or(self.default_class)
     }
 
     /// Record one completed agent-stage execution (paper step ④: "once a
@@ -61,5 +96,31 @@ impl Orchestrator {
                     .record_remaining(rec.agent, (done_at - rec.start).max(0.0));
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost_model::ModelKind;
+
+    #[test]
+    fn affinity_resolves_through_the_registry() {
+        let mut orch = Orchestrator::new();
+        let spec = AffinitySpec::parse("*=llama3-8b,Engineer=llama2-13b").unwrap();
+        orch.apply_affinity(&spec);
+        let eng = orch.registry.intern("Engineer");
+        let other = orch.registry.intern("Router");
+        assert_eq!(orch.model_class(eng), ModelClass::Model(ModelKind::Llama2_13B));
+        assert_eq!(orch.model_class(other), ModelClass::Model(ModelKind::Llama3_8B));
+        orch.set_model_class(other, ModelClass::Any);
+        assert_eq!(orch.model_class(other), ModelClass::Any);
+    }
+
+    #[test]
+    fn unannotated_orchestrator_defaults_to_any() {
+        let mut orch = Orchestrator::new();
+        let a = orch.registry.intern("A");
+        assert_eq!(orch.model_class(a), ModelClass::Any);
     }
 }

@@ -71,10 +71,21 @@ impl Default for AutoscaleConfig {
     }
 }
 
+/// Load of one model-affine serving group (all instances of one family).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupLoad {
+    pub model: ModelKind,
+    /// Requests queued in this group's shard (pinned to this family; the
+    /// `Any` shard is accounted only in the aggregate queue depth).
+    pub queue_len: usize,
+    /// Instances of this family currently accepting dispatches.
+    pub active_instances: usize,
+}
+
 /// What the autoscaler sees at one observation point.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct FleetObservation {
-    /// Depth of the central scheduling queue.
+    /// Depth of the central scheduling queue (all shards).
     pub queue_len: usize,
     /// Instances currently accepting dispatches.
     pub active_instances: usize,
@@ -90,13 +101,18 @@ pub struct FleetObservation {
     /// fleet would record phantom grows and burn the cooldown on actions
     /// that cannot be applied.
     pub can_grow: bool,
+    /// Per-group queue-depth signals, in fleet-index first-seen order.
+    /// When a grow fires, the most-starved group's model is grown.
+    pub groups: Vec<GroupLoad>,
 }
 
-/// A scale decision. The coordinator maps `Shrink` to a concrete instance
+/// A scale decision. The coordinator maps `Grow` to a concrete instance
+/// spec for the named model family, and `Shrink` to a concrete instance
 /// (the highest-index active one, deterministically).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScaleAction {
-    Grow,
+    /// Add an instance serving this model family.
+    Grow(ModelKind),
     Shrink,
 }
 
@@ -128,6 +144,28 @@ impl Autoscaler {
         &self.cfg
     }
 
+    /// The model family to grow: the group with the deepest pinned backlog
+    /// per active instance. Any-only workloads (no per-group backlog) fall
+    /// back to the template's model — the homogeneous behavior. Strict
+    /// `>` keeps ties deterministic (first group in fleet order wins).
+    fn starved_group(&self, obs: &FleetObservation) -> ModelKind {
+        let mut best: Option<(f64, ModelKind)> = None;
+        for g in &obs.groups {
+            if g.queue_len == 0 {
+                continue;
+            }
+            let pressure = g.queue_len as f64 / g.active_instances.max(1) as f64;
+            let better = match best {
+                None => true,
+                Some((bp, _)) => pressure > bp,
+            };
+            if better {
+                best = Some((pressure, g.model));
+            }
+        }
+        best.map(|(_, m)| m).unwrap_or(self.cfg.template.model)
+    }
+
     /// Feed one observation; returns the action to take now, if any.
     pub fn observe(&mut self, obs: &FleetObservation, now: Time) -> Option<ScaleAction> {
         let per_instance = obs.queue_len as f64 / obs.active_instances.max(1) as f64;
@@ -156,7 +194,7 @@ impl Autoscaler {
             self.last_action = now;
             self.hot_streak = 0;
             self.grows += 1;
-            return Some(ScaleAction::Grow);
+            return Some(ScaleAction::Grow(self.starved_group(obs)));
         }
         if self.cold_streak >= self.cfg.down_after
             && obs.active_instances > self.cfg.min_instances
@@ -196,13 +234,16 @@ mod tests {
             draining_instances: 0,
             recent_queue_ratio: ratio,
             can_grow: true,
+            groups: Vec::new(),
         }
     }
+
+    const GROW_8B: ScaleAction = ScaleAction::Grow(ModelKind::Llama3_8B);
 
     #[test]
     fn grows_on_deep_queue_and_respects_max() {
         let mut a = Autoscaler::new(cfg());
-        assert_eq!(a.observe(&obs(40, 2, 0.0), 0.0), Some(ScaleAction::Grow));
+        assert_eq!(a.observe(&obs(40, 2, 0.0), 0.0), Some(GROW_8B));
         // At the max bound a hot fleet cannot grow further.
         assert_eq!(a.observe(&obs(80, 4, 0.9), 100.0), None);
         assert_eq!(a.grows, 1);
@@ -212,15 +253,38 @@ mod tests {
     fn queue_ratio_alone_triggers_growth() {
         let mut a = Autoscaler::new(cfg());
         // Shallow queue but requests spend 80% of their life queued.
-        assert_eq!(a.observe(&obs(2, 2, 0.8), 0.0), Some(ScaleAction::Grow));
+        assert_eq!(a.observe(&obs(2, 2, 0.8), 0.0), Some(GROW_8B));
+    }
+
+    #[test]
+    fn grow_targets_the_starved_group() {
+        let mut a = Autoscaler::new(cfg());
+        let mut o = obs(40, 2, 0.0);
+        o.groups = vec![
+            GroupLoad { model: ModelKind::Llama3_8B, queue_len: 2, active_instances: 1 },
+            GroupLoad { model: ModelKind::Llama2_13B, queue_len: 30, active_instances: 1 },
+        ];
+        assert_eq!(
+            a.observe(&o, 0.0),
+            Some(ScaleAction::Grow(ModelKind::Llama2_13B)),
+            "the deepest pinned backlog picks the family to grow"
+        );
+        // An Any-only workload (no pinned backlog) grows the template.
+        let mut b = Autoscaler::new(cfg());
+        let mut o2 = obs(40, 2, 0.0);
+        o2.groups = vec![
+            GroupLoad { model: ModelKind::Llama3_8B, queue_len: 0, active_instances: 2 },
+            GroupLoad { model: ModelKind::Llama2_13B, queue_len: 0, active_instances: 1 },
+        ];
+        assert_eq!(b.observe(&o2, 0.0), Some(GROW_8B));
     }
 
     #[test]
     fn cooldown_blocks_back_to_back_actions() {
         let mut a = Autoscaler::new(cfg());
-        assert_eq!(a.observe(&obs(40, 2, 0.0), 0.0), Some(ScaleAction::Grow));
+        assert_eq!(a.observe(&obs(40, 2, 0.0), 0.0), Some(GROW_8B));
         assert_eq!(a.observe(&obs(40, 3, 0.0), 5.0), None, "inside cooldown");
-        assert_eq!(a.observe(&obs(40, 3, 0.0), 10.0), Some(ScaleAction::Grow));
+        assert_eq!(a.observe(&obs(40, 3, 0.0), 10.0), Some(GROW_8B));
     }
 
     #[test]

@@ -24,16 +24,17 @@ use crate::dispatch::DispatchPolicy;
 use crate::engine::core::{
     EngineConfig, EngineCore, ExecBackend, InstanceStatus, SimBackend, StepOutcome,
 };
-use crate::server::autoscale::{Autoscaler, FleetObservation, ScaleAction};
-use crate::server::pressure::PressureTrace;
-use crate::engine::cost_model::{CostModel, ModelKind};
+use crate::engine::cost_model::{CostModel, ModelClass, ModelKind};
 use crate::engine::request::{Request, RequestId, SeqState};
 use crate::lb::policies::SchedulePolicy;
-use crate::lb::queue::RequestQueue;
+use crate::lb::sharded::ShardedQueue;
 use crate::metrics::{MetricsCollector, RequestRecord, WorkflowRecord};
+use crate::orchestrator::affinity::AffinitySpec;
 use crate::orchestrator::graph::ExecRecord;
 use crate::orchestrator::ids::{AgentId, MsgId};
 use crate::orchestrator::Orchestrator;
+use crate::server::autoscale::{Autoscaler, FleetObservation, GroupLoad, ScaleAction};
+use crate::server::pressure::PressureTrace;
 use crate::Time;
 
 // ---------------------------------------------------------------------------
@@ -132,8 +133,7 @@ impl InstanceSpec {
     /// The engine config this spec resolves to: the model's full block pool
     /// scaled by `kv_scale` (never below one block).
     pub fn engine_config(&self) -> EngineConfig {
-        let cost = self.cost_model();
-        let mut cfg = EngineConfig::for_model(&cost, self.block_size);
+        let mut cfg = EngineConfig::for_model(self.model, self.block_size);
         cfg.max_batch = self.max_batch;
         cfg.total_blocks = ((cfg.total_blocks as f64) * self.kv_scale).max(1.0) as u32;
         cfg
@@ -187,6 +187,9 @@ impl FleetSpec {
     /// * `2*llama3-8b@0.12,2*llama3-8b@0.04:128` — uneven pressure.
     /// * `llama3-8b,llama2-13b@0.5` — mixed models.
     pub fn parse(s: &str) -> Result<FleetSpec, String> {
+        if s.trim().is_empty() {
+            return Err("empty fleet spec".to_string());
+        }
         let mut fleet = FleetSpec::default();
         for raw in s.split(',') {
             let entry = raw.trim();
@@ -221,19 +224,24 @@ impl FleetSpec {
                 Some((m, k)) => {
                     let k: f64 =
                         k.parse().map_err(|_| format!("bad kv_scale in {entry:?}"))?;
-                    if !(k > 0.0) {
-                        return Err(format!("kv_scale must be > 0 in {entry:?}"));
+                    if !k.is_finite() || k <= 0.0 {
+                        return Err(format!(
+                            "kv_scale must be a positive finite number in {entry:?}"
+                        ));
                     }
                     (m, k)
                 }
                 None => (rest, 1.0),
             };
-            let model = match model_name.trim() {
-                "llama3-8b" => ModelKind::Llama3_8B,
-                "llama2-13b" => ModelKind::Llama2_13B,
-                "tiny" => ModelKind::Tiny,
-                other => return Err(format!("unknown model {other:?}")),
-            };
+            let model_name = model_name.trim();
+            // A duplicated separator (e.g. `llama3-8b:64:32` or `2*2*...`)
+            // leaves its residue inside the would-be model name; reject it
+            // with the clause, not a misleading "unknown model".
+            if model_name.contains(['*', '@', ':']) {
+                return Err(format!("duplicate or misplaced separator in {entry:?}"));
+            }
+            let model = ModelKind::parse(model_name)
+                .map_err(|e| format!("{e} in fleet entry {entry:?}"))?;
             let mut spec = InstanceSpec::new(model).with_kv_scale(kv_scale);
             if let Some(b) = max_batch {
                 spec = spec.with_max_batch(b);
@@ -241,9 +249,6 @@ impl FleetSpec {
             for _ in 0..count {
                 fleet.push(spec);
             }
-        }
-        if fleet.is_empty() {
-            return Err("fleet has no instances".to_string());
         }
         Ok(fleet)
     }
@@ -290,6 +295,19 @@ pub struct ScaleEvent {
     pub dispatch_seq: usize,
 }
 
+/// One dispatch decision with its serving-group context: which class the
+/// request was pinned to and which model family actually served it. The
+/// per-group dispatch logs of the sharded seam contract are views over
+/// this; `class.matches(model)` must hold for every entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupDispatch {
+    pub req: RequestId,
+    pub instance: usize,
+    pub class: ModelClass,
+    /// Model family of `instance` at dispatch time.
+    pub model: ModelKind,
+}
+
 // ---------------------------------------------------------------------------
 // Workflow bookkeeping
 
@@ -330,7 +348,9 @@ pub struct Absorbed {
 /// coordinator owns every scheduling, dispatching and feedback decision.
 pub struct Coordinator<B: ExecBackend> {
     pub fleet: FleetSpec,
-    pub queue: RequestQueue,
+    /// The central queue, sharded by serving group: one shard per pinned
+    /// model family plus the `Any` shard.
+    pub queue: ShardedQueue,
     pub policy: Box<dyn SchedulePolicy>,
     pub dispatcher: Box<dyn DispatchPolicy>,
     pub engines: Vec<EngineCore<B>>,
@@ -346,6 +366,9 @@ pub struct Coordinator<B: ExecBackend> {
     /// driver-equivalence contract (two drivers over the same trace must
     /// produce the same log).
     pub dispatch_log: Vec<(RequestId, usize)>,
+    /// The dispatch log with serving-group context (same order and length
+    /// as `dispatch_log`); the sharded seam contract compares this.
+    pub group_log: Vec<GroupDispatch>,
     /// Reusable per-instance status snapshot: refreshed in place, only for
     /// instances whose engine changed since the last pump (no per-pump
     /// allocation — see `benches/bench_overhead.rs`).
@@ -374,6 +397,8 @@ pub struct Coordinator<B: ExecBackend> {
     make_backend: Option<Box<dyn FnMut(&InstanceSpec) -> B>>,
     /// First metrics record not yet folded into an autoscale observation.
     scaler_seen_requests: usize,
+    /// Reusable per-pump shard-blocked flags (no per-pump allocation).
+    blocked_buf: Vec<bool>,
 }
 
 impl Coordinator<SimBackend> {
@@ -428,7 +453,7 @@ impl<B: ExecBackend> Coordinator<B> {
         let reference_cost = fleet.reference_cost();
         Coordinator {
             fleet,
-            queue: RequestQueue::new(),
+            queue: ShardedQueue::new(),
             policy,
             dispatcher,
             engines,
@@ -440,6 +465,7 @@ impl<B: ExecBackend> Coordinator<B> {
             next_msg_id: 1,
             dropped: 0,
             dispatch_log: Vec::new(),
+            group_log: Vec::new(),
             status_buf,
             status_dirty: vec![false; n],
             reference_cost,
@@ -451,6 +477,7 @@ impl<B: ExecBackend> Coordinator<B> {
             autoscaler: None,
             make_backend: None,
             scaler_seen_requests: 0,
+            blocked_buf: Vec::new(),
         }
     }
 
@@ -486,6 +513,13 @@ impl<B: ExecBackend> Coordinator<B> {
         self.autoscaler = Some(autoscaler);
     }
 
+    /// Install agent → model-class affinity annotations: every request an
+    /// agent submits from now on carries the agent's class and is routed
+    /// through its serving group's queue shard.
+    pub fn set_affinity(&mut self, spec: &AffinitySpec) {
+        self.orch.apply_affinity(spec);
+    }
+
     /// The installed autoscaler, if any (diagnostics).
     pub fn autoscaler(&self) -> Option<&Autoscaler> {
         self.autoscaler.as_ref()
@@ -503,18 +537,40 @@ impl<B: ExecBackend> Coordinator<B> {
     }
 
     /// Register a pre-built backend as a new live instance; returns its
-    /// index. The new slot is immediately eligible for dispatch.
+    /// index. A retired tombstone slot of the SAME model family is re-used
+    /// (same index, fresh engine) instead of growing the instance vector
+    /// forever — indices stay stable either way, and the dispatcher's
+    /// per-instance state for a re-used slot is reset through
+    /// [`DispatchPolicy::on_instance_reset`]. The slot is immediately
+    /// eligible for dispatch.
     pub fn add_engine(&mut self, spec: InstanceSpec, backend: B, now: Time) -> usize {
-        let j = self.engines.len();
-        let engine = EngineCore::new(j, spec.engine_config(), backend);
-        let status = engine.status();
-        self.fleet.instances.push(spec);
-        self.base_capacity.push(status.capacity_tokens);
-        self.status_buf.push(status);
-        self.status_dirty.push(true);
-        self.applied_pressure.push(1.0);
-        self.instance_state.push(InstanceState::Active);
-        self.engines.push(engine);
+        let reuse = (0..self.engines.len()).find(|&j| {
+            self.instance_state[j] == InstanceState::Retired
+                && self.fleet.instances[j].model == spec.model
+        });
+        let j = match reuse {
+            Some(j) => {
+                self.engines[j] = EngineCore::new(j, spec.engine_config(), backend);
+                self.fleet.instances[j] = spec;
+                self.instance_state[j] = InstanceState::Active;
+                self.status_dirty[j] = true;
+                self.dispatcher.on_instance_reset(j);
+                j
+            }
+            None => {
+                let j = self.engines.len();
+                let engine = EngineCore::new(j, spec.engine_config(), backend);
+                let status = engine.status();
+                self.fleet.instances.push(spec);
+                self.base_capacity.push(status.capacity_tokens);
+                self.status_buf.push(status);
+                self.status_dirty.push(true);
+                self.applied_pressure.push(1.0);
+                self.instance_state.push(InstanceState::Active);
+                self.engines.push(engine);
+                j
+            }
+        };
         self.scale_log.push(ScaleEvent {
             at: now,
             instance: j,
@@ -648,6 +704,7 @@ impl<B: ExecBackend> Coordinator<B> {
             id,
             msg_id,
             agent,
+            model_class: self.orch.model_class(agent),
             upstream: None,
             prompt_tokens,
             true_output_tokens: output_tokens,
@@ -688,6 +745,7 @@ impl<B: ExecBackend> Coordinator<B> {
             id,
             msg_id,
             agent,
+            model_class: self.orch.model_class(agent),
             upstream,
             prompt_tokens: stage.prompt_tokens,
             true_output_tokens: stage.output_tokens,
@@ -706,9 +764,8 @@ impl<B: ExecBackend> Coordinator<B> {
         for j in 0..self.engines.len() {
             // Retired tombstones are frozen (idle, non-accepting): skip
             // them entirely so dead slots cost nothing per refresh beyond
-            // this state check. (Note: the engine itself is ~counters only
-            // — the sim's BlockManager holds no real pool — and reusing
-            // tombstone slots is a ROADMAP open item.)
+            // this state check. A tombstone re-filled by `add_engine` is
+            // marked dirty (and Active) there, so it refreshes normally.
             if self.instance_state[j] == InstanceState::Retired && !self.status_dirty[j]
             {
                 continue;
@@ -743,32 +800,35 @@ impl<B: ExecBackend> Coordinator<B> {
     }
 
     /// Run the schedule→dispatch half of the cycle: repeatedly pick the
-    /// highest-priority request and place it, until the queue drains or the
-    /// dispatcher defers ("the request remains in the scheduling queue",
-    /// paper §6). Returns the instances that received at least one request,
-    /// in first-dispatch order, so the driver can wake them.
+    /// globally highest-priority request among the serving-group shards
+    /// and place it on a model-compatible instance, until every shard
+    /// drains or defers ("the request remains in the scheduling queue",
+    /// paper §6). Head-of-line blocking is per group: a shard whose head
+    /// cannot be placed stops only its own group's dispatching this round.
+    /// Returns the instances that received at least one request, in
+    /// first-dispatch order, so the driver can wake them.
     pub fn pump(&mut self, now: Time) -> Vec<usize> {
         let mut woken: Vec<usize> = Vec::new();
         if self.queue.is_empty() {
             return woken;
         }
         self.refresh_statuses(now);
+        self.blocked_buf.clear();
+        self.blocked_buf.resize(self.queue.n_shards(), false);
         loop {
-            if self.queue.is_empty() {
-                return woken;
-            }
-            let Some(best) = self.queue.peek_best() else {
+            let Some(s) = self.queue.best_shard(&self.blocked_buf) else {
                 return woken;
             };
-            // A prompt that can never fit any accepting instance — judged
-            // against the PHYSICAL pools, so a transient co-tenant squeeze
-            // only defers — is rejected outright. With every instance
-            // draining there is nothing to judge against: defer instead.
+            let class = self.queue.class(s);
+            let best = self.queue.peek_shard(s).expect("best shard has a head");
+            // A prompt that can never fit any accepting instance OF ITS
+            // GROUP — judged against the PHYSICAL pools, so a transient
+            // co-tenant squeeze only defers — is rejected outright.
             let need_tokens = best.prompt_tokens as u64 + 1;
             let mut any_accepting = false;
             let mut could_ever_fit = false;
-            for (j, s) in self.status_buf.iter().enumerate() {
-                if !s.accepting {
+            for (j, st) in self.status_buf.iter().enumerate() {
+                if !st.accepting || !class.matches(st.model) {
                     continue;
                 }
                 any_accepting = true;
@@ -778,26 +838,51 @@ impl<B: ExecBackend> Coordinator<B> {
                 }
             }
             if !any_accepting {
-                return woken;
+                // Not one live instance of this family. If the fleet holds
+                // no slot of the family at all the request can never be
+                // served: drop it (the group analogue of the fit rule).
+                // Slots that are merely draining/retired defer instead —
+                // scaling can revive the family.
+                let family_exists =
+                    self.fleet.instances.iter().any(|sp| class.matches(sp.model));
+                if family_exists {
+                    self.blocked_buf[s] = true;
+                } else {
+                    let req = self.queue.pop_shard(s).unwrap();
+                    self.pending.remove(&req.id);
+                    self.workflows.remove(&req.msg_id);
+                    self.dropped += 1;
+                }
+                continue;
             }
             if !could_ever_fit {
-                let req = self.queue.pop_best().unwrap();
+                let req = self.queue.pop_shard(s).unwrap();
                 self.pending.remove(&req.id);
                 self.workflows.remove(&req.msg_id);
                 self.dropped += 1;
                 continue;
             }
             let Some(j) = self.dispatcher.choose(best, &self.status_buf, now) else {
-                return woken;
+                self.blocked_buf[s] = true;
+                continue;
             };
             // Safety net over the policies' own filtering: work must never
-            // land on an instance that is draining or retired.
+            // land on an instance that is draining, retired, or serving a
+            // model family the request is not pinned to.
             assert!(
-                j < self.engines.len() && self.status_buf[j].accepting,
-                "dispatcher chose non-accepting instance {j}"
+                j < self.engines.len()
+                    && self.status_buf[j].accepting
+                    && class.matches(self.status_buf[j].model),
+                "dispatcher chose non-accepting or incompatible instance {j}"
             );
-            let req = self.queue.pop_best().expect("peeked request still queued");
+            let req = self.queue.pop_shard(s).expect("peeked request still queued");
             self.dispatch_log.push((req.id, j));
+            self.group_log.push(GroupDispatch {
+                req: req.id,
+                instance: j,
+                class,
+                model: self.status_buf[j].model,
+            });
             self.dispatcher.on_dispatch(&req, j, now);
             self.engines[j].submit(req, now);
             // Rebuild through refresh_one so pressure scaling and the
@@ -951,9 +1036,45 @@ impl<B: ExecBackend> Coordinator<B> {
         sum / window.len() as f64
     }
 
-    /// Consult the autoscaling policy and apply its decision: grow with
-    /// the backend factory, or start draining the highest-index active
-    /// instance (deterministic, so both drivers make identical choices).
+    /// Per-model-family load signals for the autoscaler, in fleet-index
+    /// first-seen order (deterministic across drivers): each family's
+    /// pinned shard depth and its live instance count.
+    fn group_loads(&self) -> Vec<GroupLoad> {
+        let mut groups: Vec<GroupLoad> = Vec::new();
+        for (j, spec) in self.fleet.instances.iter().enumerate() {
+            let active = self.instance_state[j] == InstanceState::Active;
+            match groups.iter_mut().find(|g| g.model == spec.model) {
+                Some(g) => g.active_instances += active as usize,
+                None => groups.push(GroupLoad {
+                    model: spec.model,
+                    queue_len: self.queue.shard_len(ModelClass::Model(spec.model)),
+                    active_instances: active as usize,
+                }),
+            }
+        }
+        groups
+    }
+
+    /// The spec to grow family `model` with: the scaler's template when it
+    /// already serves that family, else the first fleet instance of the
+    /// family (so a grown 13B co-tenant inherits the 13B group's geometry),
+    /// else the template re-pointed at the model.
+    fn grow_template(&self, model: ModelKind, template: InstanceSpec) -> InstanceSpec {
+        if template.model == model {
+            return template;
+        }
+        self.fleet
+            .instances
+            .iter()
+            .copied()
+            .find(|s| s.model == model)
+            .unwrap_or(InstanceSpec { model, ..template })
+    }
+
+    /// Consult the autoscaling policy and apply its decision: grow the
+    /// starved group with the backend factory, or start draining the
+    /// highest-index active instance (deterministic, so both drivers make
+    /// identical choices).
     fn autoscale(&mut self, now: Time) {
         let Some(mut scaler) = self.autoscaler.take() else { return };
         let obs = FleetObservation {
@@ -962,10 +1083,11 @@ impl<B: ExecBackend> Coordinator<B> {
             draining_instances: self.draining_instances(),
             recent_queue_ratio: self.recent_queue_ratio(),
             can_grow: self.make_backend.is_some(),
+            groups: self.group_loads(),
         };
         match scaler.observe(&obs, now) {
-            Some(ScaleAction::Grow) => {
-                let spec = scaler.config().template;
+            Some(ScaleAction::Grow(model)) => {
+                let spec = self.grow_template(model, scaler.config().template);
                 // observe() only emits Grow when `can_grow` held, so the
                 // factory is present and this cannot fail.
                 let _ = self.add_instance(spec, now);
@@ -1028,6 +1150,37 @@ mod tests {
         assert!(FleetSpec::parse("llama3-8b@nope").is_err());
         assert!(FleetSpec::parse("llama3-8b:0").is_err());
         assert!(FleetSpec::parse("llama3-8b,,tiny").is_err());
+    }
+
+    #[test]
+    fn fleet_parse_rejects_whitespace_only_spec() {
+        let err = FleetSpec::parse("   ").unwrap_err();
+        assert!(err.contains("empty fleet spec"), "{err}");
+    }
+
+    #[test]
+    fn fleet_parse_rejects_non_finite_kv_scale() {
+        // `inf > 0.0` holds, so these used to pass straight through into
+        // an effectively unbounded KV pool.
+        for spec in ["llama3-8b@inf", "llama3-8b@1e999", "llama3-8b@NaN"] {
+            let err = FleetSpec::parse(spec).unwrap_err();
+            assert!(err.contains("kv_scale"), "{spec}: {err}");
+            assert!(err.contains("llama3-8b@"), "error must name the clause: {err}");
+        }
+    }
+
+    #[test]
+    fn fleet_parse_rejects_duplicate_separators_naming_the_clause() {
+        for spec in ["llama3-8b:64:32", "2*2*llama3-8b"] {
+            let err = FleetSpec::parse(spec).unwrap_err();
+            assert!(err.contains("separator"), "{spec}: {err}");
+        }
+        // Doubled `@`/misplaced `:` fail in the value parse, also naming
+        // the offending clause.
+        let err = FleetSpec::parse("llama3-8b@0.5@0.3").unwrap_err();
+        assert!(err.contains("llama3-8b@0.5@0.3"), "{err}");
+        let err = FleetSpec::parse("tiny,llama3-8b@0.5:64:32").unwrap_err();
+        assert!(err.contains("llama3-8b@0.5:64:32"), "{err}");
     }
 
     #[test]
@@ -1231,6 +1384,134 @@ mod tests {
         c.submit_external("A", prompt, 4, 0.0);
         c.pump(0.0);
         assert_eq!(c.dropped, 0, "transient squeeze must not drop");
+    }
+
+    #[test]
+    fn add_instance_reuses_compatible_tombstone_slot() {
+        let mut c = Coordinator::sim(
+            small_fleet(3, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        // Idle instance 1 retires on the spot and becomes a tombstone.
+        c.retire_instance(1, 0.0).unwrap();
+        assert_eq!(c.instance_state(1), InstanceState::Retired);
+        assert_eq!(c.active_instances(), 2);
+        // A same-family grow fills the tombstone: same index, fresh
+        // engine, no fleet-vector growth.
+        let spec = InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(0.12);
+        let j = c.add_instance(spec, 1.0).unwrap();
+        assert_eq!(j, 1, "tombstone slot re-used");
+        assert_eq!(c.n_instances(), 3, "instance vector did not grow");
+        assert_eq!(c.active_instances(), 3);
+        assert_eq!(c.instance_state(1), InstanceState::Active);
+        // The revived slot takes traffic again (dispatcher state resized
+        // and reset for the slot).
+        for i in 0..3 {
+            c.submit_external("A", 16, 4, 1.0 + i as f64 * 0.001);
+        }
+        let woken = c.pump(1.1);
+        assert_eq!(woken.len(), 3, "all three slots serve traffic");
+    }
+
+    #[test]
+    fn cross_family_grow_leaves_tombstone_alone() {
+        let mut c = Coordinator::sim(
+            small_fleet(2, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        c.retire_instance(1, 0.0).unwrap();
+        assert_eq!(c.instance_state(1), InstanceState::Retired);
+        // A 13B grow must NOT fill the 8B tombstone: the slot's family is
+        // part of its identity (group membership stays stable).
+        let j = c.add_instance(InstanceSpec::new(ModelKind::Llama2_13B), 1.0).unwrap();
+        assert_eq!(j, 2, "cross-family tombstone left alone");
+        assert_eq!(c.instance_state(1), InstanceState::Retired);
+        assert_eq!(c.n_instances(), 3);
+        // A later same-family grow re-fills it.
+        let spec = InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(0.12);
+        let j2 = c.add_instance(spec, 2.0).unwrap();
+        assert_eq!(j2, 1, "same-family grow re-uses the tombstone");
+        assert_eq!(c.n_instances(), 3);
+        assert_eq!(c.active_instances(), 3);
+    }
+
+    #[test]
+    fn pinned_requests_route_to_their_group() {
+        let mut fleet = FleetSpec::default();
+        fleet.push(InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(0.12));
+        fleet.push(InstanceSpec::new(ModelKind::Llama2_13B).with_kv_scale(0.12));
+        let mut c = Coordinator::sim(fleet, Box::new(Fcfs), Box::new(RoundRobin::new()));
+        c.set_affinity(&AffinitySpec::parse("A=llama2-13b,B=llama3-8b").unwrap());
+        for i in 0..3 {
+            c.submit_external("A", 16, 4, i as f64 * 0.001);
+        }
+        for i in 0..3 {
+            c.submit_external("B", 16, 4, 0.01 + i as f64 * 0.001);
+        }
+        c.pump(0.1);
+        assert_eq!(c.dispatch_log.len(), 6);
+        assert_eq!(c.group_log.len(), 6);
+        for g in &c.group_log {
+            assert!(g.class.matches(g.model), "cross-model dispatch: {g:?}");
+        }
+        let to_13b = c.group_log.iter().filter(|g| g.instance == 1).count();
+        let to_8b = c.group_log.iter().filter(|g| g.instance == 0).count();
+        assert_eq!((to_8b, to_13b), (3, 3), "each group served its own pins");
+    }
+
+    #[test]
+    fn starved_group_defers_without_blocking_others() {
+        let mut fleet = FleetSpec::default();
+        fleet.push(InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(0.12));
+        fleet.push(InstanceSpec::new(ModelKind::Llama2_13B).with_kv_scale(0.12));
+        let mut c = Coordinator::sim(fleet, Box::new(Fcfs), Box::new(RoundRobin::new()));
+        c.set_affinity(&AffinitySpec::parse("A=llama2-13b,B=llama3-8b").unwrap());
+        // The 13B family drains away entirely; its shard must defer (the
+        // family can be revived) WITHOUT stalling the 8B shard, even
+        // though the 13B-pinned request arrived first (FCFS head).
+        c.retire_instance(1, 0.0).unwrap();
+        c.submit_external("A", 16, 4, 0.1);
+        c.submit_external("B", 16, 4, 0.2);
+        let woken = c.pump(0.3);
+        assert_eq!(woken, vec![0], "8B shard kept dispatching");
+        assert_eq!(c.queue.len(), 1, "13B-pinned request still queued");
+        assert_eq!(c.dropped, 0, "deferred, not dropped");
+    }
+
+    #[test]
+    fn class_with_no_family_in_fleet_drops() {
+        let mut c = Coordinator::sim(
+            small_fleet(1, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        c.set_affinity(&AffinitySpec::parse("C=tiny").unwrap());
+        c.submit_external("C", 16, 4, 0.0);
+        c.submit_external("D", 16, 4, 0.1);
+        let woken = c.pump(0.2);
+        assert_eq!(c.dropped, 1, "no tiny slot will ever exist: drop");
+        assert_eq!(woken, vec![0], "unpinned request unaffected");
+        assert!(c.queue.is_empty());
+    }
+
+    #[test]
+    fn grow_template_follows_fleet_family() {
+        let fleet = FleetSpec::parse("2*llama3-8b@0.12,llama2-13b@0.5:64").unwrap();
+        let c = Coordinator::sim(fleet, Box::new(Fcfs), Box::new(RoundRobin::new()));
+        let template = InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(0.12);
+        // Template already serves the family: used as-is.
+        assert_eq!(c.grow_template(ModelKind::Llama3_8B, template), template);
+        // Another family present in the fleet: inherit its geometry.
+        let grown = c.grow_template(ModelKind::Llama2_13B, template);
+        assert_eq!(grown.model, ModelKind::Llama2_13B);
+        assert_eq!(grown.max_batch, 64);
+        assert!((grown.kv_scale - 0.5).abs() < 1e-12);
+        // Family absent from the fleet: template re-pointed at the model.
+        let tiny = c.grow_template(ModelKind::Tiny, template);
+        assert_eq!(tiny.model, ModelKind::Tiny);
+        assert!((tiny.kv_scale - 0.12).abs() < 1e-12);
     }
 
     #[test]

@@ -23,10 +23,10 @@ pub mod pressure;
 pub mod real;
 pub mod sim;
 
-pub use autoscale::{AutoscaleConfig, Autoscaler, FleetObservation, ScaleAction};
+pub use autoscale::{AutoscaleConfig, Autoscaler, FleetObservation, GroupLoad, ScaleAction};
 pub use coordinator::{
-    Clock, Coordinator, FleetSpec, InstanceSpec, InstanceState, ManualClock, ScaleEvent,
-    ScaleEventKind, WallClock,
+    Clock, Coordinator, FleetSpec, GroupDispatch, InstanceSpec, InstanceState, ManualClock,
+    ScaleEvent, ScaleEventKind, WallClock,
 };
 pub use pressure::PressureTrace;
 pub use sim::{FleetConfig, SimConfig, SimResult, SimServer};

@@ -79,6 +79,7 @@ impl RealServer {
             // Engine geometry comes from the compiled model's manifest, not
             // the cost model; the fleet spec stays the nominal description.
             let cfg = EngineConfig {
+                model: crate::engine::cost_model::ModelKind::Tiny,
                 block_size: 4,
                 total_blocks: batch as u32 * max_seq / 4,
                 max_batch: batch,

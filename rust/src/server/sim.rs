@@ -16,8 +16,11 @@ use crate::engine::core::{SimBackend, StepOutcome};
 use crate::engine::cost_model::ModelKind;
 use crate::lb::policies::SchedulePolicy;
 use crate::metrics::{MetricsCollector, RunSummary};
+use crate::orchestrator::affinity::AffinitySpec;
 use crate::server::autoscale::{AutoscaleConfig, Autoscaler};
-use crate::server::coordinator::{Coordinator, FleetSpec, InstanceSpec, ScaleEvent};
+use crate::server::coordinator::{
+    Coordinator, FleetSpec, GroupDispatch, InstanceSpec, ScaleEvent,
+};
 use crate::server::pressure::PressureTrace;
 use crate::simcore::EventQueue;
 use crate::workload::ArrivalEvent;
@@ -87,6 +90,9 @@ pub struct FleetConfig {
     pub autoscale: Option<AutoscaleConfig>,
     /// When set, per-instance KV budgets move over time.
     pub pressure: Option<PressureTrace>,
+    /// When set, agents are pinned to model-affine serving groups and the
+    /// central queue shards accordingly.
+    pub affinity: Option<AffinitySpec>,
 }
 
 impl From<SimConfig> for FleetConfig {
@@ -97,6 +103,7 @@ impl From<SimConfig> for FleetConfig {
             warmup_frac: cfg.warmup_frac,
             autoscale: None,
             pressure: None,
+            affinity: None,
         }
     }
 }
@@ -110,6 +117,7 @@ impl From<FleetSpec> for FleetConfig {
             warmup_frac: d.warmup_frac,
             autoscale: None,
             pressure: None,
+            affinity: None,
         }
     }
 }
@@ -126,6 +134,10 @@ pub struct SimResult {
     pub dispatcher_name: &'static str,
     /// Every dispatch decision `(request, instance)` in order.
     pub dispatch_log: Vec<(u64, usize)>,
+    /// The dispatch log with serving-group context (class + instance
+    /// model per decision); per-group views and the no-cross-model check
+    /// read this.
+    pub group_log: Vec<GroupDispatch>,
     /// Every fleet change (grow / drain start / drain done), in order.
     pub scale_log: Vec<ScaleEvent>,
     /// Instances still active when the run ended.
@@ -133,6 +145,25 @@ pub struct SimResult {
 }
 
 impl SimResult {
+    /// Mean per-stage queuing delay in seconds (arrival at the load
+    /// balancer to first admission into a running batch); 0 when no
+    /// request finished.
+    pub fn mean_queue_delay(&self) -> f64 {
+        let reqs = &self.metrics.requests;
+        if reqs.is_empty() {
+            return 0.0;
+        }
+        reqs.iter().map(|r| r.queue_time()).sum::<f64>() / reqs.len() as f64
+    }
+
+    /// Dispatch decisions that landed on an instance whose model family
+    /// the request was not pinned to. Must be zero: the sharded queue and
+    /// every dispatcher filter candidates by model class, and the
+    /// coordinator asserts it per dispatch.
+    pub fn cross_model_dispatches(&self) -> usize {
+        self.group_log.iter().filter(|g| !g.class.matches(g.model)).count()
+    }
+
     /// `(grows, completed retirements)` of the run's scale log.
     pub fn scale_counts(&self) -> (usize, usize) {
         use crate::server::coordinator::ScaleEventKind;
@@ -188,6 +219,9 @@ impl SimServer {
         }
         if let Some(p) = cfg.pressure.clone() {
             coord.set_pressure(p);
+        }
+        if let Some(aff) = &cfg.affinity {
+            coord.set_affinity(aff);
         }
         let n = coord.n_instances();
         SimServer { cfg, coord, engine_busy: vec![false; n] }
@@ -290,6 +324,7 @@ impl SimServer {
             scheduler_name: self.coord.policy.name(),
             dispatcher_name: self.coord.dispatcher.name(),
             dispatch_log: std::mem::take(&mut self.coord.dispatch_log),
+            group_log: std::mem::take(&mut self.coord.group_log),
             scale_log: std::mem::take(&mut self.coord.scale_log),
             final_active_instances: self.coord.active_instances(),
             metrics: self.coord.metrics,
@@ -332,7 +367,11 @@ pub fn make_dispatcher_for_fleet(name: &str, fleet: &FleetSpec) -> Box<dyn Dispa
             if min_scale.is_finite() {
                 ts.capacity_bytes *= min_scale;
             }
-            Box::new(TimeSlotDispatcher::new(fleet.len(), ts))
+            // Each instance is priced with ITS OWN cost model (ramp slope
+            // + KV density), not the fleet reference's.
+            let models: Vec<ModelKind> =
+                fleet.instances.iter().map(|s| s.model).collect();
+            Box::new(TimeSlotDispatcher::for_models(&models, ts))
         }
         "oracle" => Box::new(OracleFit::new(fleet.len())),
         "least" | "least-loaded" => Box::new(LeastLoaded::new()),

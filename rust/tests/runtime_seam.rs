@@ -5,12 +5,17 @@
 //! must produce the SAME dispatch decisions through either driver.
 //!
 //! Plus: heterogeneous-fleet coverage — per-instance KV budgets flow
-//! through `InstanceStatus` into the dispatchers from both drivers.
+//! through `InstanceStatus` into the dispatchers from both drivers — and
+//! sharded-fleet coverage: with agents pinned to model families, the
+//! per-group dispatch logs must match across drivers and no request may
+//! ever land on a model-incompatible instance.
 
 use kairos::engine::core::StepOutcome;
+use kairos::engine::cost_model::{ModelClass, ModelKind};
+use kairos::orchestrator::affinity::AffinitySpec;
 use kairos::server::autoscale::{AutoscaleConfig, Autoscaler};
 use kairos::server::coordinator::{
-    Clock, Coordinator, FleetSpec, ManualClock, ScaleEventKind,
+    Clock, Coordinator, FleetSpec, GroupDispatch, ManualClock, ScaleEventKind,
 };
 use kairos::server::pressure::PressureTrace;
 use kairos::server::sim::{
@@ -39,10 +44,13 @@ fn burst_then_calm(seed: u64) -> Vec<ArrivalEvent> {
 
 /// Outcome of one driver run, reduced to the seam contract. Scale events
 /// are compared by (kind, instance, dispatch-log position): both drivers
-/// must reshape the fleet at the same points of the dispatch stream.
+/// must reshape the fleet at the same points of the dispatch stream. The
+/// group log carries each dispatch's serving-group context, so equality
+/// here IS per-group dispatch-log equality.
 #[derive(Debug, PartialEq)]
 struct DriverTrace {
     dispatch_log: Vec<(u64, usize)>,
+    group_log: Vec<GroupDispatch>,
     scale_log: Vec<(ScaleEventKind, usize, usize)>,
     dropped: u64,
     workflows_completed: usize,
@@ -56,7 +64,7 @@ fn drive_sim(
     dispatcher: &str,
     arrivals: Vec<ArrivalEvent>,
 ) -> DriverTrace {
-    drive_sim_elastic(fleet, scheduler, dispatcher, arrivals, None, None)
+    drive_sim_elastic(fleet, scheduler, dispatcher, arrivals, None, None, None)
 }
 
 fn drive_sim_elastic(
@@ -66,13 +74,16 @@ fn drive_sim_elastic(
     arrivals: Vec<ArrivalEvent>,
     autoscale: Option<AutoscaleConfig>,
     pressure: Option<PressureTrace>,
+    affinity: Option<AffinitySpec>,
 ) -> DriverTrace {
     let mut cfg = FleetConfig::from(fleet.clone());
     cfg.autoscale = autoscale;
     cfg.pressure = pressure;
+    cfg.affinity = affinity;
     let res = run_fleet(cfg, scheduler, dispatcher, arrivals);
     DriverTrace {
         dispatch_log: res.dispatch_log,
+        group_log: res.group_log,
         scale_log: res
             .scale_log
             .iter()
@@ -97,9 +108,19 @@ fn drive_polling(
     arrivals: Vec<ArrivalEvent>,
     refresh_interval: f64,
 ) -> DriverTrace {
-    drive_polling_elastic(fleet, scheduler, dispatcher, arrivals, refresh_interval, None, None)
+    drive_polling_elastic(
+        fleet,
+        scheduler,
+        dispatcher,
+        arrivals,
+        refresh_interval,
+        None,
+        None,
+        None,
+    )
 }
 
+#[allow(clippy::too_many_arguments)]
 fn drive_polling_elastic(
     fleet: &FleetSpec,
     scheduler: &str,
@@ -108,6 +129,7 @@ fn drive_polling_elastic(
     refresh_interval: f64,
     autoscale: Option<AutoscaleConfig>,
     pressure: Option<PressureTrace>,
+    affinity: Option<AffinitySpec>,
 ) -> DriverTrace {
     let mut coord = Coordinator::sim(
         fleet.clone(),
@@ -119,6 +141,9 @@ fn drive_polling_elastic(
     }
     if let Some(p) = pressure {
         coord.set_pressure(p);
+    }
+    if let Some(aff) = &affinity {
+        coord.set_affinity(aff);
     }
     let clock = ManualClock::new();
     let n = coord.n_instances();
@@ -202,6 +227,7 @@ fn drive_polling_elastic(
 
     DriverTrace {
         dispatch_log: std::mem::take(&mut coord.dispatch_log),
+        group_log: std::mem::take(&mut coord.group_log),
         scale_log: coord
             .scale_log
             .iter()
@@ -271,6 +297,7 @@ fn fleet_resize_seam_holds_across_drivers() {
         arrivals.clone(),
         Some(auto),
         Some(pressure.clone()),
+        None,
     );
     let b = drive_polling_elastic(
         &fleet,
@@ -280,6 +307,7 @@ fn fleet_resize_seam_holds_across_drivers() {
         5.0,
         Some(auto),
         Some(pressure),
+        None,
     );
     assert!(!a.dispatch_log.is_empty());
     assert!(
@@ -310,8 +338,10 @@ fn no_request_ever_dispatched_to_a_retired_instance() {
         "calm tail must drain the grown fleet: {:?}",
         res.scale_log
     );
-    // Slots never reactivate, so from each retire-start onward its
-    // instance must be absent from the dispatch log.
+    // No grow fires after the calm tail's retire-starts in this trace
+    // (a tombstone CAN be revived by a later same-family grow, but the
+    // burst is over), so from each retire-start onward its instance must
+    // be absent from the dispatch log.
     for ev in retire_starts {
         assert!(
             res.dispatch_log[ev.dispatch_seq..]
@@ -321,6 +351,57 @@ fn no_request_ever_dispatched_to_a_retired_instance() {
             ev.instance
         );
     }
+}
+
+#[test]
+fn sharded_seam_holds_on_mixed_model_fleet() {
+    // The sharded contract: agents pinned to model families, a mixed fleet
+    // — both drivers must produce identical per-group dispatch logs, and
+    // no request may land on a model-incompatible instance.
+    let fleet = FleetSpec::parse("2*llama3-8b@0.12,llama2-13b@0.12").unwrap();
+    let aff = AffinitySpec::parse("*=llama3-8b,Engineer=llama2-13b,QAEngineer=llama2-13b")
+        .unwrap();
+    let arrivals = trace(3.0, 120, 41);
+    let a = drive_sim_elastic(
+        &fleet,
+        "kairos",
+        "kairos",
+        arrivals.clone(),
+        None,
+        None,
+        Some(aff.clone()),
+    );
+    let b =
+        drive_polling_elastic(&fleet, "kairos", "kairos", arrivals, 5.0, None, None, Some(aff));
+    assert!(!a.dispatch_log.is_empty());
+    assert_eq!(a, b, "drivers diverged over the sharded coordinator");
+    // The pinned group saw traffic, and every dispatch stayed in-family.
+    let pinned = ModelClass::Model(ModelKind::Llama2_13B);
+    assert!(
+        a.group_log.iter().any(|g| g.class == pinned),
+        "13B-pinned agents never dispatched: {:?}",
+        a.group_log.len()
+    );
+    for g in &a.group_log {
+        assert!(
+            g.class.matches(g.model),
+            "request {} pinned to {:?} dispatched to a {:?} instance",
+            g.req,
+            g.class,
+            g.model
+        );
+    }
+    // Per-group logs (views of the group log) are identical across
+    // drivers by construction; spot-check the pinned group's view.
+    let group_view = |t: &DriverTrace| -> Vec<(u64, usize)> {
+        t.group_log
+            .iter()
+            .filter(|g| g.class == pinned)
+            .map(|g| (g.req, g.instance))
+            .collect()
+    };
+    assert_eq!(group_view(&a), group_view(&b));
+    assert!(!group_view(&a).is_empty());
 }
 
 #[test]
