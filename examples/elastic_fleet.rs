@@ -14,7 +14,7 @@
 //! Run: `cargo run --release --example elastic_fleet`
 
 use kairos::server::autoscale::AutoscaleConfig;
-use kairos::server::coordinator::FleetSpec;
+use kairos::server::coordinator::{FleetSpec, PROVISIONING};
 use kairos::server::pressure::PressureTrace;
 use kairos::server::sim::{run_fleet, FleetConfig};
 use kairos::stats::rng::Rng;
@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
     auto.up_after = 1;
     auto.down_after = 2;
     auto.cooldown = 5.0;
+    let floor = auto.min_instances;
 
     println!("== elastic vs fixed fleet under a 14 req/s burst + co-tenant pressure ==\n");
     let mut t = Table::new(&[
@@ -53,6 +54,7 @@ fn main() -> anyhow::Result<()> {
         "active@end",
     ]);
     for (label, autoscale) in [("fixed 2x", None), ("elastic 2..6", Some(auto))] {
+        let elastic = autoscale.is_some();
         let mut cfg = FleetConfig::from(fleet.clone());
         cfg.autoscale = autoscale;
         cfg.pressure = Some(pressure.clone());
@@ -69,10 +71,14 @@ fn main() -> anyhow::Result<()> {
             retires.to_string(),
             res.final_active_instances.to_string(),
         ]);
-        if autoscale.is_some() {
+        if elastic {
             println!("elastic scale events:");
             for ev in &res.scale_log {
-                println!("  t={:7.2}s  instance {}  {:?}", ev.at, ev.instance, ev.kind);
+                if ev.instance == PROVISIONING {
+                    println!("  t={:7.2}s  (booting)   {:?}", ev.at, ev.kind);
+                } else {
+                    println!("  t={:7.2}s  instance {}  {:?}", ev.at, ev.instance, ev.kind);
+                }
             }
             println!();
             // The acceptance contract of the elastic fleet:
@@ -80,8 +86,7 @@ fn main() -> anyhow::Result<()> {
             assert!(retires >= 1, "calm tail must drain it back down");
             assert_eq!(res.dropped_requests, 0, "draining dropped in-flight work");
             assert_eq!(
-                res.final_active_instances,
-                auto.min_instances,
+                res.final_active_instances, floor,
                 "fleet must return to its floor"
             );
         }

@@ -1,0 +1,76 @@
+//! Learned agent→family routing escaping a wrong static pin.
+//!
+//! A mixed fleet serves two Llama3-8B instances next to two Llama2-13B
+//! co-tenants (slower per step, ~6x denser KV). The operator's affinity
+//! spec pins *everything* to the 13B family — a plausible but wrong
+//! guess. Under the static `pinned` policy the 8B half of the fleet
+//! idles while the 13B group queues; under the `learned` policy the
+//! router's deterministic exploration samples both families, the
+//! per-(agent, family) latency profiles converge, and traffic migrates to
+//! the measured-faster 8B group — pins are priors, not fate. `Any`
+//! requests (none here, every agent is pinned) would meanwhile be
+//! balanced to the least-pressured group.
+//!
+//! Run: `cargo run --release --example learned_routing`
+
+use kairos::orchestrator::affinity::AffinitySpec;
+use kairos::orchestrator::router::RoutePolicy;
+use kairos::server::coordinator::FleetSpec;
+use kairos::server::sim::{run_fleet, FleetConfig};
+use kairos::stats::rng::Rng;
+use kairos::util::table::Table;
+use kairos::workload::{TraceGen, WorkloadMix};
+
+fn main() -> anyhow::Result<()> {
+    let fleet = FleetSpec::parse("2*llama3-8b@0.12,2*llama2-13b@0.12")
+        .map_err(anyhow::Error::msg)?;
+    let affinity = AffinitySpec::parse("*=llama2-13b").map_err(anyhow::Error::msg)?;
+    let mut t = Table::new(&[
+        "routing", "avg s/tok", "P99 s/tok", "mean e2e s", "8B dispatches", "13B dispatches",
+    ]);
+    let mut e2e = Vec::new();
+    for (label, route) in [
+        ("pinned (all 13B)", RoutePolicy::Pinned),
+        ("learned", RoutePolicy::learned_default()),
+    ] {
+        let arrivals = TraceGen::default().generate(
+            &WorkloadMix::colocated(),
+            3.0,
+            300,
+            &mut Rng::new(17),
+        );
+        let mut cfg = FleetConfig::from(fleet.clone());
+        cfg.affinity = Some(affinity.clone());
+        cfg.route = Some(route);
+        let res = run_fleet(cfg, "kairos", "kairos", arrivals);
+        let s = &res.summary;
+        let mean_e2e = res.mean_request_e2e();
+        e2e.push(mean_e2e);
+        let to_8b = res.group_log.iter().filter(|g| g.instance < 2).count();
+        let to_13b = res.group_log.iter().filter(|g| g.instance >= 2).count();
+        t.row(vec![
+            label.to_string(),
+            format!("{:.4}", s.avg_token_latency),
+            format!("{:.4}", s.p99_token_latency),
+            format!("{mean_e2e:.3}"),
+            to_8b.to_string(),
+            to_13b.to_string(),
+        ]);
+        assert_eq!(res.cross_model_dispatches(), 0, "{label}: cross-model dispatch");
+    }
+    t.print();
+    println!(
+        "\nlearned mean E2E {:.3}s vs pinned {:.3}s ({}x)",
+        e2e[1],
+        e2e[0],
+        (e2e[0] / e2e[1].max(1e-9)).round()
+    );
+    assert!(
+        e2e[1] < e2e[0],
+        "learned routing must beat the wrong static pin: {} !< {}",
+        e2e[1],
+        e2e[0]
+    );
+    println!("learned_routing OK");
+    Ok(())
+}

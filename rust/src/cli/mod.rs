@@ -4,11 +4,14 @@
 //! kairos serve   [--config file.toml] [--scheduler S] [--dispatcher D]
 //!                [--rate R] [--tasks N] [--instances I] [--model M]
 //!                [--fleet SPEC] [--seed X] [--autoscale] [--pressure TRACE]
-//!                [--affinity SPEC]
+//!                [--affinity SPEC] [--route-policy POLICY]
 //! kairos fleet-sweep [--fleet SPEC] [--scheduler S] [--rate R] [--tasks N]
 //! kairos elastic-sweep [--fleet SPEC] [--rate R] [--tasks N] [--min N]
-//!                [--max N] [--pressure TRACE]
+//!                [--max N] [--pressure TRACE] [--boot-delay S]
+//!                [--per-group BOUNDS]
 //! kairos shard-sweep [--fleet SPEC] [--affinity SPEC] [--rate R] [--tasks N]
+//! kairos route-sweep [--fleet SPEC] [--affinity SPEC] [--route-policy P]
+//!                [--rate R] [--tasks N]
 //! kairos figures <id|all> [--out results/]
 //! kairos quickstart [--artifacts DIR] [--model NAME]
 //! ```
@@ -19,8 +22,9 @@ use crate::agents::apps::App;
 use crate::config::ServingConfig;
 use crate::engine::cost_model::ModelKind;
 use crate::orchestrator::affinity::AffinitySpec;
-use crate::server::autoscale::AutoscaleConfig;
-use crate::server::coordinator::FleetSpec;
+use crate::orchestrator::router::{RoutePolicy, RouteReason};
+use crate::server::autoscale::{parse_per_group, AutoscaleConfig};
+use crate::server::coordinator::{FleetSpec, PROVISIONING};
 use crate::server::pressure::PressureTrace;
 use crate::server::sim::{run_fleet, FleetConfig, SimResult};
 use crate::stats::rng::Rng;
@@ -117,14 +121,19 @@ USAGE:
                      [--tasks N] [--instances I] [--model llama3-8b|llama2-13b]
                      [--fleet SPEC] [--seed S] [--workload colocated|qa|rg|cg]
                      [--autoscale] [--pressure TRACE] [--affinity SPEC]
+                     [--route-policy pinned|learned[:KEY=VAL,...]]
   kairos fleet-sweep [--fleet SPEC] [--scheduler S] [--rate R] [--tasks N]
                      [--seed S] [--workload W]
   kairos elastic-sweep
                      [--fleet SPEC] [--rate R] [--tasks N] [--seed S]
                      [--workload W] [--min N] [--max N] [--pressure TRACE]
+                     [--boot-delay S] [--per-group BOUNDS]
   kairos shard-sweep [--fleet SPEC] [--affinity SPEC] [--scheduler S]
                      [--dispatcher D] [--rate R] [--tasks N] [--seed S]
                      [--workload W]
+  kairos route-sweep [--fleet SPEC] [--affinity SPEC] [--scheduler S]
+                     [--dispatcher D] [--route-policy P] [--rate R]
+                     [--tasks N] [--seed S] [--workload W]
   kairos figures     <table1|fig3..fig18|overhead|all> [--out results]
   kairos quickstart  [--artifacts artifacts] [--model tiny]
 
@@ -141,11 +150,20 @@ AFFINITY SPEC — comma-separated `AGENT=CLASS` with CLASS a model name or
   family; `shard-sweep` compares the sharded and unsharded configurations
   on the same trace.
 
+ROUTE POLICY — `pinned` (the static affinity stamp) or
+  `learned[:explore=R,min_samples=N]`: learn each agent's best family
+  online from measured per-family latency, fall back to pins until
+  converged, and balance `Any` requests to the least-pressured group;
+  `route-sweep` compares both policies on the same trace.
+
 PRESSURE TRACE — `;`-separated `TARGET:TIME=MULT,...` with TARGET an
   instance index or `*`: piecewise co-tenant KV-pressure multipliers, e.g.
   `*:0=1.0,30=0.5,90=1.0;2:0=0.8`. `--autoscale` (or `[autoscale]` in the
   config) lets the fleet grow under load bursts and drain back down;
   `elastic-sweep` compares the fixed and elastic fleets side by side.
+  `--boot-delay` models instance boot latency (a grow provisions first,
+  registers after the delay); `--per-group` caps/floors each family, e.g.
+  `llama3-8b=1..4,llama2-13b=0..2`.
 ";
 
 /// CLI entrypoint.
@@ -156,6 +174,7 @@ pub fn run(raw: Vec<String>) -> crate::Result<()> {
         Some("fleet-sweep") => fleet_sweep(&args),
         Some("elastic-sweep") => elastic_sweep(&args),
         Some("shard-sweep") => shard_sweep(&args),
+        Some("route-sweep") => route_sweep(&args),
         Some("figures") => {
             let id = args
                 .positional
@@ -238,6 +257,9 @@ fn serve(args: &Args) -> crate::Result<()> {
     if let Some(a) = args.get("affinity") {
         cfg.affinity = Some(a.to_string());
     }
+    if let Some(r) = args.get("route-policy") {
+        cfg.route_policy = Some(r.to_string());
+    }
     let fleet = cfg.resolve_fleet().map_err(|e| anyhow::anyhow!(e))?;
     // `--autoscale` overrides the config like every other flag: bare/true
     // enables (with the requested fleet as the floor when the config has
@@ -278,10 +300,16 @@ fn serve(args: &Args) -> crate::Result<()> {
         .map(AffinitySpec::parse)
         .transpose()
         .map_err(|e| anyhow::anyhow!(e))?;
+    let route = cfg
+        .route_policy
+        .as_deref()
+        .map(RoutePolicy::parse)
+        .transpose()
+        .map_err(|e| anyhow::anyhow!(e))?;
     let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
 
     println!(
-        "serving {} tasks at {} req/s on {} instances{}{}{}{} — scheduler={} dispatcher={}",
+        "serving {} tasks at {} req/s on {} instances{}{}{}{}{} — scheduler={} dispatcher={}",
         cfg.n_tasks,
         cfg.rate,
         fleet.len(),
@@ -289,6 +317,10 @@ fn serve(args: &Args) -> crate::Result<()> {
         if autoscale.is_some() { " (elastic)" } else { "" },
         if pressure.is_some() { " (co-tenant pressure)" } else { "" },
         if affinity.is_some() { " (model-affine)" } else { "" },
+        match route {
+            Some(RoutePolicy::Learned { .. }) => " (learned routing)",
+            _ => "",
+        },
         cfg.scheduler,
         cfg.dispatcher
     );
@@ -301,8 +333,9 @@ fn serve(args: &Args) -> crate::Result<()> {
         autoscale,
         pressure,
         affinity,
+        route,
     };
-    let affine = fc.affinity.is_some();
+    let affine = fc.affinity.is_some() || matches!(fc.route, Some(RoutePolicy::Learned { .. }));
     let res = run_fleet(fc, &cfg.scheduler, &cfg.dispatcher, arrivals);
     let s = &res.summary;
     println!("\ncompleted {} workflows over {:.1} sim-seconds", s.n_workflows, res.sim_duration);
@@ -392,19 +425,34 @@ fn elastic_sweep(args: &Args) -> crate::Result<()> {
         .transpose()
         .map_err(|e| anyhow::anyhow!(e))?;
 
+    let boot_delay = numf(args, "boot-delay", 0.0)?;
+    if !boot_delay.is_finite() || boot_delay < 0.0 {
+        anyhow::bail!("flag --boot-delay: expected a non-negative number, got {boot_delay}");
+    }
+    let per_group = args
+        .get("per-group")
+        .map(parse_per_group)
+        .transpose()
+        .map_err(|e| anyhow::anyhow!(e))?
+        .unwrap_or_default();
+
     let mut auto = AutoscaleConfig::for_template(fleet.instances[0]);
     auto.min_instances = min.max(1);
     auto.max_instances = max.max(auto.min_instances);
     auto.up_after = 1;
     auto.down_after = 2;
     auto.cooldown = 5.0;
+    auto.boot_delay = boot_delay;
+    auto.per_group = per_group;
 
     println!(
-        "elastic sweep over {spec:?} — {} tasks at {rate} req/s (seed {seed}), bounds [{}, {}]{}",
+        "elastic sweep over {spec:?} — {} tasks at {rate} req/s (seed {seed}), \
+         bounds [{}, {}]{}{}",
         n_tasks,
         auto.min_instances,
         auto.max_instances,
         if pressure.is_some() { ", with co-tenant pressure" } else { "" },
+        if boot_delay > 0.0 { ", with boot latency" } else { "" },
     );
     let mut t = crate::util::table::Table::new(&[
         "fleet", "avg s/tok", "P99 s/tok", "queue%", "dropped", "grows", "retires",
@@ -432,10 +480,14 @@ fn elastic_sweep(args: &Args) -> crate::Result<()> {
         if !res.scale_log.is_empty() {
             println!("  {label} scale events:");
             for ev in &res.scale_log {
-                println!(
-                    "    t={:7.2}s  instance {}  {:?}",
-                    ev.at, ev.instance, ev.kind
-                );
+                if ev.instance == PROVISIONING {
+                    println!("    t={:7.2}s  (booting)   {:?}", ev.at, ev.kind);
+                } else {
+                    println!(
+                        "    t={:7.2}s  instance {}  {:?}",
+                        ev.at, ev.instance, ev.kind
+                    );
+                }
             }
         }
     }
@@ -500,6 +552,92 @@ fn shard_sweep(args: &Args) -> crate::Result<()> {
         }
         for (class, n) in seen {
             println!("  {:<12} {n}", class.name());
+        }
+    }
+    Ok(())
+}
+
+/// Routing-layer scenario: the same mixed-model trace served with the
+/// static pinned routing and with the learned policy (profile-driven
+/// agent → family affinities, pressure-balanced `Any` placement). Reports
+/// mean request E2E latency, queuing delay, and the learned run's route
+/// decisions broken down by reason and family.
+fn route_sweep(args: &Args) -> crate::Result<()> {
+    let spec = args.get("fleet").unwrap_or("2*llama3-8b@0.12,2*llama2-13b@0.12");
+    let fleet = FleetSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+    // The default affinity is deliberately bad — everything pinned to the
+    // slower, KV-denser 13B family — so the sweep shows learning escaping
+    // a wrong static pin.
+    let aff_spec = args.get("affinity").unwrap_or("*=llama2-13b");
+    let affinity = AffinitySpec::parse(aff_spec).map_err(|e| anyhow::anyhow!(e))?;
+    let learned = RoutePolicy::parse(args.get("route-policy").unwrap_or("learned"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if !matches!(learned, RoutePolicy::Learned { .. }) {
+        anyhow::bail!(
+            "flag --route-policy: route-sweep compares against the pinned baseline; \
+             pass a learned policy (e.g. learned:explore=0.2,min_samples=16)"
+        );
+    }
+    let scheduler = args.get("scheduler").unwrap_or("kairos");
+    let dispatcher = args.get("dispatcher").unwrap_or("kairos");
+    let rate = num_rate(args, "rate", 3.0)?;
+    let n_tasks = num_count(args, "tasks", 300)?;
+    let seed = num_u64(args, "seed", 42)?;
+    let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
+
+    println!(
+        "route sweep over {spec:?} — affinity {aff_spec:?}, \
+         scheduler={scheduler} dispatcher={dispatcher}"
+    );
+    println!("{n_tasks} tasks at {rate} req/s (seed {seed})\n");
+    let mut t = crate::util::table::Table::new(&[
+        "routing", "avg s/tok", "P99 s/tok", "mean e2e s", "mean queue s", "dropped",
+    ]);
+    let mut learned_res: Option<SimResult> = None;
+    for (label, route) in [("pinned", RoutePolicy::Pinned), ("learned", learned)] {
+        let arrivals =
+            TraceGen::default().generate(&mix, rate, n_tasks, &mut Rng::new(seed));
+        let mut fc = FleetConfig::from(fleet.clone());
+        fc.affinity = Some(affinity.clone());
+        fc.route = Some(route);
+        let res = run_fleet(fc, scheduler, dispatcher, arrivals);
+        let s = &res.summary;
+        let mean_e2e = res.mean_request_e2e();
+        t.row(vec![
+            label.to_string(),
+            format!("{:.4}", s.avg_token_latency),
+            format!("{:.4}", s.p99_token_latency),
+            format!("{mean_e2e:.3}"),
+            format!("{:.3}", res.mean_queue_delay()),
+            res.dropped_requests.to_string(),
+        ]);
+        if label == "learned" {
+            learned_res = Some(res);
+        }
+    }
+    t.print();
+    if let Some(res) = learned_res {
+        println!("\nlearned route decisions by reason:");
+        let mut reasons: Vec<(RouteReason, usize)> = Vec::new();
+        for d in &res.route_log {
+            match reasons.iter_mut().find(|(r, _)| *r == d.reason) {
+                Some((_, n)) => *n += 1,
+                None => reasons.push((d.reason, 1)),
+            }
+        }
+        for (reason, n) in reasons {
+            println!("  {reason:<16?} {n}");
+        }
+        println!("\nlearned dispatches by family:");
+        let mut fams: Vec<(ModelKind, usize)> = Vec::new();
+        for g in &res.group_log {
+            match fams.iter_mut().find(|(m, _)| *m == g.model) {
+                Some((_, n)) => *n += 1,
+                None => fams.push((g.model, 1)),
+            }
+        }
+        for (model, n) in fams {
+            println!("  {:<12} {n}", model.name());
         }
     }
     Ok(())

@@ -8,7 +8,8 @@ use std::collections::BTreeMap;
 
 use crate::engine::cost_model::ModelKind;
 use crate::orchestrator::affinity::AffinitySpec;
-use crate::server::autoscale::AutoscaleConfig;
+use crate::orchestrator::router::RoutePolicy;
+use crate::server::autoscale::{parse_per_group, AutoscaleConfig};
 use crate::server::coordinator::InstanceSpec;
 use crate::server::pressure::PressureTrace;
 use crate::server::sim::SimConfig;
@@ -168,6 +169,10 @@ pub struct ServingConfig {
     /// Agent → model-class pins (`[workload] affinity = "..."`), in
     /// [`AffinitySpec::parse`] syntax. Validated eagerly at load.
     pub affinity: Option<String>,
+    /// Routing-layer policy (`[policy] route_policy = "..."`), in
+    /// [`RoutePolicy::parse`] syntax (`pinned` | `learned[:...]`).
+    /// Validated eagerly at load; absent = the static pinned behavior.
+    pub route_policy: Option<String>,
 }
 
 impl Default for ServingConfig {
@@ -183,6 +188,7 @@ impl Default for ServingConfig {
             autoscale: None,
             pressure: None,
             affinity: None,
+            route_policy: None,
         }
     }
 }
@@ -247,6 +253,15 @@ impl ServingConfig {
             let template =
                 InstanceSpec::new(cfg.sim.model).with_kv_scale(cfg.sim.kv_scale);
             let d = AutoscaleConfig::for_template(template);
+            let per_group = match doc.get("autoscale", "per_group") {
+                None => Vec::new(),
+                Some(v) => {
+                    let s = v.as_str().ok_or_else(|| {
+                        format!("[autoscale] per_group: expected a string, got {v:?}")
+                    })?;
+                    parse_per_group(s)?
+                }
+            };
             let a = AutoscaleConfig {
                 min_instances: count("min", d.min_instances)?,
                 max_instances: count("max", d.max_instances)?,
@@ -256,8 +271,13 @@ impl ServingConfig {
                 up_after: count("up_after", d.up_after as usize)? as u32,
                 down_after: count("down_after", d.down_after as usize)? as u32,
                 cooldown: num("cooldown", d.cooldown)?,
+                boot_delay: num("boot_delay", d.boot_delay)?,
+                per_group,
                 template,
             };
+            if !a.boot_delay.is_finite() || a.boot_delay < 0.0 {
+                return Err(format!("[autoscale] boot_delay invalid: {}", a.boot_delay));
+            }
             if a.max_instances < a.min_instances {
                 return Err(format!(
                     "[autoscale] bounds invalid: min={} max={}",
@@ -313,6 +333,20 @@ impl ServingConfig {
         if let Some(spec) = &cfg.affinity {
             // Validate eagerly so a bad pin fails at load, not dispatch.
             AffinitySpec::parse(spec)?;
+        }
+        cfg.route_policy = match doc.get("policy", "route_policy") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| {
+                        format!("[policy] route_policy: expected a string, got {v:?}")
+                    })?
+                    .to_string(),
+            ),
+        };
+        if let Some(spec) = &cfg.route_policy {
+            // Validate eagerly so a bad policy fails at load, not serve.
+            RoutePolicy::parse(spec)?;
         }
         Ok(cfg)
     }
@@ -497,6 +531,60 @@ refresh_interval = 2.0
         assert!(ServingConfig::from_toml("[workload]\naffinity = \"A=gpt5\"\n").is_err());
         assert!(ServingConfig::from_toml("[workload]\naffinity = 5\n").is_err());
         assert!(ServingConfig::from_toml("").unwrap().affinity.is_none());
+    }
+
+    #[test]
+    fn route_policy_validated_at_load() {
+        let cfg = ServingConfig::from_toml(
+            "[policy]\nroute_policy = \"learned:explore=0.2,min_samples=16\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.route_policy.as_deref(),
+            Some("learned:explore=0.2,min_samples=16")
+        );
+        assert!(ServingConfig::from_toml("").unwrap().route_policy.is_none());
+        // Bad policies fail at load; a mis-typed value never silently
+        // drops the key.
+        assert!(ServingConfig::from_toml("[policy]\nroute_policy = \"greedy\"\n").is_err());
+        assert!(ServingConfig::from_toml("[policy]\nroute_policy = 5\n").is_err());
+        assert!(ServingConfig::from_toml(
+            "[policy]\nroute_policy = \"learned:explore=7\"\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn autoscale_per_group_and_boot_delay_parse() {
+        let cfg = ServingConfig::from_toml(concat!(
+            "[autoscale]\nenabled = true\nboot_delay = 3.5\n",
+            "per_group = \"llama3-8b=1..4,llama2-13b=0..2\"\n",
+        ))
+        .unwrap();
+        let a = cfg.autoscale.expect("autoscale enabled");
+        assert!((a.boot_delay - 3.5).abs() < 1e-12);
+        assert_eq!(a.per_group.len(), 2);
+        assert_eq!(a.family_max(crate::engine::cost_model::ModelKind::Llama2_13B), 2);
+        // Defaults: instant boot, unbounded families.
+        let d = ServingConfig::from_toml("[autoscale]\nenabled = true\n").unwrap();
+        let d = d.autoscale.unwrap();
+        assert_eq!(d.boot_delay, 0.0);
+        assert!(d.per_group.is_empty());
+        // Bad values fail at load, naming the key/clause.
+        let err = ServingConfig::from_toml(
+            "[autoscale]\nenabled = true\nboot_delay = -1\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("boot_delay"), "{err}");
+        let err = ServingConfig::from_toml(
+            "[autoscale]\nenabled = true\nper_group = \"llama3-8b=4..1\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("llama3-8b=4..1"), "{err}");
+        assert!(ServingConfig::from_toml(
+            "[autoscale]\nenabled = true\nper_group = 5\n"
+        )
+        .is_err());
     }
 
     #[test]

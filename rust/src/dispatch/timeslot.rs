@@ -53,6 +53,13 @@ pub struct TimeSlotConfig {
     pub safety: f64,
     /// OOM-suspect suspension cooldown (s).
     pub suspend_cooldown: f64,
+    /// Demand-prediction hook of the routing layer: when true, the
+    /// feasibility check prices each request's lifetime KV demand from the
+    /// profiler's learned per-agent demand distribution (mode of observed
+    /// prompt + generated tokens, refreshed via
+    /// [`DispatchPolicy::refresh`]) instead of the slope-based guess.
+    /// Off by default — enabled alongside learned routing.
+    pub learned_demand: bool,
 }
 
 impl TimeSlotConfig {
@@ -113,7 +120,7 @@ impl InstanceCost {
 /// Per-instance future memory profile as a slot ring.
 #[derive(Debug, Clone)]
 struct SlotRing {
-    /// Absolute index of slots[cursor]; slot s covers
+    /// Absolute index of `slots[cursor]`; slot s covers
     /// [s·slot_len, (s+1)·slot_len).
     base_slot: i64,
     cursor: usize,
@@ -198,6 +205,10 @@ pub struct TimeSlotDispatcher {
     /// Expected exec-time provider: agent -> T_i (mode of the exec-latency
     /// distribution). Refreshed by the server from the orchestrator.
     expected_exec: HashMap<crate::orchestrator::ids::AgentId, f64>,
+    /// Learned KV demand per agent (mode of observed total tokens held at
+    /// completion); read by the feasibility check when
+    /// [`TimeSlotConfig::learned_demand`] is on.
+    expected_kv: HashMap<crate::orchestrator::ids::AgentId, f64>,
     /// Instance -> suspended-until time (OOM-suspect cooldown).
     suspended_until: Vec<Time>,
     /// Diagnostics.
@@ -215,6 +226,7 @@ impl TimeSlotDispatcher {
             costs: vec![InstanceCost::from_config(&cfg); n_instances],
             placements: HashMap::new(),
             expected_exec: HashMap::new(),
+            expected_kv: HashMap::new(),
             suspended_until: vec![0.0; n_instances],
             rejected_rounds: 0,
         }
@@ -244,6 +256,30 @@ impl TimeSlotDispatcher {
         t_mode: f64,
     ) {
         self.expected_exec.insert(agent, t_mode.max(1e-3));
+    }
+
+    /// Install an agent's learned total-KV-token demand (mode of the
+    /// profiler's demand distribution). Only read when
+    /// [`TimeSlotConfig::learned_demand`] is enabled.
+    pub fn set_expected_kv(
+        &mut self,
+        agent: crate::orchestrator::ids::AgentId,
+        tokens: f64,
+    ) {
+        self.expected_kv.insert(agent, tokens.max(1.0));
+    }
+
+    /// Expected lifetime KV tokens of `req` on an instance with the given
+    /// ramp constants: the learned per-agent demand when the hook is on
+    /// and profiled (floored at the prompt — the part known exactly),
+    /// otherwise the slope-based guess over the expected execution time.
+    fn expected_demand_tokens(&self, req: &Request, cost: InstanceCost, t_i: f64) -> u64 {
+        if self.cfg.learned_demand {
+            if let Some(&kv) = self.expected_kv.get(&req.agent) {
+                return (kv.ceil() as u64).max(req.prompt_tokens as u64 + 1);
+            }
+        }
+        req.prompt_tokens as u64 + (cost.mem_slope * t_i / cost.kv_bytes_per_token) as u64
     }
 
     fn abs_slot(&self, t: Time) -> i64 {
@@ -356,10 +392,10 @@ impl DispatchPolicy for TimeSlotDispatcher {
                 continue; // OOM-suspect cooldown
             }
             // Expected total KV tokens of this request over its lifetime on
-            // THIS instance (per-instance decode rate and KV density).
+            // THIS instance (learned demand profile when enabled, else the
+            // per-instance decode rate and KV density).
             let cost = self.costs[j];
-            let expected_tokens = req.prompt_tokens as u64
-                + (cost.mem_slope * t_i / cost.kv_bytes_per_token) as u64;
+            let expected_tokens = self.expected_demand_tokens(req, cost, t_i);
             // Live-status feasibility: dispatching is deferred while the
             // instance's committed + queued demand leaves no room — the
             // request "remains in the scheduling queue" (§6). This keeps
@@ -471,6 +507,11 @@ impl DispatchPolicy for TimeSlotDispatcher {
             if let Some(mode) = orch.profiler.expected_exec(agent) {
                 self.set_expected_exec(agent, mode);
             }
+            if self.cfg.learned_demand {
+                if let Some(kv) = orch.profiler.expected_kv_demand(agent) {
+                    self.set_expected_kv(agent, kv);
+                }
+            }
         }
     }
 }
@@ -489,6 +530,7 @@ impl TimeSlotConfig {
             default_exec_time: 5.0,
             safety: 1.8,
             suspend_cooldown: 2.0,
+            learned_demand: false,
         }
     }
 }
@@ -509,6 +551,7 @@ mod tests {
             default_exec_time: 4.0,
             safety: 1.0,
             suspend_cooldown: 2.0,
+            learned_demand: false,
         }
     }
 
@@ -816,6 +859,26 @@ mod tests {
         // A late completion of the evicted tenant is a no-op.
         d.on_complete(1, j, 0.2);
         assert!(d.rings[j].peak() >= 0.0);
+    }
+
+    #[test]
+    fn learned_demand_overrides_the_slope_guess() {
+        // Instance budget 1000 tokens. A 100-token prompt with the slope
+        // guess predicts 100 + 10*4/1 = 140 tokens; the learned profile
+        // knows this agent's requests balloon to 2000 tokens — over the
+        // whole budget, so the dispatch must defer.
+        let mut c = cfg();
+        c.learned_demand = true;
+        let mut d = TimeSlotDispatcher::new(1, c);
+        d.set_expected_kv(AgentId(0), 2000.0);
+        let statuses = vec![st(0)];
+        assert_eq!(d.choose(&req(1, 0, 100), &statuses, 0.0), None);
+        // An unprofiled agent still uses the slope guess and fits.
+        assert_eq!(d.choose(&req(2, 1, 100), &statuses, 0.0), Some(0));
+        // With the hook disabled the learned profile is ignored.
+        let mut d2 = TimeSlotDispatcher::new(1, cfg());
+        d2.set_expected_kv(AgentId(0), 2000.0);
+        assert_eq!(d2.choose(&req(3, 0, 100), &statuses, 0.0), Some(0));
     }
 
     #[test]

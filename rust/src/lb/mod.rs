@@ -2,10 +2,11 @@
 //!
 //! All requests enter the central queue — sharded into model-affine
 //! serving groups ([`sharded::ShardedQueue`]): one [`queue::RequestQueue`]
-//! per model family pinned by agent affinity, plus the `Any` shard for
-//! unpinned work. A [`SchedulePolicy`] defines the total order in which
-//! requests leave it (global across shards; a blocked group only stalls
-//! itself):
+//! per [`sharded::ShardKey`] — a model family pinned by agent affinity, a
+//! per-group shard of router-balanced `Any` work, or the shared `Any`
+//! shard for unrouted work. A [`SchedulePolicy`] defines the total order
+//! in which requests leave it (global across shards; a blocked group only
+//! stalls itself):
 //!
 //! * [`policies::Fcfs`] — Parrot's First-Come-First-Serve baseline.
 //! * [`policies::Topo`] — Ayo's topology-depth priority (fewer remaining
@@ -25,4 +26,4 @@ pub mod sharded;
 pub use policies::{Fcfs, KairosPolicy, Oracle, SchedulePolicy, Topo};
 pub use priority::AgentPriorities;
 pub use queue::RequestQueue;
-pub use sharded::ShardedQueue;
+pub use sharded::{ShardKey, ShardedQueue};

@@ -1,6 +1,6 @@
 //! The central queue, sharded into model-affine serving groups.
 //!
-//! One [`RequestQueue`] shard per [`ModelClass`] that has seen traffic: a
+//! One [`RequestQueue`] shard per [`ShardKey`] that has seen traffic: a
 //! request pinned to a model family waits only behind requests of its own
 //! group, plus the `Any` shard for unpinned work. Cross-shard scheduling
 //! order is preserved by a single global insertion sequence and a
@@ -8,11 +8,31 @@
 //! a workload whose requests are all `Any` behaves exactly like the
 //! unsharded queue — while a group whose head cannot be placed no longer
 //! blocks every other group (per-group head-of-line blocking only).
+//!
+//! The routing layer ([`crate::orchestrator::router`]) may balance an
+//! `Any`-class request into a specific group's queue without constraining
+//! its dispatch: such requests go to the group's [`ShardKey::AnyIn`]
+//! shard — separate from the family's pinned shard, so a pinned head that
+//! defers (e.g. its family is mid-drain) can never starve routed `Any`
+//! work queued toward the same group.
 
 use super::policies::SchedulePolicy;
 use super::queue::RequestQueue;
-use crate::engine::cost_model::ModelClass;
+use crate::engine::cost_model::{ModelClass, ModelKind};
 use crate::engine::request::Request;
+
+/// Which shard of the central queue a request waits in. The key is a pure
+/// queueing partition: the request's dispatch constraint is always its own
+/// [`Request::model_class`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShardKey {
+    /// Shard of the request's own class: one per pinned family, plus the
+    /// shared `Any` shard (the unrouted behavior).
+    Class(ModelClass),
+    /// Per-group shard of `Any`-class requests balanced into the group by
+    /// the router.
+    AnyIn(ModelKind),
+}
 
 /// Total order over head ranks: policy key first (NaN-safe via
 /// `total_cmp`, like the heap itself), then global insertion sequence.
@@ -26,7 +46,7 @@ fn rank_lt(a: ((f64, f64), u64), b: ((f64, f64), u64)) -> bool {
 pub struct ShardedQueue {
     /// Shards in creation order (deterministic: same push sequence ⇒ same
     /// shard layout, which the driver-equivalence contract relies on).
-    shards: Vec<(ModelClass, RequestQueue)>,
+    shards: Vec<(ShardKey, RequestQueue)>,
     /// Global insertion sequence shared by all shards.
     next_seq: u64,
     /// Peak total occupancy across shards (diagnostics).
@@ -44,24 +64,31 @@ impl ShardedQueue {
     /// until a pinned request arrives).
     pub fn new() -> ShardedQueue {
         ShardedQueue {
-            shards: vec![(ModelClass::Any, RequestQueue::new())],
+            shards: vec![(ShardKey::Class(ModelClass::Any), RequestQueue::new())],
             next_seq: 0,
             peak_len: 0,
         }
     }
 
-    /// Index of the shard for `class`, creating it if absent.
-    pub fn ensure_shard(&mut self, class: ModelClass) -> usize {
-        if let Some(i) = self.shards.iter().position(|(c, _)| *c == class) {
+    /// Index of the shard for `key`, creating it if absent.
+    pub fn ensure_shard(&mut self, key: ShardKey) -> usize {
+        if let Some(i) = self.shards.iter().position(|(k, _)| *k == key) {
             return i;
         }
-        self.shards.push((class, RequestQueue::new()));
+        self.shards.push((key, RequestQueue::new()));
         self.shards.len() - 1
     }
 
-    /// Route `req` to its group's shard.
+    /// Route `req` to its own class's shard (the unrouted behavior).
     pub fn push(&mut self, req: Request, policy: &dyn SchedulePolicy) {
-        let i = self.ensure_shard(req.model_class);
+        let key = ShardKey::Class(req.model_class);
+        self.push_routed(req, key, policy);
+    }
+
+    /// Queue `req` under an explicit shard key — the routing layer's
+    /// entry point (e.g. an `Any` request balanced into a group's shard).
+    pub fn push_routed(&mut self, req: Request, key: ShardKey, policy: &dyn SchedulePolicy) {
+        let i = self.ensure_shard(key);
         let seq = self.next_seq;
         self.next_seq += 1;
         self.shards[i].1.push_with_seq(req, policy, seq);
@@ -72,8 +99,8 @@ impl ShardedQueue {
         self.shards.len()
     }
 
-    /// The group served by shard `i`.
-    pub fn class(&self, shard: usize) -> ModelClass {
+    /// The key of shard `i`.
+    pub fn key(&self, shard: usize) -> ShardKey {
         self.shards[shard].0
     }
 
@@ -86,12 +113,19 @@ impl ShardedQueue {
         self.shards.iter().all(|(_, q)| q.is_empty())
     }
 
-    /// Queued requests pinned to `class` (0 when the shard does not exist).
-    pub fn shard_len(&self, class: ModelClass) -> usize {
+    /// Queued requests in `key`'s shard (0 when the shard does not exist).
+    pub fn shard_len(&self, key: ShardKey) -> usize {
         self.shards
             .iter()
-            .find(|(c, _)| *c == class)
+            .find(|(k, _)| *k == key)
             .map_or(0, |(_, q)| q.len())
+    }
+
+    /// Requests queued toward family `model`: its pinned shard plus its
+    /// routed-`Any` shard — the routing layer's per-group queue depth.
+    pub fn group_len(&self, model: ModelKind) -> usize {
+        self.shard_len(ShardKey::Class(ModelClass::Model(model)))
+            + self.shard_len(ShardKey::AnyIn(model))
     }
 
     /// Peek at shard `i`'s highest-priority request.
@@ -175,10 +209,36 @@ mod tests {
         q.push(req(4, 3.0, M8), &Fcfs);
         assert_eq!(q.n_shards(), 3);
         assert_eq!(q.len(), 4);
-        assert_eq!(q.shard_len(ModelClass::Any), 1);
-        assert_eq!(q.shard_len(M8), 2);
-        assert_eq!(q.shard_len(M13), 1);
-        assert_eq!(q.shard_len(ModelClass::Model(ModelKind::Tiny)), 0);
+        assert_eq!(q.shard_len(ShardKey::Class(ModelClass::Any)), 1);
+        assert_eq!(q.shard_len(ShardKey::Class(M8)), 2);
+        assert_eq!(q.shard_len(ShardKey::Class(M13)), 1);
+        assert_eq!(q.shard_len(ShardKey::Class(ModelClass::Model(ModelKind::Tiny))), 0);
+    }
+
+    #[test]
+    fn routed_any_gets_its_own_per_group_shard() {
+        let mut q = ShardedQueue::new();
+        q.push(req(1, 0.0, M8), &Fcfs);
+        // An Any-class request balanced into the 8B group: separate shard,
+        // same group accounting.
+        q.push_routed(req(2, 1.0, ModelClass::Any), ShardKey::AnyIn(ModelKind::Llama3_8B), &Fcfs);
+        q.push_routed(req(3, 2.0, ModelClass::Any), ShardKey::AnyIn(ModelKind::Llama3_8B), &Fcfs);
+        assert_eq!(q.n_shards(), 3, "Any + pinned-8B + routed-8B");
+        assert_eq!(q.shard_len(ShardKey::Class(M8)), 1);
+        assert_eq!(q.shard_len(ShardKey::AnyIn(ModelKind::Llama3_8B)), 2);
+        assert_eq!(q.group_len(ModelKind::Llama3_8B), 3, "pinned + routed");
+        assert_eq!(q.group_len(ModelKind::Llama2_13B), 0);
+        // The routed requests keep their Any class (dispatch constraint).
+        let s = q
+            .ensure_shard(ShardKey::AnyIn(ModelKind::Llama3_8B));
+        assert_eq!(q.peek_shard(s).unwrap().model_class, ModelClass::Any);
+        // Cross-shard order is still global arrival order.
+        let blocked = vec![false; q.n_shards()];
+        let mut order = Vec::new();
+        while let Some(i) = q.best_shard(&blocked) {
+            order.push(q.pop_shard(i).unwrap().id);
+        }
+        assert_eq!(order, vec![1, 2, 3]);
     }
 
     #[test]

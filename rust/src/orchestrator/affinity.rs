@@ -57,15 +57,18 @@ impl AffinitySpec {
             }
             if agent == "*" {
                 // Same contract as duplicate agent pins: a conflicting
-                // spec must error at parse, not silently last-win.
+                // spec must error at parse naming the offending clause,
+                // not silently last-win.
                 if saw_default {
-                    return Err(format!("duplicate default pin in {s:?}"));
+                    return Err(format!("duplicate default pin in clause {entry:?}"));
                 }
                 saw_default = true;
                 spec.default = class;
             } else {
                 if spec.pins.iter().any(|(a, _)| a == agent) {
-                    return Err(format!("duplicate pin for agent {agent:?}"));
+                    return Err(format!(
+                        "duplicate pin for agent {agent:?} in clause {entry:?}"
+                    ));
                 }
                 spec.pins.push((agent.to_string(), class));
             }
@@ -120,5 +123,16 @@ mod tests {
             AffinitySpec::parse("*=llama3-8b,A=any,*=llama2-13b").is_err(),
             "duplicate default pin"
         );
+    }
+
+    #[test]
+    fn duplicate_pins_name_the_offending_clause() {
+        // The SECOND occurrence is the offending clause: the error must
+        // point the user at it, not just the agent name or the whole spec.
+        let err = AffinitySpec::parse("A=tiny,B=any,A=llama3-8b").unwrap_err();
+        assert!(err.contains("\"A\""), "names the agent: {err}");
+        assert!(err.contains("A=llama3-8b"), "names the clause: {err}");
+        let err = AffinitySpec::parse("*=llama3-8b,A=any,*=llama2-13b").unwrap_err();
+        assert!(err.contains("*=llama2-13b"), "names the clause: {err}");
     }
 }

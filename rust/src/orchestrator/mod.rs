@@ -5,18 +5,23 @@
 //! upstream/downstream causality + execution-span overlap ([`graph`]),
 //! maintains per-agent latency distributions — single-request execution and
 //! remaining-workflow — with the doubling/Wasserstein convergence test
-//! ([`profiler`]), and carries each agent's model-class affinity
-//! annotation for serving-group routing ([`affinity`]).
+//! ([`profiler`]), carries each agent's model-class affinity
+//! annotation for serving-group routing ([`affinity`]), and owns the
+//! profile-driven routing layer ([`router`]) that turns those annotations
+//! plus the measured per-family latency profiles into per-request
+//! serving-group placements.
 
 pub mod affinity;
 pub mod graph;
 pub mod ids;
 pub mod profiler;
+pub mod router;
 
 pub use affinity::AffinitySpec;
 pub use graph::{EdgeKind, ExecRecord, WorkflowGraph};
 pub use ids::{AgentId, AgentRegistry, MsgId};
 pub use profiler::{DistributionProfiler, LatencyProfile};
+pub use router::{GroupPressure, RouteDecision, RoutePolicy, RouteReason, Router};
 
 use std::collections::HashMap;
 
@@ -82,6 +87,21 @@ impl Orchestrator {
     pub fn record_execution(&mut self, rec: ExecRecord) {
         self.profiler.record_execution(rec.agent, rec.end - rec.start);
         self.graph.ingest(rec);
+    }
+
+    /// Record one completed execution with its serving context: which
+    /// model family served it and how many KV tokens the request held —
+    /// the routing layer's learning signal and the dispatcher's demand
+    /// prediction, fed from the coordinator's completion path.
+    pub fn record_serving_feedback(
+        &mut self,
+        agent: AgentId,
+        model: crate::engine::cost_model::ModelKind,
+        exec_latency: f64,
+        kv_tokens: f64,
+    ) {
+        self.profiler.record_family_execution(agent, model, exec_latency.max(0.0));
+        self.profiler.record_kv_demand(agent, kv_tokens.max(0.0));
     }
 
     /// Record the completion of an entire workflow instance: back-fills the

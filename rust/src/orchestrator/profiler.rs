@@ -12,10 +12,23 @@
 //! Convergence uses the paper's exponentially-increasing sampling strategy:
 //! each time the sample count doubles, the Wasserstein distance between the
 //! current and previous snapshot is compared to a threshold.
+//!
+//! Since the routing layer ([`super::router`]), two more profile families
+//! are maintained from the coordinator's completion feedback:
+//!
+//! 3. **Per-(agent, model-family) execution latency** — what the agent's
+//!    requests actually cost on each serving group; the learned
+//!    [`super::router::RoutePolicy`] picks the family with the lowest
+//!    measured mean.
+//! 4. **Per-agent KV demand** — total KV tokens (prompt + generated) a
+//!    request of the agent ends up holding; the time-slot dispatcher's
+//!    demand-prediction hook reads its mode instead of the slope-based
+//!    guess once samples exist.
 
 use std::collections::HashMap;
 
 use super::ids::AgentId;
+use crate::engine::cost_model::ModelKind;
 use crate::stats::ecdf::{wasserstein1, Ecdf};
 
 /// Relative Wasserstein threshold for declaring convergence.
@@ -97,11 +110,18 @@ impl LatencyProfile {
     }
 }
 
-/// All agents' profiles: execution latency + remaining workflow latency.
+/// All agents' profiles: execution latency + remaining workflow latency,
+/// plus the routing layer's per-family execution and KV-demand profiles.
 #[derive(Debug, Default)]
 pub struct DistributionProfiler {
     exec: HashMap<AgentId, LatencyProfile>,
     remaining: HashMap<AgentId, LatencyProfile>,
+    /// Execution latency of the agent's requests on one model family —
+    /// what the learned route policy compares across serving groups.
+    family_exec: HashMap<(AgentId, ModelKind), LatencyProfile>,
+    /// Total KV tokens (prompt + generated) held by the agent's requests
+    /// at completion — the dispatcher's learned demand prediction.
+    kv_demand: HashMap<AgentId, LatencyProfile>,
 }
 
 impl DistributionProfiler {
@@ -117,12 +137,53 @@ impl DistributionProfiler {
         self.remaining.entry(agent).or_default().record(latency);
     }
 
+    /// Record one completed execution on the family that actually served
+    /// it (the coordinator knows the instance, hence the family).
+    pub fn record_family_execution(
+        &mut self,
+        agent: AgentId,
+        model: ModelKind,
+        latency: f64,
+    ) {
+        self.family_exec.entry((agent, model)).or_default().record(latency);
+    }
+
+    /// Record the total KV tokens a completed request of `agent` held.
+    pub fn record_kv_demand(&mut self, agent: AgentId, tokens: f64) {
+        self.kv_demand.entry(agent).or_default().record(tokens);
+    }
+
     pub fn exec_profile(&self, agent: AgentId) -> Option<&LatencyProfile> {
         self.exec.get(&agent)
     }
 
     pub fn remaining_profile(&self, agent: AgentId) -> Option<&LatencyProfile> {
         self.remaining.get(&agent)
+    }
+
+    /// The agent's execution-latency profile on one model family.
+    pub fn family_exec_profile(
+        &self,
+        agent: AgentId,
+        model: ModelKind,
+    ) -> Option<&LatencyProfile> {
+        self.family_exec.get(&(agent, model))
+    }
+
+    /// Execution samples collected for `agent` on `model` (0 when none).
+    pub fn family_samples(&self, agent: AgentId, model: ModelKind) -> usize {
+        self.family_exec.get(&(agent, model)).map_or(0, |p| p.len())
+    }
+
+    /// Measured mean execution latency of `agent` on `model`, if sampled.
+    pub fn family_mean_exec(&self, agent: AgentId, model: ModelKind) -> Option<f64> {
+        self.family_exec.get(&(agent, model)).and_then(|p| p.mean())
+    }
+
+    /// Expected total KV tokens (mode of the demand distribution) one
+    /// request of `agent` will hold, if profiled.
+    pub fn expected_kv_demand(&self, agent: AgentId) -> Option<f64> {
+        self.kv_demand.get(&agent).and_then(|p| p.mode())
     }
 
     /// Agents with at least one remaining-latency sample.
@@ -207,6 +268,36 @@ mod tests {
         assert_eq!(pr.exec_profile(b).unwrap().len(), 1);
         assert_eq!(pr.agents_with_remaining(), vec![a]);
         assert!(pr.remaining_profile(b).is_none());
+    }
+
+    #[test]
+    fn family_profiles_tracked_per_model() {
+        let mut pr = DistributionProfiler::new();
+        let a = AgentId(0);
+        pr.record_family_execution(a, ModelKind::Llama3_8B, 1.0);
+        pr.record_family_execution(a, ModelKind::Llama3_8B, 3.0);
+        pr.record_family_execution(a, ModelKind::Llama2_13B, 10.0);
+        assert_eq!(pr.family_samples(a, ModelKind::Llama3_8B), 2);
+        assert_eq!(pr.family_samples(a, ModelKind::Llama2_13B), 1);
+        assert_eq!(pr.family_samples(a, ModelKind::Tiny), 0);
+        assert!((pr.family_mean_exec(a, ModelKind::Llama3_8B).unwrap() - 2.0).abs() < 1e-9);
+        assert!(pr.family_mean_exec(AgentId(1), ModelKind::Llama3_8B).is_none());
+        assert!(pr.family_exec_profile(a, ModelKind::Llama2_13B).is_some());
+    }
+
+    #[test]
+    fn kv_demand_mode_tracks_samples() {
+        let mut pr = DistributionProfiler::new();
+        let a = AgentId(2);
+        assert!(pr.expected_kv_demand(a).is_none());
+        for _ in 0..10 {
+            pr.record_kv_demand(a, 300.0);
+        }
+        pr.record_kv_demand(a, 1200.0);
+        // Histogram-mode estimate: lands in the dense cluster's bin, far
+        // from the single outlier.
+        let kv = pr.expected_kv_demand(a).unwrap();
+        assert!((300.0..600.0).contains(&kv), "mode near the majority: {kv}");
     }
 
     #[test]

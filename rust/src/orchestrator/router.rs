@@ -1,0 +1,517 @@
+//! Profile-driven request routing: which serving group a request lands in.
+//!
+//! PR 3 made the routing decision a *static* stamp — each agent's
+//! [`ModelClass`] came straight from its affinity annotation, and every
+//! unpinned (`Any`) request fell into one undifferentiated shard. This
+//! module turns that stamp into an explicit routing layer, following the
+//! paper's orchestrator ("collects agent-specific information for online
+//! workflow analysis") plus the workload-aware routing of Maestro and the
+//! latency-aware heterogeneous routing of Chimera:
+//!
+//! * Under [`RoutePolicy::Pinned`] the router reproduces the static
+//!   behavior exactly: pins stamp their family, unpinned requests share
+//!   the `Any` shard. This is the default.
+//! * Under [`RoutePolicy::Learned`] the affinity pin becomes a *prior*:
+//!   once the [`DistributionProfiler`]'s per-(agent, family) execution
+//!   profiles — fed back from the coordinator's completion path — hold at
+//!   least `min_samples` on some family, the router stamps the family
+//!   with the lowest measured mean latency. Until then pinned agents fall
+//!   back to their pin, and `Any` agents are balanced to the
+//!   least-pressured serving group ([`GroupPressure`]) while keeping
+//!   their `Any` class, so dispatch stays work-conserving. A
+//!   deterministic exploration schedule (every ⌈1/explore_rate⌉-th
+//!   decision per agent routes to the least-sampled live family) keeps
+//!   every group's profile fresh without any randomness — the
+//!   driver-equivalence seam extends to the per-request
+//!   [`RouteDecision`] log.
+//!
+//! The router never chooses a family with zero accepting instances, so a
+//! learned stamp can defer behind a transient drain but never targets a
+//! group that cannot currently serve. Note the scope of the
+//! work-conservation guarantee: it covers *pressure-balanced* `Any`
+//! requests ([`RouteReason::LeastPressured`] — class stays `Any`).
+//! Explored and learned-best requests are hard-stamped to their target
+//! family on purpose (a latency sample is only attributable to a family
+//! the request was constrained to), and so adopt exactly the static
+//! pin's semantics: if the stamped family later drains away entirely,
+//! the request defers until scaling revives it — no worse than a PR 3
+//! affinity pin, but not work-conserving either.
+
+use std::collections::HashMap;
+
+use super::ids::AgentId;
+use super::profiler::DistributionProfiler;
+use crate::engine::cost_model::{ModelClass, ModelKind};
+use crate::engine::request::RequestId;
+
+/// How the router picks a serving group for each submitted request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RoutePolicy {
+    /// The static behavior: the affinity stamp is the route.
+    Pinned,
+    /// Learn each agent's best family online from measured per-family
+    /// execution latency, falling back to the pin until enough samples
+    /// exist.
+    Learned {
+        /// Fraction of decisions spent exploring the least-sampled
+        /// family (deterministically: every ⌈1/rate⌉-th decision per
+        /// agent). 0 disables exploration.
+        explore_rate: f64,
+        /// Samples a family needs before it can be chosen as "best".
+        min_samples: usize,
+    },
+}
+
+impl RoutePolicy {
+    /// Default learned-policy parameters.
+    pub fn learned_default() -> RoutePolicy {
+        RoutePolicy::Learned { explore_rate: 0.125, min_samples: 8 }
+    }
+
+    /// Parse a CLI/config route policy.
+    ///
+    /// Grammar: `pinned`, `learned`, or `learned:KEY=VAL[,KEY=VAL]` with
+    /// keys `explore` (in `[0, 1)`) and `min_samples` (positive integer).
+    /// Examples: `learned`, `learned:explore=0.2`,
+    /// `learned:explore=0.1,min_samples=16`.
+    pub fn parse(s: &str) -> Result<RoutePolicy, String> {
+        let s = s.trim();
+        if s == "pinned" {
+            return Ok(RoutePolicy::Pinned);
+        }
+        let Some(rest) = s.strip_prefix("learned") else {
+            return Err(format!("unknown route policy {s:?} (pinned|learned[:...])"));
+        };
+        let RoutePolicy::Learned { mut explore_rate, mut min_samples } =
+            RoutePolicy::learned_default()
+        else {
+            unreachable!()
+        };
+        if rest.is_empty() {
+            return Ok(RoutePolicy::Learned { explore_rate, min_samples });
+        }
+        let Some(params) = rest.strip_prefix(':') else {
+            return Err(format!("unknown route policy {s:?} (pinned|learned[:...])"));
+        };
+        for clause in params.split(',') {
+            let clause = clause.trim();
+            let (key, val) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("expected KEY=VAL in route-policy clause {clause:?}"))?;
+            match key.trim() {
+                "explore" => {
+                    let r: f64 = val.trim().parse().map_err(|_| {
+                        format!("bad explore rate in route-policy clause {clause:?}")
+                    })?;
+                    if !r.is_finite() || !(0.0..1.0).contains(&r) {
+                        return Err(format!(
+                            "explore rate must be in [0, 1) in route-policy clause {clause:?}"
+                        ));
+                    }
+                    explore_rate = r;
+                }
+                "min_samples" => {
+                    let n: usize = val.trim().parse().map_err(|_| {
+                        format!("bad min_samples in route-policy clause {clause:?}")
+                    })?;
+                    if n == 0 {
+                        return Err(format!(
+                            "min_samples must be positive in route-policy clause {clause:?}"
+                        ));
+                    }
+                    min_samples = n;
+                }
+                other => {
+                    return Err(format!(
+                        "unknown route-policy key {other:?} in clause {clause:?}"
+                    ))
+                }
+            }
+        }
+        Ok(RoutePolicy::Learned { explore_rate, min_samples })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::Pinned => "pinned",
+            RoutePolicy::Learned { .. } => "learned",
+        }
+    }
+}
+
+/// Why the router put a request where it did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteReason {
+    /// Static pin honored (Pinned policy, or a pinned fallback would be
+    /// identical).
+    Pinned,
+    /// Unpinned request in the shared `Any` shard (static behavior).
+    AnyShared,
+    /// Learned best family by measured mean execution latency.
+    LearnedBest,
+    /// Deterministic exploration of the least-sampled family.
+    Explore,
+    /// Not enough samples yet: fell back to the agent's static pin.
+    FallbackPin,
+    /// `Any`-class request balanced into the least-pressured group.
+    LeastPressured,
+}
+
+/// One routing decision, logged per submitted request — part of the
+/// driver-equivalence seam contract alongside the dispatch and group logs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouteDecision {
+    pub req: RequestId,
+    pub agent: AgentId,
+    /// The static class from the affinity annotation.
+    pub class: ModelClass,
+    /// The class actually stamped on the request (the dispatch
+    /// constraint). Equals `class` unless learning overrode the pin.
+    pub chosen: ModelClass,
+    /// The group whose queue shard holds the request when an `Any`-class
+    /// request was balanced (its dispatch constraint stays `Any`).
+    pub group: Option<ModelKind>,
+    pub reason: RouteReason,
+}
+
+/// Live pressure signal of one serving group, computed by the coordinator
+/// at submission time (fleet-index first-seen order, deterministic).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupPressure {
+    pub model: ModelKind,
+    /// Requests queued toward this group (pinned shard + routed-Any shard).
+    pub queued: usize,
+    /// Instances of the family currently accepting dispatches.
+    pub active: usize,
+    /// Requests resident in the family's accepting engines (running +
+    /// engine-queued).
+    pub inflight: usize,
+    /// Uncommitted KV tokens across the family's accepting instances —
+    /// the fleet-headroom tiebreaker.
+    pub free_tokens: u64,
+}
+
+impl GroupPressure {
+    /// Backlog per accepting instance; dead groups are infinitely
+    /// pressured.
+    pub fn score(&self) -> f64 {
+        if self.active == 0 {
+            return f64::INFINITY;
+        }
+        (self.queued + self.inflight) as f64 / self.active as f64
+    }
+}
+
+/// The least-pressured group: lowest score, then most free KV tokens,
+/// then fleet order. `None` when no group has an accepting instance.
+pub fn least_pressured(groups: &[GroupPressure]) -> Option<ModelKind> {
+    let mut best: Option<&GroupPressure> = None;
+    for g in groups {
+        if g.active == 0 {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some(b) => {
+                let (s, bs) = (g.score(), b.score());
+                s < bs || (s == bs && g.free_tokens > b.free_tokens)
+            }
+        };
+        if better {
+            best = Some(g);
+        }
+    }
+    best.map(|g| g.model)
+}
+
+/// The routing layer's state: the policy plus per-agent decision counters
+/// driving the deterministic exploration schedule.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    decisions: HashMap<AgentId, u64>,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Router::new(RoutePolicy::Pinned)
+    }
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Router {
+        Router { policy, decisions: HashMap::new() }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Whether routing needs the coordinator's group-pressure snapshot
+    /// (only the learned policy reads it).
+    pub fn wants_pressure(&self) -> bool {
+        matches!(self.policy, RoutePolicy::Learned { .. })
+    }
+
+    /// Route one request: `static_class` is the affinity stamp, `groups`
+    /// the live per-group pressure snapshot (fleet first-seen order).
+    pub fn route(
+        &mut self,
+        req: RequestId,
+        agent: AgentId,
+        static_class: ModelClass,
+        profiler: &DistributionProfiler,
+        groups: &[GroupPressure],
+    ) -> RouteDecision {
+        let RoutePolicy::Learned { explore_rate, min_samples } = self.policy else {
+            let reason = match static_class {
+                ModelClass::Any => RouteReason::AnyShared,
+                ModelClass::Model(_) => RouteReason::Pinned,
+            };
+            return RouteDecision {
+                req,
+                agent,
+                class: static_class,
+                chosen: static_class,
+                group: None,
+                reason,
+            };
+        };
+        let count = self.decisions.entry(agent).or_insert(0);
+        let n = *count;
+        *count += 1;
+        // Deterministic exploration: every period-th decision (starting
+        // with the first, to jump-start sampling) goes to the live family
+        // with the fewest samples for this agent.
+        if explore_rate > 0.0 {
+            let period = (1.0 / explore_rate).ceil().max(1.0) as u64;
+            if n % period == 0 {
+                if let Some(target) = groups
+                    .iter()
+                    .filter(|g| g.active > 0)
+                    .min_by_key(|g| profiler.family_samples(agent, g.model))
+                {
+                    return RouteDecision {
+                        req,
+                        agent,
+                        class: static_class,
+                        chosen: ModelClass::Model(target.model),
+                        group: None,
+                        reason: RouteReason::Explore,
+                    };
+                }
+            }
+        }
+        // Exploit: the live family with the lowest measured mean, among
+        // families that have reached min_samples.
+        let mut best: Option<(f64, ModelKind)> = None;
+        for g in groups {
+            if g.active == 0 || profiler.family_samples(agent, g.model) < min_samples {
+                continue;
+            }
+            let Some(mean) = profiler.family_mean_exec(agent, g.model) else { continue };
+            // Strict `<` keeps ties deterministic (fleet order wins).
+            if best.map(|(b, _)| mean < b).unwrap_or(true) {
+                best = Some((mean, g.model));
+            }
+        }
+        if let Some((_, model)) = best {
+            return RouteDecision {
+                req,
+                agent,
+                class: static_class,
+                chosen: ModelClass::Model(model),
+                group: None,
+                reason: RouteReason::LearnedBest,
+            };
+        }
+        // Not converged: pinned agents keep their pin; Any agents are
+        // balanced into the least-pressured group's shard (class stays
+        // Any, so dispatch remains work-conserving).
+        match static_class {
+            ModelClass::Model(_) => RouteDecision {
+                req,
+                agent,
+                class: static_class,
+                chosen: static_class,
+                group: None,
+                reason: RouteReason::FallbackPin,
+            },
+            ModelClass::Any => {
+                let group = least_pressured(groups);
+                let reason = if group.is_some() {
+                    RouteReason::LeastPressured
+                } else {
+                    RouteReason::AnyShared
+                };
+                RouteDecision {
+                    req,
+                    agent,
+                    class: ModelClass::Any,
+                    chosen: ModelClass::Any,
+                    group,
+                    reason,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const M8: ModelKind = ModelKind::Llama3_8B;
+    const M13: ModelKind = ModelKind::Llama2_13B;
+
+    fn groups() -> Vec<GroupPressure> {
+        vec![
+            GroupPressure { model: M8, queued: 0, active: 2, inflight: 0, free_tokens: 100 },
+            GroupPressure { model: M13, queued: 0, active: 1, inflight: 0, free_tokens: 50 },
+        ]
+    }
+
+    #[test]
+    fn parse_accepts_both_policies_and_params() {
+        assert_eq!(RoutePolicy::parse("pinned").unwrap(), RoutePolicy::Pinned);
+        assert_eq!(
+            RoutePolicy::parse("learned").unwrap(),
+            RoutePolicy::learned_default()
+        );
+        assert_eq!(
+            RoutePolicy::parse("learned:explore=0.2,min_samples=16").unwrap(),
+            RoutePolicy::Learned { explore_rate: 0.2, min_samples: 16 }
+        );
+        assert_eq!(
+            RoutePolicy::parse(" learned:min_samples=4 ").unwrap(),
+            RoutePolicy::Learned { explore_rate: 0.125, min_samples: 4 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage_naming_the_clause() {
+        assert!(RoutePolicy::parse("").is_err());
+        assert!(RoutePolicy::parse("greedy").is_err());
+        assert!(RoutePolicy::parse("learnedX").is_err());
+        let err = RoutePolicy::parse("learned:explore=2.0").unwrap_err();
+        assert!(err.contains("explore=2.0"), "{err}");
+        let err = RoutePolicy::parse("learned:min_samples=0").unwrap_err();
+        assert!(err.contains("min_samples=0"), "{err}");
+        let err = RoutePolicy::parse("learned:banana=1").unwrap_err();
+        assert!(err.contains("banana"), "{err}");
+        assert!(RoutePolicy::parse("learned:explore=NaN").is_err());
+        assert!(RoutePolicy::parse("learned:explore").is_err());
+    }
+
+    #[test]
+    fn pinned_policy_reproduces_static_stamps() {
+        let mut r = Router::new(RoutePolicy::Pinned);
+        let pr = DistributionProfiler::new();
+        let d = r.route(1, AgentId(0), ModelClass::Model(M13), &pr, &groups());
+        assert_eq!(d.chosen, ModelClass::Model(M13));
+        assert_eq!(d.group, None);
+        assert_eq!(d.reason, RouteReason::Pinned);
+        let d = r.route(2, AgentId(1), ModelClass::Any, &pr, &groups());
+        assert_eq!(d.chosen, ModelClass::Any);
+        assert_eq!(d.group, None);
+        assert_eq!(d.reason, RouteReason::AnyShared);
+    }
+
+    #[test]
+    fn learned_falls_back_to_pin_until_sampled() {
+        // explore disabled: pure fallback behavior.
+        let mut r = Router::new(RoutePolicy::Learned { explore_rate: 0.0, min_samples: 4 });
+        let pr = DistributionProfiler::new();
+        let d = r.route(1, AgentId(0), ModelClass::Model(M13), &pr, &groups());
+        assert_eq!(d.chosen, ModelClass::Model(M13));
+        assert_eq!(d.reason, RouteReason::FallbackPin);
+    }
+
+    #[test]
+    fn learned_picks_the_measured_best_family() {
+        let mut r = Router::new(RoutePolicy::Learned { explore_rate: 0.0, min_samples: 2 });
+        let mut pr = DistributionProfiler::new();
+        let a = AgentId(0);
+        for _ in 0..3 {
+            pr.record_family_execution(a, M13, 1.0); // 13B measured faster
+            pr.record_family_execution(a, M8, 5.0);
+        }
+        let d = r.route(1, a, ModelClass::Model(M8), &pr, &groups());
+        assert_eq!(d.chosen, ModelClass::Model(M13), "pin overridden by data");
+        assert_eq!(d.reason, RouteReason::LearnedBest);
+        // A family short of min_samples is not eligible even when faster.
+        let b = AgentId(1);
+        pr.record_family_execution(b, M13, 0.1);
+        for _ in 0..2 {
+            pr.record_family_execution(b, M8, 5.0);
+        }
+        let d = r.route(2, b, ModelClass::Any, &pr, &groups());
+        assert_eq!(d.chosen, ModelClass::Model(M8));
+    }
+
+    #[test]
+    fn learned_never_routes_to_a_dead_family() {
+        let mut r = Router::new(RoutePolicy::Learned { explore_rate: 0.5, min_samples: 1 });
+        let mut pr = DistributionProfiler::new();
+        let a = AgentId(0);
+        pr.record_family_execution(a, M13, 0.01); // best on paper, but...
+        let mut gs = groups();
+        gs[1].active = 0; // ...the 13B group has drained away
+        for i in 0..6 {
+            let d = r.route(i, a, ModelClass::Any, &pr, &gs);
+            assert_ne!(d.chosen, ModelClass::Model(M13), "routed to a dead family");
+            if let Some(g) = d.group {
+                assert_ne!(g, M13);
+            }
+        }
+    }
+
+    #[test]
+    fn exploration_fires_on_the_deterministic_schedule() {
+        // explore_rate 0.25 => every 4th decision (0, 4, 8, ...) explores.
+        let mut r = Router::new(RoutePolicy::Learned { explore_rate: 0.25, min_samples: 99 });
+        let pr = DistributionProfiler::new();
+        let a = AgentId(0);
+        let reasons: Vec<RouteReason> = (0..8)
+            .map(|i| r.route(i, a, ModelClass::Model(M8), &pr, &groups()).reason)
+            .collect();
+        assert_eq!(reasons[0], RouteReason::Explore);
+        assert_eq!(reasons[4], RouteReason::Explore);
+        assert!(reasons[1..4].iter().all(|&x| x == RouteReason::FallbackPin));
+        // Exploration targets the least-sampled live family.
+        let mut pr2 = DistributionProfiler::new();
+        pr2.record_family_execution(a, M8, 1.0);
+        let mut r2 =
+            Router::new(RoutePolicy::Learned { explore_rate: 0.9, min_samples: 99 });
+        let d = r2.route(0, a, ModelClass::Any, &pr2, &groups());
+        assert_eq!(d.chosen, ModelClass::Model(M13), "least-sampled family explored");
+    }
+
+    #[test]
+    fn any_balances_to_the_least_pressured_group() {
+        let mut r = Router::new(RoutePolicy::Learned { explore_rate: 0.0, min_samples: 9 });
+        let pr = DistributionProfiler::new();
+        let mut gs = groups();
+        gs[0].queued = 10; // 8B backlog: 5 per instance
+        gs[1].queued = 1; // 13B backlog: 1 per instance
+        let d = r.route(1, AgentId(0), ModelClass::Any, &pr, &gs);
+        assert_eq!(d.chosen, ModelClass::Any, "dispatch constraint stays Any");
+        assert_eq!(d.group, Some(M13));
+        assert_eq!(d.reason, RouteReason::LeastPressured);
+        // Ties break toward headroom, then fleet order.
+        let gs2 = groups(); // equal scores, 8B has more free tokens
+        let d2 = r.route(2, AgentId(0), ModelClass::Any, &pr, &gs2);
+        assert_eq!(d2.group, Some(M8));
+        // No live group at all: the shared Any shard.
+        let dead: Vec<GroupPressure> = groups()
+            .into_iter()
+            .map(|mut g| {
+                g.active = 0;
+                g
+            })
+            .collect();
+        let d3 = r.route(3, AgentId(0), ModelClass::Any, &pr, &dead);
+        assert_eq!(d3.group, None);
+        assert_eq!(d3.reason, RouteReason::AnyShared);
+    }
+}

@@ -19,8 +19,66 @@ use super::coordinator::InstanceSpec;
 use crate::engine::cost_model::ModelKind;
 use crate::Time;
 
+/// Per-family instance bounds: a learned-hot family must not starve the
+/// other serving groups of slots, and a family the operator wants warm
+/// must keep a floor. Families absent from the list are unbounded (within
+/// the fleet-wide bounds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupBounds {
+    pub model: ModelKind,
+    /// Never drain the family below this many active instances.
+    pub min_instances: usize,
+    /// Never grow the family above this many active + booting instances.
+    pub max_instances: usize,
+}
+
+/// Parse per-group bounds from a compact config string.
+///
+/// Grammar: comma-separated `MODEL=MIN..MAX`, e.g.
+/// `llama3-8b=1..4,llama2-13b=0..2`. `MODEL=0..0` freezes a family (it
+/// can drain away and never grows back).
+pub fn parse_per_group(s: &str) -> Result<Vec<GroupBounds>, String> {
+    if s.trim().is_empty() {
+        return Err("empty per-group bounds spec".to_string());
+    }
+    let mut out: Vec<GroupBounds> = Vec::new();
+    for raw in s.split(',') {
+        let clause = raw.trim();
+        if clause.is_empty() {
+            return Err(format!("empty per-group clause in {s:?}"));
+        }
+        let (m, range) = clause
+            .split_once('=')
+            .ok_or_else(|| format!("expected MODEL=MIN..MAX in {clause:?}"))?;
+        let model = ModelKind::parse(m.trim())
+            .map_err(|e| format!("{e} in per-group clause {clause:?}"))?;
+        let (lo, hi) = range
+            .split_once("..")
+            .ok_or_else(|| format!("expected MIN..MAX in {clause:?}"))?;
+        let min: usize = lo
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad min in per-group clause {clause:?}"))?;
+        let max: usize = hi
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad max in per-group clause {clause:?}"))?;
+        if min > max {
+            return Err(format!("min exceeds max in per-group clause {clause:?}"));
+        }
+        if out.iter().any(|b| b.model == model) {
+            return Err(format!(
+                "duplicate per-group bounds for {} in clause {clause:?}",
+                model.name()
+            ));
+        }
+        out.push(GroupBounds { model, min_instances: min, max_instances: max });
+    }
+    Ok(out)
+}
+
 /// Thresholds and bounds of the autoscaling policy.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AutoscaleConfig {
     /// Never drain below this many active instances.
     pub min_instances: usize,
@@ -42,6 +100,14 @@ pub struct AutoscaleConfig {
     pub down_after: u32,
     /// Minimum time between scale actions (seconds).
     pub cooldown: f64,
+    /// Boot latency of a grown instance (seconds): a `Grow` action only
+    /// *provisions* the slot; the coordinator registers it live once the
+    /// delay elapses. 0 = instant registration (the pre-boot-model
+    /// behavior).
+    pub boot_delay: f64,
+    /// Per-family min/max bounds (empty = every family unbounded within
+    /// the fleet-wide bounds above).
+    pub per_group: Vec<GroupBounds>,
     /// Spec for newly added instances.
     pub template: InstanceSpec,
 }
@@ -58,8 +124,26 @@ impl AutoscaleConfig {
             up_after: 1,
             down_after: 3,
             cooldown: 10.0,
+            boot_delay: 0.0,
+            per_group: Vec::new(),
             template,
         }
+    }
+
+    /// The family's active-instance floor (0 when unbounded).
+    pub fn family_min(&self, model: ModelKind) -> usize {
+        self.per_group
+            .iter()
+            .find(|b| b.model == model)
+            .map_or(0, |b| b.min_instances)
+    }
+
+    /// The family's instance ceiling (`usize::MAX` when unbounded).
+    pub fn family_max(&self, model: ModelKind) -> usize {
+        self.per_group
+            .iter()
+            .find(|b| b.model == model)
+            .map_or(usize::MAX, |b| b.max_instances)
     }
 }
 
@@ -75,11 +159,16 @@ impl Default for AutoscaleConfig {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GroupLoad {
     pub model: ModelKind,
-    /// Requests queued in this group's shard (pinned to this family; the
-    /// `Any` shard is accounted only in the aggregate queue depth).
+    /// Requests queued toward this group: its pinned shard plus its
+    /// routed-`Any` shard (the shared `Any` shard is accounted only in
+    /// the aggregate queue depth).
     pub queue_len: usize,
     /// Instances of this family currently accepting dispatches.
     pub active_instances: usize,
+    /// Instances of this family provisioned but still booting
+    /// (`boot_delay`): capacity already on its way, counted against the
+    /// family's ceiling.
+    pub pending_instances: usize,
 }
 
 /// What the autoscaler sees at one observation point.
@@ -93,6 +182,10 @@ pub struct FleetObservation {
     /// its way out: while any drain is in flight, `Shrink` is withheld so
     /// the fleet sheds at most one instance per completed drain.
     pub draining_instances: usize,
+    /// Instances provisioned but still booting (`boot_delay`): capacity
+    /// already on its way in, counted against `max_instances` so the
+    /// scaler does not over-provision during the boot window.
+    pub pending_instances: usize,
     /// Mean queuing-time ratio of requests finished since the previous
     /// observation (0 when none finished).
     pub recent_queue_ratio: f64,
@@ -144,14 +237,28 @@ impl Autoscaler {
         &self.cfg
     }
 
+    /// Whether family `model` may still grow under its per-group ceiling
+    /// (active + booting instances count against it).
+    fn family_can_grow(&self, obs: &FleetObservation, model: ModelKind) -> bool {
+        let (active, pending) = obs
+            .groups
+            .iter()
+            .find(|g| g.model == model)
+            .map(|g| (g.active_instances, g.pending_instances))
+            .unwrap_or((0, 0));
+        active + pending < self.cfg.family_max(model)
+    }
+
     /// The model family to grow: the group with the deepest pinned backlog
-    /// per active instance. Any-only workloads (no per-group backlog) fall
-    /// back to the template's model — the homogeneous behavior. Strict
-    /// `>` keeps ties deterministic (first group in fleet order wins).
-    fn starved_group(&self, obs: &FleetObservation) -> ModelKind {
+    /// per active instance, among families below their per-group ceiling.
+    /// Any-only workloads (no per-group backlog) fall back to the
+    /// template's model — the homogeneous behavior. Strict `>` keeps ties
+    /// deterministic (first group in fleet order wins). `None` when every
+    /// candidate family is at its ceiling.
+    fn starved_group(&self, obs: &FleetObservation) -> Option<ModelKind> {
         let mut best: Option<(f64, ModelKind)> = None;
         for g in &obs.groups {
-            if g.queue_len == 0 {
+            if g.queue_len == 0 || !self.family_can_grow(obs, g.model) {
                 continue;
             }
             let pressure = g.queue_len as f64 / g.active_instances.max(1) as f64;
@@ -163,7 +270,23 @@ impl Autoscaler {
                 best = Some((pressure, g.model));
             }
         }
-        best.map(|(_, m)| m).unwrap_or(self.cfg.template.model)
+        if let Some((_, m)) = best {
+            return Some(m);
+        }
+        self.family_can_grow(obs, self.cfg.template.model)
+            .then_some(self.cfg.template.model)
+    }
+
+    /// Whether any family still sits above its per-group floor — a
+    /// `Shrink` the coordinator could not map to a victim must not fire
+    /// (it would burn the cooldown on a no-op).
+    fn any_family_shrinkable(&self, obs: &FleetObservation) -> bool {
+        if self.cfg.per_group.is_empty() || obs.groups.is_empty() {
+            return true;
+        }
+        obs.groups
+            .iter()
+            .any(|g| g.active_instances > self.cfg.family_min(g.model))
     }
 
     /// Feed one observation; returns the action to take now, if any.
@@ -189,16 +312,22 @@ impl Autoscaler {
         }
         if self.hot_streak >= self.cfg.up_after
             && obs.can_grow
-            && obs.active_instances < self.cfg.max_instances
+            && obs.active_instances + obs.pending_instances < self.cfg.max_instances
         {
-            self.last_action = now;
-            self.hot_streak = 0;
-            self.grows += 1;
-            return Some(ScaleAction::Grow(self.starved_group(obs)));
+            // When every candidate family is at its per-group ceiling the
+            // grow is withheld WITHOUT burning the cooldown or the streak's
+            // history (same contract as `can_grow: false`).
+            if let Some(model) = self.starved_group(obs) {
+                self.last_action = now;
+                self.hot_streak = 0;
+                self.grows += 1;
+                return Some(ScaleAction::Grow(model));
+            }
         }
         if self.cold_streak >= self.cfg.down_after
             && obs.active_instances > self.cfg.min_instances
             && obs.draining_instances == 0
+            && self.any_family_shrinkable(obs)
         {
             self.last_action = now;
             self.cold_streak = 0;
@@ -223,6 +352,8 @@ mod tests {
             up_after: 1,
             down_after: 2,
             cooldown: 10.0,
+            boot_delay: 0.0,
+            per_group: Vec::new(),
             template: InstanceSpec::new(ModelKind::Llama3_8B),
         }
     }
@@ -232,10 +363,15 @@ mod tests {
             queue_len: queue,
             active_instances: active,
             draining_instances: 0,
+            pending_instances: 0,
             recent_queue_ratio: ratio,
             can_grow: true,
             groups: Vec::new(),
         }
+    }
+
+    fn gl(model: ModelKind, queue_len: usize, active: usize) -> GroupLoad {
+        GroupLoad { model, queue_len, active_instances: active, pending_instances: 0 }
     }
 
     const GROW_8B: ScaleAction = ScaleAction::Grow(ModelKind::Llama3_8B);
@@ -261,8 +397,8 @@ mod tests {
         let mut a = Autoscaler::new(cfg());
         let mut o = obs(40, 2, 0.0);
         o.groups = vec![
-            GroupLoad { model: ModelKind::Llama3_8B, queue_len: 2, active_instances: 1 },
-            GroupLoad { model: ModelKind::Llama2_13B, queue_len: 30, active_instances: 1 },
+            gl(ModelKind::Llama3_8B, 2, 1),
+            gl(ModelKind::Llama2_13B, 30, 1),
         ];
         assert_eq!(
             a.observe(&o, 0.0),
@@ -273,10 +409,113 @@ mod tests {
         let mut b = Autoscaler::new(cfg());
         let mut o2 = obs(40, 2, 0.0);
         o2.groups = vec![
-            GroupLoad { model: ModelKind::Llama3_8B, queue_len: 0, active_instances: 2 },
-            GroupLoad { model: ModelKind::Llama2_13B, queue_len: 0, active_instances: 1 },
+            gl(ModelKind::Llama3_8B, 0, 2),
+            gl(ModelKind::Llama2_13B, 0, 1),
         ];
         assert_eq!(b.observe(&o2, 0.0), Some(GROW_8B));
+    }
+
+    #[test]
+    fn per_group_spec_parses_and_rejects_garbage() {
+        let b = parse_per_group("llama3-8b=1..4, llama2-13b=0..2").unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].model, ModelKind::Llama3_8B);
+        assert_eq!((b[0].min_instances, b[0].max_instances), (1, 4));
+        assert_eq!((b[1].min_instances, b[1].max_instances), (0, 2));
+        assert!(parse_per_group("").is_err());
+        assert!(parse_per_group("llama3-8b").is_err(), "missing bounds");
+        assert!(parse_per_group("gpt5=1..2").is_err(), "unknown model");
+        assert!(parse_per_group("llama3-8b=1..2,,tiny=0..1").is_err());
+        let err = parse_per_group("llama3-8b=4..1").unwrap_err();
+        assert!(err.contains("llama3-8b=4..1"), "error names the clause: {err}");
+        let err = parse_per_group("tiny=0..1,tiny=1..2").unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        assert!(parse_per_group("llama3-8b=x..2").is_err());
+    }
+
+    #[test]
+    fn family_bounds_default_to_unbounded() {
+        let c = cfg();
+        assert_eq!(c.family_min(ModelKind::Tiny), 0);
+        assert_eq!(c.family_max(ModelKind::Tiny), usize::MAX);
+        let mut c = cfg();
+        c.per_group = parse_per_group("llama2-13b=1..2").unwrap();
+        assert_eq!(c.family_min(ModelKind::Llama2_13B), 1);
+        assert_eq!(c.family_max(ModelKind::Llama2_13B), 2);
+        assert_eq!(c.family_max(ModelKind::Llama3_8B), usize::MAX);
+    }
+
+    #[test]
+    fn grow_skips_families_at_their_ceiling() {
+        let mut c = cfg();
+        c.per_group = parse_per_group("llama2-13b=0..1,llama3-8b=1..4").unwrap();
+        let mut a = Autoscaler::new(c);
+        let mut o = obs(40, 2, 0.0);
+        // 13B is the most starved but already at its ceiling: the grow
+        // falls to the next-deepest eligible family.
+        o.groups = vec![
+            gl(ModelKind::Llama3_8B, 5, 1),
+            gl(ModelKind::Llama2_13B, 30, 1),
+        ];
+        assert_eq!(a.observe(&o, 0.0), Some(GROW_8B));
+    }
+
+    #[test]
+    fn grow_withheld_when_every_family_is_capped() {
+        let mut c = cfg();
+        c.per_group = parse_per_group("llama3-8b=1..2").unwrap();
+        let mut a = Autoscaler::new(c);
+        let mut o = obs(40, 2, 0.0);
+        // Only the 8B family exists (it is also the template) and it is at
+        // its ceiling: no grow, and the cooldown is not burned.
+        o.groups = vec![gl(ModelKind::Llama3_8B, 40, 2)];
+        assert_eq!(a.observe(&o, 0.0), None);
+        assert_eq!(a.grows, 0);
+        // Ceiling lifted (an instance drained away): the still-hot streak
+        // fires immediately — the cooldown was never consumed.
+        o.groups = vec![gl(ModelKind::Llama3_8B, 40, 1)];
+        o.active_instances = 1;
+        assert_eq!(a.observe(&o, 1.0), Some(GROW_8B));
+    }
+
+    #[test]
+    fn booting_instances_count_against_ceilings() {
+        let mut c = cfg();
+        c.per_group = parse_per_group("llama3-8b=1..2").unwrap();
+        let mut a = Autoscaler::new(c);
+        let mut o = obs(40, 1, 0.0);
+        o.pending_instances = 1;
+        let mut g = gl(ModelKind::Llama3_8B, 40, 1);
+        g.pending_instances = 1;
+        o.groups = vec![g];
+        assert_eq!(
+            a.observe(&o, 0.0),
+            None,
+            "active + booting at the family ceiling must not grow"
+        );
+        // Fleet-wide bound honors pending too.
+        let mut b = Autoscaler::new(cfg());
+        let mut o2 = obs(80, 2, 0.9);
+        o2.pending_instances = 2; // 2 active + 2 booting = max 4
+        assert_eq!(b.observe(&o2, 0.0), None);
+    }
+
+    #[test]
+    fn shrink_withheld_when_every_family_sits_at_its_floor() {
+        let mut c = cfg();
+        c.per_group = parse_per_group("llama3-8b=2..4,llama2-13b=1..2").unwrap();
+        let mut a = Autoscaler::new(c);
+        let mut o = obs(0, 3, 0.0);
+        o.groups = vec![
+            gl(ModelKind::Llama3_8B, 0, 2),
+            gl(ModelKind::Llama2_13B, 0, 1),
+        ];
+        assert_eq!(a.observe(&o, 0.0), None);
+        assert_eq!(a.observe(&o, 5.0), None, "every family at its floor");
+        // One family rises above its floor: the cold streak fires.
+        o.groups[0].active_instances = 3;
+        o.active_instances = 4;
+        assert_eq!(a.observe(&o, 10.0), Some(ScaleAction::Shrink));
     }
 
     #[test]

@@ -15,6 +15,15 @@
 //! generations and uneven co-tenant memory pressure. Per-instance capacity
 //! flows to the dispatchers through [`InstanceStatus`], so packing decisions
 //! are made against each instance's real budget, not a fleet-wide constant.
+//!
+//! Submission goes through the routing layer
+//! ([`crate::orchestrator::router`]): each request's serving group comes
+//! from its agent's affinity stamp under [`RoutePolicy::Pinned`], or from
+//! the measured per-(agent, family) latency profiles and live group
+//! pressures under `Learned` — every decision is appended to
+//! [`Coordinator::route_log`], which (with the dispatch, group and scale
+//! logs) forms the driver-equivalence seam contract tested in
+//! `tests/runtime_seam.rs`.
 
 use std::cell::Cell;
 use std::collections::HashMap;
@@ -27,11 +36,12 @@ use crate::engine::core::{
 use crate::engine::cost_model::{CostModel, ModelClass, ModelKind};
 use crate::engine::request::{Request, RequestId, SeqState};
 use crate::lb::policies::SchedulePolicy;
-use crate::lb::sharded::ShardedQueue;
+use crate::lb::sharded::{ShardKey, ShardedQueue};
 use crate::metrics::{MetricsCollector, RequestRecord, WorkflowRecord};
 use crate::orchestrator::affinity::AffinitySpec;
 use crate::orchestrator::graph::ExecRecord;
 use crate::orchestrator::ids::{AgentId, MsgId};
+use crate::orchestrator::router::{GroupPressure, RouteDecision, RoutePolicy, Router};
 use crate::orchestrator::Orchestrator;
 use crate::server::autoscale::{Autoscaler, FleetObservation, GroupLoad, ScaleAction};
 use crate::server::pressure::PressureTrace;
@@ -271,9 +281,18 @@ pub enum InstanceState {
     Retired,
 }
 
+/// Sentinel instance index of a [`ScaleEventKind::Provision`] event: the
+/// slot is assigned only when the boot completes (a same-family tombstone
+/// may be re-used, so the index is unknowable at provision time).
+pub const PROVISIONING: usize = usize::MAX;
+
 /// What happened to the fleet, when.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ScaleEventKind {
+    /// Instance requested by the autoscaler; it registers live once the
+    /// configured `boot_delay` elapses (the event's `instance` is
+    /// [`PROVISIONING`]).
+    Provision,
     /// Instance registered live.
     Grow,
     /// Instance stopped accepting dispatches and began draining.
@@ -339,6 +358,17 @@ pub struct Absorbed {
     pub preempted: u32,
 }
 
+/// An instance the autoscaler has provisioned that is still booting: it
+/// registers live (becoming a `Grow` scale event) once `ready_at` passes,
+/// at the next pump or refresh — deterministic points of the coordination
+/// cycle, so both drivers activate it at the same place in the dispatch
+/// stream.
+#[derive(Debug, Clone, Copy)]
+struct PendingBoot {
+    ready_at: Time,
+    spec: InstanceSpec,
+}
+
 // ---------------------------------------------------------------------------
 // Coordinator
 
@@ -399,6 +429,15 @@ pub struct Coordinator<B: ExecBackend> {
     scaler_seen_requests: usize,
     /// Reusable per-pump shard-blocked flags (no per-pump allocation).
     blocked_buf: Vec<bool>,
+    /// The routing layer: picks each submitted request's serving group
+    /// from its affinity stamp and, under the learned policy, the measured
+    /// per-family profiles and live group pressures.
+    router: Router,
+    /// Every routing decision, in submission order — the third leg of the
+    /// driver-equivalence contract next to `dispatch_log` and `group_log`.
+    pub route_log: Vec<RouteDecision>,
+    /// Autoscaler-provisioned instances still inside their boot delay.
+    pending_boots: Vec<PendingBoot>,
 }
 
 impl Coordinator<SimBackend> {
@@ -478,6 +517,9 @@ impl<B: ExecBackend> Coordinator<B> {
             make_backend: None,
             scaler_seen_requests: 0,
             blocked_buf: Vec::new(),
+            router: Router::default(),
+            route_log: Vec::new(),
+            pending_boots: Vec::new(),
         }
     }
 
@@ -518,6 +560,17 @@ impl<B: ExecBackend> Coordinator<B> {
     /// through its serving group's queue shard.
     pub fn set_affinity(&mut self, spec: &AffinitySpec) {
         self.orch.apply_affinity(spec);
+    }
+
+    /// Install the routing policy (default: [`RoutePolicy::Pinned`], the
+    /// static affinity stamp). Resets the router's exploration counters.
+    pub fn set_route_policy(&mut self, policy: RoutePolicy) {
+        self.router = Router::new(policy);
+    }
+
+    /// The active routing policy.
+    pub fn route_policy(&self) -> RoutePolicy {
+        self.router.policy()
     }
 
     /// The installed autoscaler, if any (diagnostics).
@@ -670,7 +723,7 @@ impl<B: ExecBackend> Coordinator<B> {
             WfState { plan, next_stage: 0, app_start: now, queue_time: 0.0, stage_latency },
         );
         let req = self.make_request(msg_id, now);
-        self.queue.push(req, self.policy.as_ref());
+        self.route_and_enqueue(req);
         msg_id
     }
 
@@ -713,8 +766,71 @@ impl<B: ExecBackend> Coordinator<B> {
             app_start: now,
             stage_arrival: now,
         };
-        self.queue.push(req, self.policy.as_ref());
+        self.route_and_enqueue(req);
         id
+    }
+
+    /// Route one request through the routing layer and place it in its
+    /// shard: the static affinity stamp becomes the routed class (the
+    /// learned policy may override a pin), `Any`-class requests balanced
+    /// into a group go to that group's routed shard, and the decision is
+    /// appended to [`Self::route_log`].
+    fn route_and_enqueue(&mut self, mut req: Request) {
+        let groups = if self.router.wants_pressure() {
+            self.group_pressures()
+        } else {
+            Vec::new()
+        };
+        let d = self.router.route(
+            req.id,
+            req.agent,
+            req.model_class,
+            &self.orch.profiler,
+            &groups,
+        );
+        req.model_class = d.chosen;
+        let key = match d.group {
+            Some(m) => ShardKey::AnyIn(m),
+            None => ShardKey::Class(d.chosen),
+        };
+        self.route_log.push(d);
+        self.queue.push_routed(req, key, self.policy.as_ref());
+    }
+
+    /// Live per-group pressure snapshot for the router, in fleet
+    /// first-seen order. Reads only coordinator-owned state (shard depths,
+    /// slot lifecycle, the status snapshot as of the last pump/refresh),
+    /// so both drivers compute identical pressures at identical submission
+    /// points — routing decisions stay inside the driver-equivalence
+    /// contract.
+    fn group_pressures(&self) -> Vec<GroupPressure> {
+        let mut out: Vec<GroupPressure> = Vec::new();
+        for (j, spec) in self.fleet.instances.iter().enumerate() {
+            let i = match out.iter().position(|g| g.model == spec.model) {
+                Some(i) => i,
+                None => {
+                    out.push(GroupPressure {
+                        model: spec.model,
+                        queued: self.queue.group_len(spec.model),
+                        active: 0,
+                        inflight: 0,
+                        free_tokens: 0,
+                    });
+                    out.len() - 1
+                }
+            };
+            if self.instance_state[j] != InstanceState::Active {
+                continue;
+            }
+            let g = &mut out[i];
+            let st = &self.status_buf[j];
+            g.active += 1;
+            g.inflight += st.n_running + st.n_waiting;
+            g.free_tokens += st
+                .capacity_tokens
+                .saturating_sub(st.committed_tokens + st.waiting_tokens);
+        }
+        out
     }
 
     fn make_request(&mut self, msg_id: MsgId, now: Time) -> Request {
@@ -808,6 +924,10 @@ impl<B: ExecBackend> Coordinator<B> {
     /// Returns the instances that received at least one request, in
     /// first-dispatch order, so the driver can wake them.
     pub fn pump(&mut self, now: Time) -> Vec<usize> {
+        // Booted instances register here (and on refresh) — deterministic
+        // points of the cycle, so both drivers reshape the fleet at the
+        // same place in the dispatch stream.
+        self.activate_booted(now);
         let mut woken: Vec<usize> = Vec::new();
         if self.queue.is_empty() {
             return woken;
@@ -819,8 +939,11 @@ impl<B: ExecBackend> Coordinator<B> {
             let Some(s) = self.queue.best_shard(&self.blocked_buf) else {
                 return woken;
             };
-            let class = self.queue.class(s);
             let best = self.queue.peek_shard(s).expect("best shard has a head");
+            // The dispatch constraint is the request's own class — the
+            // shard is only a queueing partition (a routed `Any` request
+            // waits in a group's shard but may still dispatch anywhere).
+            let class = best.model_class;
             // A prompt that can never fit any accepting instance OF ITS
             // GROUP — judged against the PHYSICAL pools, so a transient
             // co-tenant squeeze only defers — is rejected outright.
@@ -954,6 +1077,16 @@ impl<B: ExecBackend> Coordinator<B> {
             start: dispatched_at,
             end: now,
         });
+        // Serving-context feedback for the routing layer and the
+        // dispatcher's demand prediction: which family actually served the
+        // request, how long it ran there, and how much KV it ended up
+        // holding.
+        self.orch.record_serving_feedback(
+            p.agent,
+            self.fleet.instances[instance].model,
+            now - dispatched_at,
+            req.total_tokens() as f64,
+        );
         // Advance the workflow, if this request belongs to one (external
         // requests are single free-standing stages).
         let done = match self.workflows.get_mut(&p.msg_id) {
@@ -977,7 +1110,7 @@ impl<B: ExecBackend> Coordinator<B> {
             self.workflows.remove(&p.msg_id);
         } else {
             let req = self.make_request(p.msg_id, now);
-            self.queue.push(req, self.policy.as_ref());
+            self.route_and_enqueue(req);
         }
     }
 
@@ -1012,7 +1145,34 @@ impl<B: ExecBackend> Coordinator<B> {
             e.waiting_dirty = true;
         }
         self.finalize_drained(now);
+        self.activate_booted(now);
         self.autoscale(now);
+    }
+
+    /// Register every provisioned instance whose boot delay has elapsed,
+    /// in provision order. Called from [`Self::pump`] and
+    /// [`Self::refresh`] so activation points are deterministic across
+    /// drivers.
+    fn activate_booted(&mut self, now: Time) {
+        if self.pending_boots.is_empty() {
+            return;
+        }
+        let mut i = 0;
+        while i < self.pending_boots.len() {
+            if self.pending_boots[i].ready_at <= now {
+                let pb = self.pending_boots.remove(i);
+                // Provisioning only happens on fleets with a factory, so
+                // this cannot fail.
+                let _ = self.add_instance(pb.spec, now);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Instances provisioned by the autoscaler that are still booting.
+    pub fn booting_instances(&self) -> usize {
+        self.pending_boots.len()
     }
 
     /// Mean queuing-time ratio of requests finished since the previous
@@ -1038,7 +1198,8 @@ impl<B: ExecBackend> Coordinator<B> {
 
     /// Per-model-family load signals for the autoscaler, in fleet-index
     /// first-seen order (deterministic across drivers): each family's
-    /// pinned shard depth and its live instance count.
+    /// queue depth (pinned + routed-`Any` shards), its live instance count
+    /// and its still-booting provision count.
     fn group_loads(&self) -> Vec<GroupLoad> {
         let mut groups: Vec<GroupLoad> = Vec::new();
         for (j, spec) in self.fleet.instances.iter().enumerate() {
@@ -1047,8 +1208,23 @@ impl<B: ExecBackend> Coordinator<B> {
                 Some(g) => g.active_instances += active as usize,
                 None => groups.push(GroupLoad {
                     model: spec.model,
-                    queue_len: self.queue.shard_len(ModelClass::Model(spec.model)),
+                    queue_len: self.queue.group_len(spec.model),
                     active_instances: active as usize,
+                    pending_instances: 0,
+                }),
+            }
+        }
+        // Booting capacity counts against its family's ceiling; a pending
+        // family the fleet has never held gets its own row (appended, so
+        // fleet first-seen order is preserved).
+        for pb in &self.pending_boots {
+            match groups.iter_mut().find(|g| g.model == pb.spec.model) {
+                Some(g) => g.pending_instances += 1,
+                None => groups.push(GroupLoad {
+                    model: pb.spec.model,
+                    queue_len: self.queue.group_len(pb.spec.model),
+                    active_instances: 0,
+                    pending_instances: 1,
                 }),
             }
         }
@@ -1072,31 +1248,60 @@ impl<B: ExecBackend> Coordinator<B> {
     }
 
     /// Consult the autoscaling policy and apply its decision: grow the
-    /// starved group with the backend factory, or start draining the
-    /// highest-index active instance (deterministic, so both drivers make
-    /// identical choices).
+    /// starved group with the backend factory (provisioning first when a
+    /// boot delay is configured), or start draining the highest-index
+    /// active instance whose family sits above its per-group floor
+    /// (deterministic, so both drivers make identical choices).
     fn autoscale(&mut self, now: Time) {
         let Some(mut scaler) = self.autoscaler.take() else { return };
         let obs = FleetObservation {
             queue_len: self.queue.len(),
             active_instances: self.active_instances(),
             draining_instances: self.draining_instances(),
+            pending_instances: self.pending_boots.len(),
             recent_queue_ratio: self.recent_queue_ratio(),
             can_grow: self.make_backend.is_some(),
             groups: self.group_loads(),
         };
         match scaler.observe(&obs, now) {
             Some(ScaleAction::Grow(model)) => {
-                let spec = self.grow_template(model, scaler.config().template);
-                // observe() only emits Grow when `can_grow` held, so the
-                // factory is present and this cannot fail.
-                let _ = self.add_instance(spec, now);
+                let cfg = scaler.config();
+                let spec = self.grow_template(model, cfg.template);
+                if cfg.boot_delay > 0.0 {
+                    // The slot is capacity-on-the-way, not capacity: it
+                    // registers at the first pump/refresh past ready_at.
+                    self.pending_boots
+                        .push(PendingBoot { ready_at: now + cfg.boot_delay, spec });
+                    self.scale_log.push(ScaleEvent {
+                        at: now,
+                        instance: PROVISIONING,
+                        kind: ScaleEventKind::Provision,
+                        dispatch_seq: self.dispatch_log.len(),
+                    });
+                } else {
+                    // observe() only emits Grow when `can_grow` held, so
+                    // the factory is present and this cannot fail.
+                    let _ = self.add_instance(spec, now);
+                }
             }
             Some(ScaleAction::Shrink) => {
-                if let Some(j) = (0..self.instance_state.len())
-                    .rev()
-                    .find(|&j| self.instance_state[j] == InstanceState::Active)
-                {
+                // Highest-index active instance whose family can lose a
+                // slot without dipping below its per-group floor.
+                let cfg = scaler.config();
+                let victim = (0..self.instance_state.len()).rev().find(|&j| {
+                    if self.instance_state[j] != InstanceState::Active {
+                        return false;
+                    }
+                    let model = self.fleet.instances[j].model;
+                    let family_active = (0..self.instance_state.len())
+                        .filter(|&i| {
+                            self.instance_state[i] == InstanceState::Active
+                                && self.fleet.instances[i].model == model
+                        })
+                        .count();
+                    family_active > cfg.family_min(model)
+                });
+                if let Some(j) = victim {
                     let _ = self.retire_instance(j, now);
                 }
             }
@@ -1459,6 +1664,149 @@ mod tests {
         let to_13b = c.group_log.iter().filter(|g| g.instance == 1).count();
         let to_8b = c.group_log.iter().filter(|g| g.instance == 0).count();
         assert_eq!((to_8b, to_13b), (3, 3), "each group served its own pins");
+        // The default routing policy logs every decision as a static pin.
+        assert_eq!(c.route_log.len(), 6);
+        for d in &c.route_log {
+            assert_eq!(d.chosen, d.class, "pinned routing never overrides");
+            assert_eq!(d.group, None);
+            assert_eq!(d.reason, crate::orchestrator::router::RouteReason::Pinned);
+        }
+    }
+
+    #[test]
+    fn learned_routing_balances_any_across_groups() {
+        use crate::orchestrator::router::RouteReason;
+        let mut fleet = FleetSpec::default();
+        fleet.push(InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(0.12));
+        fleet.push(InstanceSpec::new(ModelKind::Llama2_13B).with_kv_scale(0.12));
+        let mut c = Coordinator::sim(fleet, Box::new(Fcfs), Box::new(RoundRobin::new()));
+        // No exploration, unreachable min_samples: pure pressure balancing.
+        c.set_route_policy(RoutePolicy::Learned { explore_rate: 0.0, min_samples: 1_000_000 });
+        for i in 0..4 {
+            c.submit_external("A", 16, 4, i as f64 * 0.001);
+        }
+        assert_eq!(c.route_log.len(), 4);
+        // Every decision balanced into SOME group, class stayed Any.
+        let groups: Vec<_> = c.route_log.iter().map(|d| d.group).collect();
+        for d in &c.route_log {
+            assert_eq!(d.chosen, ModelClass::Any);
+            assert_eq!(d.reason, RouteReason::LeastPressured);
+        }
+        // The queued-depth feedback alternates the assignment: the first
+        // request lands on the roomier 8B group, the second sees its
+        // backlog and takes the 13B group, and so on.
+        assert_eq!(
+            groups,
+            vec![
+                Some(ModelKind::Llama3_8B),
+                Some(ModelKind::Llama2_13B),
+                Some(ModelKind::Llama3_8B),
+                Some(ModelKind::Llama2_13B),
+            ]
+        );
+        // All of them still dispatch (class Any is work-conserving).
+        c.pump(0.1);
+        assert_eq!(c.dispatch_log.len(), 4);
+    }
+
+    #[test]
+    fn any_routed_to_a_blocked_group_still_dispatches() {
+        let mut fleet = FleetSpec::default();
+        fleet.push(InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(0.12));
+        fleet.push(InstanceSpec::new(ModelKind::Llama2_13B).with_kv_scale(0.12));
+        let mut c = Coordinator::sim(fleet, Box::new(Fcfs), Box::new(RoundRobin::new()));
+        c.set_affinity(&AffinitySpec::parse("A=llama2-13b").unwrap());
+        // The 13B family drains away: its pinned shard's head defers every
+        // round (the family could be revived), blocking that shard only.
+        c.retire_instance(1, 0.0).unwrap();
+        c.submit_external("A", 16, 4, 0.1);
+        // An Any request balanced into the 13B group's routed shard by an
+        // earlier pressure snapshot must NOT starve behind the blocked
+        // pinned head: it waits in its own AnyIn shard and its class still
+        // lets it dispatch to the free 8B instance.
+        let req = Request {
+            id: 999,
+            msg_id: 999,
+            agent: AgentId(7),
+            model_class: ModelClass::Any,
+            upstream: None,
+            prompt_tokens: 16,
+            true_output_tokens: 4,
+            true_remaining_latency: 0.0,
+            remaining_stages: 1,
+            app_start: 0.2,
+            stage_arrival: 0.2,
+        };
+        c.queue.push_routed(
+            req,
+            ShardKey::AnyIn(ModelKind::Llama2_13B),
+            c.policy.as_ref(),
+        );
+        let woken = c.pump(0.3);
+        assert_eq!(woken, vec![0], "Any request reached the free group");
+        assert!(c.dispatch_log.iter().any(|&(id, j)| id == 999 && j == 0));
+        assert_eq!(c.queue.len(), 1, "only the pinned request still waits");
+        assert_eq!(c.dropped, 0);
+    }
+
+    #[test]
+    fn boot_delay_defers_registration_until_elapsed() {
+        use crate::server::autoscale::AutoscaleConfig;
+        let mut c = Coordinator::sim(
+            small_fleet(1, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        let mut cfg = AutoscaleConfig::for_template(
+            InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(0.12),
+        );
+        cfg.max_instances = 4;
+        cfg.queue_high = 0.5;
+        cfg.up_after = 1;
+        cfg.cooldown = 1000.0;
+        cfg.boot_delay = 5.0;
+        c.set_autoscaler(Autoscaler::new(cfg));
+        for i in 0..8 {
+            c.submit_external("A", 16, 4, i as f64 * 0.001);
+        }
+        c.refresh(0.5);
+        assert_eq!(c.n_instances(), 1, "provisioned, not yet registered");
+        assert_eq!(c.booting_instances(), 1);
+        assert!(c
+            .scale_log
+            .iter()
+            .any(|e| e.kind == ScaleEventKind::Provision && e.instance == PROVISIONING));
+        assert!(!c.scale_log.iter().any(|e| e.kind == ScaleEventKind::Grow));
+        c.pump(2.0);
+        assert_eq!(c.n_instances(), 1, "still inside the boot window");
+        c.pump(5.6);
+        assert_eq!(c.n_instances(), 2, "registered once the delay elapsed");
+        assert_eq!(c.booting_instances(), 0);
+        assert!(c
+            .scale_log
+            .iter()
+            .any(|e| e.kind == ScaleEventKind::Grow && e.instance == 1));
+    }
+
+    #[test]
+    fn shrink_victim_respects_per_group_floor() {
+        use crate::server::autoscale::{parse_per_group, AutoscaleConfig};
+        // Fleet: 8B, 8B, 13B. The 13B family has a floor of one instance,
+        // so a cold-fleet shrink must drain an 8B slot even though the 13B
+        // holds the highest index.
+        let fleet = FleetSpec::parse("2*llama3-8b@0.12,llama2-13b@0.12").unwrap();
+        let mut c = Coordinator::sim(fleet, Box::new(Fcfs), Box::new(RoundRobin::new()));
+        let mut cfg = AutoscaleConfig::for_template(
+            InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(0.12),
+        );
+        cfg.min_instances = 1;
+        cfg.down_after = 1;
+        cfg.cooldown = 0.0;
+        cfg.per_group = parse_per_group("llama2-13b=1..2").unwrap();
+        c.set_autoscaler(Autoscaler::new(cfg));
+        c.refresh(1.0);
+        assert_eq!(c.instance_state(2), InstanceState::Active, "13B floor honored");
+        assert_eq!(c.instance_state(1), InstanceState::Retired, "8B drained instead");
     }
 
     #[test]

@@ -23,10 +23,13 @@ pub mod pressure;
 pub mod real;
 pub mod sim;
 
-pub use autoscale::{AutoscaleConfig, Autoscaler, FleetObservation, GroupLoad, ScaleAction};
+pub use autoscale::{
+    parse_per_group, AutoscaleConfig, Autoscaler, FleetObservation, GroupBounds, GroupLoad,
+    ScaleAction,
+};
 pub use coordinator::{
     Clock, Coordinator, FleetSpec, GroupDispatch, InstanceSpec, InstanceState, ManualClock,
-    ScaleEvent, ScaleEventKind, WallClock,
+    ScaleEvent, ScaleEventKind, WallClock, PROVISIONING,
 };
 pub use pressure::PressureTrace;
 pub use sim::{FleetConfig, SimConfig, SimResult, SimServer};

@@ -17,6 +17,7 @@ use crate::engine::cost_model::ModelKind;
 use crate::lb::policies::SchedulePolicy;
 use crate::metrics::{MetricsCollector, RunSummary};
 use crate::orchestrator::affinity::AffinitySpec;
+use crate::orchestrator::router::{RouteDecision, RoutePolicy};
 use crate::server::autoscale::{AutoscaleConfig, Autoscaler};
 use crate::server::coordinator::{
     Coordinator, FleetSpec, GroupDispatch, InstanceSpec, ScaleEvent,
@@ -93,6 +94,10 @@ pub struct FleetConfig {
     /// When set, agents are pinned to model-affine serving groups and the
     /// central queue shards accordingly.
     pub affinity: Option<AffinitySpec>,
+    /// When set, the routing layer's policy (default: `Pinned`, the
+    /// static affinity stamp). `Learned` also switches the time-slot
+    /// dispatcher to the profile-driven KV-demand prediction.
+    pub route: Option<RoutePolicy>,
 }
 
 impl From<SimConfig> for FleetConfig {
@@ -104,6 +109,7 @@ impl From<SimConfig> for FleetConfig {
             autoscale: None,
             pressure: None,
             affinity: None,
+            route: None,
         }
     }
 }
@@ -118,6 +124,7 @@ impl From<FleetSpec> for FleetConfig {
             autoscale: None,
             pressure: None,
             affinity: None,
+            route: None,
         }
     }
 }
@@ -138,6 +145,9 @@ pub struct SimResult {
     /// model per decision); per-group views and the no-cross-model check
     /// read this.
     pub group_log: Vec<GroupDispatch>,
+    /// Every routing decision, in submission order (the routing layer's
+    /// leg of the driver-equivalence seam).
+    pub route_log: Vec<RouteDecision>,
     /// Every fleet change (grow / drain start / drain done), in order.
     pub scale_log: Vec<ScaleEvent>,
     /// Instances still active when the run ended.
@@ -154,6 +164,18 @@ impl SimResult {
             return 0.0;
         }
         reqs.iter().map(|r| r.queue_time()).sum::<f64>() / reqs.len() as f64
+    }
+
+    /// Mean per-request end-to-end latency in seconds (stage arrival to
+    /// completion); 0 when no request finished. The route-sweep's
+    /// pinned-vs-learned comparison metric.
+    pub fn mean_request_e2e(&self) -> f64 {
+        let reqs = &self.metrics.requests;
+        if reqs.is_empty() {
+            return 0.0;
+        }
+        reqs.iter().map(|r| r.finished_at - r.stage_arrival).sum::<f64>()
+            / reqs.len() as f64
     }
 
     /// Dispatch decisions that landed on an instance whose model family
@@ -214,7 +236,7 @@ impl SimServer {
         dispatcher: Box<dyn DispatchPolicy>,
     ) -> SimServer {
         let mut coord = Coordinator::sim(cfg.fleet.clone(), policy, dispatcher);
-        if let Some(a) = cfg.autoscale {
+        if let Some(a) = cfg.autoscale.clone() {
             coord.set_autoscaler(Autoscaler::new(a));
         }
         if let Some(p) = cfg.pressure.clone() {
@@ -222,6 +244,9 @@ impl SimServer {
         }
         if let Some(aff) = &cfg.affinity {
             coord.set_affinity(aff);
+        }
+        if let Some(route) = cfg.route {
+            coord.set_route_policy(route);
         }
         let n = coord.n_instances();
         SimServer { cfg, coord, engine_busy: vec![false; n] }
@@ -240,7 +265,14 @@ impl SimServer {
     }
 
     fn pump_and_wake(&mut self, now: Time, events: &mut EventQueue<Ev>) {
-        for j in self.coord.pump(now) {
+        let woken = self.coord.pump(now);
+        // A provisioned instance whose boot delay elapsed registers inside
+        // pump, so the fleet can grow on ANY pump — track it before waking.
+        let n = self.coord.n_instances();
+        if self.engine_busy.len() < n {
+            self.engine_busy.resize(n, false);
+        }
+        for j in woken {
             self.wake_engine(j, now, events);
         }
     }
@@ -285,15 +317,10 @@ impl SimServer {
                 }
                 Ev::Refresh => {
                     self.coord.refresh(now);
-                    // The autoscaler may have grown the fleet on this tick:
-                    // track the new engines before waking anything.
-                    let n = self.coord.n_instances();
-                    if self.engine_busy.len() < n {
-                        self.engine_busy.resize(n, false);
-                    }
                     // Re-keyed priorities may unblock deferred requests:
                     // give them a dispatch chance without waiting for the
-                    // next completion.
+                    // next completion. (pump_and_wake also tracks any
+                    // engines the autoscaler grew on this tick.)
                     self.pump_and_wake(now, &mut events);
                     if self.coord.open_workflows() > 0 || !events.is_empty() {
                         events.schedule(now + self.cfg.refresh_interval, Ev::Refresh);
@@ -325,6 +352,7 @@ impl SimServer {
             dispatcher_name: self.coord.dispatcher.name(),
             dispatch_log: std::mem::take(&mut self.coord.dispatch_log),
             group_log: std::mem::take(&mut self.coord.group_log),
+            route_log: std::mem::take(&mut self.coord.route_log),
             scale_log: std::mem::take(&mut self.coord.scale_log),
             final_active_instances: self.coord.active_instances(),
             metrics: self.coord.metrics,
@@ -350,6 +378,18 @@ pub fn make_policy(name: &str) -> Box<dyn SchedulePolicy> {
 /// from the fleet's reference cost model and its per-instance capacities
 /// live from [`crate::engine::core::InstanceStatus`].
 pub fn make_dispatcher_for_fleet(name: &str, fleet: &FleetSpec) -> Box<dyn DispatchPolicy> {
+    make_dispatcher_routed(name, fleet, None)
+}
+
+/// [`make_dispatcher_for_fleet`] with the routing layer's policy: under
+/// `Learned` routing the time-slot packer predicts each request's KV
+/// demand from the profiler's learned per-agent demand distribution
+/// instead of the slope-based guess (the baselines ignore the policy).
+pub fn make_dispatcher_routed(
+    name: &str,
+    fleet: &FleetSpec,
+    route: Option<&RoutePolicy>,
+) -> Box<dyn DispatchPolicy> {
     use crate::dispatch::*;
     match name {
         "rr" | "round-robin" => Box::new(RoundRobin::new()),
@@ -367,6 +407,7 @@ pub fn make_dispatcher_for_fleet(name: &str, fleet: &FleetSpec) -> Box<dyn Dispa
             if min_scale.is_finite() {
                 ts.capacity_bytes *= min_scale;
             }
+            ts.learned_demand = matches!(route, Some(RoutePolicy::Learned { .. }));
             // Each instance is priced with ITS OWN cost model (ramp slope
             // + KV density), not the fleet reference's.
             let models: Vec<ModelKind> =
@@ -402,7 +443,7 @@ pub fn run_fleet(
     arrivals: Vec<ArrivalEvent>,
 ) -> SimResult {
     let policy = make_policy(scheduler);
-    let disp = make_dispatcher_for_fleet(dispatcher, &cfg.fleet);
+    let disp = make_dispatcher_routed(dispatcher, &cfg.fleet, cfg.route.as_ref());
     SimServer::with_fleet(cfg, policy, disp).run(arrivals)
 }
 

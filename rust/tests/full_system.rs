@@ -4,6 +4,7 @@
 use kairos::agents::apps::App;
 use kairos::engine::cost_model::ModelKind;
 use kairos::orchestrator::affinity::AffinitySpec;
+use kairos::orchestrator::router::{RoutePolicy, RouteReason};
 use kairos::server::coordinator::FleetSpec;
 use kairos::server::sim::{
     make_dispatcher, make_policy, run_fleet, run_system, FleetConfig, SimConfig, SimServer,
@@ -132,6 +133,83 @@ fn sharded_mixed_fleet_beats_unsharded_on_queuing_delay() {
     // same trace.
     let (bq, sq) = (base.mean_queue_delay(), sharded.mean_queue_delay());
     assert!(sq < bq, "sharded mean queue delay {sq:.3}s !< unsharded {bq:.3}s");
+}
+
+#[test]
+fn learned_routing_beats_static_pins_on_skewed_trace() {
+    // The wrong static guess: EVERY agent pinned to the slower, KV-denser
+    // 13B family while two 8B instances idle. Learned routing must sample
+    // both families (deterministic exploration), measure that the 8B
+    // group serves this workload faster, and migrate traffic — beating
+    // the static-pin baseline's mean request E2E latency on the same
+    // skewed mixed-model trace.
+    let fleet = FleetSpec::parse("2*llama3-8b@0.12,2*llama2-13b@0.12").unwrap();
+    let aff = AffinitySpec::parse("*=llama2-13b").unwrap();
+    let arrivals = trace(&WorkloadMix::colocated(), 3.0, 300, 11);
+
+    let mut pinned_cfg = FleetConfig::from(fleet.clone());
+    pinned_cfg.affinity = Some(aff.clone());
+    pinned_cfg.route = Some(RoutePolicy::Pinned);
+    let pinned = run_fleet(pinned_cfg, "kairos", "kairos", arrivals.clone());
+
+    let mut learned_cfg = FleetConfig::from(fleet);
+    learned_cfg.affinity = Some(aff);
+    learned_cfg.route =
+        Some(RoutePolicy::Learned { explore_rate: 0.25, min_samples: 8 });
+    let learned = run_fleet(learned_cfg, "kairos", "kairos", arrivals);
+
+    // The learned run re-pinned hard, so the invariant still holds …
+    assert_eq!(learned.cross_model_dispatches(), 0);
+    // … the pinned baseline never touched the 8B half of the fleet …
+    assert!(pinned.dispatch_log.iter().all(|&(_, j)| j >= 2));
+    // … while learning moved real traffic onto it.
+    let learned_to_8b =
+        learned.dispatch_log.iter().filter(|&&(_, j)| j < 2).count();
+    assert!(
+        learned_to_8b > learned.dispatch_log.len() / 4,
+        "only {learned_to_8b} of {} dispatches reached the 8B group",
+        learned.dispatch_log.len()
+    );
+    assert!(
+        learned.route_log.iter().any(|d| d.reason == RouteReason::LearnedBest),
+        "profiles never converged to a learned stamp"
+    );
+    let (pe, le) = (pinned.mean_request_e2e(), learned.mean_request_e2e());
+    assert!(
+        le < pe,
+        "learned mean E2E {le:.3}s !< static-pin baseline {pe:.3}s"
+    );
+}
+
+#[test]
+fn learned_any_balancing_is_work_conserving() {
+    // Unpinned (Any) agents are balanced into per-group routed shards by
+    // live pressure. Their dispatch constraint stays Any, so no request
+    // can starve behind a pinned head and nothing drops.
+    let fleet = FleetSpec::parse("3*llama3-8b@0.12,llama2-13b@0.12").unwrap();
+    let aff = AffinitySpec::parse("Engineer=llama2-13b,QAEngineer=llama2-13b").unwrap();
+    let arrivals = trace(&WorkloadMix::colocated(), 2.0, 200, 12);
+    let mut cfg = FleetConfig::from(fleet);
+    cfg.affinity = Some(aff);
+    // No exploration, unreachable min_samples: pure pressure balancing of
+    // the Any class plus hard pins as fallback.
+    cfg.route = Some(RoutePolicy::Learned { explore_rate: 0.0, min_samples: 1_000_000 });
+    let res = run_fleet(cfg, "kairos", "rr", arrivals);
+    assert_eq!(res.dropped_requests, 0);
+    assert_eq!(res.cross_model_dispatches(), 0);
+    assert!(!res.metrics.requests.is_empty());
+    assert_eq!(
+        res.route_log.len(),
+        res.dispatch_log.len(),
+        "every routed request dispatched"
+    );
+    // Balancing actually engaged: Any requests were assigned groups.
+    assert!(res
+        .route_log
+        .iter()
+        .any(|d| d.reason == RouteReason::LeastPressured && d.group.is_some()));
+    // And the pinned agents stayed on their fallback pins.
+    assert!(res.route_log.iter().any(|d| d.reason == RouteReason::FallbackPin));
 }
 
 #[test]

@@ -13,13 +13,14 @@
 use kairos::engine::core::StepOutcome;
 use kairos::engine::cost_model::{ModelClass, ModelKind};
 use kairos::orchestrator::affinity::AffinitySpec;
-use kairos::server::autoscale::{AutoscaleConfig, Autoscaler};
+use kairos::orchestrator::router::{RouteDecision, RoutePolicy, RouteReason};
+use kairos::server::autoscale::{parse_per_group, AutoscaleConfig, Autoscaler};
 use kairos::server::coordinator::{
     Clock, Coordinator, FleetSpec, GroupDispatch, ManualClock, ScaleEventKind,
 };
 use kairos::server::pressure::PressureTrace;
 use kairos::server::sim::{
-    make_dispatcher_for_fleet, make_policy, run_fleet, FleetConfig,
+    make_dispatcher_routed, make_policy, run_fleet, FleetConfig,
 };
 use kairos::stats::rng::Rng;
 use kairos::workload::{ArrivalEvent, TraceGen, WorkloadMix};
@@ -51,6 +52,7 @@ fn burst_then_calm(seed: u64) -> Vec<ArrivalEvent> {
 struct DriverTrace {
     dispatch_log: Vec<(u64, usize)>,
     group_log: Vec<GroupDispatch>,
+    route_log: Vec<RouteDecision>,
     scale_log: Vec<(ScaleEventKind, usize, usize)>,
     dropped: u64,
     workflows_completed: usize,
@@ -64,9 +66,10 @@ fn drive_sim(
     dispatcher: &str,
     arrivals: Vec<ArrivalEvent>,
 ) -> DriverTrace {
-    drive_sim_elastic(fleet, scheduler, dispatcher, arrivals, None, None, None)
+    drive_sim_elastic(fleet, scheduler, dispatcher, arrivals, None, None, None, None)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn drive_sim_elastic(
     fleet: &FleetSpec,
     scheduler: &str,
@@ -75,15 +78,18 @@ fn drive_sim_elastic(
     autoscale: Option<AutoscaleConfig>,
     pressure: Option<PressureTrace>,
     affinity: Option<AffinitySpec>,
+    route: Option<RoutePolicy>,
 ) -> DriverTrace {
     let mut cfg = FleetConfig::from(fleet.clone());
     cfg.autoscale = autoscale;
     cfg.pressure = pressure;
     cfg.affinity = affinity;
+    cfg.route = route;
     let res = run_fleet(cfg, scheduler, dispatcher, arrivals);
     DriverTrace {
         dispatch_log: res.dispatch_log,
         group_log: res.group_log,
+        route_log: res.route_log,
         scale_log: res
             .scale_log
             .iter()
@@ -117,6 +123,7 @@ fn drive_polling(
         None,
         None,
         None,
+        None,
     )
 }
 
@@ -130,11 +137,12 @@ fn drive_polling_elastic(
     autoscale: Option<AutoscaleConfig>,
     pressure: Option<PressureTrace>,
     affinity: Option<AffinitySpec>,
+    route: Option<RoutePolicy>,
 ) -> DriverTrace {
     let mut coord = Coordinator::sim(
         fleet.clone(),
         make_policy(scheduler),
-        make_dispatcher_for_fleet(dispatcher, fleet),
+        make_dispatcher_routed(dispatcher, fleet, route.as_ref()),
     );
     if let Some(a) = autoscale {
         coord.set_autoscaler(Autoscaler::new(a));
@@ -144,6 +152,9 @@ fn drive_polling_elastic(
     }
     if let Some(aff) = &affinity {
         coord.set_affinity(aff);
+    }
+    if let Some(r) = route {
+        coord.set_route_policy(r);
     }
     let clock = ManualClock::new();
     let n = coord.n_instances();
@@ -193,23 +204,32 @@ fn drive_polling_elastic(
         clock.advance_to(t_next);
         let now = clock.now();
 
+        // A provisioned instance whose boot delay elapsed registers inside
+        // pump, so the fleet can grow on ANY pump — resize afterwards.
         if t_arrival <= t_done && t_arrival <= next_refresh {
             coord.submit_plan(arrivals[next_arrival].plan.clone(), now);
             next_arrival += 1;
             coord.pump(now);
+            while in_flight.len() < coord.n_instances() {
+                in_flight.push(None);
+            }
             start_idle(&mut coord, &mut in_flight, now);
         } else if t_done <= next_refresh {
             let (_, out) = in_flight[j_done].take().expect("engine was in flight");
             coord.absorb(j_done, out, now);
             coord.pump(now);
-            start_idle(&mut coord, &mut in_flight, now);
-        } else {
-            coord.refresh(now);
-            // The autoscaler may have grown the fleet on this tick.
             while in_flight.len() < coord.n_instances() {
                 in_flight.push(None);
             }
+            start_idle(&mut coord, &mut in_flight, now);
+        } else {
+            coord.refresh(now);
             coord.pump(now);
+            // The autoscaler (or a completed boot) may have grown the
+            // fleet on this tick.
+            while in_flight.len() < coord.n_instances() {
+                in_flight.push(None);
+            }
             start_idle(&mut coord, &mut in_flight, now);
             let more = next_arrival < arrivals.len()
                 || in_flight.iter().any(Option::is_some);
@@ -228,6 +248,7 @@ fn drive_polling_elastic(
     DriverTrace {
         dispatch_log: std::mem::take(&mut coord.dispatch_log),
         group_log: std::mem::take(&mut coord.group_log),
+        route_log: std::mem::take(&mut coord.route_log),
         scale_log: coord
             .scale_log
             .iter()
@@ -276,6 +297,8 @@ fn elastic_config(fleet: &FleetSpec) -> AutoscaleConfig {
         up_after: 1,
         down_after: 2,
         cooldown: 5.0,
+        boot_delay: 0.0,
+        per_group: Vec::new(),
         template: fleet.instances[0],
     }
 }
@@ -295,8 +318,9 @@ fn fleet_resize_seam_holds_across_drivers() {
         "kairos",
         "kairos",
         arrivals.clone(),
-        Some(auto),
+        Some(auto.clone()),
         Some(pressure.clone()),
+        None,
         None,
     );
     let b = drive_polling_elastic(
@@ -307,6 +331,7 @@ fn fleet_resize_seam_holds_across_drivers() {
         5.0,
         Some(auto),
         Some(pressure),
+        None,
         None,
     );
     assert!(!a.dispatch_log.is_empty());
@@ -370,9 +395,19 @@ fn sharded_seam_holds_on_mixed_model_fleet() {
         None,
         None,
         Some(aff.clone()),
+        None,
     );
-    let b =
-        drive_polling_elastic(&fleet, "kairos", "kairos", arrivals, 5.0, None, None, Some(aff));
+    let b = drive_polling_elastic(
+        &fleet,
+        "kairos",
+        "kairos",
+        arrivals,
+        5.0,
+        None,
+        None,
+        Some(aff),
+        None,
+    );
     assert!(!a.dispatch_log.is_empty());
     assert_eq!(a, b, "drivers diverged over the sharded coordinator");
     // The pinned group saw traffic, and every dispatch stayed in-family.
@@ -402,6 +437,79 @@ fn sharded_seam_holds_on_mixed_model_fleet() {
     };
     assert_eq!(group_view(&a), group_view(&b));
     assert!(!group_view(&a).is_empty());
+}
+
+#[test]
+fn route_log_seam_holds_with_learned_routing_and_group_bounds() {
+    // The routing-layer contract: on a mixed-model trace with LEARNED
+    // routing (profile-driven pins, pressure-balanced Any placement,
+    // deterministic exploration), per-group autoscale bounds AND a boot
+    // delay, both drivers must produce identical route, group, dispatch
+    // and scale logs — and the zero-cross-model-dispatch pump assert
+    // still holds.
+    let fleet = FleetSpec::parse("2*llama3-8b@0.12,llama2-13b@0.12").unwrap();
+    let aff =
+        AffinitySpec::parse("*=llama3-8b,Engineer=llama2-13b,QAEngineer=llama2-13b").unwrap();
+    let mut auto = elastic_config(&fleet);
+    auto.boot_delay = 4.0;
+    auto.per_group = parse_per_group("llama3-8b=2..4,llama2-13b=1..2").unwrap();
+    let route = RoutePolicy::Learned { explore_rate: 0.125, min_samples: 8 };
+    let arrivals = burst_then_calm(43);
+    let a = drive_sim_elastic(
+        &fleet,
+        "kairos",
+        "kairos",
+        arrivals.clone(),
+        Some(auto.clone()),
+        None,
+        Some(aff.clone()),
+        Some(route),
+    );
+    let b = drive_polling_elastic(
+        &fleet,
+        "kairos",
+        "kairos",
+        arrivals,
+        5.0,
+        Some(auto),
+        None,
+        Some(aff),
+        Some(route),
+    );
+    assert!(!a.dispatch_log.is_empty());
+    // Route decisions are per submitted stage: unique per request, and a
+    // superset of the dispatched requests. (No exact arithmetic against
+    // `dropped`: an engine-side drain_stuck drop counts a request that
+    // was already dispatched.)
+    let routed: std::collections::HashSet<u64> = a.route_log.iter().map(|d| d.req).collect();
+    assert_eq!(routed.len(), a.route_log.len(), "one route decision per request");
+    assert!(
+        a.dispatch_log.iter().all(|(id, _)| routed.contains(id)),
+        "a request was dispatched without a route decision"
+    );
+    assert_eq!(a, b, "drivers diverged under learned routing");
+    // The pump-level invariant survives learned stamps: no request ever
+    // lands on a model family it was not (re-)pinned to.
+    for g in &a.group_log {
+        assert!(
+            g.class.matches(g.model),
+            "request {} class {:?} dispatched to {:?}",
+            g.req,
+            g.class,
+            g.model
+        );
+    }
+    // The learned machinery actually engaged: exploration fired, and the
+    // profiles eventually produced learned-best stamps.
+    assert!(
+        a.route_log.iter().any(|d| d.reason == RouteReason::Explore),
+        "no exploration decision in {} routes",
+        a.route_log.len()
+    );
+    assert!(
+        a.route_log.iter().any(|d| d.reason == RouteReason::LearnedBest),
+        "profiles never converged to a learned stamp"
+    );
 }
 
 #[test]
