@@ -1,0 +1,79 @@
+//! Record a run, transform the trace, replay the scenarios.
+//!
+//! One mixed-model run is recorded through the coordinator's trace log
+//! and written to JSONL. The reloaded artifact then becomes a family of
+//! scenarios through the deterministic transforms: the original replay
+//! (which must reproduce the recorded run's dispatch log exactly — the
+//! record→replay contract), a 2x rate-scaled overload, a clipped window,
+//! and a spliced double-length trace. Every scenario replays the SAME
+//! recorded workload, so the latency differences are the scenario, not
+//! sampling noise.
+//!
+//! Run: `cargo run --release --example trace_replay`
+
+use kairos::server::coordinator::FleetSpec;
+use kairos::server::sim::{run_fleet, FleetConfig};
+use kairos::stats::rng::Rng;
+use kairos::util::table::Table;
+use kairos::workload::{Trace, TraceGen, WorkloadMix};
+
+fn main() -> anyhow::Result<()> {
+    let fleet = FleetSpec::parse("2*llama3-8b@0.12").map_err(anyhow::Error::msg)?;
+
+    // Record: run the generator's workload once and capture the trace.
+    let arrivals = TraceGen::default().generate(
+        &WorkloadMix::colocated(),
+        4.0,
+        300,
+        &mut Rng::new(23),
+    );
+    let res = run_fleet(FleetConfig::from(fleet.clone()), "kairos", "kairos", arrivals);
+    let recorded = Trace::from_records(res.trace_log);
+    let path = std::env::temp_dir().join("kairos_example_trace.jsonl");
+    recorded.save(&path).map_err(anyhow::Error::msg)?;
+    println!(
+        "recorded {} tasks spanning {:.1}s -> {}\n",
+        recorded.len(),
+        recorded.span(),
+        path.display()
+    );
+
+    // Replay: reload the artifact and derive the scenario family.
+    let base = Trace::load(&path).map_err(anyhow::Error::msg)?;
+    std::fs::remove_file(&path).ok();
+    let scenarios = [
+        ("replay (identical)", base.clone()),
+        ("rate x2 (overload)", base.scale_rate(2.0).map_err(anyhow::Error::msg)?),
+        ("first half (clip)", base.clip(0.0, base.span() / 2.0).map_err(anyhow::Error::msg)?),
+        ("spliced x2 (marathon)", base.splice(&base)),
+    ];
+
+    let mut t = Table::new(&[
+        "scenario", "tasks", "req/s", "avg s/tok", "queue%", "dropped",
+    ]);
+    for (label, trace) in &scenarios {
+        let r = run_fleet(
+            FleetConfig::from(fleet.clone()),
+            "kairos",
+            "kairos",
+            trace.arrivals(),
+        );
+        if *label == "replay (identical)" {
+            assert_eq!(
+                r.dispatch_log, res.dispatch_log,
+                "record→replay must reproduce the original dispatch log"
+            );
+        }
+        t.row(vec![
+            label.to_string(),
+            trace.len().to_string(),
+            format!("{:.2}", trace.mean_rate()),
+            format!("{:.4}", r.summary.avg_token_latency),
+            format!("{:.1}%", r.summary.mean_queue_ratio * 100.0),
+            r.dropped_requests.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nreplay reproduced the recorded dispatch log exactly.");
+    Ok(())
+}

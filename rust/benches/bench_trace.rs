@@ -1,0 +1,42 @@
+//! Trace-subsystem throughput: JSONL serialize, parse, and materialize.
+//!
+//! The trace file is the artifact every sweep arm replays, so parse +
+//! materialize sit on the startup path of every run. Run: `cargo bench`.
+
+mod common;
+
+use common::{bench, black_box};
+use kairos::workload::{GenSource, Trace, TraceGen, TraceSource, WorkloadMix};
+
+fn main() {
+    println!("== trace subsystem (JSONL parse + materialize) ==");
+    for n in [1_000usize, 10_000] {
+        let trace = GenSource {
+            gen: TraceGen::default(),
+            mix: WorkloadMix::colocated(),
+            rate: 8.0,
+            n,
+            seed: 42,
+        }
+        .materialize()
+        .expect("generated trace");
+        let jsonl = trace.to_jsonl();
+        println!(
+            "trace n={n}: {} stages, {} JSONL bytes",
+            trace.records.iter().map(|r| r.stages.len()).sum::<usize>(),
+            jsonl.len()
+        );
+        bench(&format!("trace_serialize/n={n}"), 10, || {
+            black_box(trace.to_jsonl());
+        });
+        bench(&format!("trace_parse/n={n}"), 10, || {
+            black_box(Trace::from_jsonl(&jsonl).expect("parse"));
+        });
+        bench(&format!("trace_materialize/n={n}"), 10, || {
+            black_box(trace.arrivals());
+        });
+        bench(&format!("trace_scale_rate/n={n}"), 10, || {
+            black_box(trace.scale_rate(2.0).expect("scale"));
+        });
+    }
+}

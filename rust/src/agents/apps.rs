@@ -30,6 +30,17 @@ impl App {
         }
     }
 
+    /// Parse an app name as written by [`App::name`] (CLI filters, trace
+    /// files).
+    pub fn parse(s: &str) -> Result<App, String> {
+        match s {
+            "QA" | "qa" => Ok(App::Qa),
+            "RG" | "rg" => Ok(App::Rg),
+            "CG" | "cg" => Ok(App::Cg),
+            other => Err(format!("unknown app {other:?} (QA|RG|CG)")),
+        }
+    }
+
     /// Dataset profile by paper dataset name.
     pub fn dataset(&self, name: &str) -> DatasetProfile {
         match self {
@@ -53,7 +64,7 @@ impl App {
 }
 
 /// One resolved stage of a workflow instance.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PlannedStage {
     pub agent: &'static str,
     pub prompt_tokens: u32,
@@ -62,7 +73,7 @@ pub struct PlannedStage {
 
 /// A fully resolved workflow instance (linear stage sequence: the paper's
 /// three apps branch/loop but never fan out in parallel, Fig. 2).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WorkflowPlan {
     pub app: App,
     pub dataset: &'static str,

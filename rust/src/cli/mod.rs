@@ -4,31 +4,35 @@
 //! kairos serve   [--config file.toml] [--scheduler S] [--dispatcher D]
 //!                [--rate R] [--tasks N] [--instances I] [--model M]
 //!                [--fleet SPEC] [--seed X] [--autoscale] [--pressure TRACE]
-//!                [--affinity SPEC] [--route-policy POLICY]
+//!                [--affinity SPEC] [--route-policy POLICY] [--trace FILE]
+//!                [--burst-shape B] [--profile-half-life S]
 //! kairos fleet-sweep [--fleet SPEC] [--scheduler S] [--rate R] [--tasks N]
+//!                [--trace FILE]
 //! kairos elastic-sweep [--fleet SPEC] [--rate R] [--tasks N] [--min N]
-//!                [--max N] [--pressure TRACE] [--boot-delay S]
-//!                [--per-group BOUNDS]
+//!                [--max N] [--pressure TRACE] [--boot-delay S|SPEC]
+//!                [--per-group BOUNDS] [--trace FILE]
 //! kairos shard-sweep [--fleet SPEC] [--affinity SPEC] [--rate R] [--tasks N]
+//!                [--trace FILE]
 //! kairos route-sweep [--fleet SPEC] [--affinity SPEC] [--route-policy P]
-//!                [--rate R] [--tasks N]
+//!                [--rate R] [--tasks N] [--trace FILE]
+//! kairos trace   gen|record|scale|stats [...]
 //! kairos figures <id|all> [--out results/]
 //! kairos quickstart [--artifacts DIR] [--model NAME]
 //! ```
 
 use std::collections::HashMap;
+use std::path::Path;
 
 use crate::agents::apps::App;
 use crate::config::ServingConfig;
 use crate::engine::cost_model::ModelKind;
 use crate::orchestrator::affinity::AffinitySpec;
 use crate::orchestrator::router::{RoutePolicy, RouteReason};
-use crate::server::autoscale::{parse_per_group, AutoscaleConfig};
+use crate::server::autoscale::{parse_boot_delays, parse_per_group, AutoscaleConfig};
 use crate::server::coordinator::{FleetSpec, PROVISIONING};
 use crate::server::pressure::PressureTrace;
 use crate::server::sim::{run_fleet, FleetConfig, SimResult};
-use crate::stats::rng::Rng;
-use crate::workload::{TraceGen, WorkloadMix};
+use crate::workload::{FileSource, GenSource, Trace, TraceGen, TraceSource, WorkloadMix};
 
 /// Flags that take no value (`--flag` alone means `true`; an explicit
 /// `--flag false` still parses).
@@ -122,20 +126,38 @@ USAGE:
                      [--fleet SPEC] [--seed S] [--workload colocated|qa|rg|cg]
                      [--autoscale] [--pressure TRACE] [--affinity SPEC]
                      [--route-policy pinned|learned[:KEY=VAL,...]]
+                     [--trace FILE] [--burst-shape B] [--profile-half-life S]
   kairos fleet-sweep [--fleet SPEC] [--scheduler S] [--rate R] [--tasks N]
-                     [--seed S] [--workload W]
+                     [--seed S] [--workload W] [--trace FILE]
   kairos elastic-sweep
                      [--fleet SPEC] [--rate R] [--tasks N] [--seed S]
                      [--workload W] [--min N] [--max N] [--pressure TRACE]
-                     [--boot-delay S] [--per-group BOUNDS]
+                     [--boot-delay SECS|MODEL=SECS,...] [--per-group BOUNDS]
+                     [--trace FILE]
   kairos shard-sweep [--fleet SPEC] [--affinity SPEC] [--scheduler S]
                      [--dispatcher D] [--rate R] [--tasks N] [--seed S]
-                     [--workload W]
+                     [--workload W] [--trace FILE]
   kairos route-sweep [--fleet SPEC] [--affinity SPEC] [--scheduler S]
                      [--dispatcher D] [--route-policy P] [--rate R]
-                     [--tasks N] [--seed S] [--workload W]
+                     [--tasks N] [--seed S] [--workload W] [--trace FILE]
+  kairos trace gen    --out FILE [--rate R] [--tasks N] [--seed S]
+                     [--workload W] [--burst-shape B]
+  kairos trace record --out FILE [--fleet SPEC] [--affinity SPEC]
+                     [--scheduler S] [--dispatcher D] [--rate R] [--tasks N]
+                     [--seed S] [--workload W] [--burst-shape B]
+  kairos trace scale  --in FILE --out FILE [--factor F] [--clip START..END]
+                     [--filter-app QA|RG|CG] [--splice FILE2]
+  kairos trace stats  --in FILE
   kairos figures     <table1|fig3..fig18|overhead|all> [--out results]
   kairos quickstart  [--artifacts artifacts] [--model tiny]
+
+TRACE FILES — JSONL, one arrival record per line (see the TraceRecord
+  rustdoc for the schema). Every sweep arm replays the SAME materialized
+  trace (`--trace FILE`, or one generator materialization), so baselines
+  are apples-to-apples by construction. `trace gen` writes a generated
+  trace, `trace record` captures a run's submitted plans with their
+  ground-truth timings, `trace scale` derives scenarios (filter → clip →
+  rate-scale → splice, in that order), `trace stats` summarizes a file.
 
 FLEET SPEC — comma-separated `[COUNT*]MODEL[@KV_SCALE][:MAX_BATCH]`, e.g.
   `2*llama3-8b@0.12,2*llama3-8b@0.04:128` (uneven co-tenant pressure) or
@@ -175,6 +197,7 @@ pub fn run(raw: Vec<String>) -> crate::Result<()> {
         Some("elastic-sweep") => elastic_sweep(&args),
         Some("shard-sweep") => shard_sweep(&args),
         Some("route-sweep") => route_sweep(&args),
+        Some("trace") => trace_cmd(&args),
         Some("figures") => {
             let id = args
                 .positional
@@ -227,6 +250,62 @@ fn num_rate(args: &Args, key: &str, default: f64) -> crate::Result<f64> {
     Ok(v)
 }
 
+/// The arrival generator with a validated `--burst-shape` (rejected at
+/// parse time, naming the value — a NaN shape would produce NaN
+/// inter-arrival gaps).
+fn burst_gen(args: &Args, default_shape: f64) -> crate::Result<TraceGen> {
+    let shape = numf(args, "burst-shape", default_shape)?;
+    TraceGen::new(shape).map_err(|e| anyhow::anyhow!("flag --burst-shape: {e}"))
+}
+
+/// A recorded trace file fixes the workload, so the generator's flags
+/// would be silently ignored next to it — and nothing may run a config
+/// the user didn't ask for (the malformed-flag contract). Their presence
+/// alongside `--trace` is an error naming the flag.
+fn reject_generator_flags_with_trace(args: &Args) -> crate::Result<()> {
+    for key in ["rate", "tasks", "seed", "workload", "burst-shape"] {
+        if args.get(key).is_some() {
+            anyhow::bail!(
+                "flag --{key}: conflicts with --trace (the recorded file \
+                 fixes the workload)"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Materialize the ONE workload trace every arm of a sweep shares: a
+/// recorded file (`--trace FILE`) or the generator
+/// (`--rate/--tasks/--seed/--workload/--burst-shape`). Cross-arm
+/// comparisons are apples-to-apples by construction — arms replay clones
+/// of this materialization instead of regenerating under seed discipline.
+/// Returns the trace and its provenance line.
+fn shared_trace(
+    args: &Args,
+    default_rate: f64,
+    default_tasks: usize,
+) -> crate::Result<(Trace, String)> {
+    let source: Box<dyn TraceSource> = match args.get("trace") {
+        Some(path) => {
+            reject_generator_flags_with_trace(args)?;
+            Box::new(FileSource::new(path))
+        }
+        None => {
+            let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
+            Box::new(GenSource {
+                gen: burst_gen(args, TraceGen::default().burst_shape)?,
+                mix,
+                rate: num_rate(args, "rate", default_rate)?,
+                n: num_count(args, "tasks", default_tasks)?,
+                seed: num_u64(args, "seed", 42)?,
+            })
+        }
+    };
+    let desc = source.describe();
+    let trace = source.materialize().map_err(|e| anyhow::anyhow!(e))?;
+    Ok((trace, desc))
+}
+
 fn serve(args: &Args) -> crate::Result<()> {
     let mut cfg = match args.get("config") {
         Some(path) => {
@@ -259,6 +338,25 @@ fn serve(args: &Args) -> crate::Result<()> {
     }
     if let Some(r) = args.get("route-policy") {
         cfg.route_policy = Some(r.to_string());
+    }
+    if let Some(t) = args.get("trace") {
+        cfg.trace = Some(t.to_string());
+    }
+    if cfg.trace.is_some() {
+        // The trace file fixes the workload; generator flags next to it
+        // would be silently ignored, so they error instead.
+        reject_generator_flags_with_trace(args)?;
+    }
+    // One validation site for the burst shape: the shared helper (flag
+    // over config default), reused for generation below.
+    let gen = burst_gen(args, cfg.burst_shape)?;
+    cfg.burst_shape = gen.burst_shape;
+    if args.get("profile-half-life").is_some() {
+        let h = numf(args, "profile-half-life", 0.0)?;
+        if !h.is_finite() || h <= 0.0 {
+            anyhow::bail!("flag --profile-half-life: expected a positive number, got {h}");
+        }
+        cfg.profile_half_life = Some(h);
     }
     let fleet = cfg.resolve_fleet().map_err(|e| anyhow::anyhow!(e))?;
     // `--autoscale` overrides the config like every other flag: bare/true
@@ -306,12 +404,25 @@ fn serve(args: &Args) -> crate::Result<()> {
         .map(RoutePolicy::parse)
         .transpose()
         .map_err(|e| anyhow::anyhow!(e))?;
-    let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
+    // The workload: a recorded trace when configured (`--trace` /
+    // `[workload] trace`), the generator otherwise — materialized ONCE.
+    let source: Box<dyn TraceSource> = match &cfg.trace {
+        Some(path) => Box::new(FileSource::new(path)),
+        None => Box::new(GenSource {
+            gen,
+            mix: workload_mix(args.get("workload").unwrap_or("colocated"))?,
+            rate: cfg.rate,
+            n: cfg.n_tasks,
+            seed: cfg.seed,
+        }),
+    };
+    let trace = source.materialize().map_err(|e| anyhow::anyhow!(e))?;
+    let arrivals = trace.arrivals();
 
     println!(
-        "serving {} tasks at {} req/s on {} instances{}{}{}{}{} — scheduler={} dispatcher={}",
-        cfg.n_tasks,
-        cfg.rate,
+        "serving {} tasks ({}) on {} instances{}{}{}{}{} — scheduler={} dispatcher={}",
+        arrivals.len(),
+        source.describe(),
         fleet.len(),
         if fleet.is_heterogeneous() { " (heterogeneous)" } else { "" },
         if autoscale.is_some() { " (elastic)" } else { "" },
@@ -324,8 +435,6 @@ fn serve(args: &Args) -> crate::Result<()> {
         cfg.scheduler,
         cfg.dispatcher
     );
-    let arrivals =
-        TraceGen::default().generate(&mix, cfg.rate, cfg.n_tasks, &mut Rng::new(cfg.seed));
     let fc = FleetConfig {
         fleet,
         refresh_interval: cfg.sim.refresh_interval,
@@ -334,6 +443,7 @@ fn serve(args: &Args) -> crate::Result<()> {
         pressure,
         affinity,
         route,
+        profile_half_life: cfg.profile_half_life,
     };
     let affine = fc.affinity.is_some() || matches!(fc.route, Some(RoutePolicy::Learned { .. }));
     let res = run_fleet(fc, &cfg.scheduler, &cfg.dispatcher, arrivals);
@@ -378,19 +488,15 @@ fn fleet_sweep(args: &Args) -> crate::Result<()> {
         .unwrap_or("2*llama3-8b@0.12,2*llama3-8b@0.04:128");
     let fleet = FleetSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
     let scheduler = args.get("scheduler").unwrap_or("kairos");
-    let rate = num_rate(args, "rate", 6.0)?;
-    let n_tasks = num_count(args, "tasks", 400)?;
-    let seed = num_u64(args, "seed", 42)?;
-    let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
+    let (trace, desc) = shared_trace(args, 6.0, 400)?;
 
     println!("fleet sweep over {spec:?} — {} instances, scheduler={scheduler}", fleet.len());
-    println!("{} tasks at {rate} req/s (seed {seed})\n", n_tasks);
+    println!("{} tasks ({desc})\n", trace.len());
     let mut t = crate::util::table::Table::new(&[
         "dispatcher", "avg s/tok", "P99 s/tok", "queue%", "preempt%", "dropped",
     ]);
     for disp in ["rr", "least", "oracle", "kairos"] {
-        let arrivals =
-            TraceGen::default().generate(&mix, rate, n_tasks, &mut Rng::new(seed));
+        let arrivals = trace.arrivals();
         let fc = FleetConfig::from(fleet.clone());
         let res = run_fleet(fc, scheduler, disp, arrivals);
         let s = &res.summary;
@@ -413,22 +519,16 @@ fn fleet_sweep(args: &Args) -> crate::Result<()> {
 fn elastic_sweep(args: &Args) -> crate::Result<()> {
     let spec = args.get("fleet").unwrap_or("2*llama3-8b@0.12");
     let fleet = FleetSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
-    let rate = num_rate(args, "rate", 12.0)?;
-    let n_tasks = num_count(args, "tasks", 500)?;
-    let seed = num_u64(args, "seed", 42)?;
     let min = num_count(args, "min", fleet.len())?;
     let max = num_count(args, "max", fleet.len() * 3)?;
-    let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
+    let (trace, desc) = shared_trace(args, 12.0, 500)?;
     let pressure = args
         .get("pressure")
         .map(PressureTrace::parse)
         .transpose()
         .map_err(|e| anyhow::anyhow!(e))?;
 
-    let boot_delay = numf(args, "boot-delay", 0.0)?;
-    if !boot_delay.is_finite() || boot_delay < 0.0 {
-        anyhow::bail!("flag --boot-delay: expected a non-negative number, got {boot_delay}");
-    }
+    let (boot_delay, boot_delay_per_group) = parse_boot_delay_flag(args)?;
     let per_group = args
         .get("per-group")
         .map(parse_per_group)
@@ -443,24 +543,24 @@ fn elastic_sweep(args: &Args) -> crate::Result<()> {
     auto.down_after = 2;
     auto.cooldown = 5.0;
     auto.boot_delay = boot_delay;
+    auto.boot_delay_per_group = boot_delay_per_group;
     auto.per_group = per_group;
 
+    let has_boot_delay = auto.boot_delay > 0.0 || !auto.boot_delay_per_group.is_empty();
     println!(
-        "elastic sweep over {spec:?} — {} tasks at {rate} req/s (seed {seed}), \
-         bounds [{}, {}]{}{}",
-        n_tasks,
+        "elastic sweep over {spec:?} — {} tasks ({desc}), bounds [{}, {}]{}{}",
+        trace.len(),
         auto.min_instances,
         auto.max_instances,
         if pressure.is_some() { ", with co-tenant pressure" } else { "" },
-        if boot_delay > 0.0 { ", with boot latency" } else { "" },
+        if has_boot_delay { ", with boot latency" } else { "" },
     );
     let mut t = crate::util::table::Table::new(&[
         "fleet", "avg s/tok", "P99 s/tok", "queue%", "dropped", "grows", "retires",
         "active@end",
     ]);
     for (label, autoscale) in [("fixed", None), ("elastic", Some(auto))] {
-        let arrivals =
-            TraceGen::default().generate(&mix, rate, n_tasks, &mut Rng::new(seed));
+        let arrivals = trace.arrivals();
         let mut fc = FleetConfig::from(fleet.clone());
         fc.autoscale = autoscale;
         fc.pressure = pressure.clone();
@@ -507,23 +607,19 @@ fn shard_sweep(args: &Args) -> crate::Result<()> {
     let affinity = AffinitySpec::parse(aff_spec).map_err(|e| anyhow::anyhow!(e))?;
     let scheduler = args.get("scheduler").unwrap_or("kairos");
     let dispatcher = args.get("dispatcher").unwrap_or("rr");
-    let rate = num_rate(args, "rate", 4.0)?;
-    let n_tasks = num_count(args, "tasks", 300)?;
-    let seed = num_u64(args, "seed", 42)?;
-    let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
+    let (trace, desc) = shared_trace(args, 4.0, 300)?;
 
     println!(
         "shard sweep over {spec:?} — affinity {aff_spec:?}, \
          scheduler={scheduler} dispatcher={dispatcher}"
     );
-    println!("{n_tasks} tasks at {rate} req/s (seed {seed})\n");
+    println!("{} tasks ({desc})\n", trace.len());
     let mut t = crate::util::table::Table::new(&[
         "queue", "avg s/tok", "P99 s/tok", "mean queue s", "cross-model", "dropped",
     ]);
     let mut sharded_res: Option<SimResult> = None;
     for (label, aff) in [("unsharded", None), ("sharded", Some(affinity.clone()))] {
-        let arrivals =
-            TraceGen::default().generate(&mix, rate, n_tasks, &mut Rng::new(seed));
+        let arrivals = trace.arrivals();
         let mut fc = FleetConfig::from(fleet.clone());
         fc.affinity = aff;
         let res = run_fleet(fc, scheduler, dispatcher, arrivals);
@@ -580,23 +676,19 @@ fn route_sweep(args: &Args) -> crate::Result<()> {
     }
     let scheduler = args.get("scheduler").unwrap_or("kairos");
     let dispatcher = args.get("dispatcher").unwrap_or("kairos");
-    let rate = num_rate(args, "rate", 3.0)?;
-    let n_tasks = num_count(args, "tasks", 300)?;
-    let seed = num_u64(args, "seed", 42)?;
-    let mix = workload_mix(args.get("workload").unwrap_or("colocated"))?;
+    let (trace, desc) = shared_trace(args, 3.0, 300)?;
 
     println!(
         "route sweep over {spec:?} — affinity {aff_spec:?}, \
          scheduler={scheduler} dispatcher={dispatcher}"
     );
-    println!("{n_tasks} tasks at {rate} req/s (seed {seed})\n");
+    println!("{} tasks ({desc})\n", trace.len());
     let mut t = crate::util::table::Table::new(&[
         "routing", "avg s/tok", "P99 s/tok", "mean e2e s", "mean queue s", "dropped",
     ]);
     let mut learned_res: Option<SimResult> = None;
     for (label, route) in [("pinned", RoutePolicy::Pinned), ("learned", learned)] {
-        let arrivals =
-            TraceGen::default().generate(&mix, rate, n_tasks, &mut Rng::new(seed));
+        let arrivals = trace.arrivals();
         let mut fc = FleetConfig::from(fleet.clone());
         fc.affinity = Some(affinity.clone());
         fc.route = Some(route);
@@ -643,11 +735,186 @@ fn route_sweep(args: &Args) -> crate::Result<()> {
     Ok(())
 }
 
+/// `--boot-delay` takes two forms: a scalar (`--boot-delay 5`, one global
+/// delay) or per-family clauses (`--boot-delay llama3-8b=2,llama2-13b=12`
+/// — big models provision slower; families absent from the list boot
+/// instantly).
+fn parse_boot_delay_flag(args: &Args) -> crate::Result<(f64, Vec<(ModelKind, f64)>)> {
+    match args.get("boot-delay") {
+        None => Ok((0.0, Vec::new())),
+        Some(v) => match v.parse::<f64>() {
+            Ok(secs) => {
+                if !secs.is_finite() || secs < 0.0 {
+                    anyhow::bail!(
+                        "flag --boot-delay: expected a non-negative number, got {secs}"
+                    );
+                }
+                Ok((secs, Vec::new()))
+            }
+            Err(_) => {
+                let per = parse_boot_delays(v)
+                    .map_err(|e| anyhow::anyhow!("flag --boot-delay: {e}"))?;
+                Ok((0.0, per))
+            }
+        },
+    }
+}
+
+/// `kairos trace <gen|record|scale|stats>` — the trace-file toolbox.
+fn trace_cmd(args: &Args) -> crate::Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("gen") => trace_gen_cmd(args),
+        Some("record") => trace_record_cmd(args),
+        Some("scale") => trace_scale_cmd(args),
+        Some("stats") => trace_stats_cmd(args),
+        other => anyhow::bail!(
+            "unknown trace subcommand {other:?} (gen|record|scale|stats)"
+        ),
+    }
+}
+
+/// The `--out FILE` a trace subcommand writes to.
+fn out_path(args: &Args, cmd: &str) -> crate::Result<String> {
+    args.get("out")
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow::anyhow!("trace {cmd} needs --out FILE"))
+}
+
+/// Load the `--in FILE` a trace subcommand reads.
+fn in_trace(args: &Args, cmd: &str) -> crate::Result<Trace> {
+    let path = args
+        .get("in")
+        .ok_or_else(|| anyhow::anyhow!("trace {cmd} needs --in FILE"))?;
+    Trace::load(Path::new(path)).map_err(|e| anyhow::anyhow!(e))
+}
+
+/// `kairos trace gen`: materialize a generated workload to JSONL.
+fn trace_gen_cmd(args: &Args) -> crate::Result<()> {
+    let out = out_path(args, "gen")?;
+    let (trace, desc) = shared_trace(args, 8.0, 400)?;
+    trace.save(Path::new(&out)).map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "wrote {} records ({desc}) spanning {:.1}s -> {out}",
+        trace.len(),
+        trace.span()
+    );
+    Ok(())
+}
+
+/// `kairos trace record`: run a sim and capture the coordinator's
+/// recording path — every submitted plan with its ground-truth submission
+/// time and affinity stamps — to JSONL. Replaying the file reproduces the
+/// run bit-identically (the `tests/runtime_seam.rs` contract).
+fn trace_record_cmd(args: &Args) -> crate::Result<()> {
+    let out = out_path(args, "record")?;
+    let (workload, desc) = shared_trace(args, 8.0, 400)?;
+    let spec = args.get("fleet").unwrap_or("4*llama3-8b@0.12");
+    let fleet = FleetSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+    let affinity = args
+        .get("affinity")
+        .map(AffinitySpec::parse)
+        .transpose()
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let mut fc = FleetConfig::from(fleet);
+    fc.affinity = affinity;
+    let res = run_fleet(
+        fc,
+        args.get("scheduler").unwrap_or("kairos"),
+        args.get("dispatcher").unwrap_or("kairos"),
+        workload.arrivals(),
+    );
+    let recorded = Trace::from_records(res.trace_log);
+    recorded.save(Path::new(&out)).map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "recorded {} submitted plans from a run over {spec:?} ({desc}) -> {out}",
+        recorded.len()
+    );
+    Ok(())
+}
+
+/// `kairos trace scale`: derive a scenario from a recorded trace. The
+/// transforms apply in a fixed order — `--filter-app`, then `--clip`,
+/// then `--factor` (rate scaling), then `--splice` — each deterministic
+/// and order-preserving.
+fn trace_scale_cmd(args: &Args) -> crate::Result<()> {
+    let out = out_path(args, "scale")?;
+    let mut trace = in_trace(args, "scale")?;
+    if let Some(app) = args.get("filter-app") {
+        trace = trace.filter_app(App::parse(app).map_err(|e| anyhow::anyhow!(e))?);
+    }
+    if let Some(window) = args.get("clip") {
+        let (a, b) = window.split_once("..").ok_or_else(|| {
+            anyhow::anyhow!("flag --clip: expected START..END, got {window:?}")
+        })?;
+        let parse = |s: &str| -> crate::Result<f64> {
+            s.parse()
+                .map_err(|_| anyhow::anyhow!("flag --clip: bad number {s:?}"))
+        };
+        trace = trace
+            .clip(parse(a)?, parse(b)?)
+            .map_err(|e| anyhow::anyhow!("flag --clip: {e}"))?;
+    }
+    if args.get("factor").is_some() {
+        let f = numf(args, "factor", 1.0)?;
+        trace = trace
+            .scale_rate(f)
+            .map_err(|e| anyhow::anyhow!("flag --factor: {e}"))?;
+    }
+    if let Some(other) = args.get("splice") {
+        let o = Trace::load(Path::new(other)).map_err(|e| anyhow::anyhow!(e))?;
+        trace = trace.splice(&o);
+    }
+    trace.save(Path::new(&out)).map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "wrote {} records spanning {:.1}s ({:.2} req/s mean) -> {out}",
+        trace.len(),
+        trace.span(),
+        trace.mean_rate()
+    );
+    Ok(())
+}
+
+/// `kairos trace stats`: summarize a trace file.
+fn trace_stats_cmd(args: &Args) -> crate::Result<()> {
+    let trace = in_trace(args, "stats")?;
+    println!("records:    {}", trace.len());
+    println!("span:       {:.2} s", trace.span());
+    println!("mean rate:  {:.3} req/s", trace.mean_rate());
+    let stages: usize = trace.records.iter().map(|r| r.stages.len()).sum();
+    let prompt: u64 = trace
+        .records
+        .iter()
+        .flat_map(|r| r.stages.iter())
+        .map(|s| s.prompt_tokens as u64)
+        .sum();
+    let output: u64 = trace
+        .records
+        .iter()
+        .flat_map(|r| r.stages.iter())
+        .map(|s| s.output_tokens as u64)
+        .sum();
+    println!("stages:     {stages} ({prompt} prompt tokens, {output} output tokens)");
+    println!("per app:");
+    for app in App::all() {
+        let n = trace.records.iter().filter(|r| r.app == app).count();
+        if n > 0 {
+            println!("  {:<4} {n}", app.name());
+        }
+    }
+    let stamped = trace
+        .records
+        .iter()
+        .flat_map(|r| r.stages.iter())
+        .filter(|s| s.class.is_some())
+        .count();
+    println!("class stamps: {stamped} of {stages} stages");
+    Ok(())
+}
+
 fn quickstart(args: &Args) -> crate::Result<()> {
     use crate::dispatch::RoundRobin;
     use crate::lb::policies::Fcfs;
     use crate::server::real::{RealServer, ServeRequest};
-    use std::path::Path;
 
     let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
     let model = args.get("model").unwrap_or("tiny");
@@ -764,6 +1031,135 @@ mod tests {
         assert_eq!(c.bool_flag("autoscale"), Ok(false));
         let d = Args::parse(&sv(&["serve"])).unwrap();
         assert_eq!(d.bool_flag("autoscale"), Ok(false));
+    }
+
+    #[test]
+    fn sweep_arms_share_one_materialized_trace() {
+        // The apples-to-apples contract: every sweep arm replays the SAME
+        // materialized trace. shared_trace is the single source all four
+        // sweeps draw from; repeated materialization (what two arms see)
+        // must yield identical arrival sequences — times AND plans.
+        let a = Args::parse(&sv(&["fleet-sweep", "--rate", "4", "--tasks", "30"])).unwrap();
+        let (t1, _) = shared_trace(&a, 6.0, 400).unwrap();
+        let (t2, _) = shared_trace(&a, 6.0, 400).unwrap();
+        assert_eq!(t1, t2);
+        assert_eq!(t1.arrivals(), t2.arrivals(), "identical sequences across arms");
+        assert_eq!(t1.len(), 30);
+        // File mode: --trace replays the recorded artifact.
+        let path = std::env::temp_dir().join("kairos_cli_shared_trace.jsonl");
+        t1.save(&path).unwrap();
+        let b = Args::parse(&sv(&[
+            "shard-sweep",
+            "--trace",
+            path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let (from_file, desc) = shared_trace(&b, 4.0, 300).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(from_file, t1, "file arm replays the generated arm's trace");
+        assert!(desc.contains("recorded"), "{desc}");
+        // A missing file is an error, not a silent fallback to generation.
+        let c = Args::parse(&sv(&["route-sweep", "--trace", "/nonexistent.jsonl"]))
+            .unwrap();
+        assert!(shared_trace(&c, 3.0, 300).is_err());
+        // Generator flags next to --trace would be silently ignored, so
+        // they error naming the flag (the malformed-flag contract).
+        let d = Args::parse(&sv(&[
+            "fleet-sweep",
+            "--trace",
+            "f.jsonl",
+            "--tasks",
+            "50",
+        ]))
+        .unwrap();
+        let err = shared_trace(&d, 6.0, 400).unwrap_err().to_string();
+        assert!(err.contains("--tasks"), "{err}");
+        assert!(err.contains("--trace"), "{err}");
+        // Same contract on the serve path.
+        let e = Args::parse(&sv(&["serve", "--trace", "f.jsonl", "--rate", "3"]))
+            .unwrap();
+        assert!(serve(&e).is_err());
+    }
+
+    #[test]
+    fn trace_gen_scale_stats_round_trip_through_files() {
+        let dir = std::env::temp_dir();
+        let raw = dir.join("kairos_cli_trace_gen.jsonl");
+        let scaled = dir.join("kairos_cli_trace_scaled.jsonl");
+        let gen = Args::parse(&sv(&[
+            "trace", "gen",
+            "--out", raw.to_str().unwrap(),
+            "--rate", "5",
+            "--tasks", "40",
+            "--seed", "9",
+        ]))
+        .unwrap();
+        trace_cmd(&gen).unwrap();
+        let t = Trace::load(&raw).unwrap();
+        assert_eq!(t.len(), 40);
+        // Transform: double the rate and keep only RG tasks.
+        let sc = Args::parse(&sv(&[
+            "trace", "scale",
+            "--in", raw.to_str().unwrap(),
+            "--out", scaled.to_str().unwrap(),
+            "--factor", "2",
+            "--filter-app", "RG",
+        ]))
+        .unwrap();
+        trace_cmd(&sc).unwrap();
+        let t2 = Trace::load(&scaled).unwrap();
+        assert!(t2.records.iter().all(|r| r.app == App::Rg));
+        assert!(!t2.is_empty() && t2.len() < t.len());
+        // Stats runs over both artifacts.
+        let st = Args::parse(&sv(&["trace", "stats", "--in", scaled.to_str().unwrap()]))
+            .unwrap();
+        trace_cmd(&st).unwrap();
+        std::fs::remove_file(&raw).ok();
+        std::fs::remove_file(&scaled).ok();
+        // Missing flags / unknown subcommands error.
+        assert!(trace_cmd(&Args::parse(&sv(&["trace", "gen"])).unwrap()).is_err());
+        assert!(trace_cmd(&Args::parse(&sv(&["trace", "stats"])).unwrap()).is_err());
+        assert!(trace_cmd(&Args::parse(&sv(&["trace", "zap"])).unwrap()).is_err());
+    }
+
+    #[test]
+    fn boot_delay_flag_accepts_scalar_and_per_family_forms() {
+        let a = Args::parse(&sv(&["elastic-sweep", "--boot-delay", "5"])).unwrap();
+        assert_eq!(parse_boot_delay_flag(&a).unwrap(), (5.0, Vec::new()));
+        let b = Args::parse(&sv(&[
+            "elastic-sweep",
+            "--boot-delay",
+            "llama3-8b=2,llama2-13b=12",
+        ]))
+        .unwrap();
+        let (scalar, per) = parse_boot_delay_flag(&b).unwrap();
+        assert_eq!(scalar, 0.0);
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[1], (ModelKind::Llama2_13B, 12.0));
+        let none = Args::parse(&sv(&["elastic-sweep"])).unwrap();
+        assert_eq!(parse_boot_delay_flag(&none).unwrap(), (0.0, Vec::new()));
+        // Garbage in either form errors naming the flag.
+        for bad in ["-1", "NaN", "gpt5=3", "llama3-8b=-2", "llama3-8b"] {
+            let args =
+                Args::parse(&sv(&["elastic-sweep", "--boot-delay", bad])).unwrap();
+            let err = parse_boot_delay_flag(&args).unwrap_err().to_string();
+            assert!(err.contains("--boot-delay"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn burst_shape_flag_is_validated() {
+        let a = Args::parse(&sv(&["serve", "--burst-shape", "0.5"])).unwrap();
+        assert!((burst_gen(&a, 0.31).unwrap().burst_shape - 0.5).abs() < 1e-12);
+        for bad in ["0", "-1", "NaN", "inf"] {
+            let args = Args::parse(&sv(&["serve", "--burst-shape", bad])).unwrap();
+            let err = burst_gen(&args, 0.31).unwrap_err().to_string();
+            assert!(err.contains("--burst-shape"), "{bad}: {err}");
+            assert!(err.contains("burst_shape"), "{bad}: {err}");
+        }
+        // And the serve path surfaces it.
+        let s = Args::parse(&sv(&["serve", "--burst-shape", "0"])).unwrap();
+        assert!(serve(&s).is_err());
     }
 
     #[test]

@@ -9,10 +9,11 @@ use std::collections::BTreeMap;
 use crate::engine::cost_model::ModelKind;
 use crate::orchestrator::affinity::AffinitySpec;
 use crate::orchestrator::router::RoutePolicy;
-use crate::server::autoscale::{parse_per_group, AutoscaleConfig};
+use crate::server::autoscale::{parse_boot_delays, parse_per_group, AutoscaleConfig};
 use crate::server::coordinator::InstanceSpec;
 use crate::server::pressure::PressureTrace;
 use crate::server::sim::SimConfig;
+use crate::workload::TraceGen;
 
 /// A parsed flat TOML-subset document: section -> key -> raw value.
 #[derive(Debug, Default, Clone, PartialEq)]
@@ -173,6 +174,18 @@ pub struct ServingConfig {
     /// [`RoutePolicy::parse`] syntax (`pinned` | `learned[:...]`).
     /// Validated eagerly at load; absent = the static pinned behavior.
     pub route_policy: Option<String>,
+    /// Recorded workload trace path (`[workload] trace = "file.jsonl"`):
+    /// when set, serving replays the file instead of generating arrivals
+    /// (rate/tasks/seed/burst_shape then only describe the generator
+    /// fallback). The file is read at serve time, not load time.
+    pub trace: Option<String>,
+    /// Gamma shape of generated inter-arrival gaps (`[workload]
+    /// burst_shape`); validated at load via [`TraceGen::new`].
+    pub burst_shape: f64,
+    /// Per-family profile half-life in seconds (`[policy]
+    /// profile_half_life`): learned routing tracks drifting latencies
+    /// instead of averaging forever. Absent = stationary profiles.
+    pub profile_half_life: Option<f64>,
 }
 
 impl Default for ServingConfig {
@@ -189,6 +202,9 @@ impl Default for ServingConfig {
             pressure: None,
             affinity: None,
             route_policy: None,
+            trace: None,
+            burst_shape: TraceGen::default().burst_shape,
+            profile_half_life: None,
         }
     }
 }
@@ -237,6 +253,37 @@ impl ServingConfig {
         }
         cfg.n_tasks = count_key(&doc, "workload", "tasks", 400)?;
         cfg.seed = u64_key(&doc, "workload", "seed", 42)?;
+        cfg.burst_shape = num_key(&doc, "workload", "burst_shape", cfg.burst_shape)?;
+        // Validate through the generator's own constructor so the error
+        // names the offending value (a NaN/zero shape would otherwise
+        // produce NaN inter-arrival gaps silently).
+        TraceGen::new(cfg.burst_shape)
+            .map_err(|e| format!("[workload] burst_shape: {e}"))?;
+        cfg.trace = match doc.get("workload", "trace") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| {
+                        format!("[workload] trace: expected a string path, got {v:?}")
+                    })?
+                    .to_string(),
+            ),
+        };
+        cfg.profile_half_life = match doc.get("policy", "profile_half_life") {
+            None => None,
+            Some(v) => {
+                let h = v.as_f64().ok_or_else(|| {
+                    format!("[policy] profile_half_life: expected a number, got {v:?}")
+                })?;
+                if !h.is_finite() || h <= 0.0 {
+                    return Err(format!(
+                        "[policy] profile_half_life must be a positive finite number, \
+                         got {h}"
+                    ));
+                }
+                Some(h)
+            }
+        };
         let autoscale_enabled = match doc.get("autoscale", "enabled") {
             None => false,
             Some(v) => v.as_bool().ok_or_else(|| {
@@ -262,6 +309,22 @@ impl ServingConfig {
                     parse_per_group(s)?
                 }
             };
+            // `boot_delay` takes two forms: a number (one global delay)
+            // or a string `"MODEL=SECS,..."` (per-family delays; families
+            // absent from the list boot instantly unless a scalar is also
+            // the default).
+            let (boot_delay, boot_delay_per_group) =
+                match doc.get("autoscale", "boot_delay") {
+                    None => (d.boot_delay, Vec::new()),
+                    Some(TomlValue::Num(n)) => (*n, Vec::new()),
+                    Some(TomlValue::Str(s)) => (d.boot_delay, parse_boot_delays(s)?),
+                    Some(v) => {
+                        return Err(format!(
+                            "[autoscale] boot_delay: expected a number or a \
+                             \"MODEL=SECS,...\" string, got {v:?}"
+                        ))
+                    }
+                };
             let a = AutoscaleConfig {
                 min_instances: count("min", d.min_instances)?,
                 max_instances: count("max", d.max_instances)?,
@@ -271,7 +334,8 @@ impl ServingConfig {
                 up_after: count("up_after", d.up_after as usize)? as u32,
                 down_after: count("down_after", d.down_after as usize)? as u32,
                 cooldown: num("cooldown", d.cooldown)?,
-                boot_delay: num("boot_delay", d.boot_delay)?,
+                boot_delay,
+                boot_delay_per_group,
                 per_group,
                 template,
             };
@@ -583,6 +647,75 @@ refresh_interval = 2.0
         assert!(err.contains("llama3-8b=4..1"), "{err}");
         assert!(ServingConfig::from_toml(
             "[autoscale]\nenabled = true\nper_group = 5\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn workload_trace_and_burst_shape_parse() {
+        let cfg = ServingConfig::from_toml(
+            "[workload]\ntrace = \"runs/night.jsonl\"\nburst_shape = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.trace.as_deref(), Some("runs/night.jsonl"));
+        assert!((cfg.burst_shape - 0.5).abs() < 1e-12);
+        // Defaults: no trace, the generator's bursty shape.
+        let d = ServingConfig::from_toml("").unwrap();
+        assert_eq!(d.trace, None);
+        assert!((d.burst_shape - 0.31).abs() < 1e-12);
+        // A mis-typed trace value never silently drops the key, and bad
+        // burst shapes fail at load naming the value.
+        assert!(ServingConfig::from_toml("[workload]\ntrace = 5\n").is_err());
+        let err =
+            ServingConfig::from_toml("[workload]\nburst_shape = 0\n").unwrap_err();
+        assert!(err.contains("burst_shape") && err.contains('0'), "{err}");
+        assert!(ServingConfig::from_toml("[workload]\nburst_shape = nan\n").is_err());
+        assert!(ServingConfig::from_toml("[workload]\nburst_shape = -0.3\n").is_err());
+    }
+
+    #[test]
+    fn profile_half_life_parses_and_validates() {
+        let cfg =
+            ServingConfig::from_toml("[policy]\nprofile_half_life = 30\n").unwrap();
+        assert_eq!(cfg.profile_half_life, Some(30.0));
+        assert_eq!(ServingConfig::from_toml("").unwrap().profile_half_life, None);
+        for bad in ["0", "-5", "nan", "inf", "\"soon\""] {
+            let doc = format!("[policy]\nprofile_half_life = {bad}\n");
+            let err = ServingConfig::from_toml(&doc).unwrap_err();
+            assert!(err.contains("profile_half_life"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn boot_delay_accepts_scalar_and_per_family_forms() {
+        use crate::engine::cost_model::ModelKind;
+        // Scalar form: unchanged behavior.
+        let cfg =
+            ServingConfig::from_toml("[autoscale]\nenabled = true\nboot_delay = 3\n")
+                .unwrap();
+        let a = cfg.autoscale.unwrap();
+        assert_eq!(a.boot_delay, 3.0);
+        assert!(a.boot_delay_per_group.is_empty());
+        assert_eq!(a.boot_delay_for(ModelKind::Llama2_13B), 3.0);
+        // Per-family string form: big models provision slower.
+        let cfg = ServingConfig::from_toml(concat!(
+            "[autoscale]\nenabled = true\n",
+            "boot_delay = \"llama3-8b=2,llama2-13b=12\"\n",
+        ))
+        .unwrap();
+        let a = cfg.autoscale.unwrap();
+        assert_eq!(a.boot_delay_for(ModelKind::Llama3_8B), 2.0);
+        assert_eq!(a.boot_delay_for(ModelKind::Llama2_13B), 12.0);
+        assert_eq!(a.boot_delay_for(ModelKind::Tiny), 0.0, "scalar fallback");
+        // Bad clauses fail at load naming the clause; booleans are
+        // rejected outright.
+        let err = ServingConfig::from_toml(concat!(
+            "[autoscale]\nenabled = true\nboot_delay = \"llama2-13b=-4\"\n",
+        ))
+        .unwrap_err();
+        assert!(err.contains("llama2-13b=-4"), "{err}");
+        assert!(ServingConfig::from_toml(
+            "[autoscale]\nenabled = true\nboot_delay = true\n"
         )
         .is_err());
     }

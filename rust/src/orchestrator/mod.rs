@@ -80,6 +80,16 @@ impl Orchestrator {
         self.model_class.get(&agent).copied().unwrap_or(self.default_class)
     }
 
+    /// [`Self::model_class`] by agent name, without interning: agents the
+    /// registry has never seen get the default class. The trace-recording
+    /// path reads this so capturing a plan never perturbs id assignment.
+    pub fn class_of_name(&self, name: &str) -> ModelClass {
+        self.registry
+            .get(name)
+            .map(|id| self.model_class(id))
+            .unwrap_or(self.default_class)
+    }
+
     /// Record one completed agent-stage execution (paper step ④: "once a
     /// request is completed, the Workflow Orchestrator collects its
     /// execution information and incrementally updates the Workflow
@@ -90,17 +100,21 @@ impl Orchestrator {
     }
 
     /// Record one completed execution with its serving context: which
-    /// model family served it and how many KV tokens the request held —
-    /// the routing layer's learning signal and the dispatcher's demand
-    /// prediction, fed from the coordinator's completion path.
+    /// model family served it, how long it ran there, and how many KV
+    /// tokens the request held — the routing layer's learning signal and
+    /// the dispatcher's demand prediction, fed from the coordinator's
+    /// completion path. `now` (the completion time) drives the profile
+    /// half-life for non-stationary workloads.
     pub fn record_serving_feedback(
         &mut self,
         agent: AgentId,
         model: crate::engine::cost_model::ModelKind,
         exec_latency: f64,
         kv_tokens: f64,
+        now: Time,
     ) {
-        self.profiler.record_family_execution(agent, model, exec_latency.max(0.0));
+        self.profiler
+            .record_family_execution_at(agent, model, exec_latency.max(0.0), now);
         self.profiler.record_kv_demand(agent, kv_tokens.max(0.0));
     }
 

@@ -30,6 +30,7 @@ use std::collections::HashMap;
 use super::ids::AgentId;
 use crate::engine::cost_model::ModelKind;
 use crate::stats::ecdf::{wasserstein1, Ecdf};
+use crate::Time;
 
 /// Relative Wasserstein threshold for declaring convergence.
 const CONVERGENCE_REL_THRESHOLD: f64 = 0.08;
@@ -110,6 +111,31 @@ impl LatencyProfile {
     }
 }
 
+/// An exponentially decayed running mean: each recorded sample enters with
+/// weight 1, and all accumulated weight halves every `half_life` seconds.
+/// The non-stationary view of a latency stream — old regimes fade instead
+/// of anchoring the average forever.
+#[derive(Debug, Clone, Copy)]
+struct DecayedMean {
+    mean: f64,
+    weight: f64,
+    last: Time,
+}
+
+impl DecayedMean {
+    fn new(value: f64, now: Time) -> DecayedMean {
+        DecayedMean { mean: value, weight: 1.0, last: now }
+    }
+
+    fn update(&mut self, value: f64, now: Time, half_life: f64) {
+        let dt = (now - self.last).max(0.0);
+        let kept = self.weight * 0.5f64.powf(dt / half_life);
+        self.weight = kept + 1.0;
+        self.mean = (self.mean * kept + value) / self.weight;
+        self.last = self.last.max(now);
+    }
+}
+
 /// All agents' profiles: execution latency + remaining workflow latency,
 /// plus the routing layer's per-family execution and KV-demand profiles.
 #[derive(Debug, Default)]
@@ -122,6 +148,12 @@ pub struct DistributionProfiler {
     /// Total KV tokens (prompt + generated) held by the agent's requests
     /// at completion — the dispatcher's learned demand prediction.
     kv_demand: HashMap<AgentId, LatencyProfile>,
+    /// Half-life (seconds) of the per-family execution means. `None` (the
+    /// default) keeps the stationary behavior: means average forever.
+    half_life: Option<f64>,
+    /// Decayed per-family means, maintained alongside the raw profiles
+    /// whenever a half-life is configured.
+    family_decayed: HashMap<(AgentId, ModelKind), DecayedMean>,
 }
 
 impl DistributionProfiler {
@@ -137,15 +169,58 @@ impl DistributionProfiler {
         self.remaining.entry(agent).or_default().record(latency);
     }
 
+    /// Configure the per-family profile half-life for non-stationary
+    /// workloads: with `Some(h)`, [`Self::family_mean_exec`] reports an
+    /// exponentially decayed mean (half-life `h` seconds) so learned
+    /// routing tracks drifting agent latencies instead of averaging
+    /// forever. `None` restores the stationary behavior. Callers validate
+    /// (`h` must be positive and finite — see `[policy]
+    /// profile_half_life`).
+    pub fn set_half_life(&mut self, half_life: Option<f64>) {
+        if let Some(h) = half_life {
+            debug_assert!(
+                h.is_finite() && h > 0.0,
+                "half-life must be validated by the caller: {h}"
+            );
+        }
+        self.half_life = half_life;
+    }
+
+    /// The configured per-family profile half-life, if any.
+    pub fn half_life(&self) -> Option<f64> {
+        self.half_life
+    }
+
     /// Record one completed execution on the family that actually served
     /// it (the coordinator knows the instance, hence the family).
+    /// Timeless form: feeds only the raw profile — equivalent to
+    /// [`Self::record_family_execution_at`] when no half-life is set.
     pub fn record_family_execution(
         &mut self,
         agent: AgentId,
         model: ModelKind,
         latency: f64,
     ) {
+        self.record_family_execution_at(agent, model, latency, 0.0);
+    }
+
+    /// Record one completed execution on the family that served it, at
+    /// completion time `now` — the timestamp drives the decayed mean when
+    /// a half-life is configured.
+    pub fn record_family_execution_at(
+        &mut self,
+        agent: AgentId,
+        model: ModelKind,
+        latency: f64,
+        now: Time,
+    ) {
         self.family_exec.entry((agent, model)).or_default().record(latency);
+        if let Some(h) = self.half_life {
+            self.family_decayed
+                .entry((agent, model))
+                .and_modify(|d| d.update(latency, now, h))
+                .or_insert_with(|| DecayedMean::new(latency, now));
+        }
     }
 
     /// Record the total KV tokens a completed request of `agent` held.
@@ -175,8 +250,15 @@ impl DistributionProfiler {
         self.family_exec.get(&(agent, model)).map_or(0, |p| p.len())
     }
 
-    /// Measured mean execution latency of `agent` on `model`, if sampled.
+    /// Measured mean execution latency of `agent` on `model`, if sampled:
+    /// the exponentially decayed mean when a half-life is configured
+    /// (recent regime dominates), the all-time mean otherwise.
     pub fn family_mean_exec(&self, agent: AgentId, model: ModelKind) -> Option<f64> {
+        if self.half_life.is_some() {
+            if let Some(d) = self.family_decayed.get(&(agent, model)) {
+                return Some(d.mean);
+            }
+        }
         self.family_exec.get(&(agent, model)).and_then(|p| p.mean())
     }
 
@@ -298,6 +380,52 @@ mod tests {
         // from the single outlier.
         let kv = pr.expected_kv_demand(a).unwrap();
         assert!((300.0..600.0).contains(&kv), "mode near the majority: {kv}");
+    }
+
+    #[test]
+    fn decayed_family_mean_tracks_a_regime_shift() {
+        let a = AgentId(0);
+        let m = ModelKind::Llama2_13B;
+        // Without a half-life: 100 fast samples anchor the mean forever —
+        // 5 slow late samples barely move it.
+        let mut stationary = DistributionProfiler::new();
+        for i in 0..100 {
+            stationary.record_family_execution_at(a, m, 0.5, i as f64 * 0.1);
+        }
+        for i in 0..5 {
+            stationary.record_family_execution_at(a, m, 10.0, 200.0 + i as f64);
+        }
+        let anchored = stationary.family_mean_exec(a, m).unwrap();
+        assert!(anchored < 1.5, "all-time mean stays anchored: {anchored}");
+        // With a 10 s half-life: by t=200 the fast-era weight has halved
+        // ~19 times, so the mean follows the new slow regime.
+        let mut decayed = DistributionProfiler::new();
+        decayed.set_half_life(Some(10.0));
+        assert_eq!(decayed.half_life(), Some(10.0));
+        for i in 0..100 {
+            decayed.record_family_execution_at(a, m, 0.5, i as f64 * 0.1);
+        }
+        for i in 0..5 {
+            decayed.record_family_execution_at(a, m, 10.0, 200.0 + i as f64);
+        }
+        let tracked = decayed.family_mean_exec(a, m).unwrap();
+        assert!(tracked > 9.0, "decayed mean follows the shift: {tracked}");
+        // The raw sample count is untouched (min_samples gates still
+        // work), and clearing the half-life restores the all-time mean.
+        assert_eq!(decayed.family_samples(a, m), 105);
+        decayed.set_half_life(None);
+        let raw = decayed.family_mean_exec(a, m).unwrap();
+        assert!((raw - anchored).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeless_recording_matches_old_behavior_without_half_life() {
+        let mut pr = DistributionProfiler::new();
+        let a = AgentId(3);
+        pr.record_family_execution(a, ModelKind::Llama3_8B, 1.0);
+        pr.record_family_execution(a, ModelKind::Llama3_8B, 3.0);
+        assert!((pr.family_mean_exec(a, ModelKind::Llama3_8B).unwrap() - 2.0).abs() < 1e-9);
+        assert_eq!(pr.half_life(), None);
     }
 
     #[test]

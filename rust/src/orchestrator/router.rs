@@ -488,6 +488,50 @@ mod tests {
     }
 
     #[test]
+    fn routing_follows_a_mid_trace_latency_regime_shift_under_decay() {
+        // The 13B family serves agent A fast for a long stretch, then its
+        // latency regime shifts (co-tenant pressure, model swap) while 8B
+        // stays moderate. With a profile half-life the learned stamp must
+        // FOLLOW the shift; the all-time mean would keep routing to 13B.
+        let mut r = Router::new(RoutePolicy::Learned { explore_rate: 0.0, min_samples: 4 });
+        let a = AgentId(0);
+        let mut pr = DistributionProfiler::new();
+        pr.set_half_life(Some(10.0));
+        for i in 0..100 {
+            let t = i as f64 * 0.1;
+            pr.record_family_execution_at(a, M13, 0.5, t); // fast era
+            pr.record_family_execution_at(a, M8, 2.0, t);
+        }
+        let d = r.route(1, a, ModelClass::Any, &pr, &groups());
+        assert_eq!(d.chosen, ModelClass::Model(M13), "pre-shift: 13B measured best");
+        // Regime shift: a handful of slow 13B samples, far past the fast
+        // era's half-life horizon.
+        for i in 0..5 {
+            let t = 200.0 + i as f64;
+            pr.record_family_execution_at(a, M13, 10.0, t);
+            pr.record_family_execution_at(a, M8, 2.0, t);
+        }
+        let d = r.route(2, a, ModelClass::Any, &pr, &groups());
+        assert_eq!(d.chosen, ModelClass::Model(M8), "post-shift: routing followed");
+        assert_eq!(d.reason, RouteReason::LearnedBest);
+        // Control: the same sample stream WITHOUT decay stays anchored on
+        // the stale 13B average (the bug this satellite fixes).
+        let mut anchored = DistributionProfiler::new();
+        for i in 0..100 {
+            let t = i as f64 * 0.1;
+            anchored.record_family_execution_at(a, M13, 0.5, t);
+            anchored.record_family_execution_at(a, M8, 2.0, t);
+        }
+        for i in 0..5 {
+            let t = 200.0 + i as f64;
+            anchored.record_family_execution_at(a, M13, 10.0, t);
+            anchored.record_family_execution_at(a, M8, 2.0, t);
+        }
+        let d = r.route(3, a, ModelClass::Any, &anchored, &groups());
+        assert_eq!(d.chosen, ModelClass::Model(M13), "no decay: stale pin persists");
+    }
+
+    #[test]
     fn any_balances_to_the_least_pressured_group() {
         let mut r = Router::new(RoutePolicy::Learned { explore_rate: 0.0, min_samples: 9 });
         let pr = DistributionProfiler::new();

@@ -77,6 +77,47 @@ pub fn parse_per_group(s: &str) -> Result<Vec<GroupBounds>, String> {
     Ok(out)
 }
 
+/// Parse per-family boot delays from a compact config string.
+///
+/// Grammar: comma-separated `MODEL=SECS`, e.g.
+/// `llama3-8b=2,llama2-13b=12.5` — big-model families provision slower
+/// than small ones. Families absent from the list fall back to the global
+/// scalar [`AutoscaleConfig::boot_delay`].
+pub fn parse_boot_delays(s: &str) -> Result<Vec<(ModelKind, f64)>, String> {
+    if s.trim().is_empty() {
+        return Err("empty boot-delay spec".to_string());
+    }
+    let mut out: Vec<(ModelKind, f64)> = Vec::new();
+    for raw in s.split(',') {
+        let clause = raw.trim();
+        if clause.is_empty() {
+            return Err(format!("empty boot-delay clause in {s:?}"));
+        }
+        let (m, secs) = clause
+            .split_once('=')
+            .ok_or_else(|| format!("expected MODEL=SECS in {clause:?}"))?;
+        let model = ModelKind::parse(m.trim())
+            .map_err(|e| format!("{e} in boot-delay clause {clause:?}"))?;
+        let secs: f64 = secs
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad seconds in boot-delay clause {clause:?}"))?;
+        if !secs.is_finite() || secs < 0.0 {
+            return Err(format!(
+                "boot delay must be a non-negative finite number in {clause:?}"
+            ));
+        }
+        if out.iter().any(|(b, _)| *b == model) {
+            return Err(format!(
+                "duplicate boot delay for {} in clause {clause:?}",
+                model.name()
+            ));
+        }
+        out.push((model, secs));
+    }
+    Ok(out)
+}
+
 /// Thresholds and bounds of the autoscaling policy.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AutoscaleConfig {
@@ -103,8 +144,13 @@ pub struct AutoscaleConfig {
     /// Boot latency of a grown instance (seconds): a `Grow` action only
     /// *provisions* the slot; the coordinator registers it live once the
     /// delay elapses. 0 = instant registration (the pre-boot-model
-    /// behavior).
+    /// behavior). Per-family overrides in [`Self::boot_delay_per_group`]
+    /// win; this scalar is the fallback.
     pub boot_delay: f64,
+    /// Per-family boot delays (`MODEL=SECS,...` via
+    /// [`parse_boot_delays`]): big-model families provision slower than
+    /// small ones. Families absent here use the scalar `boot_delay`.
+    pub boot_delay_per_group: Vec<(ModelKind, f64)>,
     /// Per-family min/max bounds (empty = every family unbounded within
     /// the fleet-wide bounds above).
     pub per_group: Vec<GroupBounds>,
@@ -125,9 +171,19 @@ impl AutoscaleConfig {
             down_after: 3,
             cooldown: 10.0,
             boot_delay: 0.0,
+            boot_delay_per_group: Vec::new(),
             per_group: Vec::new(),
             template,
         }
+    }
+
+    /// The boot delay for growing one instance of `model`: the family's
+    /// own entry when configured, the global scalar otherwise.
+    pub fn boot_delay_for(&self, model: ModelKind) -> f64 {
+        self.boot_delay_per_group
+            .iter()
+            .find(|(m, _)| *m == model)
+            .map_or(self.boot_delay, |(_, secs)| *secs)
     }
 
     /// The family's active-instance floor (0 when unbounded).
@@ -353,6 +409,7 @@ mod tests {
             down_after: 2,
             cooldown: 10.0,
             boot_delay: 0.0,
+            boot_delay_per_group: Vec::new(),
             per_group: Vec::new(),
             template: InstanceSpec::new(ModelKind::Llama3_8B),
         }
@@ -431,6 +488,37 @@ mod tests {
         let err = parse_per_group("tiny=0..1,tiny=1..2").unwrap_err();
         assert!(err.contains("duplicate"), "{err}");
         assert!(parse_per_group("llama3-8b=x..2").is_err());
+    }
+
+    #[test]
+    fn boot_delay_spec_parses_and_rejects_garbage() {
+        let b = parse_boot_delays("llama3-8b=2, llama2-13b=12.5").unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0], (ModelKind::Llama3_8B, 2.0));
+        assert_eq!(b[1], (ModelKind::Llama2_13B, 12.5));
+        assert!(parse_boot_delays("").is_err());
+        assert!(parse_boot_delays("llama3-8b").is_err(), "missing seconds");
+        assert!(parse_boot_delays("gpt5=1").is_err(), "unknown model");
+        assert!(parse_boot_delays("llama3-8b=1,,tiny=2").is_err());
+        let err = parse_boot_delays("llama3-8b=-1").unwrap_err();
+        assert!(err.contains("llama3-8b=-1"), "error names the clause: {err}");
+        assert!(parse_boot_delays("llama3-8b=NaN").is_err());
+        assert!(parse_boot_delays("llama3-8b=inf").is_err());
+        let err = parse_boot_delays("tiny=1,tiny=2").unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn boot_delay_falls_back_to_the_scalar_per_family() {
+        let mut c = cfg();
+        c.boot_delay = 3.0;
+        assert_eq!(c.boot_delay_for(ModelKind::Llama2_13B), 3.0, "scalar fallback");
+        c.boot_delay_per_group = parse_boot_delays("llama2-13b=12").unwrap();
+        assert_eq!(c.boot_delay_for(ModelKind::Llama2_13B), 12.0, "family override");
+        assert_eq!(c.boot_delay_for(ModelKind::Llama3_8B), 3.0, "others keep scalar");
+        // A family may even opt OUT of the global delay (instant boot).
+        c.boot_delay_per_group = parse_boot_delays("tiny=0").unwrap();
+        assert_eq!(c.boot_delay_for(ModelKind::Tiny), 0.0);
     }
 
     #[test]

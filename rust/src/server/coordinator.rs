@@ -45,6 +45,7 @@ use crate::orchestrator::router::{GroupPressure, RouteDecision, RoutePolicy, Rou
 use crate::orchestrator::Orchestrator;
 use crate::server::autoscale::{Autoscaler, FleetObservation, GroupLoad, ScaleAction};
 use crate::server::pressure::PressureTrace;
+use crate::workload::trace::TraceRecord;
 use crate::Time;
 
 // ---------------------------------------------------------------------------
@@ -438,6 +439,15 @@ pub struct Coordinator<B: ExecBackend> {
     pub route_log: Vec<RouteDecision>,
     /// Autoscaler-provisioned instances still inside their boot delay.
     pending_boots: Vec<PendingBoot>,
+    /// The recording path: every submitted plan as a [`TraceRecord`] with
+    /// its ground-truth submission time and affinity stamps. Any
+    /// plan-driven run — sim or real driver — can be captured here,
+    /// written to JSONL ([`crate::workload::Trace`]) and replayed
+    /// bit-identically; the record→replay contract rides the same seam as
+    /// the dispatch, group, route and scale logs (`tests/runtime_seam.rs`).
+    /// Free-standing [`Self::submit_external`] requests carry no plan and
+    /// are NOT recorded (a ROADMAP open item).
+    pub trace_log: Vec<TraceRecord>,
 }
 
 impl Coordinator<SimBackend> {
@@ -520,6 +530,7 @@ impl<B: ExecBackend> Coordinator<B> {
             router: Router::default(),
             route_log: Vec::new(),
             pending_boots: Vec::new(),
+            trace_log: Vec::new(),
         }
     }
 
@@ -571,6 +582,14 @@ impl<B: ExecBackend> Coordinator<B> {
     /// The active routing policy.
     pub fn route_policy(&self) -> RoutePolicy {
         self.router.policy()
+    }
+
+    /// Configure the profiler's per-family half-life (`[policy]
+    /// profile_half_life`): with `Some(h)` the learned routing signal
+    /// decays, tracking non-stationary agent latencies. Callers validate
+    /// `h > 0` and finite.
+    pub fn set_profile_half_life(&mut self, half_life: Option<f64>) {
+        self.orch.profiler.set_half_life(half_life);
     }
 
     /// The installed autoscaler, if any (diagnostics).
@@ -704,7 +723,20 @@ impl<B: ExecBackend> Coordinator<B> {
 
     /// Admit a resolved workflow: registers its state and pushes its first
     /// stage into the central queue. Returns the workflow's message id.
+    /// The plan is also captured in [`Self::trace_log`] with its
+    /// ground-truth submission time and the agents' current affinity
+    /// stamps, so the run can be written out and replayed.
     pub fn submit_plan(&mut self, plan: WorkflowPlan, now: Time) -> MsgId {
+        let mut rec = TraceRecord::from_plan(&plan, now);
+        for s in rec.stages.iter_mut() {
+            // Name-based lookup (never interns): recording must not
+            // perturb agent-id assignment.
+            s.class = match self.orch.class_of_name(s.agent) {
+                ModelClass::Any => None,
+                c => Some(c),
+            };
+        }
+        self.trace_log.push(rec);
         let stage_latency: Vec<f64> = plan
             .stages
             .iter()
@@ -1086,6 +1118,7 @@ impl<B: ExecBackend> Coordinator<B> {
             self.fleet.instances[instance].model,
             now - dispatched_at,
             req.total_tokens() as f64,
+            now,
         );
         // Advance the workflow, if this request belongs to one (external
         // requests are single free-standing stages).
@@ -1267,11 +1300,14 @@ impl<B: ExecBackend> Coordinator<B> {
             Some(ScaleAction::Grow(model)) => {
                 let cfg = scaler.config();
                 let spec = self.grow_template(model, cfg.template);
-                if cfg.boot_delay > 0.0 {
+                // The grown family's own boot delay (big models provision
+                // slower), falling back to the global scalar.
+                let delay = cfg.boot_delay_for(model);
+                if delay > 0.0 {
                     // The slot is capacity-on-the-way, not capacity: it
                     // registers at the first pump/refresh past ready_at.
                     self.pending_boots
-                        .push(PendingBoot { ready_at: now + cfg.boot_delay, spec });
+                        .push(PendingBoot { ready_at: now + delay, spec });
                     self.scale_log.push(ScaleEvent {
                         at: now,
                         instance: PROVISIONING,
@@ -1860,6 +1896,69 @@ mod tests {
         let tiny = c.grow_template(ModelKind::Tiny, template);
         assert_eq!(tiny.model, ModelKind::Tiny);
         assert!((tiny.kv_scale - 0.12).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_family_boot_delay_defers_that_familys_provisioning() {
+        use crate::server::autoscale::{parse_boot_delays, AutoscaleConfig};
+        let mut c = Coordinator::sim(
+            small_fleet(1, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        let mut cfg = AutoscaleConfig::for_template(
+            InstanceSpec::new(ModelKind::Llama2_13B).with_kv_scale(0.12),
+        );
+        cfg.max_instances = 4;
+        cfg.queue_high = 0.5;
+        cfg.up_after = 1;
+        cfg.cooldown = 1000.0;
+        // Global scalar says instant boot; the 13B family overrides it.
+        cfg.boot_delay = 0.0;
+        cfg.boot_delay_per_group = parse_boot_delays("llama2-13b=5").unwrap();
+        c.set_autoscaler(Autoscaler::new(cfg));
+        for i in 0..8 {
+            c.submit_external("A", 16, 4, i as f64 * 0.001);
+        }
+        c.refresh(0.5);
+        // The grow targets the template's 13B family, whose per-family
+        // delay forces a Provision instead of an instant Grow.
+        assert_eq!(c.n_instances(), 1, "13B slot provisioned, not registered");
+        assert_eq!(c.booting_instances(), 1);
+        assert!(c
+            .scale_log
+            .iter()
+            .any(|e| e.kind == ScaleEventKind::Provision));
+        c.pump(2.0);
+        assert_eq!(c.n_instances(), 1, "still inside the 13B boot window");
+        c.pump(5.6);
+        assert_eq!(c.n_instances(), 2, "registered once the family delay elapsed");
+        assert_eq!(c.fleet.instances[1].model, ModelKind::Llama2_13B);
+    }
+
+    #[test]
+    fn submit_plan_captures_a_replayable_trace_record() {
+        use crate::agents::apps::App;
+        let mut c = Coordinator::sim(
+            small_fleet(1, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        c.set_affinity(&AffinitySpec::parse("ResearchAgent=llama3-8b").unwrap());
+        let mut rng = Rng::new(5);
+        let plan = WorkflowPlan::sample(App::Rg, "TQ", &mut rng);
+        c.submit_plan(plan.clone(), 1.25);
+        assert_eq!(c.trace_log.len(), 1);
+        let rec = &c.trace_log[0];
+        assert_eq!(rec.at, 1.25);
+        assert_eq!(rec.plan(), plan, "record resolves back to the exact plan");
+        // Stamps reflect the active affinity: pinned agents carry their
+        // class, unpinned agents record no stamp.
+        assert_eq!(
+            rec.stages[0].class,
+            Some(ModelClass::Model(ModelKind::Llama3_8B))
+        );
+        assert_eq!(rec.stages[1].class, None, "WriterAgent is unpinned");
     }
 
     #[test]

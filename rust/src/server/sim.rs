@@ -24,6 +24,7 @@ use crate::server::coordinator::{
 };
 use crate::server::pressure::PressureTrace;
 use crate::simcore::EventQueue;
+use crate::workload::trace::TraceRecord;
 use crate::workload::ArrivalEvent;
 use crate::Time;
 
@@ -98,6 +99,10 @@ pub struct FleetConfig {
     /// static affinity stamp). `Learned` also switches the time-slot
     /// dispatcher to the profile-driven KV-demand prediction.
     pub route: Option<RoutePolicy>,
+    /// When set, the per-family latency profiles decay with this
+    /// half-life (seconds), so learned routing tracks non-stationary
+    /// workloads (`[policy] profile_half_life`).
+    pub profile_half_life: Option<f64>,
 }
 
 impl From<SimConfig> for FleetConfig {
@@ -110,6 +115,7 @@ impl From<SimConfig> for FleetConfig {
             pressure: None,
             affinity: None,
             route: None,
+            profile_half_life: None,
         }
     }
 }
@@ -125,6 +131,7 @@ impl From<FleetSpec> for FleetConfig {
             pressure: None,
             affinity: None,
             route: None,
+            profile_half_life: None,
         }
     }
 }
@@ -150,6 +157,10 @@ pub struct SimResult {
     pub route_log: Vec<RouteDecision>,
     /// Every fleet change (grow / drain start / drain done), in order.
     pub scale_log: Vec<ScaleEvent>,
+    /// Every submitted plan with its ground-truth submission time — the
+    /// run's recorded workload ([`crate::workload::Trace::from_records`]
+    /// turns it into a replayable JSONL artifact).
+    pub trace_log: Vec<TraceRecord>,
     /// Instances still active when the run ended.
     pub final_active_instances: usize,
 }
@@ -248,6 +259,7 @@ impl SimServer {
         if let Some(route) = cfg.route {
             coord.set_route_policy(route);
         }
+        coord.set_profile_half_life(cfg.profile_half_life);
         let n = coord.n_instances();
         SimServer { cfg, coord, engine_busy: vec![false; n] }
     }
@@ -354,6 +366,7 @@ impl SimServer {
             group_log: std::mem::take(&mut self.coord.group_log),
             route_log: std::mem::take(&mut self.coord.route_log),
             scale_log: std::mem::take(&mut self.coord.scale_log),
+            trace_log: std::mem::take(&mut self.coord.trace_log),
             final_active_instances: self.coord.active_instances(),
             metrics: self.coord.metrics,
         }

@@ -38,6 +38,19 @@ impl Json {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Strict non-negative integer view: `Some` only for whole numbers
+    /// representable without loss (unlike [`Json::as_usize`], which
+    /// truncates). Trace-file token counts go through this so `1.5` is a
+    /// parse error, not a silent truncation.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n <= (1u64 << 53) as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -363,6 +376,17 @@ mod tests {
         assert!(Json::parse("tru").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn as_u64_is_strict_about_integrality() {
+        assert_eq!(Json::Num(42.0).as_u64(), Some(42));
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(1.5).as_u64(), None, "no truncation");
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_u64(), None);
+        assert_eq!(Json::Num(1e300).as_u64(), None, "out of exact range");
+        assert_eq!(Json::Str("42".into()).as_u64(), None);
     }
 
     #[test]

@@ -7,6 +7,10 @@
 //! shape < 1 (CV ≈ 1.8, matching the reported heavy burst structure of
 //! production LLM traces), scaled to a target mean rate.
 
+pub mod trace;
+
+pub use trace::{FileSource, GenSource, StageRecord, Trace, TraceRecord, TraceSource};
+
 use crate::agents::apps::{App, WorkflowPlan};
 use crate::stats::dist::{Dist, Gamma};
 use crate::stats::rng::Rng;
@@ -38,7 +42,7 @@ impl WorkloadMix {
 }
 
 /// One arriving user task.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ArrivalEvent {
     pub at: Time,
     pub plan: WorkflowPlan,
@@ -59,6 +63,19 @@ impl Default for TraceGen {
 }
 
 impl TraceGen {
+    /// A generator with a validated burst shape: non-finite or
+    /// non-positive values are rejected at construction, naming the value
+    /// — a NaN or zero shape would otherwise flow silently into the Gamma
+    /// sampler and produce NaN inter-arrival gaps.
+    pub fn new(burst_shape: f64) -> Result<TraceGen, String> {
+        if !burst_shape.is_finite() || burst_shape <= 0.0 {
+            return Err(format!(
+                "burst_shape must be a positive finite number, got {burst_shape}"
+            ));
+        }
+        Ok(TraceGen { burst_shape })
+    }
+
     /// Generate `n` arrivals at `rate` tasks/second from `mix`.
     pub fn generate(
         &self,
@@ -68,6 +85,11 @@ impl TraceGen {
         rng: &mut Rng,
     ) -> Vec<ArrivalEvent> {
         assert!(rate > 0.0);
+        assert!(
+            self.burst_shape.is_finite() && self.burst_shape > 0.0,
+            "invalid burst_shape {} (construct via TraceGen::new)",
+            self.burst_shape
+        );
         let mean_gap = 1.0 / rate;
         let gap_dist = Gamma::new(self.burst_shape, mean_gap / self.burst_shape);
         let weights: Vec<f64> = mix.entries.iter().map(|e| e.2).collect();
@@ -130,6 +152,25 @@ mod tests {
         let evs = gen.generate(&WorkloadMix::colocated(), 5.0, 6000, &mut rng);
         let qa = evs.iter().filter(|e| e.plan.app == App::Qa).count() as f64 / 6000.0;
         assert!((qa - 1.0 / 3.0).abs() < 0.05, "qa share {qa}");
+    }
+
+    #[test]
+    fn burst_shape_validated_at_construction() {
+        assert!((TraceGen::new(0.31).unwrap().burst_shape - 0.31).abs() < 1e-12);
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = TraceGen::new(bad).unwrap_err();
+            assert!(err.contains("burst_shape"), "{err}");
+            assert!(err.contains(&format!("{bad}")), "error names the value: {err}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "burst_shape")]
+    fn generate_rejects_a_hand_built_invalid_shape() {
+        // Construction bypass (struct literal) still cannot reach the
+        // sampler: NaN gaps would silently corrupt every downstream time.
+        let gen = TraceGen { burst_shape: f64::NAN };
+        gen.generate(&WorkloadMix::colocated(), 1.0, 1, &mut Rng::new(1));
     }
 
     #[test]

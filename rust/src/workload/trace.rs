@@ -1,0 +1,745 @@
+//! First-class workload traces: record, replay and transform.
+//!
+//! The paper evaluates by replaying a production trace (Splitwise, §7.1)
+//! proportionally scaled until the queuing ratio spans 0–90%. Until this
+//! module, our workload layer could only *generate* arrivals — every sweep
+//! arm regenerated its own, and cross-arm comparability rested on seed
+//! discipline. A [`Trace`] is the explicit, serializable artifact instead:
+//! one materialized arrival sequence that every consumer (sweep arms, both
+//! drivers, benches) shares by construction, that any run can *record*
+//! ([`crate::server::coordinator::Coordinator::trace_log`]) and replay
+//! bit-identically, and that deterministic transforms ([`Trace::scale_rate`],
+//! [`Trace::clip`], [`Trace::splice`], [`Trace::filter_app`]) turn into a
+//! family of scenarios.
+//!
+//! The interchange format is JSONL — one [`TraceRecord`] per line, written
+//! and parsed with the in-tree [`crate::util::json`] (floats round-trip
+//! exactly: Rust's shortest-representation `Display` is re-parsed to the
+//! identical bits). Producers are the [`TraceSource`] implementations:
+//! [`GenSource`] (the existing [`TraceGen`], generate-then-materialize) and
+//! [`FileSource`] (the loader for recorded files).
+
+use std::path::{Path, PathBuf};
+
+use crate::agents::apps::{App, PlannedStage, WorkflowPlan};
+use crate::engine::cost_model::ModelClass;
+use crate::stats::rng::Rng;
+use crate::util::json::Json;
+use crate::workload::{ArrivalEvent, TraceGen, WorkloadMix};
+use crate::Time;
+
+/// One stage of a recorded workflow: which agent ran and the token shape
+/// its request had. See [`TraceRecord`] for the serialized form.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageRecord {
+    /// Agent name (interned to the static agent table on load; unknown
+    /// names from external traces are interned once per unique name).
+    pub agent: &'static str,
+    /// Prompt tokens of the stage's request.
+    pub prompt_tokens: u32,
+    /// Output tokens the stage generated.
+    pub output_tokens: u32,
+    /// Optional serving-group stamp: the model class the stage's request
+    /// carried when the trace was recorded (`None` = unpinned/`Any`).
+    /// Informational — replay re-derives classes from the active affinity
+    /// config — but lets `kairos trace stats` and analyses see how the
+    /// recorded run was routed.
+    pub class: Option<ModelClass>,
+}
+
+/// One arriving user task of a recorded workload — the canonical JSONL
+/// trace schema, one record per line.
+///
+/// Serialized fields:
+///
+/// | key       | type   | meaning                                          |
+/// |-----------|--------|--------------------------------------------------|
+/// | `at`      | number | arrival time in seconds from trace start (≥ 0)   |
+/// | `app`     | string | application name as [`App::name`]: `QA`/`RG`/`CG`|
+/// | `dataset` | string | dataset label the task was sampled from          |
+/// | `stages`  | array  | resolved stage sequence, in execution order      |
+///
+/// Each entry of `stages` is an object:
+///
+/// | key      | type   | meaning                                            |
+/// |----------|--------|----------------------------------------------------|
+/// | `agent`  | string | agent name (e.g. `ResearchAgent`)                  |
+/// | `prompt` | number | prompt tokens (non-negative integer)               |
+/// | `output` | number | generated tokens (non-negative integer)            |
+/// | `class`  | string | optional model-class stamp (e.g. `llama2-13b`);    |
+/// |          |        | omitted when the request was unpinned (`Any`)      |
+///
+/// A sample line:
+///
+/// ```text
+/// {"app":"RG","at":1.9330527,"dataset":"TQ","stages":[{"agent":"ResearchAgent","output":61,"prompt":733},{"agent":"WriterAgent","class":"llama3-8b","output":187,"prompt":490}]}
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// Arrival time, seconds from trace start.
+    pub at: Time,
+    /// The application the task instantiates.
+    pub app: App,
+    /// Dataset label the task was sampled from.
+    pub dataset: &'static str,
+    /// The resolved stage sequence (agents + token shapes).
+    pub stages: Vec<StageRecord>,
+}
+
+/// Known static names (agents + datasets) so loaded traces re-use the
+/// compile-time strings instead of leaking one allocation per record.
+const STATIC_NAMES: &[&str] = &[
+    "Router",
+    "MathAgent",
+    "HumanitiesAgent",
+    "ResearchAgent",
+    "WriterAgent",
+    "ProductManager",
+    "Architect",
+    "ProjectManager",
+    "Engineer",
+    "QAEngineer",
+    "G+M",
+    "M+W",
+    "S+S",
+    "TQ",
+    "NCD",
+    "NQ",
+    "HE",
+    "MBPP",
+    "APPS",
+];
+
+/// Intern an arbitrary trace string to a `'static` lifetime: known names
+/// resolve to the compile-time table; unknown names (external traces) are
+/// leaked once per unique name through a global pool.
+fn intern_static(s: &str) -> &'static str {
+    use std::collections::HashSet;
+    use std::sync::{Mutex, OnceLock};
+    if let Some(&k) = STATIC_NAMES.iter().find(|&&k| k == s) {
+        return k;
+    }
+    static POOL: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
+    let pool = POOL.get_or_init(|| Mutex::new(HashSet::new()));
+    let mut guard = pool.lock().expect("intern pool poisoned");
+    if let Some(&k) = guard.get(s) {
+        return k;
+    }
+    let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
+    guard.insert(leaked);
+    leaked
+}
+
+impl TraceRecord {
+    /// Record one submitted plan at its submission time (no class stamps;
+    /// the coordinator's recording path stamps them from its affinity
+    /// state).
+    pub fn from_plan(plan: &WorkflowPlan, at: Time) -> TraceRecord {
+        TraceRecord {
+            at,
+            app: plan.app,
+            dataset: plan.dataset,
+            stages: plan
+                .stages
+                .iter()
+                .map(|s| StageRecord {
+                    agent: s.agent,
+                    prompt_tokens: s.prompt_tokens,
+                    output_tokens: s.output_tokens,
+                    class: None,
+                })
+                .collect(),
+        }
+    }
+
+    /// The workflow plan this record resolves to on replay.
+    pub fn plan(&self) -> WorkflowPlan {
+        WorkflowPlan {
+            app: self.app,
+            dataset: self.dataset,
+            stages: self
+                .stages
+                .iter()
+                .map(|s| PlannedStage {
+                    agent: s.agent,
+                    prompt_tokens: s.prompt_tokens,
+                    output_tokens: s.output_tokens,
+                })
+                .collect(),
+        }
+    }
+
+    /// Serialize to one JSON object (one JSONL line, sans newline).
+    pub fn to_json(&self) -> Json {
+        let stages: Vec<Json> = self
+            .stages
+            .iter()
+            .map(|s| {
+                let mut pairs = vec![
+                    ("agent", Json::from(s.agent)),
+                    ("prompt", Json::from(s.prompt_tokens as usize)),
+                    ("output", Json::from(s.output_tokens as usize)),
+                ];
+                if let Some(c) = s.class {
+                    pairs.push(("class", Json::from(c.name())));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("at", Json::from(self.at)),
+            ("app", Json::from(self.app.name())),
+            ("dataset", Json::from(self.dataset)),
+            ("stages", Json::Arr(stages)),
+        ])
+    }
+
+    /// Parse one record from its JSON object form.
+    pub fn from_json(j: &Json) -> Result<TraceRecord, String> {
+        fn str_field<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
+            match j.get(key).and_then(Json::as_str) {
+                Some(s) => Ok(s),
+                None => Err(format!("missing or non-string {key:?}")),
+            }
+        }
+        let at = match j.get("at").and_then(Json::as_f64) {
+            Some(t) => t,
+            None => return Err("missing or non-numeric \"at\"".to_string()),
+        };
+        if !at.is_finite() || at < 0.0 {
+            return Err(format!("\"at\" must be a non-negative finite time, got {at}"));
+        }
+        let app = App::parse(str_field(j, "app")?)?;
+        let dataset = str_field(j, "dataset")?;
+        let raw_stages = match j.get("stages").and_then(Json::as_arr) {
+            Some(a) => a,
+            None => return Err("missing \"stages\" array".to_string()),
+        };
+        if raw_stages.is_empty() {
+            return Err("\"stages\" must not be empty".to_string());
+        }
+        let mut stages = Vec::with_capacity(raw_stages.len());
+        for (i, s) in raw_stages.iter().enumerate() {
+            let agent = str_field(s, "agent").map_err(|e| format!("stage {i}: {e}"))?;
+            let tokens = |key: &str| -> Result<u32, String> {
+                let n = match s.get(key).and_then(Json::as_u64) {
+                    Some(n) => n,
+                    None => {
+                        return Err(format!("stage {i}: missing or non-integer {key:?}"))
+                    }
+                };
+                u32::try_from(n).map_err(|_| format!("stage {i}: {key:?} too large: {n}"))
+            };
+            let class = match s.get("class") {
+                None => None,
+                Some(Json::Str(name)) => {
+                    Some(ModelClass::parse(name).map_err(|e| format!("stage {i}: {e}"))?)
+                }
+                Some(_) => {
+                    return Err(format!("stage {i}: \"class\" must be a string"))
+                }
+            };
+            stages.push(StageRecord {
+                agent: intern_static(agent),
+                prompt_tokens: tokens("prompt")?,
+                output_tokens: tokens("output")?,
+                class,
+            });
+        }
+        Ok(TraceRecord { at, app, dataset: intern_static(dataset), stages })
+    }
+}
+
+/// A materialized workload trace: the ordered arrival records every
+/// consumer shares. Construction is the only place randomness can enter
+/// ([`GenSource`]); every method on `Trace` itself is deterministic.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Trace {
+    pub records: Vec<TraceRecord>,
+}
+
+impl Trace {
+    pub fn from_records(records: Vec<TraceRecord>) -> Trace {
+        Trace { records }
+    }
+
+    /// Materialize generator output (no class stamps).
+    pub fn from_arrivals(arrivals: &[ArrivalEvent]) -> Trace {
+        Trace {
+            records: arrivals
+                .iter()
+                .map(|a| TraceRecord::from_plan(&a.plan, a.at))
+                .collect(),
+        }
+    }
+
+    /// The arrival sequence this trace replays to, in record order.
+    pub fn arrivals(&self) -> Vec<ArrivalEvent> {
+        self.records
+            .iter()
+            .map(|r| ArrivalEvent { at: r.at, plan: r.plan() })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Arrival time of the last record (0 for an empty trace).
+    pub fn span(&self) -> Time {
+        self.records.last().map_or(0.0, |r| r.at)
+    }
+
+    /// Mean arrival rate over the trace span (0 for degenerate traces).
+    pub fn mean_rate(&self) -> f64 {
+        let span = self.span();
+        if span > 0.0 {
+            self.records.len() as f64 / span
+        } else {
+            0.0
+        }
+    }
+
+    /// Serialize to JSONL: one record per line, in order.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            out.push_str(&r.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a JSONL document; blank lines are skipped, errors name the
+    /// offending line. Arrival times must be non-decreasing — every
+    /// consumer (span/rate stats, splice shifting, the drivers' warmup
+    /// cutoff) assumes time order, so an out-of-order file is rejected
+    /// here instead of corrupting results downstream.
+    pub fn from_jsonl(text: &str) -> Result<Trace, String> {
+        let mut records: Vec<TraceRecord> = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+            let rec =
+                TraceRecord::from_json(&j).map_err(|e| format!("line {}: {e}", i + 1))?;
+            if let Some(prev) = records.last() {
+                if rec.at < prev.at {
+                    return Err(format!(
+                        "line {}: arrival time {} goes backwards (previous {})",
+                        i + 1,
+                        rec.at,
+                        prev.at
+                    ));
+                }
+            }
+            records.push(rec);
+        }
+        Ok(Trace { records })
+    }
+
+    /// Write the JSONL form to `path`.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_jsonl())
+            .map_err(|e| format!("cannot write trace {}: {e}", path.display()))
+    }
+
+    /// Load a JSONL trace from `path`.
+    pub fn load(path: &Path) -> Result<Trace, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read trace {}: {e}", path.display()))?;
+        Self::from_jsonl(&text)
+            .map_err(|e| format!("trace {}: {e}", path.display()))
+    }
+
+    /// Scale the arrival rate by `factor` (> 1 = denser load): every
+    /// arrival time is divided by `factor`, preserving order and relative
+    /// burst structure — the paper's proportional load scaling.
+    pub fn scale_rate(&self, factor: f64) -> Result<Trace, String> {
+        if !factor.is_finite() || factor <= 0.0 {
+            return Err(format!(
+                "scale factor must be a positive finite number, got {factor}"
+            ));
+        }
+        let mut out = self.clone();
+        for r in &mut out.records {
+            r.at /= factor;
+        }
+        Ok(out)
+    }
+
+    /// Keep only arrivals inside `[start, end)`, rebased so the window
+    /// starts at time 0. Order-preserving.
+    pub fn clip(&self, start: Time, end: Time) -> Result<Trace, String> {
+        if !start.is_finite() || start < 0.0 || end.is_nan() || end < start {
+            return Err(format!("bad clip window [{start}, {end})"));
+        }
+        let records = self
+            .records
+            .iter()
+            .filter(|r| r.at >= start && r.at < end)
+            .map(|r| {
+                let mut r = r.clone();
+                r.at -= start;
+                r
+            })
+            .collect();
+        Ok(Trace { records })
+    }
+
+    /// Append `other` after this trace: its arrivals are shifted by this
+    /// trace's span so the combined timeline stays monotone when both
+    /// inputs are. Order-preserving on both sides.
+    pub fn splice(&self, other: &Trace) -> Trace {
+        let shift = self.span();
+        let mut records = self.records.clone();
+        records.extend(other.records.iter().map(|r| {
+            let mut r = r.clone();
+            r.at += shift;
+            r
+        }));
+        Trace { records }
+    }
+
+    /// Keep only arrivals of one application (times untouched, so the
+    /// app's own burst structure is preserved). Order-preserving.
+    pub fn filter_app(&self, app: App) -> Trace {
+        Trace {
+            records: self.records.iter().filter(|r| r.app == app).cloned().collect(),
+        }
+    }
+}
+
+/// A producer of materialized traces. The seam every workload consumer
+/// goes through: sweeps materialize ONE trace from their source and run
+/// every arm off it, so baselines are apples-to-apples by construction
+/// instead of by seed discipline.
+pub trait TraceSource {
+    /// Materialize the full trace.
+    fn materialize(&self) -> Result<Trace, String>;
+    /// Human-readable provenance, for run headers.
+    fn describe(&self) -> String;
+}
+
+/// Generate-then-materialize over the existing [`TraceGen`].
+#[derive(Debug, Clone)]
+pub struct GenSource {
+    pub gen: TraceGen,
+    pub mix: WorkloadMix,
+    /// Target mean arrival rate (tasks/second); must be positive.
+    pub rate: f64,
+    /// Number of tasks to generate; must be positive.
+    pub n: usize,
+    pub seed: u64,
+}
+
+impl TraceSource for GenSource {
+    fn materialize(&self) -> Result<Trace, String> {
+        if !self.rate.is_finite() || self.rate <= 0.0 {
+            return Err(format!("rate must be a positive finite number, got {}", self.rate));
+        }
+        if self.n == 0 {
+            return Err("cannot materialize an empty trace (n = 0)".to_string());
+        }
+        let arrivals =
+            self.gen.generate(&self.mix, self.rate, self.n, &mut Rng::new(self.seed));
+        Ok(Trace::from_arrivals(&arrivals))
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "generated: {} tasks at {} req/s, burst_shape {}, seed {}",
+            self.n, self.rate, self.gen.burst_shape, self.seed
+        )
+    }
+}
+
+/// Load a recorded JSONL trace from disk.
+#[derive(Debug, Clone)]
+pub struct FileSource {
+    pub path: PathBuf,
+}
+
+impl FileSource {
+    pub fn new(path: impl Into<PathBuf>) -> FileSource {
+        FileSource { path: path.into() }
+    }
+}
+
+impl TraceSource for FileSource {
+    fn materialize(&self) -> Result<Trace, String> {
+        Trace::load(&self.path)
+    }
+
+    fn describe(&self) -> String {
+        format!("recorded: {}", self.path.display())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    fn sample_trace(n: usize, rate: f64, seed: u64) -> Trace {
+        GenSource {
+            gen: TraceGen::default(),
+            mix: WorkloadMix::colocated(),
+            rate,
+            n,
+            seed,
+        }
+        .materialize()
+        .unwrap()
+    }
+
+    #[test]
+    fn jsonl_round_trip_is_identity() {
+        let t = sample_trace(50, 4.0, 7);
+        let back = Trace::from_jsonl(&t.to_jsonl()).unwrap();
+        assert_eq!(t, back, "Trace -> JSONL -> Trace must be identity");
+        // Includes exact f64 arrival times, not approximate ones.
+        for (a, b) in t.records.iter().zip(&back.records) {
+            assert!(a.at.to_bits() == b.at.to_bits(), "bit-exact times");
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trip_is_identity_property() {
+        forall(
+            "trace-jsonl-roundtrip",
+            25,
+            101,
+            |rng| {
+                let n = rng.range(1, 40);
+                let rate = 0.5 + rng.f64() * 10.0;
+                sample_trace(n, rate, rng.next_u64())
+            },
+            |t| {
+                let back = Trace::from_jsonl(&t.to_jsonl())
+                    .map_err(|e| format!("parse failed: {e}"))?;
+                if back != *t {
+                    return Err("round trip not identity".to_string());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn transforms_are_deterministic_and_order_preserving() {
+        forall(
+            "trace-transforms",
+            20,
+            102,
+            |rng| {
+                let a = sample_trace(rng.range(2, 30), 3.0, rng.next_u64());
+                let b = sample_trace(rng.range(1, 20), 6.0, rng.next_u64());
+                (a, b)
+            },
+            |(a, b)| {
+                let scaled = a.scale_rate(2.0).unwrap();
+                if scaled != a.scale_rate(2.0).unwrap() {
+                    return Err("scale_rate not deterministic".to_string());
+                }
+                if scaled.len() != a.len() {
+                    return Err("scale_rate changed record count".to_string());
+                }
+                let clipped = a.clip(0.5, a.span()).unwrap();
+                if clipped != a.clip(0.5, a.span()).unwrap() {
+                    return Err("clip not deterministic".to_string());
+                }
+                let spliced = a.splice(b);
+                if spliced != a.splice(b) {
+                    return Err("splice not deterministic".to_string());
+                }
+                if spliced.len() != a.len() + b.len() {
+                    return Err("splice lost records".to_string());
+                }
+                // Order preservation: all three outputs stay monotone in
+                // time (the inputs are).
+                for t in [&scaled, &clipped, &spliced] {
+                    for w in t.records.windows(2) {
+                        if w[1].at < w[0].at {
+                            return Err("transform broke time order".to_string());
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn scale_rate_moves_the_mean_rate() {
+        let t = sample_trace(400, 4.0, 11);
+        let denser = t.scale_rate(2.0).unwrap();
+        assert_eq!(denser.len(), t.len());
+        let ratio = denser.mean_rate() / t.mean_rate();
+        assert!((ratio - 2.0).abs() < 1e-9, "ratio={ratio}");
+        assert!(t.scale_rate(0.0).is_err());
+        assert!(t.scale_rate(f64::NAN).is_err());
+        assert!(t.scale_rate(f64::INFINITY).is_err());
+    }
+
+    #[test]
+    fn clip_rebases_the_window() {
+        let t = sample_trace(200, 5.0, 12);
+        let mid = t.span() / 2.0;
+        let tail = t.clip(mid, f64::MAX).unwrap();
+        assert!(!tail.is_empty() && tail.len() < t.len());
+        assert!(tail.records[0].at < t.records[0].at + mid, "rebased to ~0");
+        for r in &tail.records {
+            assert!(r.at >= 0.0);
+        }
+        assert!(t.clip(3.0, 1.0).is_err(), "inverted window rejected");
+        assert!(t.clip(-1.0, 1.0).is_err());
+        assert!(t.clip(f64::NAN, 1.0).is_err());
+    }
+
+    #[test]
+    fn splice_concatenates_on_the_timeline() {
+        let a = sample_trace(40, 4.0, 13);
+        let b = sample_trace(30, 4.0, 14);
+        let s = a.splice(&b);
+        assert_eq!(s.len(), 70);
+        assert_eq!(&s.records[..40], &a.records[..]);
+        let shift = a.span();
+        for (orig, spliced) in b.records.iter().zip(&s.records[40..]) {
+            assert_eq!(spliced.at, orig.at + shift);
+            assert_eq!(spliced.stages, orig.stages);
+        }
+    }
+
+    #[test]
+    fn filter_app_keeps_only_that_app() {
+        let t = sample_trace(300, 5.0, 15);
+        let qa = t.filter_app(App::Qa);
+        assert!(!qa.is_empty() && qa.len() < t.len());
+        assert!(qa.records.iter().all(|r| r.app == App::Qa));
+        let total = App::all().iter().map(|&a| t.filter_app(a).len()).sum::<usize>();
+        assert_eq!(total, t.len(), "apps partition the trace");
+    }
+
+    #[test]
+    fn arrivals_replay_the_recorded_plans() {
+        let src = GenSource {
+            gen: TraceGen::default(),
+            mix: WorkloadMix::colocated(),
+            rate: 4.0,
+            n: 60,
+            seed: 16,
+        };
+        let original = src
+            .gen
+            .generate(&src.mix, src.rate, src.n, &mut Rng::new(src.seed));
+        let replayed = src.materialize().unwrap().arrivals();
+        assert_eq!(original, replayed, "materialize→arrivals is lossless");
+    }
+
+    #[test]
+    fn class_stamp_survives_the_round_trip() {
+        use crate::engine::cost_model::ModelKind;
+        let mut t = sample_trace(5, 2.0, 17);
+        t.records[0].stages[0].class =
+            Some(ModelClass::Model(ModelKind::Llama2_13B));
+        t.records[1].stages[0].class = Some(ModelClass::Any);
+        let back = Trace::from_jsonl(&t.to_jsonl()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn loader_rejects_garbage_naming_the_line() {
+        let err = Trace::from_jsonl("{\"app\":\"RG\"}\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let good = sample_trace(2, 2.0, 18).to_jsonl();
+        let err = Trace::from_jsonl(&format!("{good}not json\n")).unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+        // Bad field values name the problem.
+        let bad_at = "{\"at\":-1,\"app\":\"RG\",\"dataset\":\"TQ\",\
+                      \"stages\":[{\"agent\":\"A\",\"prompt\":1,\"output\":1}]}";
+        assert!(Trace::from_jsonl(bad_at).unwrap_err().contains("at"));
+        let bad_app = "{\"at\":0,\"app\":\"ZZ\",\"dataset\":\"TQ\",\
+                       \"stages\":[{\"agent\":\"A\",\"prompt\":1,\"output\":1}]}";
+        assert!(Trace::from_jsonl(bad_app).unwrap_err().contains("ZZ"));
+        let bad_tok = "{\"at\":0,\"app\":\"RG\",\"dataset\":\"TQ\",\
+                       \"stages\":[{\"agent\":\"A\",\"prompt\":1.5,\"output\":1}]}";
+        assert!(Trace::from_jsonl(bad_tok).unwrap_err().contains("prompt"));
+        let no_stages =
+            "{\"at\":0,\"app\":\"RG\",\"dataset\":\"TQ\",\"stages\":[]}";
+        assert!(Trace::from_jsonl(no_stages).unwrap_err().contains("stages"));
+    }
+
+    #[test]
+    fn loader_rejects_out_of_order_arrival_times() {
+        // Every consumer (span, splice shifting, the drivers' warmup
+        // cutoff) assumes time order: a hand-edited file that goes
+        // backwards must fail at load, naming the line.
+        let line = |at: f64| {
+            format!(
+                "{{\"at\":{at},\"app\":\"RG\",\"dataset\":\"TQ\",\
+                 \"stages\":[{{\"agent\":\"A\",\"prompt\":1,\"output\":1}}]}}"
+            )
+        };
+        let doc = format!("{}\n{}\n{}\n", line(1.0), line(10.0), line(2.0));
+        let err = Trace::from_jsonl(&doc).unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("backwards"), "{err}");
+        // Equal timestamps (simultaneous arrivals) are fine.
+        let ok = format!("{}\n{}\n", line(1.0), line(1.0));
+        assert_eq!(Trace::from_jsonl(&ok).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn unknown_names_intern_to_stable_statics() {
+        let line = "{\"at\":0.5,\"app\":\"RG\",\"dataset\":\"external-ds\",\
+                    \"stages\":[{\"agent\":\"CustomAgent\",\"prompt\":8,\"output\":4}]}";
+        let a = Trace::from_jsonl(line).unwrap();
+        let b = Trace::from_jsonl(line).unwrap();
+        // Same leaked pointer on repeated loads (no unbounded leaking).
+        assert!(std::ptr::eq(a.records[0].dataset, b.records[0].dataset));
+        assert!(std::ptr::eq(a.records[0].stages[0].agent, b.records[0].stages[0].agent));
+        // Known names resolve through the compile-time table.
+        let t = sample_trace(3, 2.0, 19);
+        let back = Trace::from_jsonl(&t.to_jsonl()).unwrap();
+        assert!(STATIC_NAMES.contains(&back.records[0].dataset));
+        assert_eq!(t.records[0].dataset, back.records[0].dataset);
+    }
+
+    #[test]
+    fn gen_source_validates_inputs() {
+        let mut src = GenSource {
+            gen: TraceGen::default(),
+            mix: WorkloadMix::colocated(),
+            rate: 0.0,
+            n: 10,
+            seed: 1,
+        };
+        assert!(src.materialize().unwrap_err().contains("rate"));
+        src.rate = 2.0;
+        src.n = 0;
+        assert!(src.materialize().is_err());
+        src.n = 10;
+        assert!(src.materialize().is_ok());
+        assert!(src.describe().contains("generated"));
+    }
+
+    #[test]
+    fn file_source_round_trips_through_disk() {
+        let t = sample_trace(25, 3.0, 20);
+        let path = std::env::temp_dir().join("kairos_trace_test_roundtrip.jsonl");
+        t.save(&path).unwrap();
+        let back = FileSource::new(&path).materialize().unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(t, back);
+        assert!(FileSource::new("/nonexistent/kairos.jsonl")
+            .materialize()
+            .unwrap_err()
+            .contains("nonexistent"));
+    }
+}
