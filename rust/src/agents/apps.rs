@@ -10,7 +10,7 @@
 use super::datasets::{cg_dataset, qa_dataset, rg_dataset, DatasetProfile};
 use crate::stats::rng::Rng;
 
-/// The three benchmark applications.
+/// The three benchmark applications, plus the external-request marker.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum App {
     /// Question Answer — dynamic branching (Router → Math | Humanities).
@@ -19,6 +19,12 @@ pub enum App {
     Rg,
     /// Code Generate — dynamic feedback (PM → Arch → PjM → Eng → QA ⟲ Eng).
     Cg,
+    /// A free-standing external request recorded off the serving frontend
+    /// (`Coordinator::submit_external`): a synthetic single-stage "app" so
+    /// externals ride the same trace schema as workflows. Never sampled by
+    /// the workload generators — [`App::all`] stays the three benchmark
+    /// apps.
+    Ext,
 }
 
 impl App {
@@ -27,6 +33,7 @@ impl App {
             App::Qa => "QA",
             App::Rg => "RG",
             App::Cg => "CG",
+            App::Ext => "EXT",
         }
     }
 
@@ -37,7 +44,8 @@ impl App {
             "QA" | "qa" => Ok(App::Qa),
             "RG" | "rg" => Ok(App::Rg),
             "CG" | "cg" => Ok(App::Cg),
-            other => Err(format!("unknown app {other:?} (QA|RG|CG)")),
+            "EXT" | "ext" => Ok(App::Ext),
+            other => Err(format!("unknown app {other:?} (QA|RG|CG|EXT)")),
         }
     }
 
@@ -47,6 +55,9 @@ impl App {
             App::Qa => qa_dataset(name),
             App::Rg => rg_dataset(name),
             App::Cg => cg_dataset(name),
+            // Externals are recorded pre-resolved, never instantiated from
+            // a dataset profile.
+            App::Ext => panic!("EXT records are pre-resolved; no dataset profiles"),
         }
     }
 
@@ -55,6 +66,7 @@ impl App {
             App::Qa => ["G+M", "M+W", "S+S"],
             App::Rg => ["TQ", "NCD", "NQ"],
             App::Cg => ["HE", "MBPP", "APPS"],
+            App::Ext => ["external", "external", "external"],
         }
     }
 
@@ -121,6 +133,8 @@ impl WorkflowPlan {
                     retries += 1;
                 }
             }
+            // `app.dataset()` above already panicked for EXT.
+            App::Ext => unreachable!("EXT records are never sampled"),
         }
         WorkflowPlan { app, dataset: ds.name, stages }
     }
@@ -159,6 +173,8 @@ pub fn static_depth(app: App, agent: &str) -> u32 {
         (App::Cg, "ProjectManager") => 3,
         (App::Cg, "Engineer") => 2,
         (App::Cg, _) => 1,
+        // External requests are single free-standing stages.
+        (App::Ext, _) => 1,
     }
 }
 

@@ -1,0 +1,375 @@
+//! The `kairos bench` harness: seeded million-request speed runs with
+//! machine-readable results.
+//!
+//! Two benchmarks, each run as an in-binary A/B over the coordinator's two
+//! hot paths (one commit, one binary, two arms — no cross-build noise):
+//!
+//! * **pump** — a tight submit→pump→drain loop of free-standing external
+//!   requests through one [`Coordinator`], timing only the submission and
+//!   dispatch half (`hot_seconds`); engine stepping is driven but untimed.
+//! * **e2e** — a full [`run_fleet`] simulation over a generated workflow
+//!   trace, timing the whole discrete-event run.
+//!
+//! The **baseline** arm runs [`Coordinator::set_legacy_hot_path`] `(true)`
+//! with unbounded logs and exact (vector-backed) metrics: the pre-index
+//! linear candidate scans, per-call group-pressure rebuilds and unbatched
+//! refreshes. The **optimized** arm runs the incremental family index,
+//! bounded [`LogConfig`] ring buffers and lean streaming metrics. Both arms
+//! replay the identical seeded submission stream and must make identical
+//! dispatch decisions (asserted) — the A/B measures speed and memory, never
+//! behavior.
+//!
+//! Results go to `BENCH_pump.json` / `BENCH_e2e.json` (schema documented in
+//! the README). Decision counts, drop counts and log-state bytes are
+//! seed-deterministic; wall-clock fields vary by host and carry a
+//! `provenance` block saying where they were measured. `--quick` shrinks
+//! the run for CI smoke (~seconds); the full run serves a million pump
+//! requests.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::dispatch::RoundRobin;
+use crate::lb::policies::Fcfs;
+use crate::orchestrator::affinity::AffinitySpec;
+use crate::orchestrator::router::RoutePolicy;
+use crate::server::coordinator::{Coordinator, FleetSpec, LogConfig};
+use crate::server::sim::{run_fleet, FleetConfig, SimResult};
+use crate::stats::rng::Rng;
+use crate::util::Json;
+use crate::workload::{TraceGen, WorkloadMix};
+
+/// CLI-facing knobs of one `kairos bench` invocation.
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    /// Shrink both benchmarks to CI-smoke size (~seconds end to end).
+    pub quick: bool,
+    /// Seed for the submission streams (decision counts are functions of
+    /// the seed alone).
+    pub seed: u64,
+    /// Directory receiving `BENCH_pump.json` and `BENCH_e2e.json`.
+    pub out_dir: PathBuf,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions { quick: false, seed: 42, out_dir: PathBuf::from(".") }
+    }
+}
+
+/// Measured numbers of one arm of the pump microbench.
+#[derive(Debug, Clone, Copy)]
+struct PumpArm {
+    /// Submission + pump time only (the measured hot path).
+    hot_seconds: f64,
+    /// Whole arm including the untimed engine drain.
+    wall_seconds: f64,
+    dispatched_total: u64,
+    dropped: u64,
+    peak_log_bytes: usize,
+}
+
+/// One pre-generated external request of the pump stream (shared verbatim
+/// by both arms, so their decision streams are comparable bit for bit).
+#[derive(Debug, Clone, Copy)]
+struct PumpReq {
+    agent: &'static str,
+    prompt_tokens: u32,
+    output_tokens: u32,
+}
+
+fn pump_stream(n: usize, seed: u64) -> Vec<PumpReq> {
+    const AGENTS: [&str; 4] = ["Pinned8", "Pinned13", "FreeA", "FreeB"];
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| PumpReq {
+            agent: AGENTS[rng.below(AGENTS.len())],
+            prompt_tokens: 16 + rng.below(96) as u32,
+            output_tokens: 4 + rng.below(4) as u32,
+        })
+        .collect()
+}
+
+fn pump_arm(stream: &[PumpReq], legacy: bool) -> PumpArm {
+    let fleet = FleetSpec::parse("3*llama3-8b@0.12,llama2-13b@0.12")
+        .expect("static fleet spec");
+    let mut c = Coordinator::sim(fleet, Box::new(Fcfs), Box::new(RoundRobin::new()));
+    c.set_affinity(
+        &AffinitySpec::parse("Pinned8=llama3-8b,Pinned13=llama2-13b")
+            .expect("static affinity spec"),
+    );
+    // Learned routing reads group pressures on every submission — the
+    // pressure cache is part of what the A/B measures.
+    c.set_route_policy(RoutePolicy::learned_default());
+    c.set_legacy_hot_path(legacy);
+    if !legacy {
+        c.set_log_config(LogConfig::bounded(1024));
+        c.metrics.lean = true;
+    }
+    let start = Instant::now();
+    let mut hot = std::time::Duration::ZERO;
+    let mut now = 0.0_f64;
+    let mut i = 0usize;
+    while i < stream.len() {
+        let batch = (stream.len() - i).min(64);
+        let t = Instant::now();
+        for r in &stream[i..i + batch] {
+            c.submit_external(r.agent, r.prompt_tokens, r.output_tokens, now);
+            now += 1e-4;
+        }
+        c.pump(now);
+        hot += t.elapsed();
+        // Drain the fleet between batches (untimed: engine simulation is
+        // not the system under test, but completions feed the profiles the
+        // learned router reads, so it must run).
+        loop {
+            let mut idle = true;
+            for j in 0..c.n_instances() {
+                if !c.engines[j].has_work() {
+                    continue;
+                }
+                idle = false;
+                let out = c.step_engine(j, now);
+                now += out.duration.max(1e-6);
+                c.absorb(j, out, now);
+            }
+            let t = Instant::now();
+            c.pump(now);
+            hot += t.elapsed();
+            if idle {
+                break;
+            }
+        }
+        i += batch;
+    }
+    // Unbounded logs only grow and bounded ones are capped, so the
+    // end-of-run state IS the peak.
+    PumpArm {
+        hot_seconds: hot.as_secs_f64(),
+        wall_seconds: start.elapsed().as_secs_f64(),
+        dispatched_total: c.dispatch_log.total(),
+        dropped: c.dropped,
+        peak_log_bytes: c.log_state_bytes(),
+    }
+}
+
+fn pump_arm_json(n: usize, a: &PumpArm) -> Json {
+    Json::obj(vec![
+        ("hot_seconds", Json::from(a.hot_seconds)),
+        ("wall_seconds", Json::from(a.wall_seconds)),
+        ("req_per_sec", Json::from(n as f64 / a.hot_seconds.max(1e-12))),
+        (
+            "ns_per_request",
+            Json::from(a.hot_seconds * 1e9 / n.max(1) as f64),
+        ),
+        ("dispatched_total", Json::from(a.dispatched_total as f64)),
+        ("dropped", Json::from(a.dropped as f64)),
+        ("peak_log_bytes", Json::from(a.peak_log_bytes)),
+    ])
+}
+
+/// One arm of the e2e benchmark: a full simulated run plus its wall time.
+fn e2e_arm(
+    arrivals: Vec<crate::workload::ArrivalEvent>,
+    legacy: bool,
+) -> (SimResult, f64) {
+    let fleet = FleetSpec::parse("4*llama3-8b@0.12").expect("static fleet spec");
+    let mut fc = FleetConfig::from(fleet);
+    fc.legacy_hot_path = legacy;
+    if !legacy {
+        fc.logs = LogConfig::bounded(1024);
+        fc.lean_metrics = true;
+    }
+    let t = Instant::now();
+    let res = run_fleet(fc, "kairos", "kairos", arrivals);
+    (res, t.elapsed().as_secs_f64())
+}
+
+fn e2e_arm_json(res: &SimResult, wall: f64) -> Json {
+    let requests = res.metrics.total_requests;
+    Json::obj(vec![
+        ("wall_seconds", Json::from(wall)),
+        ("requests", Json::from(requests as f64)),
+        (
+            "req_per_sec",
+            Json::from(requests as f64 / wall.max(1e-12)),
+        ),
+        ("dispatched_total", Json::from(res.dispatched_total as f64)),
+        ("dropped", Json::from(res.dropped_requests as f64)),
+        ("peak_log_bytes", Json::from(res.log_state_bytes)),
+        ("n_workflows", Json::from(res.summary.n_workflows)),
+        ("avg_token_latency", Json::from(res.summary.avg_token_latency)),
+        ("p99_token_latency", Json::from(res.summary.p99_token_latency)),
+    ])
+}
+
+fn provenance(seed: u64, mode: &str) -> Json {
+    let host = if std::env::var_os("CI").is_some() { "ci" } else { "local" };
+    Json::obj(vec![
+        ("host", Json::from(host)),
+        ("seed", Json::from(seed as f64)),
+        ("mode", Json::from(mode)),
+    ])
+}
+
+fn write_json(path: &std::path::Path, j: &Json) -> crate::Result<()> {
+    std::fs::write(path, format!("{j}\n"))?;
+    Ok(())
+}
+
+/// Run both benchmarks and write `BENCH_pump.json` / `BENCH_e2e.json`.
+pub fn run(opts: &BenchOptions) -> crate::Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let mode = if opts.quick { "quick" } else { "full" };
+    let (pump_n, e2e_tasks, e2e_rate) = if opts.quick {
+        (20_000, 2_000, 8.0)
+    } else {
+        (1_000_000, 120_000, 8.0)
+    };
+
+    println!("bench ({mode}): pump {pump_n} requests, e2e {e2e_tasks} tasks, seed {}", opts.seed);
+
+    // --- pump microbench -------------------------------------------------
+    let stream = pump_stream(pump_n, opts.seed);
+    let baseline = pump_arm(&stream, true);
+    let optimized = pump_arm(&stream, false);
+    // The A/B must measure speed, never behavior.
+    assert_eq!(
+        baseline.dispatched_total, optimized.dispatched_total,
+        "hot-path arms diverged on dispatch decisions"
+    );
+    assert_eq!(baseline.dropped, optimized.dropped);
+    let speedup = baseline.hot_seconds / optimized.hot_seconds.max(1e-12);
+    let pump_json = Json::obj(vec![
+        ("schema", Json::from("kairos-bench-pump/v1")),
+        ("mode", Json::from(mode)),
+        ("requests", Json::from(pump_n)),
+        ("fleet", Json::from("3*llama3-8b@0.12,llama2-13b@0.12")),
+        ("provenance", provenance(opts.seed, mode)),
+        ("baseline", pump_arm_json(pump_n, &baseline)),
+        ("optimized", pump_arm_json(pump_n, &optimized)),
+        ("speedup", Json::from(speedup)),
+    ]);
+    let pump_path = opts.out_dir.join("BENCH_pump.json");
+    write_json(&pump_path, &pump_json)?;
+    println!(
+        "pump: baseline {:.0} req/s, optimized {:.0} req/s ({speedup:.2}x), \
+         log bytes {} -> {}",
+        pump_n as f64 / baseline.hot_seconds.max(1e-12),
+        pump_n as f64 / optimized.hot_seconds.max(1e-12),
+        baseline.peak_log_bytes,
+        optimized.peak_log_bytes,
+    );
+
+    // --- e2e benchmark ---------------------------------------------------
+    let trace = TraceGen::default().generate(
+        &WorkloadMix::colocated(),
+        e2e_rate,
+        e2e_tasks,
+        &mut Rng::new(opts.seed),
+    );
+    let (base_res, base_wall) = e2e_arm(trace.clone(), true);
+    let (opt_res, opt_wall) = e2e_arm(trace, false);
+    assert_eq!(
+        base_res.dispatched_total, opt_res.dispatched_total,
+        "e2e arms diverged on dispatch decisions"
+    );
+    // Sketch fidelity, measured on the exact-mode arm: the streaming
+    // summary must track the full-sample percentiles it replaces in lean
+    // mode.
+    let exact = base_res.metrics.summary().expect("baseline arm finished workflows");
+    let sketch = base_res
+        .metrics
+        .streaming_summary()
+        .expect("sketches fed in both modes");
+    let e2e_speedup = base_wall / opt_wall.max(1e-12);
+    let e2e_json = Json::obj(vec![
+        ("schema", Json::from("kairos-bench-e2e/v1")),
+        ("mode", Json::from(mode)),
+        ("tasks", Json::from(e2e_tasks)),
+        ("rate", Json::from(e2e_rate)),
+        ("fleet", Json::from("4*llama3-8b@0.12")),
+        ("provenance", provenance(opts.seed, mode)),
+        ("baseline", e2e_arm_json(&base_res, base_wall)),
+        ("optimized", e2e_arm_json(&opt_res, opt_wall)),
+        ("speedup", Json::from(e2e_speedup)),
+        (
+            "sketch_vs_exact",
+            Json::obj(vec![
+                (
+                    "p50_abs_err",
+                    Json::from((sketch.p50_token_latency - exact.p50_token_latency).abs()),
+                ),
+                (
+                    "p99_abs_err",
+                    Json::from((sketch.p99_token_latency - exact.p99_token_latency).abs()),
+                ),
+                (
+                    "distinct_agent_families",
+                    Json::from(base_res.metrics.stream.distinct_agent_families()),
+                ),
+            ]),
+        ),
+    ]);
+    let e2e_path = opts.out_dir.join("BENCH_e2e.json");
+    write_json(&e2e_path, &e2e_json)?;
+    println!(
+        "e2e:  baseline {base_wall:.2}s, optimized {opt_wall:.2}s ({e2e_speedup:.2}x), \
+         log bytes {} -> {}",
+        base_res.log_state_bytes, opt_res.log_state_bytes,
+    );
+    println!("wrote {} and {}", pump_path.display(), e2e_path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pump_arms_agree_and_report_sane_numbers() {
+        let stream = pump_stream(300, 7);
+        let base = pump_arm(&stream, true);
+        let opt = pump_arm(&stream, false);
+        assert_eq!(base.dispatched_total, opt.dispatched_total);
+        assert_eq!(base.dropped, opt.dropped);
+        assert!(base.dispatched_total > 0);
+        assert!(base.hot_seconds > 0.0 && opt.hot_seconds > 0.0);
+        assert!(
+            opt.peak_log_bytes <= base.peak_log_bytes,
+            "bounded logs must not pin more than full logs ({} > {})",
+            opt.peak_log_bytes,
+            base.peak_log_bytes
+        );
+    }
+
+    #[test]
+    fn pump_stream_is_seed_deterministic() {
+        let a = pump_stream(100, 3);
+        let b = pump_stream(100, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.agent, y.agent);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+        }
+    }
+
+    #[test]
+    fn bench_json_round_trips_through_parser() {
+        let arm = PumpArm {
+            hot_seconds: 0.25,
+            wall_seconds: 1.0,
+            dispatched_total: 1000,
+            dropped: 0,
+            peak_log_bytes: 4096,
+        };
+        let j = Json::obj(vec![
+            ("schema", Json::from("kairos-bench-pump/v1")),
+            ("baseline", pump_arm_json(1000, &arm)),
+        ]);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            back.get("baseline").unwrap().get("req_per_sec").unwrap().as_f64(),
+            Some(4000.0)
+        );
+    }
+}

@@ -36,7 +36,7 @@ use crate::workload::{FileSource, GenSource, Trace, TraceGen, TraceSource, Workl
 
 /// Flags that take no value (`--flag` alone means `true`; an explicit
 /// `--flag false` still parses).
-const BOOL_FLAGS: &[&str] = &["autoscale"];
+const BOOL_FLAGS: &[&str] = &["autoscale", "quick"];
 
 /// Parsed `--key value` flags plus positional args.
 #[derive(Debug, Default)]
@@ -150,6 +150,7 @@ USAGE:
   kairos trace stats  --in FILE
   kairos figures     <table1|fig3..fig18|overhead|all> [--out results]
   kairos quickstart  [--artifacts artifacts] [--model tiny]
+  kairos bench       [--quick] [--seed S] [--out DIR]
 
 TRACE FILES — JSONL, one arrival record per line (see the TraceRecord
   rustdoc for the schema). Every sweep arm replays the SAME materialized
@@ -177,6 +178,14 @@ ROUTE POLICY — `pinned` (the static affinity stamp) or
   online from measured per-family latency, fall back to pins until
   converged, and balance `Any` requests to the least-pressured group;
   `route-sweep` compares both policies on the same trace.
+
+BENCH — seeded speed runs of the serving hot path: a pump microbench
+  (submit→pump→drain of external requests) and a full simulated run, each
+  as an in-binary baseline-vs-optimized A/B (legacy linear scans + full
+  logs + exact metrics vs indexed scans + ring-buffer logs + streaming
+  sketches). Writes `BENCH_pump.json` and `BENCH_e2e.json` to `--out`
+  (default `.`); `--quick` shrinks both runs to CI-smoke size. Decision
+  counts are seed-deterministic; wall-clock fields vary by host.
 
 PRESSURE TRACE — `;`-separated `TARGET:TIME=MULT,...` with TARGET an
   instance index or `*`: piecewise co-tenant KV-pressure multipliers, e.g.
@@ -208,6 +217,7 @@ pub fn run(raw: Vec<String>) -> crate::Result<()> {
             crate::figures::run(id, out)
         }
         Some("quickstart") => quickstart(&args),
+        Some("bench") => bench_cmd(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -444,6 +454,9 @@ fn serve(args: &Args) -> crate::Result<()> {
         affinity,
         route,
         profile_half_life: cfg.profile_half_life,
+        logs: crate::server::coordinator::LogConfig::full(),
+        lean_metrics: false,
+        legacy_hot_path: false,
     };
     let affine = fc.affinity.is_some() || matches!(fc.route, Some(RoutePolicy::Learned { .. }));
     let res = run_fleet(fc, &cfg.scheduler, &cfg.dispatcher, arrivals);
@@ -909,6 +922,16 @@ fn trace_stats_cmd(args: &Args) -> crate::Result<()> {
         .count();
     println!("class stamps: {stamped} of {stages} stages");
     Ok(())
+}
+
+/// `kairos bench`: the seeded speed harness (see [`crate::bench`]).
+fn bench_cmd(args: &Args) -> crate::Result<()> {
+    let opts = crate::bench::BenchOptions {
+        quick: args.bool_flag("quick").map_err(|e| anyhow::anyhow!(e))?,
+        seed: num_u64(args, "seed", 42)?,
+        out_dir: std::path::PathBuf::from(args.get("out").unwrap_or(".")),
+    };
+    crate::bench::run(&opts)
 }
 
 fn quickstart(args: &Args) -> crate::Result<()> {

@@ -18,6 +18,7 @@
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod agents;
+pub mod bench;
 pub mod bus;
 pub mod cli;
 pub mod config;

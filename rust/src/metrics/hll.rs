@@ -1,0 +1,174 @@
+//! HyperLogLog distinct counting for (agent, family) cardinality.
+//!
+//! A million-request run touches an unknown number of distinct
+//! (agent, serving-family) pairs — the live fan-out the routing layer is
+//! actually exercising. Tracking them exactly needs a hash set that grows
+//! with the workload; [`Hll`] estimates the cardinality in `2^b` bytes with
+//! ~`1.04/sqrt(2^b)` relative error. The hash is a fixed splitmix64
+//! finalizer — not `std`'s randomly-seeded default hasher — so estimates
+//! are bit-identical across runs, platforms and toolchains: the
+//! determinism contract every number in a `BENCH_*.json` carries.
+
+/// The splitmix64 finalizer: a cheap, well-mixed, *fixed* 64-bit hash.
+/// Public so callers packing composite keys (e.g. agent id × model family)
+/// hash them the same way everywhere.
+pub fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// A HyperLogLog sketch with `2^b` one-byte registers.
+#[derive(Debug, Clone)]
+pub struct Hll {
+    registers: Vec<u8>,
+    b: u32,
+}
+
+impl Default for Hll {
+    /// 256 registers (b = 8): ~6.5% standard error in 256 bytes.
+    fn default() -> Self {
+        Hll::new(8)
+    }
+}
+
+impl Hll {
+    /// `b` index bits, `4 ..= 16` (i.e. 16 to 65536 registers).
+    pub fn new(b: u32) -> Hll {
+        assert!((4..=16).contains(&b), "HLL precision out of range: {b}");
+        Hll { registers: vec![0; 1 << b], b }
+    }
+
+    /// Number of registers.
+    pub fn m(&self) -> usize {
+        self.registers.len()
+    }
+
+    /// Insert a key by value; the sketch hashes it with [`mix64`].
+    pub fn insert_u64(&mut self, key: u64) {
+        self.insert_hash(mix64(key));
+    }
+
+    /// Insert an already-hashed key (must be uniformly mixed).
+    pub fn insert_hash(&mut self, h: u64) {
+        let idx = (h >> (64 - self.b)) as usize;
+        // Rank of the first set bit in the remaining 64-b bits, 1-based;
+        // an all-zero remainder saturates at 64-b+1.
+        let rest = h << self.b;
+        let rank = if rest == 0 { 64 - self.b + 1 } else { rest.leading_zeros() + 1 };
+        let rank = rank as u8;
+        if rank > self.registers[idx] {
+            self.registers[idx] = rank;
+        }
+    }
+
+    /// Estimated distinct-key count (with the standard small-range
+    /// linear-counting correction; 64-bit hashes need no large-range one).
+    pub fn estimate(&self) -> f64 {
+        let m = self.registers.len() as f64;
+        let alpha = match self.registers.len() {
+            16 => 0.673,
+            32 => 0.697,
+            64 => 0.709,
+            _ => 0.7213 / (1.0 + 1.079 / m),
+        };
+        // Ranks are at most 64-b+1 <= 61, so the shift below cannot
+        // overflow a u64.
+        let sum: f64 = self
+            .registers
+            .iter()
+            .map(|&r| 1.0 / (1u64 << r) as f64)
+            .sum();
+        let raw = alpha * m * m / sum;
+        if raw <= 2.5 * m {
+            let zeros = self.registers.iter().filter(|&&r| r == 0).count();
+            if zeros > 0 {
+                return m * (m / zeros as f64).ln();
+            }
+        }
+        raw
+    }
+
+    /// Merge another sketch of the same precision (register-wise max).
+    pub fn merge(&mut self, other: &Hll) {
+        assert_eq!(self.b, other.b, "HLL precision mismatch");
+        for (a, &b) in self.registers.iter_mut().zip(&other.registers) {
+            *a = (*a).max(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_estimates_zero() {
+        let h = Hll::new(8);
+        assert_eq!(h.estimate(), 0.0);
+    }
+
+    #[test]
+    fn duplicates_do_not_inflate() {
+        let mut h = Hll::new(8);
+        for _ in 0..10_000 {
+            h.insert_u64(42);
+        }
+        let est = h.estimate();
+        assert!((0.9..=1.5).contains(&est), "one distinct key, estimated {est}");
+    }
+
+    #[test]
+    fn small_cardinalities_are_near_exact() {
+        let mut h = Hll::new(10);
+        for k in 0..50u64 {
+            h.insert_u64(k);
+            h.insert_u64(k); // duplicate inserts are free
+        }
+        let est = h.estimate();
+        assert!((est - 50.0).abs() < 5.0, "estimated {est} for 50 keys");
+    }
+
+    #[test]
+    fn large_cardinalities_within_error_bound() {
+        // b=10 => 1024 registers => ~3.3% standard error; assert 10%.
+        let mut h = Hll::new(10);
+        let n = 100_000u64;
+        for k in 0..n {
+            h.insert_u64(k);
+        }
+        let est = h.estimate();
+        let rel = (est - n as f64).abs() / n as f64;
+        assert!(rel < 0.10, "estimated {est} for {n} keys (rel err {rel:.3})");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut h = Hll::new(8);
+            for k in 0..1000u64 {
+                h.insert_u64(k.wrapping_mul(0x1234_5678_9ABC_DEF1));
+            }
+            h.estimate()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn merge_matches_union() {
+        let mut a = Hll::new(8);
+        let mut b = Hll::new(8);
+        let mut u = Hll::new(8);
+        for k in 0..500u64 {
+            a.insert_u64(k);
+            u.insert_u64(k);
+        }
+        for k in 250..750u64 {
+            b.insert_u64(k);
+            u.insert_u64(k);
+        }
+        a.merge(&b);
+        assert_eq!(a.estimate(), u.estimate(), "merge is register-wise max");
+    }
+}

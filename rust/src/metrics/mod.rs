@@ -5,10 +5,24 @@
 //! generated. Averages and P90/P95/P99 tails are reported per run, plus the
 //! queueing-time ratio used to calibrate load levels, and per-request
 //! records for the Fig. 8 / Fig. 16 ordering analyses.
+//!
+//! Two accumulation modes coexist. The default retains every
+//! [`RequestRecord`] / [`WorkflowRecord`] — exact summaries, warmup
+//! filtering, and the per-request analyses all read those vectors. **Lean
+//! mode** ([`MetricsCollector::lean`]) drops the vectors and feeds the
+//! [`StreamingMetrics`] sketches instead: O(1) memory per million requests
+//! at the cost of approximate percentiles and no warmup filtering. The
+//! bench harness runs lean; everything else defaults to exact.
+
+pub mod hll;
+pub mod sketch;
 
 use crate::agents::apps::App;
+use crate::engine::cost_model::ModelKind;
+use crate::metrics::hll::Hll;
+use crate::metrics::sketch::QuantileSketch;
 use crate::orchestrator::ids::{AgentId, MsgId};
-use crate::stats::summary::Summary;
+use crate::stats::summary::{OnlineStats, Summary};
 use crate::Time;
 
 /// Per-request (stage-level) record.
@@ -61,6 +75,29 @@ impl WorkflowRecord {
     }
 }
 
+/// Constant-memory accumulators fed on every record regardless of mode:
+/// P² sketches for the latency distributions, running moments for the
+/// queue ratio, and an HLL counting distinct (agent, serving-family)
+/// pairs — the live routing fan-out of the run.
+#[derive(Debug, Default)]
+pub struct StreamingMetrics {
+    /// Program-level token latency of completed workflows.
+    pub token_latency: QuantileSketch,
+    /// Per-stage queueing time (arrival → first admission).
+    pub queue_time: QuantileSketch,
+    /// Per-workflow queueing-time ratio.
+    pub queue_ratio: OnlineStats,
+    /// Distinct (agent, model-family) pairs that actually served.
+    pub agent_families: Hll,
+}
+
+impl StreamingMetrics {
+    /// Estimated number of distinct (agent, family) serving pairs.
+    pub fn distinct_agent_families(&self) -> f64 {
+        self.agent_families.estimate()
+    }
+}
+
 /// Collected metrics of one simulation / serving run.
 #[derive(Debug, Default)]
 pub struct MetricsCollector {
@@ -69,6 +106,20 @@ pub struct MetricsCollector {
     pub preemptions: u64,
     pub recomputed_tokens: u64,
     pub total_tokens: u64,
+    /// Streaming sketches, fed on every record in both modes.
+    pub stream: StreamingMetrics,
+    /// When set, per-record vectors stay empty (counters and sketches
+    /// still accumulate). Set it before the run starts: flipping it
+    /// mid-run leaves the vectors truncated, not re-filtered.
+    pub lean: bool,
+    /// Requests recorded, retained or not (`requests.len()` in exact mode).
+    pub total_requests: u64,
+    /// Workflows recorded, retained or not.
+    pub total_workflows: u64,
+    /// Requests recorded with at least one preemption.
+    pub preempted_requests: u64,
+    recent_qr_sum: f64,
+    recent_qr_n: u64,
 }
 
 /// Summary of a run, in the paper's reporting terms.
@@ -92,14 +143,53 @@ impl MetricsCollector {
 
     pub fn record_request(&mut self, r: RequestRecord) {
         self.total_tokens += r.output_tokens as u64;
-        self.requests.push(r);
+        self.total_requests += 1;
+        self.preempted_requests += u64::from(r.preempt_count > 0);
+        // The autoscaler's load-calibration window, accumulated at record
+        // time in record order so the windowed mean is bit-identical to
+        // summing a retained slice.
+        let e2e = (r.finished_at - r.stage_arrival).max(1e-9);
+        self.recent_qr_sum += (r.queue_time() / e2e).clamp(0.0, 1.0);
+        self.recent_qr_n += 1;
+        self.stream.queue_time.observe(r.queue_time());
+        if !self.lean {
+            self.requests.push(r);
+        }
     }
 
     pub fn record_workflow(&mut self, w: WorkflowRecord) {
-        self.workflows.push(w);
+        self.total_workflows += 1;
+        self.stream.token_latency.observe(w.token_latency());
+        self.stream.queue_ratio.push(w.queue_ratio());
+        if !self.lean {
+            self.workflows.push(w);
+        }
+    }
+
+    /// Feed the (agent, serving family) pair of one completed request into
+    /// the distinct-pair counter.
+    pub fn record_served(&mut self, agent: AgentId, model: ModelKind) {
+        let key = (u64::from(agent.0) << 8) | model as u64;
+        self.stream.agent_families.insert_u64(key);
+    }
+
+    /// Mean queueing-time ratio of requests recorded since the previous
+    /// call, then reset the window (the autoscaler's scale-up pressure
+    /// signal). 0.0 for an empty window.
+    pub fn take_recent_queue_ratio(&mut self) -> f64 {
+        let out = if self.recent_qr_n == 0 {
+            0.0
+        } else {
+            self.recent_qr_sum / self.recent_qr_n as f64
+        };
+        self.recent_qr_sum = 0.0;
+        self.recent_qr_n = 0;
+        out
     }
 
     /// Summarize workflows finishing at or after `from_time` (warmup skip).
+    /// Exact-mode only: lean runs retain no records and get `None` (fall
+    /// back to [`Self::streaming_summary`]).
     pub fn summary_from(&self, from_time: Time) -> Option<RunSummary> {
         let lats: Vec<f64> = self
             .workflows
@@ -133,6 +223,38 @@ impl MetricsCollector {
     pub fn summary(&self) -> Option<RunSummary> {
         self.summary_from(0.0)
     }
+
+    /// Summary from the streaming sketches alone: approximate percentiles,
+    /// no warmup filtering. `None` until a workflow completes.
+    pub fn streaming_summary(&self) -> Option<RunSummary> {
+        if self.total_workflows == 0 {
+            return None;
+        }
+        let tl = &self.stream.token_latency;
+        Some(RunSummary {
+            n_workflows: self.total_workflows as usize,
+            avg_token_latency: tl.mean(),
+            p50_token_latency: tl.p50(),
+            p90_token_latency: tl.p90(),
+            p95_token_latency: tl.p95(),
+            p99_token_latency: tl.p99(),
+            mean_queue_ratio: self.stream.queue_ratio.mean(),
+            preemption_rate: self.preempted_requests as f64
+                / self.total_requests.max(1) as f64,
+            recompute_waste: self.recomputed_tokens as f64
+                / self.total_tokens.max(1) as f64,
+        })
+    }
+
+    /// Requests recorded, independent of retention mode.
+    pub fn n_requests(&self) -> u64 {
+        self.total_requests
+    }
+
+    /// Workflows recorded, independent of retention mode.
+    pub fn n_workflows(&self) -> u64 {
+        self.total_workflows
+    }
 }
 
 #[cfg(test)]
@@ -147,6 +269,19 @@ mod tests {
             finished_at: end,
             output_tokens: tokens,
             queue_time: queue,
+        }
+    }
+
+    fn req(msg: u64, queue: f64, total: f64, preempts: u32) -> RequestRecord {
+        RequestRecord {
+            msg_id: msg,
+            agent: AgentId(0),
+            stage_arrival: 0.0,
+            dispatched_at: queue,
+            finished_at: total,
+            output_tokens: 10,
+            preempt_count: preempts,
+            true_remaining: 0.0,
         }
     }
 
@@ -183,6 +318,7 @@ mod tests {
     #[test]
     fn empty_summary_is_none() {
         assert!(MetricsCollector::new().summary().is_none());
+        assert!(MetricsCollector::new().streaming_summary().is_none());
     }
 
     #[test]
@@ -203,5 +339,68 @@ mod tests {
         m.record_workflow(wf(1, 0.0, 1.0, 1, 0.0));
         let s = m.summary().unwrap();
         assert!((s.preemption_rate - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lean_mode_retains_nothing_but_counts_everything() {
+        let mut m = MetricsCollector::new();
+        m.lean = true;
+        for i in 0..8 {
+            m.record_request(req(i, 1.0, 2.0, u32::from(i < 2)));
+        }
+        for i in 1..=4u64 {
+            m.record_workflow(wf(i, 0.0, i as f64, 10, 0.0));
+        }
+        assert!(m.requests.is_empty() && m.workflows.is_empty());
+        assert_eq!(m.n_requests(), 8);
+        assert_eq!(m.n_workflows(), 4);
+        assert!(m.summary().is_none(), "exact summary needs retained records");
+        let s = m.streaming_summary().unwrap();
+        assert_eq!(s.n_workflows, 4);
+        assert!((s.preemption_rate - 0.25).abs() < 1e-12);
+        // Token latencies are 0.1, 0.2, 0.3, 0.4: exact small-sample path.
+        assert!((s.avg_token_latency - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_summary_tracks_exact_summary() {
+        let mut exact = MetricsCollector::new();
+        for i in 1..=100u64 {
+            exact.record_workflow(wf(i, 0.0, i as f64, 100, 0.0));
+        }
+        let e = exact.summary().unwrap();
+        let s = exact.streaming_summary().unwrap();
+        assert_eq!(s.n_workflows, e.n_workflows);
+        assert!((s.avg_token_latency - e.avg_token_latency).abs() < 1e-9);
+        // P² on a 100-sample sorted uniform stream: within a few
+        // percentile ranks of exact (rank spacing is 0.01 here).
+        assert!((s.p50_token_latency - e.p50_token_latency).abs() < 0.05);
+        assert!((s.p90_token_latency - e.p90_token_latency).abs() < 0.05);
+        assert!((s.mean_queue_ratio - e.mean_queue_ratio).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recent_queue_ratio_window_resets_on_take() {
+        let mut m = MetricsCollector::new();
+        // queue ratios: 0.5 and 0.25.
+        m.record_request(req(1, 1.0, 2.0, 0));
+        m.record_request(req(2, 1.0, 4.0, 0));
+        assert!((m.take_recent_queue_ratio() - 0.375).abs() < 1e-12);
+        assert_eq!(m.take_recent_queue_ratio(), 0.0, "window consumed");
+        m.record_request(req(3, 3.0, 4.0, 0));
+        assert!((m.take_recent_queue_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn served_pairs_count_distinct_agent_family_combinations() {
+        let mut m = MetricsCollector::new();
+        for a in 0..10u32 {
+            for model in [ModelKind::Llama3_8B, ModelKind::Llama2_13B, ModelKind::Tiny] {
+                m.record_served(AgentId(a), model);
+                m.record_served(AgentId(a), model); // duplicates are free
+            }
+        }
+        let est = m.stream.distinct_agent_families();
+        assert!((est - 30.0).abs() < 3.0, "30 distinct pairs, estimated {est}");
     }
 }

@@ -1,0 +1,390 @@
+//! Streaming quantile estimation: the P² algorithm (Jain & Chlamtac 1985).
+//!
+//! The sweeps' summary path collects every per-workflow token latency into
+//! a `Vec<f64>` and sorts it once at the end — exact, but O(n) memory and
+//! useless for a million-request bench run whose only reader wants five
+//! percentiles. [`P2Quantile`] tracks one quantile with five markers in
+//! O(1) memory and deterministic arithmetic (no randomness, no hashing),
+//! so two runs over the same stream report bit-identical estimates.
+//! [`QuantileSketch`] bundles the four percentiles the paper reports
+//! (P50/P90/P95/P99) with streaming min/max/mean.
+//!
+//! Accuracy is rank-bounded, not value-bounded: the estimate converges to
+//! a value whose *rank* is near `p`, which is what the property tests in
+//! this module pin (against the exact [`Summary`](crate::stats::summary::Summary)
+//! on sorted, reversed, constant and mixed adversarial streams).
+
+use crate::stats::summary::OnlineStats;
+
+/// One streaming quantile estimator (the P² five-marker algorithm).
+///
+/// Exact for fewer than five observations (it just sorts them); afterwards
+/// the five markers approximate the min, the p/2, p, (1+p)/2 quantiles and
+/// the max, nudged toward their desired ranks on every observation.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    p: f64,
+    /// Marker heights (estimated quantile values).
+    q: [f64; 5],
+    /// Actual marker positions (1-based ranks).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Per-observation increments of the desired positions.
+    dn: [f64; 5],
+    count: u64,
+    /// The first five observations (exact small-sample path).
+    init: [f64; 5],
+}
+
+impl P2Quantile {
+    /// Estimator for quantile `p` in `[0, 1]` (e.g. `0.99` for P99).
+    pub fn new(p: f64) -> P2Quantile {
+        assert!((0.0..=1.0).contains(&p), "quantile out of range: {p}");
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+            init: [0.0; 5],
+        }
+    }
+
+    /// The tracked quantile in `[0, 1]`.
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Feed one observation. Non-finite samples are rejected by the
+    /// caller-facing [`QuantileSketch`]; feeding one here corrupts the
+    /// marker invariants, so don't.
+    pub fn observe(&mut self, x: f64) {
+        if self.count < 5 {
+            self.init[self.count as usize] = x;
+            self.count += 1;
+            if self.count == 5 {
+                let mut s = self.init;
+                s.sort_by(f64::total_cmp);
+                self.q = s;
+            }
+            return;
+        }
+        self.count += 1;
+        // Locate the cell k with q[k] <= x < q[k+1], extending the extremes.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 1..4 {
+                if x >= self.q[i] {
+                    k = i;
+                } else {
+                    break;
+                }
+            }
+            k
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+        // Nudge each interior marker toward its desired rank, preferring
+        // the parabolic (P²) height when it stays between its neighbors.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let d = d.signum();
+                let parabolic = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < parabolic && parabolic < self.q[i + 1] {
+                    parabolic
+                } else {
+                    self.linear(i, d)
+                };
+                self.n[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// The current estimate: NaN before any observation, exact (same
+    /// linear-interpolation convention as
+    /// [`Summary::percentile`](crate::stats::summary::Summary::percentile))
+    /// below five observations, the center marker afterwards.
+    pub fn value(&self) -> f64 {
+        let c = self.count as usize;
+        if c == 0 {
+            return f64::NAN;
+        }
+        if c < 5 {
+            let mut s = self.init[..c].to_vec();
+            s.sort_by(f64::total_cmp);
+            if c == 1 {
+                return s[0];
+            }
+            let rank = self.p * (c - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            let frac = rank - lo as f64;
+            return s[lo] * (1.0 - frac) + s[hi] * frac;
+        }
+        self.q[2]
+    }
+}
+
+/// The percentile set the paper reports, streamed: P50/P90/P95/P99 markers
+/// plus exact streaming min/max/mean (Welford). O(1) memory per stream.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    p50: P2Quantile,
+    p90: P2Quantile,
+    p95: P2Quantile,
+    p99: P2Quantile,
+    stats: OnlineStats,
+    min: f64,
+    max: f64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        QuantileSketch::new()
+    }
+}
+
+impl QuantileSketch {
+    pub fn new() -> QuantileSketch {
+        QuantileSketch {
+            p50: P2Quantile::new(0.50),
+            p90: P2Quantile::new(0.90),
+            p95: P2Quantile::new(0.95),
+            p99: P2Quantile::new(0.99),
+            stats: OnlineStats::new(),
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Feed one observation. Non-finite samples are dropped (they would
+    /// corrupt the marker invariants; the exact-path `Summary` tolerates
+    /// them by sorting last, which the count-based contract here mirrors
+    /// by excluding them from [`QuantileSketch::count`]).
+    pub fn observe(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.p50.observe(x);
+        self.p90.observe(x);
+        self.p95.observe(x);
+        self.p99.observe(x);
+        self.stats.push(x);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.stats.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.stats.mean()
+    }
+
+    pub fn std(&self) -> f64 {
+        self.stats.std()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.p50.value()
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.p90.value()
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.p95.value()
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.p99.value()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+    use crate::stats::summary::Summary;
+    use crate::testing::forall;
+
+    /// The P² accuracy contract, robust to both failure shapes: the
+    /// estimate must land inside the exact values at ranks `p ± tol_rank`
+    /// (percent), OR within a small *value* distance of the exact
+    /// percentile (for distributions with atoms/clusters, where a tiny
+    /// value error translates to a large rank error and vice versa).
+    fn assert_close(
+        exact: &Summary,
+        estimate: f64,
+        p: f64,
+        tol_rank: f64,
+    ) -> Result<(), String> {
+        let lo = exact.percentile((p - tol_rank).max(0.0));
+        let hi = exact.percentile((p + tol_rank).min(100.0));
+        let eps = 1e-9 + (exact.max() - exact.min()).abs() * 1e-9;
+        if (lo - eps..=hi + eps).contains(&estimate) {
+            return Ok(());
+        }
+        let target = exact.percentile(p);
+        let spread = exact.percentile(95.0) - exact.percentile(5.0);
+        if (estimate - target).abs() <= 0.05 * (target.abs() + spread) {
+            return Ok(());
+        }
+        Err(format!(
+            "P{p} estimate {estimate} outside rank window [{lo}, {hi}] and \
+             not value-close to exact {target} (n={})",
+            exact.len()
+        ))
+    }
+
+    fn check_all_percentiles(samples: &[f64], tol_rank: f64) -> Result<(), String> {
+        let mut sk = QuantileSketch::new();
+        for &x in samples {
+            sk.observe(x);
+        }
+        let exact = Summary::from_samples(samples).unwrap();
+        assert_close(&exact, sk.p50(), 50.0, tol_rank)?;
+        assert_close(&exact, sk.p90(), 90.0, tol_rank)?;
+        assert_close(&exact, sk.p95(), 95.0, tol_rank)?;
+        assert_close(&exact, sk.p99(), 99.0, tol_rank)?;
+        if (sk.mean() - exact.mean()).abs() > 1e-9 * (1.0 + exact.mean().abs()) {
+            return Err(format!("mean {} != exact {}", sk.mean(), exact.mean()));
+        }
+        if sk.min() != exact.min() || sk.max() != exact.max() {
+            return Err("min/max not exact".into());
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn exact_below_five_samples() {
+        let mut q = P2Quantile::new(0.5);
+        assert!(q.value().is_nan());
+        q.observe(3.0);
+        assert_eq!(q.value(), 3.0);
+        q.observe(1.0);
+        assert_eq!(q.value(), 2.0); // interpolated median of {1, 3}
+        q.observe(2.0);
+        assert_eq!(q.value(), 2.0);
+    }
+
+    #[test]
+    fn constant_stream_is_exact() {
+        let xs = vec![7.25; 5000];
+        let mut sk = QuantileSketch::new();
+        for &x in &xs {
+            sk.observe(x);
+        }
+        assert_eq!(sk.p50(), 7.25);
+        assert_eq!(sk.p99(), 7.25);
+        assert_eq!(sk.min(), 7.25);
+        assert_eq!(sk.max(), 7.25);
+        assert_eq!(sk.count(), 5000);
+    }
+
+    #[test]
+    fn sorted_stream_tracks_exact_quantiles() {
+        // Adversarial for marker trackers: every observation lands in the
+        // top cell.
+        let xs: Vec<f64> = (0..8000).map(|i| i as f64).collect();
+        check_all_percentiles(&xs, 4.0).unwrap();
+    }
+
+    #[test]
+    fn reversed_stream_tracks_exact_quantiles() {
+        // The mirror attack: every observation lands in the bottom cell.
+        let xs: Vec<f64> = (0..8000).rev().map(|i| i as f64).collect();
+        check_all_percentiles(&xs, 4.0).unwrap();
+    }
+
+    #[test]
+    fn mixed_random_streams_stay_rank_bounded() {
+        forall(
+            "p2-rank-error",
+            25,
+            0xBEEF,
+            |rng| {
+                let n = 500 + rng.below(4000);
+                // A mix of uniform, heavy-tail and clustered samples
+                // (NaN-free by construction).
+                (0..n)
+                    .map(|_| match rng.below(3) {
+                        0 => rng.f64() * 10.0,
+                        1 => 1.0 / rng.f64_open().max(1e-3).sqrt(), // heavy tail
+                        _ => 5.0 + rng.f64() * 0.5,                 // cluster
+                    })
+                    .collect::<Vec<f64>>()
+            },
+            |xs| check_all_percentiles(xs, 6.0),
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let xs: Vec<f64> = {
+            let mut rng = Rng::new(99);
+            (0..2000).map(|_| rng.f64() * 100.0).collect()
+        };
+        let run = |xs: &[f64]| {
+            let mut sk = QuantileSketch::new();
+            for &x in xs {
+                sk.observe(x);
+            }
+            (sk.p50(), sk.p90(), sk.p95(), sk.p99())
+        };
+        assert_eq!(run(&xs), run(&xs), "same stream, bit-identical estimates");
+    }
+
+    #[test]
+    fn non_finite_samples_are_dropped() {
+        let mut sk = QuantileSketch::new();
+        for &x in &[1.0, f64::NAN, 2.0, f64::INFINITY, 3.0, f64::NEG_INFINITY] {
+            sk.observe(x);
+        }
+        assert_eq!(sk.count(), 3);
+        assert_eq!(sk.min(), 1.0);
+        assert_eq!(sk.max(), 3.0);
+        assert_eq!(sk.p50(), 2.0);
+    }
+}

@@ -28,7 +28,7 @@
 use std::cell::Cell;
 use std::collections::HashMap;
 
-use crate::agents::apps::WorkflowPlan;
+use crate::agents::apps::{App, WorkflowPlan};
 use crate::dispatch::DispatchPolicy;
 use crate::engine::core::{
     EngineConfig, EngineCore, ExecBackend, InstanceStatus, SimBackend, StepOutcome,
@@ -45,6 +45,7 @@ use crate::orchestrator::router::{GroupPressure, RouteDecision, RoutePolicy, Rou
 use crate::orchestrator::Orchestrator;
 use crate::server::autoscale::{Autoscaler, FleetObservation, GroupLoad, ScaleAction};
 use crate::server::pressure::PressureTrace;
+use crate::util::RingLog;
 use crate::workload::trace::TraceRecord;
 use crate::Time;
 
@@ -308,9 +309,10 @@ pub struct ScaleEvent {
     pub at: Time,
     pub instance: usize,
     pub kind: ScaleEventKind,
-    /// Length of the dispatch log when the event fired: everything at or
-    /// after this index happened with the fleet in its post-event shape
-    /// (e.g. no dispatch past a `RetireStart`'s seq may target its
+    /// Stream position of the dispatch log (entries ever appended, not
+    /// retained — see [`RingLog::total`]) when the event fired: everything
+    /// at or after this sequence happened with the fleet in its post-event
+    /// shape (e.g. no dispatch past a `RetireStart`'s seq may target its
     /// instance).
     pub dispatch_seq: usize,
 }
@@ -326,6 +328,59 @@ pub struct GroupDispatch {
     pub class: ModelClass,
     /// Model family of `instance` at dispatch time.
     pub model: ModelKind,
+}
+
+/// Retention caps for the coordinator's per-request decision logs
+/// ([`Coordinator::dispatch_log`], `group_log`, `route_log`, `trace_log`).
+/// `None` retains everything (the default, and what the seam tests and the
+/// replay toolchain require); `Some(k)` keeps only the newest `k` entries
+/// of that log. Capping changes retention only, never behavior: the same
+/// entries are appended in the same order either way (contract pinned in
+/// `tests/runtime_seam.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LogConfig {
+    pub dispatch: Option<usize>,
+    pub group: Option<usize>,
+    pub route: Option<usize>,
+    pub trace: Option<usize>,
+}
+
+impl LogConfig {
+    /// Unbounded retention on every log (the default).
+    pub fn full() -> LogConfig {
+        LogConfig { dispatch: None, group: None, route: None, trace: None }
+    }
+
+    /// The same cap on every log — million-request runs keep a tail for
+    /// spot checks without holding the whole decision history.
+    pub fn bounded(cap: usize) -> LogConfig {
+        LogConfig {
+            dispatch: Some(cap),
+            group: Some(cap),
+            route: Some(cap),
+            trace: Some(cap),
+        }
+    }
+}
+
+impl Default for LogConfig {
+    fn default() -> Self {
+        LogConfig::full()
+    }
+}
+
+/// One model family's slot index, maintained incrementally on every fleet
+/// change so the pump's per-head candidate scan and the router's group
+/// pressures read `O(family)` state instead of rescanning all instances.
+/// Slots are never removed (tombstones keep their index); `active` counts
+/// the family's slots currently [`InstanceState::Active`].
+#[derive(Debug, Clone)]
+struct FamilyIndex {
+    model: ModelKind,
+    /// This family's slot indices, in fleet (= first-seen) order.
+    slots: Vec<usize>,
+    /// How many of `slots` are Active right now.
+    active: usize,
 }
 
 // ---------------------------------------------------------------------------
@@ -395,11 +450,12 @@ pub struct Coordinator<B: ExecBackend> {
     pub dropped: u64,
     /// Every dispatch decision `(request, instance)` in order — the
     /// driver-equivalence contract (two drivers over the same trace must
-    /// produce the same log).
-    pub dispatch_log: Vec<(RequestId, usize)>,
+    /// produce the same log). Retention is capped by [`LogConfig`];
+    /// unbounded by default.
+    pub dispatch_log: RingLog<(RequestId, usize)>,
     /// The dispatch log with serving-group context (same order and length
     /// as `dispatch_log`); the sharded seam contract compares this.
-    pub group_log: Vec<GroupDispatch>,
+    pub group_log: RingLog<GroupDispatch>,
     /// Reusable per-instance status snapshot: refreshed in place, only for
     /// instances whose engine changed since the last pump (no per-pump
     /// allocation — see `benches/bench_overhead.rs`).
@@ -426,17 +482,34 @@ pub struct Coordinator<B: ExecBackend> {
     /// Factory for new instances' backends (None for fleets built from
     /// pre-constructed engines, e.g. PJRT: those cannot autoscale up).
     make_backend: Option<Box<dyn FnMut(&InstanceSpec) -> B>>,
-    /// First metrics record not yet folded into an autoscale observation.
-    scaler_seen_requests: usize,
     /// Reusable per-pump shard-blocked flags (no per-pump allocation).
     blocked_buf: Vec<bool>,
+    /// Per-model-family slot index, in fleet first-seen order, maintained
+    /// incrementally on every fleet change.
+    families: Vec<FamilyIndex>,
+    /// Cached instance-derived group pressures (queue depths are re-read
+    /// on every [`Self::group_pressures`] call — they move per enqueue).
+    pressure_cache: Vec<GroupPressure>,
+    /// Set whenever the status snapshot or an instance's lifecycle state
+    /// changes; the next pressure read rebuilds the cache.
+    pressure_cache_dirty: bool,
+    /// Slots marked stale since the last batched refresh (no duplicates:
+    /// guarded by `status_dirty`). Lets [`Self::refresh_statuses`] touch
+    /// only changed engines instead of re-checking every slot per pump.
+    dirty_slots: Vec<usize>,
+    /// Run the pre-index linear candidate scan and per-call pressure
+    /// rebuild instead of the incremental structures. Exists so
+    /// `kairos bench` can measure a true in-binary baseline-vs-optimized
+    /// A/B on one commit, and so the seam tests can pin both paths to
+    /// identical decisions.
+    legacy_hot_path: bool,
     /// The routing layer: picks each submitted request's serving group
     /// from its affinity stamp and, under the learned policy, the measured
     /// per-family profiles and live group pressures.
     router: Router,
     /// Every routing decision, in submission order — the third leg of the
     /// driver-equivalence contract next to `dispatch_log` and `group_log`.
-    pub route_log: Vec<RouteDecision>,
+    pub route_log: RingLog<RouteDecision>,
     /// Autoscaler-provisioned instances still inside their boot delay.
     pending_boots: Vec<PendingBoot>,
     /// The recording path: every submitted plan as a [`TraceRecord`] with
@@ -445,9 +518,10 @@ pub struct Coordinator<B: ExecBackend> {
     /// written to JSONL ([`crate::workload::Trace`]) and replayed
     /// bit-identically; the record→replay contract rides the same seam as
     /// the dispatch, group, route and scale logs (`tests/runtime_seam.rs`).
-    /// Free-standing [`Self::submit_external`] requests carry no plan and
-    /// are NOT recorded (a ROADMAP open item).
-    pub trace_log: Vec<TraceRecord>,
+    /// Free-standing [`Self::submit_external`] requests are recorded too,
+    /// as single-stage [`crate::agents::apps::App::Ext`] records, so a
+    /// mixed plan/external run replays in full.
+    pub trace_log: RingLog<TraceRecord>,
 }
 
 impl Coordinator<SimBackend> {
@@ -500,6 +574,21 @@ impl<B: ExecBackend> Coordinator<B> {
         let base_capacity: Vec<u64> = status_buf.iter().map(|s| s.capacity_tokens).collect();
         let n = engines.len();
         let reference_cost = fleet.reference_cost();
+        // Family index in fleet first-seen order; every slot starts Active.
+        let mut families: Vec<FamilyIndex> = Vec::new();
+        for (j, spec) in fleet.instances.iter().enumerate() {
+            match families.iter_mut().find(|f| f.model == spec.model) {
+                Some(f) => {
+                    f.slots.push(j);
+                    f.active += 1;
+                }
+                None => families.push(FamilyIndex {
+                    model: spec.model,
+                    slots: vec![j],
+                    active: 1,
+                }),
+            }
+        }
         Coordinator {
             fleet,
             queue: ShardedQueue::new(),
@@ -513,8 +602,8 @@ impl<B: ExecBackend> Coordinator<B> {
             next_req_id: 1,
             next_msg_id: 1,
             dropped: 0,
-            dispatch_log: Vec::new(),
-            group_log: Vec::new(),
+            dispatch_log: RingLog::new(),
+            group_log: RingLog::new(),
             status_buf,
             status_dirty: vec![false; n],
             reference_cost,
@@ -525,12 +614,16 @@ impl<B: ExecBackend> Coordinator<B> {
             pressure: None,
             autoscaler: None,
             make_backend: None,
-            scaler_seen_requests: 0,
             blocked_buf: Vec::new(),
+            families,
+            pressure_cache: Vec::new(),
+            pressure_cache_dirty: true,
+            dirty_slots: Vec::new(),
+            legacy_hot_path: false,
             router: Router::default(),
-            route_log: Vec::new(),
+            route_log: RingLog::new(),
             pending_boots: Vec::new(),
-            trace_log: Vec::new(),
+            trace_log: RingLog::new(),
         }
     }
 
@@ -597,6 +690,61 @@ impl<B: ExecBackend> Coordinator<B> {
         self.autoscaler.as_ref()
     }
 
+    /// Apply retention caps to the decision logs. Capping changes what is
+    /// *kept*, never what is *decided*: entries are appended identically
+    /// either way (see `tests/runtime_seam.rs`).
+    pub fn set_log_config(&mut self, cfg: LogConfig) {
+        self.dispatch_log.set_cap(cfg.dispatch);
+        self.group_log.set_cap(cfg.group);
+        self.route_log.set_cap(cfg.route);
+        self.trace_log.set_cap(cfg.trace);
+    }
+
+    /// Switch to the pre-index hot path (linear candidate scans, per-call
+    /// pressure rebuilds, unbatched refresh). Decision-for-decision
+    /// identical to the indexed path — `kairos bench` uses it as the
+    /// in-binary baseline arm.
+    pub fn set_legacy_hot_path(&mut self, legacy: bool) {
+        self.legacy_hot_path = legacy;
+    }
+
+    /// Resident bytes pinned by the decision logs (buffer capacities plus
+    /// the trace records' per-stage heap) — the bench harness's
+    /// `peak_log_bytes`.
+    pub fn log_state_bytes(&self) -> usize {
+        let trace_stage_heap: usize = self
+            .trace_log
+            .iter()
+            .map(|r| {
+                r.stages.capacity()
+                    * std::mem::size_of::<crate::workload::trace::StageRecord>()
+            })
+            .sum();
+        self.dispatch_log.approx_bytes()
+            + self.group_log.approx_bytes()
+            + self.route_log.approx_bytes()
+            + self.trace_log.approx_bytes()
+            + self.scale_log.capacity() * std::mem::size_of::<ScaleEvent>()
+            + trace_stage_heap
+    }
+
+    /// Index into [`Self::families`] for `model`, if the fleet has ever
+    /// held the family (slots are never removed, so absence is permanent).
+    fn family_slot(&self, model: ModelKind) -> Option<usize> {
+        self.families.iter().position(|f| f.model == model)
+    }
+
+    /// Mark slot `j`'s status snapshot stale, queueing it for the next
+    /// batched refresh (deduplicated through `status_dirty`), and
+    /// invalidate the cached group pressures.
+    fn mark_dirty(&mut self, j: usize) {
+        if !self.status_dirty[j] {
+            self.status_dirty[j] = true;
+            self.dirty_slots.push(j);
+        }
+        self.pressure_cache_dirty = true;
+    }
+
     /// Register a new instance live, building its backend with the fleet's
     /// factory. Fails for coordinators assembled from pre-constructed
     /// engines (no factory — e.g. the PJRT fleet).
@@ -625,7 +773,10 @@ impl<B: ExecBackend> Coordinator<B> {
                 self.engines[j] = EngineCore::new(j, spec.engine_config(), backend);
                 self.fleet.instances[j] = spec;
                 self.instance_state[j] = InstanceState::Active;
-                self.status_dirty[j] = true;
+                // The slot is already in its family's index (same family by
+                // the reuse predicate); it counts as active again.
+                let fi = self.family_slot(spec.model).expect("reused slot has a family");
+                self.families[fi].active += 1;
                 self.dispatcher.on_instance_reset(j);
                 j
             }
@@ -636,18 +787,30 @@ impl<B: ExecBackend> Coordinator<B> {
                 self.fleet.instances.push(spec);
                 self.base_capacity.push(status.capacity_tokens);
                 self.status_buf.push(status);
-                self.status_dirty.push(true);
+                self.status_dirty.push(false);
                 self.applied_pressure.push(1.0);
                 self.instance_state.push(InstanceState::Active);
                 self.engines.push(engine);
+                match self.family_slot(spec.model) {
+                    Some(fi) => {
+                        self.families[fi].slots.push(j);
+                        self.families[fi].active += 1;
+                    }
+                    None => self.families.push(FamilyIndex {
+                        model: spec.model,
+                        slots: vec![j],
+                        active: 1,
+                    }),
+                }
                 j
             }
         };
+        self.mark_dirty(j);
         self.scale_log.push(ScaleEvent {
             at: now,
             instance: j,
             kind: ScaleEventKind::Grow,
-            dispatch_seq: self.dispatch_log.len(),
+            dispatch_seq: self.dispatch_log.total() as usize,
         });
         self.refresh_statuses(now);
         self.dispatcher.on_fleet_change(&self.status_buf);
@@ -666,12 +829,15 @@ impl<B: ExecBackend> Coordinator<B> {
             return Err(format!("instance {j} is already {:?}", self.instance_state[j]));
         }
         self.instance_state[j] = InstanceState::Draining;
-        self.status_dirty[j] = true;
+        let model = self.fleet.instances[j].model;
+        let fi = self.family_slot(model).expect("live slot has a family");
+        self.families[fi].active -= 1;
+        self.mark_dirty(j);
         self.scale_log.push(ScaleEvent {
             at: now,
             instance: j,
             kind: ScaleEventKind::RetireStart,
-            dispatch_seq: self.dispatch_log.len(),
+            dispatch_seq: self.dispatch_log.total() as usize,
         });
         self.refresh_statuses(now);
         self.dispatcher.on_fleet_change(&self.status_buf);
@@ -693,13 +859,15 @@ impl<B: ExecBackend> Coordinator<B> {
             // Fold-and-zero keeps the end-of-run counter sweep idempotent.
             self.metrics.recomputed_tokens += self.engines[j].recomputed_tokens;
             self.engines[j].recomputed_tokens = 0;
+            // Draining → Retired: the family's active count already
+            // dropped at RetireStart; only the snapshot goes stale here.
             self.instance_state[j] = InstanceState::Retired;
-            self.status_dirty[j] = true;
+            self.mark_dirty(j);
             self.scale_log.push(ScaleEvent {
                 at: now,
                 instance: j,
                 kind: ScaleEventKind::RetireDone,
-                dispatch_seq: self.dispatch_log.len(),
+                dispatch_seq: self.dispatch_log.total() as usize,
             });
         }
     }
@@ -761,7 +929,9 @@ impl<B: ExecBackend> Coordinator<B> {
 
     /// Admit a single free-standing request (no workflow plan) — the real
     /// serving frontend's path. `agent` is interned into the orchestrator's
-    /// registry so profiles still accumulate.
+    /// registry so profiles still accumulate. The request is captured in
+    /// [`Self::trace_log`] as a single-stage [`App::Ext`] record (same
+    /// affinity stamping as plans), so mixed plan/external runs replay.
     pub fn submit_external(
         &mut self,
         agent: &str,
@@ -769,6 +939,20 @@ impl<B: ExecBackend> Coordinator<B> {
         output_tokens: u32,
         now: Time,
     ) -> RequestId {
+        self.trace_log.push(TraceRecord {
+            at: now,
+            app: App::Ext,
+            dataset: "external",
+            stages: vec![crate::workload::trace::StageRecord {
+                agent: crate::workload::trace::intern_name(agent),
+                prompt_tokens,
+                output_tokens,
+                class: match self.orch.class_of_name(agent) {
+                    ModelClass::Any => None,
+                    c => Some(c),
+                },
+            }],
+        });
         let agent = self.orch.registry.intern(agent);
         let id = self.next_req_id;
         self.next_req_id += 1;
@@ -835,7 +1019,58 @@ impl<B: ExecBackend> Coordinator<B> {
     /// so both drivers compute identical pressures at identical submission
     /// points — routing decisions stay inside the driver-equivalence
     /// contract.
-    fn group_pressures(&self) -> Vec<GroupPressure> {
+    ///
+    /// The instance-derived fields (active/inflight/free_tokens) are
+    /// cached and rebuilt only after a pump/refresh/fleet change
+    /// invalidated them; the queue depths move on every enqueue with no
+    /// intervening pump, so they are re-read per call.
+    fn group_pressures(&mut self) -> Vec<GroupPressure> {
+        if self.legacy_hot_path {
+            return self.group_pressures_legacy();
+        }
+        if self.pressure_cache_dirty {
+            self.rebuild_pressure_cache();
+        }
+        let mut out = self.pressure_cache.clone();
+        for g in out.iter_mut() {
+            g.queued = self.queue.group_len(g.model);
+        }
+        out
+    }
+
+    /// Rebuild the cached instance-derived pressure skeleton from the
+    /// family index (same family order and per-family slot order as the
+    /// legacy full rescan, so the sums are identical).
+    fn rebuild_pressure_cache(&mut self) {
+        self.pressure_cache.clear();
+        for f in &self.families {
+            let mut g = GroupPressure {
+                model: f.model,
+                queued: 0,
+                active: 0,
+                inflight: 0,
+                free_tokens: 0,
+            };
+            for &j in &f.slots {
+                if self.instance_state[j] != InstanceState::Active {
+                    continue;
+                }
+                let st = &self.status_buf[j];
+                g.active += 1;
+                g.inflight += st.n_running + st.n_waiting;
+                g.free_tokens += st
+                    .capacity_tokens
+                    .saturating_sub(st.committed_tokens + st.waiting_tokens);
+            }
+            self.pressure_cache.push(g);
+        }
+        self.pressure_cache_dirty = false;
+    }
+
+    /// The pre-cache implementation: rescan every instance per call.
+    /// Kept callable behind [`Self::set_legacy_hot_path`] for the bench
+    /// harness's baseline arm and the hot-path equivalence tests.
+    fn group_pressures_legacy(&self) -> Vec<GroupPressure> {
         let mut out: Vec<GroupPressure> = Vec::new();
         for (j, spec) in self.fleet.instances.iter().enumerate() {
             let i = match out.iter().position(|g| g.model == spec.model) {
@@ -908,7 +1143,23 @@ impl<B: ExecBackend> Coordinator<B> {
     /// stale when its engine changed since the last pump OR its co-tenant
     /// pressure multiplier moved; everything else is reused untouched (no
     /// per-pump allocation — see `benches/bench_overhead.rs`).
+    ///
+    /// Without a pressure trace every multiplier is pinned at 1.0, so only
+    /// slots queued in `dirty_slots` can be stale: the batched path drains
+    /// that queue instead of re-checking every slot per pump. A pressure
+    /// trace makes staleness time-driven (a multiplier can move with no
+    /// engine activity), so it falls back to the full scan.
     fn refresh_statuses(&mut self, now: Time) {
+        if self.pressure.is_none() && !self.legacy_hot_path {
+            while let Some(j) = self.dirty_slots.pop() {
+                if self.status_dirty[j] {
+                    self.refresh_one(j, 1.0);
+                }
+            }
+            return;
+        }
+        // Full scan: reconciles every dirty flag, so the queue is moot.
+        self.dirty_slots.clear();
         for j in 0..self.engines.len() {
             // Retired tombstones are frozen (idle, non-accepting): skip
             // them entirely so dead slots cost nothing per refresh beyond
@@ -938,6 +1189,8 @@ impl<B: ExecBackend> Coordinator<B> {
         self.status_buf[j] = st;
         self.status_dirty[j] = false;
         self.applied_pressure[j] = mult;
+        // The snapshot feeding the cached group pressures moved.
+        self.pressure_cache_dirty = true;
     }
 
     /// The per-instance status snapshot at time `now` (refreshing stale
@@ -945,6 +1198,68 @@ impl<B: ExecBackend> Coordinator<B> {
     pub fn statuses(&mut self, now: Time) -> &[InstanceStatus] {
         self.refresh_statuses(now);
         &self.status_buf
+    }
+
+    /// Whether any accepting instance matches `class` and whether any of
+    /// them could EVER hold `need_tokens` (judged against physical pools),
+    /// reading only the request's own family from the index. Post-refresh,
+    /// `accepting` ≡ `InstanceState::Active`, so a family with
+    /// `active > 0` has an accepting instance by construction.
+    fn scan_candidates_indexed(
+        &self,
+        class: ModelClass,
+        need_tokens: u64,
+    ) -> (bool, bool) {
+        let mut any_accepting = false;
+        let mut could_ever_fit = false;
+        let mut scan_family = |f: &FamilyIndex| {
+            if f.active == 0 {
+                return false;
+            }
+            any_accepting = true;
+            for &j in &f.slots {
+                if self.status_buf[j].accepting && need_tokens <= self.base_capacity[j]
+                {
+                    could_ever_fit = true;
+                    return true;
+                }
+            }
+            false
+        };
+        match class {
+            ModelClass::Model(m) => {
+                if let Some(fi) = self.family_slot(m) {
+                    scan_family(&self.families[fi]);
+                }
+            }
+            ModelClass::Any => {
+                for f in &self.families {
+                    if scan_family(f) {
+                        break;
+                    }
+                }
+            }
+        }
+        (any_accepting, could_ever_fit)
+    }
+
+    /// The pre-index scan: every instance, every head. Kept callable
+    /// behind [`Self::set_legacy_hot_path`] (bench baseline arm, hot-path
+    /// equivalence tests).
+    fn scan_candidates_legacy(&self, class: ModelClass, need_tokens: u64) -> (bool, bool) {
+        let mut any_accepting = false;
+        let mut could_ever_fit = false;
+        for (j, st) in self.status_buf.iter().enumerate() {
+            if !st.accepting || !class.matches(st.model) {
+                continue;
+            }
+            any_accepting = true;
+            if need_tokens <= self.base_capacity[j] {
+                could_ever_fit = true;
+                break;
+            }
+        }
+        (any_accepting, could_ever_fit)
     }
 
     /// Run the schedule→dispatch half of the cycle: repeatedly pick the
@@ -980,18 +1295,11 @@ impl<B: ExecBackend> Coordinator<B> {
             // GROUP — judged against the PHYSICAL pools, so a transient
             // co-tenant squeeze only defers — is rejected outright.
             let need_tokens = best.prompt_tokens as u64 + 1;
-            let mut any_accepting = false;
-            let mut could_ever_fit = false;
-            for (j, st) in self.status_buf.iter().enumerate() {
-                if !st.accepting || !class.matches(st.model) {
-                    continue;
-                }
-                any_accepting = true;
-                if need_tokens <= self.base_capacity[j] {
-                    could_ever_fit = true;
-                    break;
-                }
-            }
+            let (any_accepting, could_ever_fit) = if self.legacy_hot_path {
+                self.scan_candidates_legacy(class, need_tokens)
+            } else {
+                self.scan_candidates_indexed(class, need_tokens)
+            };
             if !any_accepting {
                 // Not one live instance of this family. If the fleet holds
                 // no slot of the family at all the request can never be
@@ -1059,7 +1367,7 @@ impl<B: ExecBackend> Coordinator<B> {
             self.engines[j].sort_waiting_by(|r| policy.key(r));
         }
         let out = self.engines[j].step(now);
-        self.status_dirty[j] = true;
+        self.mark_dirty(j);
         out
     }
 
@@ -1074,7 +1382,7 @@ impl<B: ExecBackend> Coordinator<B> {
         for seq in &out.completed {
             self.handle_completion(seq, j, now);
         }
-        self.status_dirty[j] = true;
+        self.mark_dirty(j);
         // A draining instance whose last in-flight request just finished
         // retires here.
         self.finalize_drained(now);
@@ -1120,6 +1428,7 @@ impl<B: ExecBackend> Coordinator<B> {
             req.total_tokens() as f64,
             now,
         );
+        self.metrics.record_served(p.agent, self.fleet.instances[instance].model);
         // Advance the workflow, if this request belongs to one (external
         // requests are single free-standing stages).
         let done = match self.workflows.get_mut(&p.msg_id) {
@@ -1161,7 +1470,7 @@ impl<B: ExecBackend> Coordinator<B> {
             self.workflows.remove(&req.msg_id);
             self.dropped += 1;
         }
-        self.status_dirty[j] = true;
+        self.mark_dirty(j);
         n
     }
 
@@ -1210,23 +1519,11 @@ impl<B: ExecBackend> Coordinator<B> {
 
     /// Mean queuing-time ratio of requests finished since the previous
     /// autoscale observation (the paper's load-calibration metric, here as
-    /// the scale-up pressure signal).
+    /// the scale-up pressure signal). Accumulated streamingly by the
+    /// metrics layer so the window survives lean mode (where
+    /// `metrics.requests` retains nothing).
     fn recent_queue_ratio(&mut self) -> f64 {
-        let reqs = &self.metrics.requests;
-        let start = self.scaler_seen_requests.min(reqs.len());
-        let window = &reqs[start..];
-        self.scaler_seen_requests = reqs.len();
-        if window.is_empty() {
-            return 0.0;
-        }
-        let sum: f64 = window
-            .iter()
-            .map(|r| {
-                let e2e = (r.finished_at - r.stage_arrival).max(1e-9);
-                (r.queue_time() / e2e).clamp(0.0, 1.0)
-            })
-            .sum();
-        sum / window.len() as f64
+        self.metrics.take_recent_queue_ratio()
     }
 
     /// Per-model-family load signals for the autoscaler, in fleet-index
@@ -1312,7 +1609,7 @@ impl<B: ExecBackend> Coordinator<B> {
                         at: now,
                         instance: PROVISIONING,
                         kind: ScaleEventKind::Provision,
-                        dispatch_seq: self.dispatch_log.len(),
+                        dispatch_seq: self.dispatch_log.total() as usize,
                     });
                 } else {
                     // observe() only emits Grow when `can_grow` held, so
@@ -1558,7 +1855,7 @@ mod tests {
         }
         let woken = c.pump(0.4);
         assert_eq!(woken, vec![0]);
-        assert!(c.dispatch_log[before..].iter().all(|&(_, j)| j == 0));
+        assert!(c.dispatch_log.iter().skip(before).all(|&(_, j)| j == 0));
         // Run both engines to completion; the drained instance retires.
         let mut now = 0.4;
         for _ in 0..200 {
@@ -1988,5 +2285,134 @@ mod tests {
         assert_eq!(c.dropped, 1);
         assert_eq!(c.open_workflows(), 0, "whole workflow rejected");
         assert!(c.queue.is_empty());
+    }
+
+    #[test]
+    fn external_submissions_are_recorded_and_replayable() {
+        let mut c = Coordinator::sim(
+            small_fleet(1, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        c.set_affinity(&AffinitySpec::parse("Pinned=llama3-8b").unwrap());
+        c.submit_external("Pinned", 64, 8, 0.5);
+        c.submit_external("Free", 32, 4, 0.6);
+        assert_eq!(c.trace_log.len(), 2);
+        let rec = &c.trace_log[0];
+        assert_eq!(rec.at, 0.5);
+        assert_eq!(rec.app, App::Ext);
+        assert_eq!(rec.dataset, "external");
+        assert_eq!(rec.stages.len(), 1);
+        assert_eq!(rec.stages[0].agent, "Pinned");
+        assert_eq!(rec.stages[0].prompt_tokens, 64);
+        assert_eq!(rec.stages[0].output_tokens, 8);
+        assert_eq!(
+            rec.stages[0].class,
+            Some(ModelClass::Model(ModelKind::Llama3_8B))
+        );
+        assert_eq!(c.trace_log[1].stages[0].class, None, "Free is unpinned");
+        // The record survives the JSONL round trip and resolves to a
+        // single-stage plan a coordinator accepts back.
+        let back = TraceRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(&back, rec);
+        let plan = back.plan();
+        assert_eq!(plan.app, App::Ext);
+        assert_eq!(plan.stages.len(), 1);
+        let mut replay = Coordinator::sim(
+            small_fleet(1, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        replay.submit_plan(plan, back.at);
+        let woken = replay.pump(back.at);
+        assert_eq!(woken, vec![0], "replayed external dispatches");
+    }
+
+    #[test]
+    fn bounded_logs_cap_retention_without_changing_decisions() {
+        let build = || {
+            Coordinator::sim(
+                small_fleet(2, 0.12),
+                Box::new(Fcfs),
+                Box::new(RoundRobin::new()),
+            )
+        };
+        let mut full = build();
+        let mut capped = build();
+        capped.set_log_config(LogConfig::bounded(2));
+        for c in [&mut full, &mut capped] {
+            for i in 0..6 {
+                c.submit_external("A", 16, 4, i as f64 * 0.01);
+            }
+            c.pump(0.1);
+        }
+        assert_eq!(full.dispatch_log.len(), 6);
+        assert_eq!(capped.dispatch_log.len(), 2, "only the newest 2 retained");
+        assert_eq!(capped.dispatch_log.total(), 6, "every append counted");
+        // The retained tail IS the tail of the full log.
+        assert_eq!(capped.dispatch_log.to_vec(), full.dispatch_log.to_vec()[4..]);
+        assert_eq!(capped.route_log.len(), 2);
+        assert_eq!(capped.trace_log.len(), 2);
+        assert!(
+            capped.log_state_bytes() < full.log_state_bytes(),
+            "capping must shrink resident log state"
+        );
+    }
+
+    #[test]
+    fn legacy_and_indexed_hot_paths_make_identical_decisions() {
+        let build = |legacy: bool| {
+            let spec = FleetSpec::parse("2*llama3-8b@0.12,llama2-13b@0.12").unwrap();
+            let mut c = Coordinator::sim(
+                spec,
+                Box::new(Fcfs),
+                Box::new(RoundRobin::new()),
+            );
+            c.set_legacy_hot_path(legacy);
+            c.set_route_policy(RoutePolicy::learned_default());
+            c.set_affinity(
+                &AffinitySpec::parse("Pinned=llama2-13b,Other=llama3-8b").unwrap(),
+            );
+            let mut now = 0.0;
+            for i in 0..40 {
+                let agent = match i % 3 {
+                    0 => "Pinned",
+                    1 => "Other",
+                    _ => "Free",
+                };
+                c.submit_external(agent, 48 + (i % 7) * 16, 8, now);
+                now += 0.003;
+                if i % 5 == 4 {
+                    c.pump(now);
+                }
+            }
+            // Drive to idle, absorbing completions (which enqueue nothing
+            // here, but exercise refresh/dirty bookkeeping on both paths).
+            for _ in 0..500 {
+                c.pump(now);
+                let mut idle = true;
+                for j in 0..c.n_instances() {
+                    if !c.engines[j].has_work() {
+                        continue;
+                    }
+                    idle = false;
+                    let out = c.step_engine(j, now);
+                    now += out.duration.max(1e-6);
+                    c.absorb(j, out, now);
+                }
+                if idle {
+                    break;
+                }
+            }
+            assert!(!c.has_work(), "run must drain");
+            c
+        };
+        let mut legacy = build(true);
+        let mut indexed = build(false);
+        assert!(!indexed.dispatch_log.is_empty());
+        assert_eq!(legacy.dispatch_log.take_vec(), indexed.dispatch_log.take_vec());
+        assert_eq!(legacy.group_log.take_vec(), indexed.group_log.take_vec());
+        assert_eq!(legacy.route_log.take_vec(), indexed.route_log.take_vec());
+        assert_eq!(legacy.metrics.requests.len(), indexed.metrics.requests.len());
     }
 }

@@ -20,7 +20,7 @@ use crate::orchestrator::affinity::AffinitySpec;
 use crate::orchestrator::router::{RouteDecision, RoutePolicy};
 use crate::server::autoscale::{AutoscaleConfig, Autoscaler};
 use crate::server::coordinator::{
-    Coordinator, FleetSpec, GroupDispatch, InstanceSpec, ScaleEvent,
+    Coordinator, FleetSpec, GroupDispatch, InstanceSpec, LogConfig, ScaleEvent,
 };
 use crate::server::pressure::PressureTrace;
 use crate::simcore::EventQueue;
@@ -103,6 +103,18 @@ pub struct FleetConfig {
     /// half-life (seconds), so learned routing tracks non-stationary
     /// workloads (`[policy] profile_half_life`).
     pub profile_half_life: Option<f64>,
+    /// Retention caps for the coordinator's decision logs (default: keep
+    /// everything). Million-request bench runs bound these; capping
+    /// changes retention only, never decisions.
+    pub logs: LogConfig,
+    /// When set, the metrics collector keeps no per-record vectors — only
+    /// counters and streaming sketches — so memory stays flat over
+    /// million-request runs (the summary comes from the sketches).
+    pub lean_metrics: bool,
+    /// Run the coordinator's pre-index hot path (linear candidate scans,
+    /// per-call pressure rebuilds, unbatched refresh) — the bench
+    /// harness's in-binary baseline arm.
+    pub legacy_hot_path: bool,
 }
 
 impl From<SimConfig> for FleetConfig {
@@ -116,6 +128,9 @@ impl From<SimConfig> for FleetConfig {
             affinity: None,
             route: None,
             profile_half_life: None,
+            logs: LogConfig::full(),
+            lean_metrics: false,
+            legacy_hot_path: false,
         }
     }
 }
@@ -132,6 +147,9 @@ impl From<FleetSpec> for FleetConfig {
             affinity: None,
             route: None,
             profile_half_life: None,
+            logs: LogConfig::full(),
+            lean_metrics: false,
+            legacy_hot_path: false,
         }
     }
 }
@@ -163,6 +181,12 @@ pub struct SimResult {
     pub trace_log: Vec<TraceRecord>,
     /// Instances still active when the run ended.
     pub final_active_instances: usize,
+    /// Resident bytes the decision logs pinned at end of run (the bench
+    /// harness's `peak_log_bytes`; bounded by [`LogConfig`] caps).
+    pub log_state_bytes: usize,
+    /// Dispatch decisions ever made, including ones a bounded log evicted
+    /// (`dispatch_log.len()` when logs are unbounded).
+    pub dispatched_total: u64,
 }
 
 impl SimResult {
@@ -260,6 +284,9 @@ impl SimServer {
             coord.set_route_policy(route);
         }
         coord.set_profile_half_life(cfg.profile_half_life);
+        coord.set_log_config(cfg.logs);
+        coord.metrics.lean = cfg.lean_metrics;
+        coord.set_legacy_hot_path(cfg.legacy_hot_path);
         let n = coord.n_instances();
         SimServer { cfg, coord, engine_busy: vec![false; n] }
     }
@@ -349,12 +376,17 @@ impl SimServer {
         // sweep the (idempotent) per-engine counters.
         self.coord.finalize_drained(sim_duration);
         self.coord.fold_engine_counters();
+        // Lean runs retain no per-workflow records; their summary comes
+        // from the streaming sketches (whole run, no warmup filtering).
         let summary = self
             .coord
             .metrics
             .summary_from(warmup_time)
             .or_else(|| self.coord.metrics.summary())
+            .or_else(|| self.coord.metrics.streaming_summary())
             .expect("no workflows completed");
+        let log_state_bytes = self.coord.log_state_bytes();
+        let dispatched_total = self.coord.dispatch_log.total();
         SimResult {
             summary,
             sim_duration,
@@ -362,12 +394,14 @@ impl SimServer {
             dropped_requests: self.coord.dropped,
             scheduler_name: self.coord.policy.name(),
             dispatcher_name: self.coord.dispatcher.name(),
-            dispatch_log: std::mem::take(&mut self.coord.dispatch_log),
-            group_log: std::mem::take(&mut self.coord.group_log),
-            route_log: std::mem::take(&mut self.coord.route_log),
+            dispatch_log: self.coord.dispatch_log.take_vec(),
+            group_log: self.coord.group_log.take_vec(),
+            route_log: self.coord.route_log.take_vec(),
             scale_log: std::mem::take(&mut self.coord.scale_log),
-            trace_log: std::mem::take(&mut self.coord.trace_log),
+            trace_log: self.coord.trace_log.take_vec(),
             final_active_instances: self.coord.active_instances(),
+            log_state_bytes,
+            dispatched_total,
             metrics: self.coord.metrics,
         }
     }

@@ -1,9 +1,12 @@
 //! Small utilities: a minimal JSON parser/writer (no serde on this image),
-//! CSV output, and aligned table printing for the figure harnesses.
+//! CSV output, aligned table printing for the figure harnesses, and the
+//! bounded ring-buffer log behind the coordinator's `LogConfig`.
 
 pub mod csv;
 pub mod json;
+pub mod ring;
 pub mod table;
 
 pub use json::Json;
+pub use ring::RingLog;
 pub use table::Table;

@@ -1,0 +1,279 @@
+//! Bounded ring-buffer log: `Vec`-compatible append semantics with an
+//! optional retention cap.
+//!
+//! The coordinator's decision logs (`dispatch_log`, `group_log`,
+//! `route_log`, `trace_log`) grow by one entry per request. For the seam
+//! tests and the replay toolchain that is the point — the full log IS the
+//! contract — but a million-request bench run has no reader for a
+//! million-entry `Vec<GroupDispatch>` and pays allocation and resident
+//! memory for it anyway. [`RingLog`] keeps the append API and, when a cap
+//! is set, retains only the newest `cap` entries while still counting every
+//! append in [`RingLog::total`]. Unbounded (the default) it behaves exactly
+//! like the `Vec` it replaces: nothing is ever evicted and `len == total`.
+//!
+//! Eviction drops *retention*, never *behavior*: the coordinator pushes the
+//! same entries in the same order regardless of the cap, a contract pinned
+//! by the ring-buffer seam test in `tests/runtime_seam.rs`.
+
+/// An append-only log with an optional bound on retained entries.
+///
+/// With `cap = None` this is a plain `Vec` (the default, and what every
+/// existing test and sweep sees). With `cap = Some(k)` only the newest `k`
+/// entries are kept; older entries are overwritten in place, so a
+/// million-append run holds at most `k` live entries.
+#[derive(Debug, Clone)]
+pub struct RingLog<T> {
+    buf: Vec<T>,
+    /// Index of the oldest retained entry (0 until the ring wraps).
+    start: usize,
+    /// Retention cap; `None` = unbounded.
+    cap: Option<usize>,
+    /// Entries ever appended (retained or not).
+    total: u64,
+}
+
+impl<T> Default for RingLog<T> {
+    fn default() -> Self {
+        RingLog::new()
+    }
+}
+
+impl<T> RingLog<T> {
+    /// An unbounded log — exact `Vec` semantics.
+    pub fn new() -> RingLog<T> {
+        RingLog { buf: Vec::new(), start: 0, cap: None, total: 0 }
+    }
+
+    /// A log retaining only the newest `cap` entries (`cap = 0` counts
+    /// appends but retains nothing).
+    pub fn bounded(cap: usize) -> RingLog<T> {
+        RingLog { buf: Vec::new(), start: 0, cap: Some(cap), total: 0 }
+    }
+
+    /// Change the retention cap in place, evicting oldest entries if the
+    /// new cap is smaller than the current retained count.
+    pub fn set_cap(&mut self, cap: Option<usize>) {
+        self.buf.rotate_left(self.start);
+        self.start = 0;
+        self.cap = cap;
+        if let Some(c) = cap {
+            if self.buf.len() > c {
+                self.buf.drain(..self.buf.len() - c);
+            }
+        }
+    }
+
+    pub fn cap(&self) -> Option<usize> {
+        self.cap
+    }
+
+    /// Append one entry, evicting the oldest retained entry when at cap.
+    pub fn push(&mut self, value: T) {
+        self.total += 1;
+        match self.cap {
+            None => self.buf.push(value),
+            Some(0) => {}
+            Some(c) => {
+                if self.buf.len() < c {
+                    self.buf.push(value);
+                } else {
+                    self.buf[self.start] = value;
+                    self.start = (self.start + 1) % c;
+                }
+            }
+        }
+    }
+
+    /// Retained entries (`== total` when unbounded).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Entries ever appended, including evicted ones. This is the log's
+    /// stream position: fields like `ScaleEvent::dispatch_seq` record it so
+    /// cross-log ordering survives eviction.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Entries appended but no longer retained.
+    pub fn evicted(&self) -> u64 {
+        self.total - self.buf.len() as u64
+    }
+
+    /// Retained entries, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf[self.start..].iter().chain(self.buf[..self.start].iter())
+    }
+
+    /// The `i`-th retained entry in chronological order.
+    pub fn get(&self, i: usize) -> Option<&T> {
+        if i >= self.buf.len() {
+            return None;
+        }
+        // When wrapped the buffer is full (len == cap), so indexing is
+        // modular; before wrapping start == 0.
+        let idx = (self.start + i) % self.buf.len();
+        self.buf.get(idx)
+    }
+
+    /// The newest entry.
+    pub fn last(&self) -> Option<&T> {
+        if self.buf.is_empty() {
+            None
+        } else if self.start == 0 {
+            self.buf.last()
+        } else {
+            self.buf.get(self.start - 1)
+        }
+    }
+
+    /// Drain the retained entries into a chronological `Vec`, resetting the
+    /// log (total included) — the bounded analogue of `std::mem::take` on a
+    /// `Vec` log, used when a run hands its logs to a `SimResult`.
+    pub fn take_vec(&mut self) -> Vec<T> {
+        let mut out = std::mem::take(&mut self.buf);
+        out.rotate_left(self.start);
+        self.start = 0;
+        self.total = 0;
+        out
+    }
+
+    /// Shallow resident bytes of the retained buffer (capacity, not len —
+    /// the high-water mark of what this log pins in memory). Per-entry heap
+    /// (e.g. a record's inner `Vec`) is not included.
+    pub fn approx_bytes(&self) -> usize {
+        self.buf.capacity() * std::mem::size_of::<T>()
+    }
+}
+
+impl<T: Clone> RingLog<T> {
+    /// Retained entries as a chronological `Vec` (non-destructive).
+    pub fn to_vec(&self) -> Vec<T> {
+        self.iter().cloned().collect()
+    }
+}
+
+impl<'a, T> IntoIterator for &'a RingLog<T> {
+    type Item = &'a T;
+    type IntoIter =
+        std::iter::Chain<std::slice::Iter<'a, T>, std::slice::Iter<'a, T>>;
+
+    /// `for x in &log` iterates retained entries oldest-first, mirroring
+    /// iteration over the `Vec` this type replaces.
+    fn into_iter(self) -> Self::IntoIter {
+        self.buf[self.start..].iter().chain(self.buf[..self.start].iter())
+    }
+}
+
+impl<T> std::ops::Index<usize> for RingLog<T> {
+    type Output = T;
+
+    /// Chronological indexing over *retained* entries (`log[0]` is the
+    /// oldest retained entry, not append number 0 once eviction starts).
+    fn index(&self, i: usize) -> &T {
+        self.get(i)
+            .unwrap_or_else(|| panic!("RingLog index {i} out of bounds"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_matches_vec_semantics() {
+        let mut log = RingLog::new();
+        for i in 0..100 {
+            log.push(i);
+        }
+        assert_eq!(log.len(), 100);
+        assert_eq!(log.total(), 100);
+        assert_eq!(log.evicted(), 0);
+        assert_eq!(log.get(0), Some(&0));
+        assert_eq!(log.last(), Some(&99));
+        let v = log.take_vec();
+        assert_eq!(v, (0..100).collect::<Vec<_>>());
+        assert_eq!(log.len(), 0);
+        assert_eq!(log.total(), 0);
+    }
+
+    #[test]
+    fn bounded_retains_newest_in_order() {
+        let mut log = RingLog::bounded(4);
+        for i in 0..10 {
+            log.push(i);
+        }
+        assert_eq!(log.len(), 4);
+        assert_eq!(log.total(), 10);
+        assert_eq!(log.evicted(), 6);
+        assert_eq!(log.iter().copied().collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert_eq!(log.get(0), Some(&6));
+        assert_eq!(log.get(3), Some(&9));
+        assert_eq!(log.get(4), None);
+        assert_eq!(log[0], 6);
+        let mut via_ref = Vec::new();
+        for &x in &log {
+            via_ref.push(x);
+        }
+        assert_eq!(via_ref, vec![6, 7, 8, 9]);
+        assert_eq!(log.last(), Some(&9));
+        assert_eq!(log.take_vec(), vec![6, 7, 8, 9]);
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn bounded_before_wrapping_behaves_like_vec() {
+        let mut log = RingLog::bounded(8);
+        for i in 0..5 {
+            log.push(i);
+        }
+        assert_eq!(log.len(), 5);
+        assert_eq!(log.last(), Some(&4));
+        assert_eq!(log.iter().copied().collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn zero_cap_counts_but_retains_nothing() {
+        let mut log = RingLog::bounded(0);
+        for i in 0..5 {
+            log.push(i);
+        }
+        assert!(log.is_empty());
+        assert_eq!(log.total(), 5);
+        assert_eq!(log.last(), None);
+        assert_eq!(log.take_vec(), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn set_cap_evicts_oldest_and_keeps_order() {
+        let mut log = RingLog::bounded(4);
+        for i in 0..10 {
+            log.push(i); // retained: [6, 7, 8, 9], wrapped
+        }
+        log.set_cap(Some(2));
+        assert_eq!(log.iter().copied().collect::<Vec<_>>(), vec![8, 9]);
+        assert_eq!(log.total(), 10);
+        log.push(10);
+        assert_eq!(log.iter().copied().collect::<Vec<_>>(), vec![9, 10]);
+        // Raising the cap (or removing it) keeps everything retained.
+        log.set_cap(None);
+        log.push(11);
+        assert_eq!(log.iter().copied().collect::<Vec<_>>(), vec![9, 10, 11]);
+    }
+
+    #[test]
+    fn bounded_memory_stays_at_cap() {
+        let mut log = RingLog::bounded(16);
+        for i in 0..100_000u64 {
+            log.push(i);
+        }
+        assert!(log.approx_bytes() <= 16 * std::mem::size_of::<u64>());
+        assert_eq!(log.len(), 16);
+        assert_eq!(log.total(), 100_000);
+    }
+}

@@ -89,6 +89,8 @@ pub struct TraceRecord {
 /// Known static names (agents + datasets) so loaded traces re-use the
 /// compile-time strings instead of leaking one allocation per record.
 const STATIC_NAMES: &[&str] = &[
+    "EXT",
+    "external",
     "Router",
     "MathAgent",
     "HumanitiesAgent",
@@ -111,9 +113,12 @@ const STATIC_NAMES: &[&str] = &[
 ];
 
 /// Intern an arbitrary trace string to a `'static` lifetime: known names
-/// resolve to the compile-time table; unknown names (external traces) are
-/// leaked once per unique name through a global pool.
-fn intern_static(s: &str) -> &'static str {
+/// resolve to the compile-time table; unknown names (external traces, or
+/// agents submitted through the serving frontend) are leaked once per
+/// unique name through a global pool. Public so the coordinator's
+/// recording path can capture `submit_external` agent names into
+/// [`StageRecord`]s.
+pub fn intern_name(s: &str) -> &'static str {
     use std::collections::HashSet;
     use std::sync::{Mutex, OnceLock};
     if let Some(&k) = STATIC_NAMES.iter().find(|&&k| k == s) {
@@ -240,13 +245,13 @@ impl TraceRecord {
                 }
             };
             stages.push(StageRecord {
-                agent: intern_static(agent),
+                agent: intern_name(agent),
                 prompt_tokens: tokens("prompt")?,
                 output_tokens: tokens("output")?,
                 class,
             });
         }
-        Ok(TraceRecord { at, app, dataset: intern_static(dataset), stages })
+        Ok(TraceRecord { at, app, dataset: intern_name(dataset), stages })
     }
 }
 

@@ -16,7 +16,8 @@ use kairos::orchestrator::affinity::AffinitySpec;
 use kairos::orchestrator::router::{RouteDecision, RoutePolicy, RouteReason};
 use kairos::server::autoscale::{parse_per_group, AutoscaleConfig, Autoscaler};
 use kairos::server::coordinator::{
-    Clock, Coordinator, FleetSpec, GroupDispatch, ManualClock, ScaleEventKind,
+    Clock, Coordinator, FleetSpec, GroupDispatch, LogConfig, ManualClock,
+    ScaleEventKind,
 };
 use kairos::server::pressure::PressureTrace;
 use kairos::server::sim::{
@@ -248,15 +249,15 @@ fn drive_polling_elastic(
     coord.finalize_drained(clock.now());
 
     DriverTrace {
-        dispatch_log: std::mem::take(&mut coord.dispatch_log),
-        group_log: std::mem::take(&mut coord.group_log),
-        route_log: std::mem::take(&mut coord.route_log),
+        dispatch_log: coord.dispatch_log.take_vec(),
+        group_log: coord.group_log.take_vec(),
+        route_log: coord.route_log.take_vec(),
         scale_log: coord
             .scale_log
             .iter()
             .map(|e| (e.kind, e.instance, e.dispatch_seq))
             .collect(),
-        trace_log: std::mem::take(&mut coord.trace_log),
+        trace_log: coord.trace_log.take_vec(),
         dropped: coord.dropped,
         workflows_completed: coord.metrics.workflows.len(),
         requests_completed: coord.metrics.requests.len(),
@@ -603,5 +604,111 @@ fn timeslot_respects_per_instance_budgets_end_to_end() {
         to_small < to_big,
         "squeezed instance got {to_small} of {} dispatches",
         to_small + to_big
+    );
+}
+
+#[test]
+fn ring_buffer_logging_preserves_dispatch_decisions() {
+    // The logging seam: capping the coordinator logs (and running lean
+    // metrics) must not change a single dispatch decision — only how many
+    // of them are retained at the end of the run.
+    let fleet = FleetSpec::parse("2*llama3-8b@0.12,llama2-13b@0.12").unwrap();
+    let aff =
+        AffinitySpec::parse("*=llama3-8b,Engineer=llama2-13b,QAEngineer=llama2-13b")
+            .unwrap();
+    let arrivals = trace(3.0, 120, 61);
+    let run = |logs: LogConfig, lean: bool| {
+        let mut cfg = FleetConfig::from(fleet.clone());
+        cfg.affinity = Some(aff.clone());
+        cfg.logs = logs;
+        cfg.lean_metrics = lean;
+        run_fleet(cfg, "kairos", "kairos", arrivals.clone())
+    };
+    let full = run(LogConfig::full(), false);
+    let capped = run(LogConfig::bounded(32), true);
+
+    // Same decision stream length (the ring's total survives eviction)...
+    assert_eq!(full.dispatch_log.len() as u64, full.dispatched_total);
+    assert_eq!(capped.dispatched_total, full.dispatched_total);
+    assert_eq!(capped.dropped_requests, full.dropped_requests);
+    assert!(full.dispatch_log.len() > 32, "trace too small to evict");
+    // ...with exactly the newest 32 entries of each log retained.
+    assert_eq!(capped.dispatch_log.len(), 32);
+    let n = full.dispatch_log.len();
+    assert_eq!(capped.dispatch_log, full.dispatch_log[n - 32..]);
+    assert_eq!(capped.group_log, full.group_log[full.group_log.len() - 32..]);
+    assert_eq!(capped.route_log, full.route_log[full.route_log.len() - 32..]);
+    assert_eq!(capped.trace_log, full.trace_log[full.trace_log.len() - 32..]);
+    assert!(
+        capped.log_state_bytes < full.log_state_bytes,
+        "capped logs should retain less state: {} vs {}",
+        capped.log_state_bytes,
+        full.log_state_bytes
+    );
+
+    // Lean metrics retain nothing, count everything, and the streaming
+    // summary tracks the exact one (mean exactly, percentiles via P²).
+    assert!(capped.metrics.requests.is_empty());
+    assert_eq!(capped.metrics.total_requests, full.metrics.total_requests);
+    assert_eq!(capped.metrics.total_workflows, full.metrics.total_workflows);
+    let exact = full.metrics.summary().unwrap();
+    let sketch = capped.metrics.streaming_summary().unwrap();
+    assert_eq!(sketch.n_workflows, exact.n_workflows);
+    assert!((sketch.avg_token_latency - exact.avg_token_latency).abs() < 1e-9);
+    assert!((sketch.mean_queue_ratio - exact.mean_queue_ratio).abs() < 1e-9);
+    let rel = (sketch.p50_token_latency - exact.p50_token_latency).abs()
+        / exact.p50_token_latency.max(1e-9);
+    assert!(rel < 0.5, "P² median drifted {rel} from exact");
+}
+
+#[test]
+fn legacy_and_indexed_hot_paths_are_identical_through_the_driver() {
+    // The hot-path contract: the per-family candidate index, the cached
+    // group pressures, and the batched stale-snapshot refresh are pure
+    // speedups. The retained legacy scan must make identical decisions
+    // across a mixed fleet that grows, drains, and retires under learned
+    // routing — the regime where every optimized structure is exercised.
+    let fleet = FleetSpec::parse("2*llama3-8b@0.12,llama2-13b@0.12").unwrap();
+    let aff =
+        AffinitySpec::parse("*=llama3-8b,Engineer=llama2-13b,QAEngineer=llama2-13b")
+            .unwrap();
+    let mut auto = elastic_config(&fleet);
+    auto.boot_delay = 4.0;
+    auto.per_group = parse_per_group("llama3-8b=2..4,llama2-13b=1..2").unwrap();
+    let arrivals = burst_then_calm(67);
+    let run = |legacy: bool| {
+        let mut cfg = FleetConfig::from(fleet.clone());
+        cfg.autoscale = Some(auto.clone());
+        cfg.affinity = Some(aff.clone());
+        cfg.route = Some(RoutePolicy::Learned { explore_rate: 0.125, min_samples: 8 });
+        cfg.legacy_hot_path = legacy;
+        run_fleet(cfg, "kairos", "kairos", arrivals.clone())
+    };
+    let legacy = run(true);
+    let indexed = run(false);
+    assert!(!legacy.dispatch_log.is_empty());
+    assert!(
+        legacy.scale_log.iter().any(|e| e.kind == ScaleEventKind::Grow),
+        "burst must reshape the fleet to exercise index maintenance"
+    );
+    assert_eq!(legacy.dispatch_log, indexed.dispatch_log);
+    assert_eq!(legacy.group_log, indexed.group_log);
+    assert_eq!(legacy.route_log, indexed.route_log);
+    let scale = |r: &kairos::server::sim::SimResult| -> Vec<(ScaleEventKind, usize, usize)> {
+        r.scale_log
+            .iter()
+            .map(|e| (e.kind, e.instance, e.dispatch_seq))
+            .collect()
+    };
+    assert_eq!(scale(&legacy), scale(&indexed));
+    assert_eq!(legacy.dropped_requests, indexed.dropped_requests);
+    assert_eq!(legacy.dispatched_total, indexed.dispatched_total);
+    assert_eq!(
+        legacy.metrics.requests.len(),
+        indexed.metrics.requests.len()
+    );
+    assert_eq!(
+        legacy.metrics.workflows.len(),
+        indexed.metrics.workflows.len()
     );
 }
