@@ -6,6 +6,10 @@
 //!
 //! Run: `cargo run --release --example colocated_serving`
 
+// Examples time real runs; clippy's disallowed-methods (wall-clock) check
+// only guards library code.
+#![allow(clippy::disallowed_methods)]
+
 use kairos::server::sim::{run_system, SimConfig};
 use kairos::stats::rng::Rng;
 use kairos::workload::{TraceGen, WorkloadMix};

@@ -1,4 +1,9 @@
 //! Profiling driver for the perf pass: one heavy co-located run.
+
+// Examples time real runs; clippy's disallowed-methods (wall-clock) check
+// only guards library code.
+#![allow(clippy::disallowed_methods)]
+
 fn main() {
     use kairos::server::sim::*; use kairos::workload::*; use kairos::stats::rng::Rng;
     let cfg = SimConfig::default();

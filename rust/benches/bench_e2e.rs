@@ -5,6 +5,10 @@
 //!
 //! Run: `cargo bench`.
 
+// Benches measure real elapsed time by definition (lint rule D1 exempts
+// bench targets; this allow covers clippy's disallowed-methods check).
+#![allow(clippy::disallowed_methods)]
+
 mod common;
 
 use common::bench;

@@ -4,6 +4,10 @@
 //! mean / p50 / p95 per-iteration latency in a fixed format the perf pass
 //! and EXPERIMENTS.md grep for.
 
+// Benches measure real elapsed time by definition; the determinism lint
+// (rule D1) and clippy's disallowed-methods both exempt this path.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 pub struct BenchResult {
@@ -25,7 +29,7 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
         f();
         samples.push(t0.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let p50 = samples[samples.len() / 2];
     let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];

@@ -7,7 +7,7 @@
 //! partitions, independent consumer-group offsets, blocking polls — as a
 //! thread-safe in-process broker (threads + condvars; no network, no tokio).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -51,7 +51,9 @@ struct TopicState {
 
 #[derive(Debug, Default)]
 struct BrokerState {
-    topics: HashMap<String, TopicState>,
+    /// Keyed by topic name; ordered so [`Broker::topics`] lists
+    /// deterministically (lint rule D2).
+    topics: BTreeMap<String, TopicState>,
 }
 
 /// The broker: cheaply clonable handle over shared state.
@@ -135,12 +137,14 @@ impl Broker {
 
     /// Blocking poll with timeout. Returns `Ok(None)` on timeout and
     /// `Err(TopicClosed)` when the topic is closed and fully drained.
+    #[allow(clippy::disallowed_methods)] // condvar deadlines need real wall time
     pub fn poll(
         &self,
         topic: &str,
         group: &str,
         timeout: Duration,
     ) -> Result<Option<Message>, BusError> {
+        // kairos-lint: allow(wall-clock, condvar deadline arithmetic; never feeds scheduling decisions)
         let deadline = std::time::Instant::now() + timeout;
         loop {
             match self.try_poll(topic, group)? {
@@ -148,6 +152,7 @@ impl Broker {
                 None => {
                     let (lock, cvar) = &*self.state;
                     let st = lock.lock().unwrap();
+                    // kairos-lint: allow(wall-clock, condvar deadline arithmetic; never feeds scheduling decisions)
                     let now = std::time::Instant::now();
                     if now >= deadline {
                         return Ok(None);
@@ -195,13 +200,24 @@ impl Broker {
 }
 
 /// Bus error type.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BusError {
-    #[error("no such topic")]
+    /// The named topic was never created.
     NoSuchTopic,
-    #[error("topic closed")]
+    /// The topic is closed and (for polls) fully drained.
     TopicClosed,
 }
+
+impl std::fmt::Display for BusError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BusError::NoSuchTopic => write!(f, "no such topic"),
+            BusError::TopicClosed => write!(f, "topic closed"),
+        }
+    }
+}
+
+impl std::error::Error for BusError {}
 
 #[cfg(test)]
 mod tests {

@@ -16,6 +16,8 @@
 //! kairos route-sweep [--fleet SPEC] [--affinity SPEC] [--route-policy P]
 //!                [--rate R] [--tasks N] [--trace FILE]
 //! kairos trace   gen|record|scale|stats [...]
+//! kairos check   --trace FILE [--fleet SPEC] [--affinity SPEC]
+//!                [--scheduler S] [--dispatcher D]
 //! kairos figures <id|all> [--out results/]
 //! kairos quickstart [--artifacts DIR] [--model NAME]
 //! ```
@@ -31,7 +33,9 @@ use crate::orchestrator::router::{RoutePolicy, RouteReason};
 use crate::server::autoscale::{parse_boot_delays, parse_per_group, AutoscaleConfig};
 use crate::server::coordinator::{FleetSpec, PROVISIONING};
 use crate::server::pressure::PressureTrace;
-use crate::server::sim::{run_fleet, FleetConfig, SimResult};
+use crate::server::sim::{
+    make_dispatcher_for_fleet, make_policy, run_fleet, FleetConfig, SimResult, SimServer,
+};
 use crate::workload::{FileSource, GenSource, Trace, TraceGen, TraceSource, WorkloadMix};
 
 /// Flags that take no value (`--flag` alone means `true`; an explicit
@@ -148,6 +152,8 @@ USAGE:
   kairos trace scale  --in FILE --out FILE [--factor F] [--clip START..END]
                      [--filter-app QA|RG|CG] [--splice FILE2]
   kairos trace stats  --in FILE
+  kairos check       --trace FILE [--fleet SPEC] [--affinity SPEC]
+                     [--scheduler S] [--dispatcher D]
   kairos figures     <table1|fig3..fig18|overhead|all> [--out results]
   kairos quickstart  [--artifacts artifacts] [--model tiny]
   kairos bench       [--quick] [--seed S] [--out DIR]
@@ -195,6 +201,11 @@ PRESSURE TRACE — `;`-separated `TARGET:TIME=MULT,...` with TARGET an
   `--boot-delay` models instance boot latency (a grow provisions first,
   registers after the delay); `--per-group` caps/floors each family, e.g.
   `llama3-8b=1..4,llama2-13b=0..2`.
+
+CHECK — replay a recorded trace with the coordinator's runtime invariant
+  audits enabled (family-index consistency, pressure-cache freshness,
+  no tombstoned-slot dispatch): the dynamic counterpart of the
+  `kairos-lint` static pass. Exits nonzero listing every violation.
 ";
 
 /// CLI entrypoint.
@@ -207,6 +218,7 @@ pub fn run(raw: Vec<String>) -> crate::Result<()> {
         Some("shard-sweep") => shard_sweep(&args),
         Some("route-sweep") => route_sweep(&args),
         Some("trace") => trace_cmd(&args),
+        Some("check") => check_cmd(&args),
         Some("figures") => {
             let id = args
                 .positional
@@ -480,6 +492,62 @@ fn serve(args: &Args) -> crate::Result<()> {
         );
     }
     Ok(())
+}
+
+/// `kairos check`: replay a recorded trace through the coordinator with
+/// [`Coordinator::audit_invariants`] running on every refresh tick and at
+/// end of run — the dynamic counterpart of the `kairos-lint` static pass.
+/// Exits nonzero listing every violation.
+///
+/// [`Coordinator::audit_invariants`]: crate::server::coordinator::Coordinator::audit_invariants
+fn check_cmd(args: &Args) -> crate::Result<()> {
+    let path = args
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("kairos check requires --trace FILE"))?;
+    reject_generator_flags_with_trace(args)?;
+    let source = FileSource::new(path);
+    let desc = source.describe();
+    let trace = source.materialize().map_err(|e| anyhow::anyhow!(e))?;
+    let fleet = FleetSpec::parse(args.get("fleet").unwrap_or("2*llama3-8b@0.12"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let affinity = args
+        .get("affinity")
+        .map(AffinitySpec::parse)
+        .transpose()
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let scheduler = args.get("scheduler").unwrap_or("kairos");
+    let dispatcher = args.get("dispatcher").unwrap_or("kairos");
+    let mut fc = FleetConfig::from(fleet.clone());
+    fc.affinity = affinity;
+    let mut server = SimServer::with_fleet(
+        fc,
+        make_policy(scheduler),
+        make_dispatcher_for_fleet(dispatcher, &fleet),
+    );
+    server.enable_audit();
+    println!(
+        "checking {} tasks ({desc}) on {} instances — scheduler={scheduler} \
+         dispatcher={dispatcher}, invariant audits on",
+        trace.len(),
+        fleet.len()
+    );
+    let res = server.run(trace.arrivals());
+    println!(
+        "replayed {} workflows over {:.1} sim-seconds; {} invariant audits run",
+        res.summary.n_workflows, res.sim_duration, res.audit_checks
+    );
+    if res.audit_violations.is_empty() {
+        println!("all audits passed");
+        Ok(())
+    } else {
+        for v in &res.audit_violations {
+            eprintln!("audit violation: {v}");
+        }
+        anyhow::bail!(
+            "{} invariant violation(s) during replay",
+            res.audit_violations.len()
+        )
+    }
 }
 
 fn workload_mix(name: &str) -> crate::Result<WorkloadMix> {
@@ -1143,6 +1211,32 @@ mod tests {
         assert!(trace_cmd(&Args::parse(&sv(&["trace", "gen"])).unwrap()).is_err());
         assert!(trace_cmd(&Args::parse(&sv(&["trace", "stats"])).unwrap()).is_err());
         assert!(trace_cmd(&Args::parse(&sv(&["trace", "zap"])).unwrap()).is_err());
+    }
+
+    #[test]
+    fn check_replays_trace_with_audits_on() {
+        let path = std::env::temp_dir().join("kairos_cli_check_trace.jsonl");
+        let gen = Args::parse(&sv(&[
+            "trace", "gen",
+            "--out", path.to_str().unwrap(),
+            "--rate", "4",
+            "--tasks", "30",
+            "--seed", "7",
+        ]))
+        .unwrap();
+        trace_cmd(&gen).unwrap();
+        // A healthy replay passes every audit and exits cleanly.
+        let ok = Args::parse(&sv(&["check", "--trace", path.to_str().unwrap()]))
+            .unwrap();
+        assert!(check_cmd(&ok).is_ok());
+        std::fs::remove_file(&path).ok();
+        // --trace is mandatory, and generator flags next to it error.
+        assert!(check_cmd(&Args::parse(&sv(&["check"])).unwrap()).is_err());
+        let bad = Args::parse(&sv(&[
+            "check", "--trace", "f.jsonl", "--tasks", "10",
+        ]))
+        .unwrap();
+        assert!(check_cmd(&bad).is_err());
     }
 
     #[test]

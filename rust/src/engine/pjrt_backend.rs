@@ -108,6 +108,8 @@ impl ExecBackend for PjrtExecBackend {
         assert!(live.len() <= b, "engine max_batch exceeds model batch width");
         self.free_rows_of_departed(&live);
 
+        // kairos-lint: allow(wall-clock, measures real device-dispatch overhead; never feeds simulated time)
+        #[allow(clippy::disallowed_methods)]
         let t0 = Instant::now();
         if !prefill.is_empty() {
             // Assign rows to newly admitted requests.

@@ -53,17 +53,24 @@ fn total_waiting(order: &[usize]) -> f64 {
     wait
 }
 
-fn order_by<K: PartialOrd>(key: impl Fn(&Job) -> K) -> Vec<usize> {
+/// Sort job indices by a `(float key, arrival tiebreak)` pair. `total_cmp`
+/// gives a total order on the float part (lint rule D3: no `partial_cmp`
+/// on float keys).
+fn order_by(key: impl Fn(&Job) -> (f64, usize)) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..JOBS.len()).collect();
-    idx.sort_by(|&a, &b| key(&JOBS[a]).partial_cmp(&key(&JOBS[b])).unwrap());
+    idx.sort_by(|&a, &b| {
+        let (ka, ia) = key(&JOBS[a]);
+        let (kb, ib) = key(&JOBS[b]);
+        ka.total_cmp(&kb).then(ia.cmp(&ib))
+    });
     idx
 }
 
 /// Total waiting under (FCFS, Topo, Oracle).
 pub fn waiting_times() -> (f64, f64, f64) {
-    let fcfs = total_waiting(&order_by(|j| j.arrival as f64));
+    let fcfs = total_waiting(&order_by(|j| (j.arrival as f64, j.arrival)));
     // Ayo: fewer remaining stages first, FCFS within a depth.
-    let topo = total_waiting(&order_by(|j| (j.depth, j.arrival)));
+    let topo = total_waiting(&order_by(|j| (j.depth as f64, j.arrival)));
     // Oracle: true remaining latency.
     let oracle = total_waiting(&order_by(|j| (j.remaining, j.arrival)));
     (fcfs, topo, oracle)

@@ -28,7 +28,7 @@ pub fn tau_for(scheduler: &str, rate: f64, seed: u64) -> f64 {
         .filter(|r| r.queue_time() > 1e-6)
         .map(|r| (r.dispatched_at, r.true_remaining))
         .collect();
-    rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    rows.sort_by(|a, b| a.0.total_cmp(&b.0));
     let order: Vec<f64> = (0..rows.len()).map(|i| i as f64).collect();
     let lat: Vec<f64> = rows.iter().map(|r| r.1).collect();
     kendall_tau(&order, &lat)

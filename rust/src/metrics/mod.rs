@@ -41,9 +41,13 @@ pub struct RequestRecord {
 }
 
 impl RequestRecord {
+    /// Seconds the stage waited: arrival at the load balancer to first
+    /// admission into a running batch.
     pub fn queue_time(&self) -> f64 {
         self.dispatched_at - self.stage_arrival
     }
+
+    /// Seconds the stage executed: first admission to completion.
     pub fn exec_time(&self) -> f64 {
         self.finished_at - self.dispatched_at
     }
@@ -61,6 +65,8 @@ pub struct WorkflowRecord {
 }
 
 impl WorkflowRecord {
+    /// End-to-end workflow latency in seconds (submission to last stage's
+    /// completion).
     pub fn e2e(&self) -> f64 {
         self.finished_at - self.app_start
     }
@@ -70,6 +76,8 @@ impl WorkflowRecord {
         self.e2e() / self.output_tokens.max(1) as f64
     }
 
+    /// Share of the end-to-end latency spent queueing, clamped to `[0, 1]`
+    /// (the paper's load-calibration metric).
     pub fn queue_ratio(&self) -> f64 {
         (self.queue_time / self.e2e().max(1e-9)).clamp(0.0, 1.0)
     }
@@ -122,8 +130,9 @@ pub struct MetricsCollector {
     recent_qr_n: u64,
 }
 
-/// Summary of a run, in the paper's reporting terms.
-#[derive(Debug, Clone)]
+/// Summary of a run, in the paper's reporting terms. The `Default` value
+/// (all zeros) is what a run where no workflow completed reports.
+#[derive(Debug, Clone, Default)]
 pub struct RunSummary {
     pub n_workflows: usize,
     pub avg_token_latency: f64,
@@ -137,10 +146,13 @@ pub struct RunSummary {
 }
 
 impl MetricsCollector {
+    /// An empty collector in exact (record-retaining) mode.
     pub fn new() -> MetricsCollector {
         MetricsCollector::default()
     }
 
+    /// Record one completed request stage: counters and streaming sketches
+    /// always accumulate; the per-record vector only outside lean mode.
     pub fn record_request(&mut self, r: RequestRecord) {
         self.total_tokens += r.output_tokens as u64;
         self.total_requests += 1;
@@ -157,6 +169,8 @@ impl MetricsCollector {
         }
     }
 
+    /// Record one completed workflow (program-level metrics; same
+    /// lean-mode retention rule as [`Self::record_request`]).
     pub fn record_workflow(&mut self, w: WorkflowRecord) {
         self.total_workflows += 1;
         self.stream.token_latency.observe(w.token_latency());
@@ -220,6 +234,8 @@ impl MetricsCollector {
         })
     }
 
+    /// Summarize every retained workflow (no warmup skip); `None` when no
+    /// workflow record is retained.
     pub fn summary(&self) -> Option<RunSummary> {
         self.summary_from(0.0)
     }

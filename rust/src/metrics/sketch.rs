@@ -57,6 +57,7 @@ impl P2Quantile {
         self.p
     }
 
+    /// Observations fed so far.
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -176,6 +177,7 @@ impl Default for QuantileSketch {
 }
 
 impl QuantileSketch {
+    /// An empty sketch (P50/P90/P95/P99 markers plus streaming moments).
     pub fn new() -> QuantileSketch {
         QuantileSketch {
             p50: P2Quantile::new(0.50),
@@ -205,38 +207,47 @@ impl QuantileSketch {
         self.max = self.max.max(x);
     }
 
+    /// Finite observations accepted so far.
     pub fn count(&self) -> u64 {
         self.stats.count()
     }
 
+    /// Exact streaming mean (Welford).
     pub fn mean(&self) -> f64 {
         self.stats.mean()
     }
 
+    /// Exact streaming sample standard deviation.
     pub fn std(&self) -> f64 {
         self.stats.std()
     }
 
+    /// Exact minimum observed (`+inf` before any observation).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Exact maximum observed (`-inf` before any observation).
     pub fn max(&self) -> f64 {
         self.max
     }
 
+    /// Estimated median (see [`P2Quantile::value`] for exactness rules).
     pub fn p50(&self) -> f64 {
         self.p50.value()
     }
 
+    /// Estimated 90th percentile.
     pub fn p90(&self) -> f64 {
         self.p90.value()
     }
 
+    /// Estimated 95th percentile.
     pub fn p95(&self) -> f64 {
         self.p95.value()
     }
 
+    /// Estimated 99th percentile.
     pub fn p99(&self) -> f64 {
         self.p99.value()
     }

@@ -14,7 +14,7 @@
 //! downstream path), which is exactly the signal the Ayo baseline schedules
 //! on.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use super::ids::{AgentId, MsgId};
 use crate::Time;
@@ -52,8 +52,10 @@ pub struct EdgeStats {
 /// The reconstructed workflow call graph, aggregated across instances.
 #[derive(Debug, Default)]
 pub struct WorkflowGraph {
-    /// (upstream, downstream) -> stats
-    edges: HashMap<(AgentId, AgentId), EdgeStats>,
+    /// (upstream, downstream) -> stats. Ordered so [`WorkflowGraph::edges`]
+    /// and [`WorkflowGraph::successors`] iterate deterministically (lint
+    /// rule D2).
+    edges: BTreeMap<(AgentId, AgentId), EdgeStats>,
     /// Per-instance execution records awaiting workflow completion.
     instances: HashMap<MsgId, Vec<ExecRecord>>,
     /// Agents observed as workflow entry points (no upstream).
@@ -87,8 +89,9 @@ impl WorkflowGraph {
     /// instance (paper Fig. 11b/d).
     fn classify_instance_edges(&mut self, msg_id: MsgId) {
         let Some(records) = self.instances.get(&msg_id) else { return };
-        // Group downstream spans by parent.
-        let mut by_parent: HashMap<AgentId, Vec<&ExecRecord>> = HashMap::new();
+        // Group downstream spans by parent (ordered: the loop below mutates
+        // edge kinds, so parent visit order must be deterministic).
+        let mut by_parent: BTreeMap<AgentId, Vec<&ExecRecord>> = BTreeMap::new();
         for r in records {
             if let Some(up) = r.upstream {
                 by_parent.entry(up).or_default().push(r);

@@ -58,28 +58,11 @@ pub trait Clock {
     fn now(&self) -> Time;
 }
 
-/// Wall-clock time since construction (the real-serving driver's clock).
-pub struct WallClock {
-    origin: std::time::Instant,
-}
-
-impl WallClock {
-    pub fn new() -> WallClock {
-        WallClock { origin: std::time::Instant::now() }
-    }
-}
-
-impl Default for WallClock {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Clock for WallClock {
-    fn now(&self) -> Time {
-        self.origin.elapsed().as_secs_f64()
-    }
-}
+// The wall-clock implementation lives with the wall-clock driver in
+// [`super::real`] — the single module allowed to read real time (lint rule
+// D1) — and is re-exported here so existing `coordinator::WallClock`
+// imports keep working.
+pub use super::real::WallClock;
 
 /// A manually advanced clock for virtual-time drivers and driver tests.
 #[derive(Debug, Default)]
@@ -466,8 +449,10 @@ pub struct Coordinator<B: ExecBackend> {
     /// Lifecycle state per instance slot (see [`InstanceState`]).
     instance_state: Vec<InstanceState>,
     /// Every fleet change, in order — grows, drain starts, drain
-    /// completions.
-    pub scale_log: Vec<ScaleEvent>,
+    /// completions. A [`RingLog`] like the other decision logs (lint rule
+    /// D5: no raw `Vec` log fields on long-lived coordinator state);
+    /// unbounded by default since fleets change rarely.
+    pub scale_log: RingLog<ScaleEvent>,
     /// Physical KV capacity per instance (tokens), before any co-tenant
     /// pressure: the "could this request EVER fit" admission check reads
     /// this, so transient pressure never causes permanent drops.
@@ -608,7 +593,7 @@ impl<B: ExecBackend> Coordinator<B> {
             status_dirty: vec![false; n],
             reference_cost,
             instance_state: vec![InstanceState::Active; n],
-            scale_log: Vec::new(),
+            scale_log: RingLog::new(),
             base_capacity,
             applied_pressure: vec![1.0; n],
             pressure: None,
@@ -724,7 +709,7 @@ impl<B: ExecBackend> Coordinator<B> {
             + self.group_log.approx_bytes()
             + self.route_log.approx_bytes()
             + self.trace_log.approx_bytes()
-            + self.scale_log.capacity() * std::mem::size_of::<ScaleEvent>()
+            + self.scale_log.approx_bytes()
             + trace_stage_heap
     }
 
@@ -774,9 +759,12 @@ impl<B: ExecBackend> Coordinator<B> {
                 self.fleet.instances[j] = spec;
                 self.instance_state[j] = InstanceState::Active;
                 // The slot is already in its family's index (same family by
-                // the reuse predicate); it counts as active again.
-                let fi = self.family_slot(spec.model).expect("reused slot has a family");
-                self.families[fi].active += 1;
+                // the reuse predicate); it counts as active again. The
+                // family is present by construction — `audit_invariants`
+                // cross-checks the index, so no panic path here (lint D6).
+                if let Some(fi) = self.family_slot(spec.model) {
+                    self.families[fi].active += 1;
+                }
                 self.dispatcher.on_instance_reset(j);
                 j
             }
@@ -830,8 +818,12 @@ impl<B: ExecBackend> Coordinator<B> {
         }
         self.instance_state[j] = InstanceState::Draining;
         let model = self.fleet.instances[j].model;
-        let fi = self.family_slot(model).expect("live slot has a family");
-        self.families[fi].active -= 1;
+        // Every live slot was indexed at registration, so the lookup
+        // cannot miss; `audit_invariants` cross-checks (lint D6: no panic
+        // paths in the serving layer).
+        if let Some(fi) = self.family_slot(model) {
+            self.families[fi].active -= 1;
+        }
         self.mark_dirty(j);
         self.scale_log.push(ScaleEvent {
             at: now,
@@ -922,8 +914,9 @@ impl<B: ExecBackend> Coordinator<B> {
             msg_id,
             WfState { plan, next_stage: 0, app_start: now, queue_time: 0.0, stage_latency },
         );
-        let req = self.make_request(msg_id, now);
-        self.route_and_enqueue(req);
+        if let Some(req) = self.make_request(msg_id, now) {
+            self.route_and_enqueue(req);
+        }
         msg_id
     }
 
@@ -1100,8 +1093,11 @@ impl<B: ExecBackend> Coordinator<B> {
         out
     }
 
-    fn make_request(&mut self, msg_id: MsgId, now: Time) -> Request {
-        let wf = self.workflows.get_mut(&msg_id).expect("workflow exists");
+    /// Build the next-stage request of workflow `msg_id`, or `None` when
+    /// the workflow is unknown (callers only invoke this for registered
+    /// workflows; the `Option` keeps the serving layer panic-free, lint D6).
+    fn make_request(&mut self, msg_id: MsgId, now: Time) -> Option<Request> {
+        let wf = self.workflows.get_mut(&msg_id)?;
         let i = wf.next_stage;
         let stage = &wf.plan.stages[i];
         let agent = self.orch.registry.intern(stage.agent);
@@ -1124,7 +1120,7 @@ impl<B: ExecBackend> Coordinator<B> {
                 upstream,
             },
         );
-        Request {
+        Some(Request {
             id,
             msg_id,
             agent,
@@ -1136,7 +1132,7 @@ impl<B: ExecBackend> Coordinator<B> {
             remaining_stages: wf.plan.remaining_stages(i),
             app_start: wf.app_start,
             stage_arrival: now,
-        }
+        })
     }
 
     /// Refresh stale entries of the status snapshot in place. An entry is
@@ -1286,7 +1282,13 @@ impl<B: ExecBackend> Coordinator<B> {
             let Some(s) = self.queue.best_shard(&self.blocked_buf) else {
                 return woken;
             };
-            let best = self.queue.peek_shard(s).expect("best shard has a head");
+            // `best_shard` only returns non-empty shards; a missing head
+            // would mean queue-internal drift, so block the shard and move
+            // on rather than panic on the serving path (lint D6).
+            let Some(best) = self.queue.peek_shard(s) else {
+                self.blocked_buf[s] = true;
+                continue;
+            };
             // The dispatch constraint is the request's own class — the
             // shard is only a queueing partition (a routed `Any` request
             // waits in a group's shard but may still dispatch anywhere).
@@ -1310,19 +1312,23 @@ impl<B: ExecBackend> Coordinator<B> {
                     self.fleet.instances.iter().any(|sp| class.matches(sp.model));
                 if family_exists {
                     self.blocked_buf[s] = true;
-                } else {
-                    let req = self.queue.pop_shard(s).unwrap();
+                } else if let Some(req) = self.queue.pop_shard(s) {
                     self.pending.remove(&req.id);
                     self.workflows.remove(&req.msg_id);
                     self.dropped += 1;
+                } else {
+                    self.blocked_buf[s] = true;
                 }
                 continue;
             }
             if !could_ever_fit {
-                let req = self.queue.pop_shard(s).unwrap();
-                self.pending.remove(&req.id);
-                self.workflows.remove(&req.msg_id);
-                self.dropped += 1;
+                if let Some(req) = self.queue.pop_shard(s) {
+                    self.pending.remove(&req.id);
+                    self.workflows.remove(&req.msg_id);
+                    self.dropped += 1;
+                } else {
+                    self.blocked_buf[s] = true;
+                }
                 continue;
             }
             let Some(j) = self.dispatcher.choose(best, &self.status_buf, now) else {
@@ -1338,7 +1344,12 @@ impl<B: ExecBackend> Coordinator<B> {
                     && class.matches(self.status_buf[j].model),
                 "dispatcher chose non-accepting or incompatible instance {j}"
             );
-            let req = self.queue.pop_shard(s).expect("peeked request still queued");
+            // The head was just peeked, so the pop cannot miss; if it ever
+            // did, deferring the shard is the deterministic fallback.
+            let Some(req) = self.queue.pop_shard(s) else {
+                self.blocked_buf[s] = true;
+                continue;
+            };
             self.dispatch_log.push((req.id, j));
             self.group_log.push(GroupDispatch {
                 req: req.id,
@@ -1431,28 +1442,38 @@ impl<B: ExecBackend> Coordinator<B> {
         self.metrics.record_served(p.agent, self.fleet.instances[instance].model);
         // Advance the workflow, if this request belongs to one (external
         // requests are single free-standing stages).
-        let done = match self.workflows.get_mut(&p.msg_id) {
+        // Advance while the mutable borrow is live and build the final
+        // record in the same pass — no second lookup, no panic path on the
+        // serving layer (lint D6).
+        let finished = match self.workflows.get_mut(&p.msg_id) {
             Some(wf) => {
                 wf.next_stage += 1;
-                wf.next_stage >= wf.plan.stages.len()
+                if wf.next_stage >= wf.plan.stages.len() {
+                    Some(WorkflowRecord {
+                        msg_id: p.msg_id,
+                        app: wf.plan.app,
+                        app_start: wf.app_start,
+                        finished_at: now,
+                        output_tokens: wf.plan.total_output_tokens(),
+                        queue_time: wf.queue_time,
+                    })
+                } else {
+                    None
+                }
             }
             None => return,
         };
-        if done {
-            let wf = self.workflows.get(&p.msg_id).unwrap();
-            self.metrics.record_workflow(WorkflowRecord {
-                msg_id: p.msg_id,
-                app: wf.plan.app,
-                app_start: wf.app_start,
-                finished_at: now,
-                output_tokens: wf.plan.total_output_tokens(),
-                queue_time: wf.queue_time,
-            });
-            self.orch.record_workflow_done(p.msg_id, now);
-            self.workflows.remove(&p.msg_id);
-        } else {
-            let req = self.make_request(p.msg_id, now);
-            self.route_and_enqueue(req);
+        match finished {
+            Some(rec) => {
+                self.metrics.record_workflow(rec);
+                self.orch.record_workflow_done(p.msg_id, now);
+                self.workflows.remove(&p.msg_id);
+            }
+            None => {
+                if let Some(req) = self.make_request(p.msg_id, now) {
+                    self.route_and_enqueue(req);
+                }
+            }
         }
     }
 
@@ -1489,6 +1510,140 @@ impl<B: ExecBackend> Coordinator<B> {
         self.finalize_drained(now);
         self.activate_booted(now);
         self.autoscale(now);
+        // Dynamic counterpart of the static lint pass: in debug builds
+        // every refresh re-derives the incremental structures from scratch
+        // and asserts they agree (release builds skip this; `kairos check`
+        // calls `audit_invariants` explicitly instead).
+        #[cfg(debug_assertions)]
+        {
+            let violations = self.audit_invariants();
+            assert!(
+                violations.is_empty(),
+                "coordinator invariant audit failed:\n{}",
+                violations.join("\n")
+            );
+        }
+    }
+
+    /// Cross-check the coordinator's incremental hot-path structures
+    /// against from-scratch rebuilds, returning one message per violation
+    /// (empty = consistent). The checks:
+    ///
+    /// 1. [`FamilyIndex`] — the per-family slot sets, first-seen order and
+    ///    active counts must match a fresh scan of the fleet.
+    /// 2. The dirty-flag [`GroupPressure`] cache — when marked clean it
+    ///    must equal a from-scratch rebuild of the instance-derived
+    ///    skeleton.
+    /// 3. Slot lifecycle — no tombstoned (or draining) slot whose status
+    ///    snapshot is up to date may be `accepting`, and every up-to-date
+    ///    Active slot must be.
+    ///
+    /// Called automatically from [`Self::refresh`] in debug builds, from
+    /// the seam tests, and per replayed event by `kairos check`.
+    pub fn audit_invariants(&self) -> Vec<String> {
+        let mut violations = Vec::new();
+        // (1) FamilyIndex vs a fresh first-seen-order scan of the fleet.
+        let mut fresh: Vec<FamilyIndex> = Vec::new();
+        for (j, spec) in self.fleet.instances.iter().enumerate() {
+            let active = (self.instance_state[j] == InstanceState::Active) as usize;
+            match fresh.iter_mut().find(|f| f.model == spec.model) {
+                Some(f) => {
+                    f.slots.push(j);
+                    f.active += active;
+                }
+                None => fresh.push(FamilyIndex {
+                    model: spec.model,
+                    slots: vec![j],
+                    active,
+                }),
+            }
+        }
+        if fresh.len() != self.families.len() {
+            violations.push(format!(
+                "family index holds {} families, fresh scan found {}",
+                self.families.len(),
+                fresh.len()
+            ));
+        }
+        for (f, g) in self.families.iter().zip(&fresh) {
+            if f.model != g.model {
+                violations.push(format!(
+                    "family order drift: index has {:?} where scan has {:?}",
+                    f.model, g.model
+                ));
+            }
+            if f.slots != g.slots {
+                violations.push(format!(
+                    "family {:?} slot set {:?} != fresh scan {:?}",
+                    f.model, f.slots, g.slots
+                ));
+            }
+            if f.active != g.active {
+                violations.push(format!(
+                    "family {:?} active count {} != fresh scan {}",
+                    f.model, f.active, g.active
+                ));
+            }
+        }
+        // (2) A clean pressure cache must equal a from-scratch rebuild of
+        // the instance-derived skeleton (queue depths are re-read per
+        // group_pressures call, so the cached `queued` is always 0).
+        if !self.pressure_cache_dirty {
+            let mut rebuilt: Vec<GroupPressure> = Vec::new();
+            for f in &self.families {
+                let mut g = GroupPressure {
+                    model: f.model,
+                    queued: 0,
+                    active: 0,
+                    inflight: 0,
+                    free_tokens: 0,
+                };
+                for &j in &f.slots {
+                    if self.instance_state[j] != InstanceState::Active {
+                        continue;
+                    }
+                    let st = &self.status_buf[j];
+                    g.active += 1;
+                    g.inflight += st.n_running + st.n_waiting;
+                    g.free_tokens += st
+                        .capacity_tokens
+                        .saturating_sub(st.committed_tokens + st.waiting_tokens);
+                }
+                rebuilt.push(g);
+            }
+            if rebuilt != self.pressure_cache {
+                violations.push(format!(
+                    "pressure cache marked clean but differs from rebuild: \
+                     cached {:?}, rebuilt {:?}",
+                    self.pressure_cache, rebuilt
+                ));
+            }
+        }
+        // (3) Up-to-date status snapshots must mirror the lifecycle state:
+        // accepting ≡ Active. Dirty slots are skipped — their snapshot is
+        // legitimately stale until the next batched refresh.
+        for (j, st) in self.status_buf.iter().enumerate() {
+            if self.status_dirty[j] {
+                continue;
+            }
+            let active = self.instance_state[j] == InstanceState::Active;
+            if st.accepting != active {
+                violations.push(format!(
+                    "slot {j} is {:?} but its snapshot has accepting={}",
+                    self.instance_state[j], st.accepting
+                ));
+            }
+        }
+        violations
+    }
+
+    /// Deliberately desynchronize the family index (test hook for proving
+    /// [`Self::audit_invariants`] detects corruption).
+    #[cfg(test)]
+    pub(crate) fn corrupt_family_index_for_test(&mut self) {
+        if let Some(f) = self.families.first_mut() {
+            f.active += 1;
+        }
     }
 
     /// Register every provisioned instance whose boot delay has elapsed,
@@ -2414,5 +2569,38 @@ mod tests {
         assert_eq!(legacy.group_log.take_vec(), indexed.group_log.take_vec());
         assert_eq!(legacy.route_log.take_vec(), indexed.route_log.take_vec());
         assert_eq!(legacy.metrics.requests.len(), indexed.metrics.requests.len());
+    }
+
+    #[test]
+    fn audit_passes_through_fleet_churn() {
+        let fleet = FleetSpec::parse("2*llama3-8b@0.12,llama2-13b@0.12").unwrap();
+        let mut c = Coordinator::sim(fleet, Box::new(Fcfs), Box::new(RoundRobin::new()));
+        assert_eq!(c.audit_invariants(), Vec::<String>::new());
+        for i in 0..6 {
+            c.submit_external("A", 32, 4, i as f64 * 0.01);
+        }
+        c.pump(0.1);
+        assert_eq!(c.audit_invariants(), Vec::<String>::new());
+        c.retire_instance(2, 0.2).unwrap();
+        let spec = InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(0.12);
+        c.add_instance(spec, 0.3).unwrap();
+        c.refresh(0.4); // debug builds audit here too
+        assert_eq!(c.audit_invariants(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn audit_catches_corrupted_family_index() {
+        let mut c = Coordinator::sim(
+            small_fleet(2, 0.12),
+            Box::new(Fcfs),
+            Box::new(RoundRobin::new()),
+        );
+        assert!(c.audit_invariants().is_empty(), "fresh fleet audits clean");
+        c.corrupt_family_index_for_test();
+        let violations = c.audit_invariants();
+        assert!(
+            violations.iter().any(|v| v.contains("active count")),
+            "corrupted active count must be reported, got: {violations:?}"
+        );
     }
 }

@@ -15,8 +15,41 @@ use crate::engine::pjrt_backend::PjrtExecBackend;
 use crate::engine::request::RequestId;
 use crate::lb::policies::SchedulePolicy;
 use crate::runtime::{ByteTokenizer, TinyModel};
-use crate::server::coordinator::{Clock, Coordinator, FleetSpec, InstanceSpec, WallClock};
+use crate::server::coordinator::{Clock, Coordinator, FleetSpec, InstanceSpec};
 use crate::Time;
+
+// ---------------------------------------------------------------------------
+// Wall clock
+//
+// This module is the single place allowed to read real time (lint rule D1):
+// every other component takes `now` from its caller, so the virtual-time
+// driver and this one run the same coordination code.
+
+/// Wall-clock time since construction (the real-serving driver's clock).
+pub struct WallClock {
+    origin: std::time::Instant,
+}
+
+impl WallClock {
+    /// Anchor the clock at the current instant; [`Clock::now`] reports
+    /// seconds elapsed since then.
+    #[allow(clippy::disallowed_methods)] // the one sanctioned wall-time read
+    pub fn new() -> WallClock {
+        WallClock { origin: std::time::Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Time {
+        self.origin.elapsed().as_secs_f64()
+    }
+}
 
 /// One serving response.
 #[derive(Debug, Clone)]
@@ -158,12 +191,18 @@ impl RealServer {
                 let absorbed = self.coord.absorb(j, out, t_done);
                 for seq in absorbed.completed {
                     let id = seq.req.id;
+                    // `serve` returns `Result`, so a missing generation or
+                    // meta entry becomes an error instead of a panic on the
+                    // serving path (lint D6).
                     let gen = self.coord.engines[j]
                         .backend
                         .take_generation(id)
-                        .expect("generation state");
-                    let (agent, prompt, arrived) =
-                        meta.remove(&id).expect("request meta");
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("no generation state for request {id}")
+                        })?;
+                    let (agent, prompt, arrived) = meta.remove(&id).ok_or_else(|| {
+                        anyhow::anyhow!("no submission meta for request {id}")
+                    })?;
                     responses.push(Response {
                         id,
                         agent,

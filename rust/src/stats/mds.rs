@@ -175,7 +175,7 @@ mod tests {
         let pts = [2.0, 9.0, 4.0, 0.5];
         let coords = mds_1d(&dist_matrix(&pts));
         let mut idx: Vec<usize> = (0..4).collect();
-        idx.sort_by(|&a, &b| coords[a].partial_cmp(&coords[b]).unwrap());
+        idx.sort_by(|&a, &b| coords[a].total_cmp(&coords[b]));
         let fwd = vec![3usize, 0, 2, 1];
         let rev: Vec<usize> = fwd.iter().rev().cloned().collect();
         assert!(idx == fwd || idx == rev, "idx={idx:?}");

@@ -264,6 +264,7 @@ pub struct Trace {
 }
 
 impl Trace {
+    /// Wrap already-ordered records (e.g. a run's recorded `trace_log`).
     pub fn from_records(records: Vec<TraceRecord>) -> Trace {
         Trace { records }
     }
@@ -286,10 +287,12 @@ impl Trace {
             .collect()
     }
 
+    /// Number of arrival records.
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
+    /// Whether the trace holds no records.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
@@ -350,12 +353,14 @@ impl Trace {
 
     /// Write the JSONL form to `path`.
     pub fn save(&self, path: &Path) -> Result<(), String> {
+        // kairos-lint: allow(no-env-fs, trace persistence is this type's contract; callers pass explicit paths)
         std::fs::write(path, self.to_jsonl())
             .map_err(|e| format!("cannot write trace {}: {e}", path.display()))
     }
 
     /// Load a JSONL trace from `path`.
     pub fn load(path: &Path) -> Result<Trace, String> {
+        // kairos-lint: allow(no-env-fs, trace persistence is this type's contract; callers pass explicit paths)
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("cannot read trace {}: {e}", path.display()))?;
         Self::from_jsonl(&text)
@@ -471,6 +476,7 @@ pub struct FileSource {
 }
 
 impl FileSource {
+    /// A source reading the JSONL trace at `path` on materialize.
     pub fn new(path: impl Into<PathBuf>) -> FileSource {
         FileSource { path: path.into() }
     }

@@ -21,7 +21,8 @@ use kairos::server::coordinator::{
 };
 use kairos::server::pressure::PressureTrace;
 use kairos::server::sim::{
-    make_dispatcher_routed, make_policy, run_fleet, FleetConfig,
+    make_dispatcher_for_fleet, make_dispatcher_routed, make_policy, run_fleet,
+    FleetConfig, SimServer,
 };
 use kairos::stats::rng::Rng;
 use kairos::workload::{ArrivalEvent, Trace, TraceGen, TraceRecord, WorkloadMix};
@@ -227,6 +228,14 @@ fn drive_polling_elastic(
             start_idle(&mut coord, &mut in_flight, now);
         } else {
             coord.refresh(now);
+            // The seam is also where the structural invariants are
+            // audited: every refresh tick of the polling driver checks the
+            // FamilyIndex and pressure cache against from-scratch rebuilds.
+            let violations = coord.audit_invariants();
+            assert!(
+                violations.is_empty(),
+                "invariant audit failed at t={now}: {violations:?}"
+            );
             coord.pump(now);
             // The autoscaler (or a completed boot) may have grown the
             // fleet on this tick.
@@ -659,6 +668,37 @@ fn ring_buffer_logging_preserves_dispatch_decisions() {
     let rel = (sketch.p50_token_latency - exact.p50_token_latency).abs()
         / exact.p50_token_latency.max(1e-9);
     assert!(rel < 0.5, "P² median drifted {rel} from exact");
+}
+
+#[test]
+fn invariant_audits_hold_through_an_elastic_sim_run() {
+    // The discrete-event counterpart of the polling driver's per-refresh
+    // audit: `SimServer::enable_audit` checks the FamilyIndex slot sets,
+    // the pressure cache, and tombstone exclusion on every refresh tick of
+    // a run that grows, drains, and retires instances — the regime where
+    // the incrementally-maintained structures could drift.
+    let fleet = FleetSpec::parse("2*llama3-8b@0.12,llama2-13b@0.12").unwrap();
+    let aff =
+        AffinitySpec::parse("*=llama3-8b,Engineer=llama2-13b,QAEngineer=llama2-13b")
+            .unwrap();
+    let mut auto = elastic_config(&fleet);
+    auto.per_group = parse_per_group("llama3-8b=2..4,llama2-13b=1..2").unwrap();
+    let mut cfg = FleetConfig::from(fleet.clone());
+    cfg.autoscale = Some(auto);
+    cfg.affinity = Some(aff);
+    let mut server = SimServer::with_fleet(
+        cfg,
+        make_policy("kairos"),
+        make_dispatcher_for_fleet("kairos", &fleet),
+    );
+    server.enable_audit();
+    let res = server.run(burst_then_calm(71));
+    assert!(res.audit_checks > 0, "audits must actually run");
+    assert!(res.audit_violations.is_empty(), "{:?}", res.audit_violations);
+    assert!(
+        res.scale_log.iter().any(|e| e.kind == ScaleEventKind::Grow),
+        "burst must reshape the fleet so the audit covers churn"
+    );
 }
 
 #[test]

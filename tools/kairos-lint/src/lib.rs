@@ -1,0 +1,368 @@
+//! Repo-specific determinism lints for the Kairos reproduction.
+//!
+//! The simulator's core promise is bit-for-bit reproducibility: the same
+//! trace and seed must produce the same dispatch decisions on every run.
+//! The compiler cannot enforce the conventions that promise rests on —
+//! no wall-clock reads outside the `WallClock` seam, no iteration over
+//! hash-ordered containers in decision paths, total float comparisons,
+//! no ambient randomness — so this crate does, as `syn`-level AST passes
+//! with `file:line:col` diagnostics.
+//!
+//! Each rule carries a stable kebab-case id (see [`rules`]). A violation
+//! can be waived in place with a suppression comment on the line above
+//! (or the same line as) the offending code:
+//!
+//! ```text
+//! // kairos-lint: allow(rule-id, why this site is legitimately exempt)
+//! ```
+//!
+//! The reason is mandatory — an allow without one is itself an error. The
+//! CI `lint` job runs `cargo run -p kairos-lint -- --root rust/src` and
+//! fails on any diagnostic.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+pub mod rules;
+
+/// Rule id reported for malformed or reason-less suppression comments.
+pub const SUPPRESSION_RULE: &str = "suppression";
+
+/// One lint finding, anchored to a source location.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable kebab-case rule id (e.g. `wall-clock`).
+    pub rule: &'static str,
+    /// File path as given to the engine (relative, forward slashes).
+    pub file: String,
+    /// 1-based line of the offending code.
+    pub line: usize,
+    /// 1-based column of the offending code.
+    pub col: usize,
+    /// What is wrong and what to do instead.
+    pub message: String,
+    /// The offending source line, trimmed.
+    pub snippet: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{}:{}:{}: [{}] {}",
+            self.file, self.line, self.col, self.rule, self.message
+        )?;
+        write!(f, "    |  {}", self.snippet)
+    }
+}
+
+/// A rule finding before it is bound to a file and filtered against
+/// suppressions.
+#[derive(Debug, Clone)]
+pub struct RawDiag {
+    /// 1-based line.
+    pub line: usize,
+    /// 1-based column.
+    pub col: usize,
+    /// Diagnostic text.
+    pub message: String,
+}
+
+/// Everything a rule may inspect about one source file.
+pub struct FileCtx<'a> {
+    /// Path relative to the lint root, forward slashes.
+    pub rel: &'a str,
+    /// Raw source text.
+    pub src: &'a str,
+    /// `src` split into lines (0-indexed; line N of a span is `lines[N-1]`).
+    pub lines: &'a [&'a str],
+    /// Parsed AST.
+    pub ast: &'a syn::File,
+}
+
+/// One determinism lint: an id, a path scope, and an AST check.
+pub trait Rule {
+    /// Stable kebab-case id used in diagnostics and suppression comments.
+    fn id(&self) -> &'static str;
+    /// One-line description for `--list-rules`.
+    fn description(&self) -> &'static str;
+    /// Whether the rule runs on this file (path relative to the root).
+    fn applies_to(&self, rel: &str) -> bool;
+    /// Run the check and report findings.
+    fn check(&self, ctx: &FileCtx) -> Vec<RawDiag>;
+}
+
+/// A parsed `// kairos-lint: allow(rule, reason)` marker.
+#[derive(Debug, Clone)]
+struct Suppression {
+    /// 1-based line the comment sits on.
+    line: usize,
+    /// The rule id it waives.
+    rule: String,
+}
+
+const MARKER: &str = "kairos-lint:";
+
+/// Scan the raw source for suppression markers. Returns the valid
+/// suppressions and an error diagnostic for every malformed or
+/// reason-less marker (those errors are never themselves suppressible).
+fn parse_suppressions(lines: &[&str]) -> (Vec<Suppression>, Vec<RawDiag>) {
+    let mut sups = Vec::new();
+    let mut errors = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        let Some(pos) = raw.find(MARKER) else { continue };
+        let line = i + 1;
+        let col = pos + 1;
+        let rest = raw[pos + MARKER.len()..].trim_start();
+        let body = rest
+            .strip_prefix("allow(")
+            .and_then(|inner| inner.rfind(')').map(|end| &inner[..end]));
+        let Some(body) = body else {
+            errors.push(RawDiag {
+                line,
+                col,
+                message: format!(
+                    "malformed suppression — expected `// {MARKER} allow(rule-id, reason)`"
+                ),
+            });
+            continue;
+        };
+        match body.split_once(',') {
+            Some((rule, reason)) if !reason.trim().is_empty() => sups.push(Suppression {
+                line,
+                rule: rule.trim().to_string(),
+            }),
+            _ => errors.push(RawDiag {
+                line,
+                col,
+                message: format!(
+                    "suppression needs a reason — `// {MARKER} allow(rule-id, reason)`"
+                ),
+            }),
+        }
+    }
+    (sups, errors)
+}
+
+/// Whether a diagnostic of `rule` at `line` is waived: a matching allow
+/// marker on the same line, or on a directly preceding line in an
+/// unbroken run of comments and attributes.
+fn is_suppressed(
+    by_line: &BTreeMap<usize, Vec<String>>,
+    lines: &[&str],
+    rule: &str,
+    line: usize,
+) -> bool {
+    let matches_at = |l: usize| {
+        by_line
+            .get(&l)
+            .is_some_and(|rules| rules.iter().any(|r| r == rule))
+    };
+    if matches_at(line) {
+        return true;
+    }
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        let text = lines.get(l - 1).map(|s| s.trim()).unwrap_or("");
+        if !(text.starts_with("//") || text.starts_with("#[") || text.starts_with("#!")) {
+            return false;
+        }
+        if matches_at(l) {
+            return true;
+        }
+    }
+    false
+}
+
+/// The full rule set, in catalog order.
+pub fn default_rules() -> Vec<Box<dyn Rule>> {
+    rules::all()
+}
+
+/// Lint one file's source text against `rules`. `rel` decides path
+/// scoping, so callers must pass the path relative to the lint root.
+pub fn lint_source(rel: &str, src: &str, rules: &[Box<dyn Rule>]) -> Vec<Diagnostic> {
+    let lines: Vec<&str> = src.lines().collect();
+    let snippet_at =
+        |line: usize| lines.get(line.wrapping_sub(1)).map(|s| s.trim()).unwrap_or("").to_string();
+    let mut out = Vec::new();
+
+    let (sups, sup_errors) = parse_suppressions(&lines);
+    for e in sup_errors {
+        out.push(Diagnostic {
+            rule: SUPPRESSION_RULE,
+            file: rel.to_string(),
+            line: e.line,
+            col: e.col,
+            message: e.message,
+            snippet: snippet_at(e.line),
+        });
+    }
+    let mut by_line: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    for s in &sups {
+        by_line.entry(s.line).or_default().push(s.rule.clone());
+    }
+
+    let ast = match syn::parse_file(src) {
+        Ok(ast) => ast,
+        Err(e) => {
+            let start = e.span().start();
+            out.push(Diagnostic {
+                rule: "parse",
+                file: rel.to_string(),
+                line: start.line,
+                col: start.column + 1,
+                message: format!("file does not parse: {e}"),
+                snippet: snippet_at(start.line),
+            });
+            return out;
+        }
+    };
+    let ctx = FileCtx { rel, src, lines: &lines, ast: &ast };
+    for rule in rules {
+        if !rule.applies_to(rel) {
+            continue;
+        }
+        for d in rule.check(&ctx) {
+            if is_suppressed(&by_line, &lines, rule.id(), d.line) {
+                continue;
+            }
+            out.push(Diagnostic {
+                rule: rule.id(),
+                file: rel.to_string(),
+                line: d.line,
+                col: d.col,
+                message: d.message,
+                snippet: snippet_at(d.line),
+            });
+        }
+    }
+    out.sort_by_key(|d| (d.line, d.col, d.rule));
+    out
+}
+
+/// Recursively lint every `.rs` file under `root` (deterministic file
+/// order). Paths in diagnostics are relative to `root`.
+pub fn lint_root(root: &Path, rules: &[Box<dyn Rule>]) -> anyhow::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in files {
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.extend(lint_source(&rel, &src, rules));
+    }
+    Ok(out)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> anyhow::Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(rel: &str, src: &str) -> Vec<Diagnostic> {
+        lint_source(rel, src, &default_rules())
+    }
+
+    #[test]
+    fn suppression_with_reason_waives_the_next_line() {
+        let src = "fn f() {\n\
+                   \x20   // kairos-lint: allow(wall-clock, timing a real run)\n\
+                   \x20   let _t = std::time::Instant::now();\n\
+                   }\n";
+        assert!(lint("lb/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn suppression_without_reason_is_an_error() {
+        let src = "fn f() {\n\
+                   \x20   // kairos-lint: allow(wall-clock)\n\
+                   \x20   let _t = std::time::Instant::now();\n\
+                   }\n";
+        let diags = lint("lb/x.rs", src);
+        assert!(
+            diags.iter().any(|d| d.rule == SUPPRESSION_RULE),
+            "reason-less allow must error: {diags:?}"
+        );
+        assert!(
+            diags.iter().any(|d| d.rule == "wall-clock"),
+            "a broken suppression must not waive the violation: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn suppression_for_the_wrong_rule_does_not_waive() {
+        let src = "fn f() {\n\
+                   \x20   // kairos-lint: allow(no-env-fs, wrong rule entirely)\n\
+                   \x20   let _t = std::time::Instant::now();\n\
+                   }\n";
+        let diags = lint("lb/x.rs", src);
+        assert!(diags.iter().any(|d| d.rule == "wall-clock"), "{diags:?}");
+    }
+
+    #[test]
+    fn suppression_skips_over_attributes() {
+        let src = "fn f() {\n\
+                   \x20   // kairos-lint: allow(wall-clock, attribute sits between)\n\
+                   \x20   #[allow(clippy::disallowed_methods)]\n\
+                   \x20   let _t = std::time::Instant::now();\n\
+                   }\n";
+        assert!(lint("lb/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn diagnostics_carry_location_and_snippet() {
+        let src = "fn f() {\n    let _t = std::time::Instant::now();\n}\n";
+        let diags = lint("lb/x.rs", src);
+        assert_eq!(diags.len(), 1);
+        let d = &diags[0];
+        assert_eq!(d.rule, "wall-clock");
+        assert_eq!(d.line, 2);
+        assert!(d.col > 1);
+        assert!(d.snippet.contains("Instant::now"));
+        let shown = d.to_string();
+        assert!(shown.contains("lb/x.rs:2:"), "{shown}");
+    }
+
+    #[test]
+    fn unparsable_file_reports_a_parse_diagnostic() {
+        let diags = lint("util/x.rs", "fn f( {}\n");
+        assert!(diags.iter().any(|d| d.rule == "parse"), "{diags:?}");
+    }
+
+    #[test]
+    fn test_modules_are_exempt_from_every_rule() {
+        let src = "#[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   #[test]\n\
+                   \x20   fn t() {\n\
+                   \x20       let _t = std::time::Instant::now();\n\
+                   \x20       let x: Option<u32> = None;\n\
+                   \x20       let _ = x.unwrap();\n\
+                   \x20   }\n\
+                   }\n";
+        assert!(lint("server/x.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,85 @@
+//! CLI for the determinism linter.
+//!
+//! ```text
+//! cargo run -p kairos-lint -- --root rust/src [--rule ID] [--list-rules]
+//! ```
+//!
+//! Exits 0 when the tree is clean, 1 when any diagnostic fires.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("kairos-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> anyhow::Result<ExitCode> {
+    let mut root: Option<PathBuf> = None;
+    let mut rule_filter: Option<String> = None;
+    let mut list_rules = false;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => {
+                root = Some(PathBuf::from(args.next().ok_or_else(|| {
+                    anyhow::anyhow!("--root requires a path")
+                })?));
+            }
+            "--rule" => {
+                rule_filter = Some(args.next().ok_or_else(|| {
+                    anyhow::anyhow!("--rule requires a rule id")
+                })?);
+            }
+            "--list-rules" => list_rules = true,
+            "--help" | "-h" => {
+                println!(
+                    "usage: kairos-lint --root PATH [--rule ID] [--list-rules]\n\
+                     Lints a Rust source tree for the repo's determinism rules.\n\
+                     Suppress a finding in place with\n\
+                     `// kairos-lint: allow(rule-id, reason)` — reason mandatory."
+                );
+                return Ok(ExitCode::SUCCESS);
+            }
+            other => anyhow::bail!("unknown argument `{other}` (try --help)"),
+        }
+    }
+
+    let rules = kairos_lint::default_rules();
+    if list_rules {
+        for r in &rules {
+            println!("{:<16} {}", r.id(), r.description());
+        }
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let root = root.ok_or_else(|| anyhow::anyhow!("--root PATH is required (try --help)"))?;
+    if let Some(id) = &rule_filter {
+        if !rules.iter().any(|r| r.id() == id) {
+            anyhow::bail!("unknown rule `{id}` (see --list-rules)");
+        }
+    }
+
+    let mut diags = kairos_lint::lint_root(&root, &rules)?;
+    if let Some(id) = &rule_filter {
+        // The suppression meta-rule always reports: a broken allow is an
+        // error regardless of which rule is being filtered for.
+        diags.retain(|d| d.rule == id || d.rule == kairos_lint::SUPPRESSION_RULE);
+    }
+
+    if diags.is_empty() {
+        println!("kairos-lint: clean ({} rules over {})", rules.len(), root.display());
+        return Ok(ExitCode::SUCCESS);
+    }
+    for d in &diags {
+        println!("{d}");
+    }
+    println!("kairos-lint: {} violation(s)", diags.len());
+    Ok(ExitCode::FAILURE)
+}

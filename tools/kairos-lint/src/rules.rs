@@ -1,0 +1,736 @@
+//! The eight determinism rules (D1–D8 in the lint catalog).
+//!
+//! Every rule skips `#[cfg(test)]` modules and `#[test]` functions:
+//! tests may freely read clocks, unwrap, and iterate hash maps — the
+//! rules guard the simulation and serving paths, not test scaffolding.
+
+use proc_macro2::Span;
+use quote::ToTokens;
+use syn::visit::{self, Visit};
+
+use crate::{FileCtx, RawDiag, Rule};
+
+/// All rules in catalog order (D1..D8).
+pub fn all() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(WallClock),
+        Box::new(UnorderedIter),
+        Box::new(FloatOrd),
+        Box::new(SeededRand),
+        Box::new(UnboundedLog),
+        Box::new(HotPathPanic),
+        Box::new(MissingDocs),
+        Box::new(NoEnvFs),
+    ]
+}
+
+/// Token-stream text of any AST node, with single spaces between tokens
+/// (e.g. `v . sort_by (| a , b | ...)`). Span joins can fail across
+/// files, so exemption matching works on this canonical text instead of
+/// raw source slices.
+fn tok(node: &impl ToTokens) -> String {
+    node.to_token_stream().to_string()
+}
+
+/// (1-based line, 1-based column) of a span start.
+fn lc(span: Span) -> (usize, usize) {
+    let start = span.start();
+    (start.line, start.column + 1)
+}
+
+/// Whether an attribute list marks test-only code: `#[test]` or a
+/// `#[cfg(...)]` whose arguments mention `test`.
+fn is_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        if a.path().is_ident("test") {
+            return true;
+        }
+        a.path().is_ident("cfg") && tok(&a.meta).contains("test")
+    })
+}
+
+/// Visitor overrides that stop recursion at test-only scopes:
+/// `#[cfg(test)]` modules, `#[test]`/`#[cfg(test)]` free functions, and
+/// `#[cfg(test)]` methods inside regular impl blocks.
+macro_rules! skip_test_scopes {
+    () => {
+        fn visit_item_mod(&mut self, m: &'ast syn::ItemMod) {
+            if is_cfg_test(&m.attrs) {
+                return;
+            }
+            visit::visit_item_mod(self, m);
+        }
+
+        fn visit_item_fn(&mut self, f: &'ast syn::ItemFn) {
+            if is_cfg_test(&f.attrs) {
+                return;
+            }
+            visit::visit_item_fn(self, f);
+        }
+
+        fn visit_impl_item_fn(&mut self, f: &'ast syn::ImplItemFn) {
+            if is_cfg_test(&f.attrs) {
+                return;
+            }
+            visit::visit_impl_item_fn(self, f);
+        }
+    };
+}
+
+/// D1 `wall-clock`: `Instant::now` / `SystemTime::now` only behind the
+/// `WallClock` seam in `server/real.rs` (plus measurement-only files).
+struct WallClock;
+
+struct WallClockVisitor {
+    diags: Vec<RawDiag>,
+}
+
+impl<'ast> Visit<'ast> for WallClockVisitor {
+    skip_test_scopes!();
+
+    fn visit_expr_path(&mut self, p: &'ast syn::ExprPath) {
+        let segs: Vec<String> = p.path.segments.iter().map(|s| s.ident.to_string()).collect();
+        if segs.len() >= 2
+            && segs[segs.len() - 1] == "now"
+            && matches!(segs[segs.len() - 2].as_str(), "Instant" | "SystemTime")
+        {
+            let (line, col) = lc(p.path.segments.first().map(|s| s.ident.span()).unwrap_or_else(Span::call_site));
+            self.diags.push(RawDiag {
+                line,
+                col,
+                message: format!(
+                    "`{}::now` outside the WallClock seam — route real time through \
+                     `server::real::WallClock` so simulated runs stay deterministic",
+                    segs[segs.len() - 2]
+                ),
+            });
+        }
+        visit::visit_expr_path(self, p);
+    }
+}
+
+impl Rule for WallClock {
+    fn id(&self) -> &'static str {
+        "wall-clock"
+    }
+    fn description(&self) -> &'static str {
+        "Instant::now/SystemTime::now only inside the WallClock seam (server/real.rs)"
+    }
+    fn applies_to(&self, rel: &str) -> bool {
+        rel != "server/real.rs" && rel != "figures/overhead.rs" && !rel.starts_with("bench/")
+    }
+    fn check(&self, ctx: &FileCtx) -> Vec<RawDiag> {
+        let mut v = WallClockVisitor { diags: Vec::new() };
+        v.visit_file(ctx.ast);
+        v.diags
+    }
+}
+
+/// D2 `unordered-iter`: no iteration over `HashMap`/`HashSet` contents
+/// unless the result is immediately sorted or folded into an
+/// order-insensitive scalar.
+struct UnorderedIter;
+
+/// Pass A: every identifier (local, field, static, fn param) whose
+/// declared type or initializer tokens mention HashMap/HashSet.
+struct HashNameCollector {
+    names: Vec<String>,
+}
+
+impl HashNameCollector {
+    fn note(&mut self, name: String, type_text: &str) {
+        if type_text.contains("HashMap") || type_text.contains("HashSet") {
+            self.names.push(name);
+        }
+    }
+}
+
+impl<'ast> Visit<'ast> for HashNameCollector {
+    fn visit_field(&mut self, f: &'ast syn::Field) {
+        if let Some(id) = &f.ident {
+            self.note(id.to_string(), &tok(&f.ty));
+        }
+        visit::visit_field(self, f);
+    }
+
+    fn visit_local(&mut self, l: &'ast syn::Local) {
+        let name = match &l.pat {
+            syn::Pat::Ident(p) => Some(p.ident.to_string()),
+            syn::Pat::Type(t) => match &*t.pat {
+                syn::Pat::Ident(p) => Some(p.ident.to_string()),
+                _ => None,
+            },
+            _ => None,
+        };
+        if let Some(name) = name {
+            self.note(name, &tok(l));
+        }
+        visit::visit_local(self, l);
+    }
+
+    fn visit_item_static(&mut self, s: &'ast syn::ItemStatic) {
+        self.note(s.ident.to_string(), &tok(&s.ty));
+        visit::visit_item_static(self, s);
+    }
+
+    fn visit_pat_type(&mut self, p: &'ast syn::PatType) {
+        if let syn::Pat::Ident(id) = &*p.pat {
+            self.note(id.ident.to_string(), &tok(&p.ty));
+        }
+        visit::visit_pat_type(self, p);
+    }
+}
+
+/// Base identifier an expression reads from: `m` for `m`, `self.m`,
+/// `(&m)`, `&mut m`. `None` when the receiver is itself a call result.
+fn base_name(e: &syn::Expr) -> Option<String> {
+    match e {
+        syn::Expr::Path(p) => p.path.segments.last().map(|s| s.ident.to_string()),
+        syn::Expr::Field(f) => match &f.member {
+            syn::Member::Named(id) => Some(id.to_string()),
+            syn::Member::Unnamed(_) => None,
+        },
+        syn::Expr::Reference(r) => base_name(&r.expr),
+        syn::Expr::Paren(p) => base_name(&p.expr),
+        _ => None,
+    }
+}
+
+const ITER_METHODS: &[&str] =
+    &["iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "drain"];
+
+/// Spaced-token fragments that make a statement order-insensitive: the
+/// iteration collapses to a scalar or is explicitly sorted.
+const ORDER_OK: &[&str] = &[
+    ". sort",
+    ". sum ()",
+    ". sum :: <",
+    ". count ()",
+    ". min ()",
+    ". max ()",
+    ". min_by",
+    ". max_by",
+    ". any (",
+    ". all (",
+    ". fold (",
+];
+
+fn stmt_is_order_ok(text: &str) -> bool {
+    ORDER_OK.iter().any(|p| text.contains(p))
+}
+
+/// Pass B: walk statements, flagging hash-container iteration unless the
+/// statement itself sorts/folds, or it binds a `let` whose very next
+/// statement sorts the binding.
+struct UnorderedIterVisitor<'n> {
+    hash_names: &'n [String],
+    diags: Vec<RawDiag>,
+}
+
+impl UnorderedIterVisitor<'_> {
+    fn is_hash(&self, name: &str) -> bool {
+        self.hash_names.iter().any(|n| n == name)
+    }
+
+    /// Findings inside one statement (spans of flagged expressions).
+    fn scan_stmt(&self, stmt: &syn::Stmt) -> Vec<(usize, usize, String)> {
+        struct Finder<'a> {
+            outer: &'a UnorderedIterVisitor<'a>,
+            found: Vec<(usize, usize, String)>,
+        }
+        impl<'a, 'ast> Visit<'ast> for Finder<'a> {
+            // Nested blocks are scanned as their own statement lists by
+            // the outer visitor; recursing here would double-report.
+            fn visit_block(&mut self, _b: &'ast syn::Block) {}
+
+            fn visit_expr_method_call(&mut self, c: &'ast syn::ExprMethodCall) {
+                let m = c.method.to_string();
+                if ITER_METHODS.contains(&m.as_str()) {
+                    if let Some(recv) = base_name(&c.receiver) {
+                        if self.outer.is_hash(&recv) {
+                            let (line, col) = lc(c.method.span());
+                            self.found.push((line, col, format!("`{recv}.{m}()`")));
+                        }
+                    }
+                }
+                visit::visit_expr_method_call(self, c);
+            }
+
+            fn visit_expr_for_loop(&mut self, f: &'ast syn::ExprForLoop) {
+                if let Some(name) = base_name(&f.expr) {
+                    if self.outer.is_hash(&name) {
+                        let (line, col) = lc(f.for_token.span);
+                        self.found.push((line, col, format!("`for _ in {name}`")));
+                    }
+                }
+                visit::visit_expr_for_loop(self, f);
+            }
+        }
+        let mut f = Finder { outer: self, found: Vec::new() };
+        f.visit_stmt(stmt);
+        f.found
+    }
+}
+
+/// Name bound by `let <name> = ...;`, if the pattern is simple.
+fn let_binding(stmt: &syn::Stmt) -> Option<String> {
+    if let syn::Stmt::Local(l) = stmt {
+        return match &l.pat {
+            syn::Pat::Ident(p) => Some(p.ident.to_string()),
+            syn::Pat::Type(t) => match &*t.pat {
+                syn::Pat::Ident(p) => Some(p.ident.to_string()),
+                _ => None,
+            },
+            _ => None,
+        };
+    }
+    None
+}
+
+impl<'ast> Visit<'ast> for UnorderedIterVisitor<'_> {
+    skip_test_scopes!();
+
+    fn visit_block(&mut self, b: &'ast syn::Block) {
+        for (i, stmt) in b.stmts.iter().enumerate() {
+            let found = self.scan_stmt(stmt);
+            if !found.is_empty() {
+                let text = tok(stmt);
+                let exempt = stmt_is_order_ok(&text)
+                    || let_binding(stmt).is_some_and(|name| {
+                        b.stmts.get(i + 1).is_some_and(|next| {
+                            tok(next).contains(&format!("{name} . sort"))
+                        })
+                    });
+                if !exempt {
+                    for (line, col, what) in found {
+                        self.diags.push(RawDiag {
+                            line,
+                            col,
+                            message: format!(
+                                "{what} iterates a hash-ordered container — collect and \
+                                 sort, switch to BTreeMap/BTreeSet, or reduce to an \
+                                 order-insensitive scalar"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        visit::visit_block(self, b);
+    }
+}
+
+impl Rule for UnorderedIter {
+    fn id(&self) -> &'static str {
+        "unordered-iter"
+    }
+    fn description(&self) -> &'static str {
+        "no HashMap/HashSet iteration unless immediately sorted or order-insensitive"
+    }
+    fn applies_to(&self, _rel: &str) -> bool {
+        true
+    }
+    fn check(&self, ctx: &FileCtx) -> Vec<RawDiag> {
+        let mut names = HashNameCollector { names: Vec::new() };
+        names.visit_file(ctx.ast);
+        let mut v = UnorderedIterVisitor { hash_names: &names.names, diags: Vec::new() };
+        v.visit_file(ctx.ast);
+        v.diags
+    }
+}
+
+/// D3 `float-ord`: comparisons on float keys must use `total_cmp`.
+struct FloatOrd;
+
+struct FloatOrdVisitor {
+    diags: Vec<RawDiag>,
+}
+
+impl<'ast> Visit<'ast> for FloatOrdVisitor {
+    skip_test_scopes!();
+
+    fn visit_expr_method_call(&mut self, c: &'ast syn::ExprMethodCall) {
+        if c.method == "partial_cmp" {
+            let (line, col) = lc(c.method.span());
+            self.diags.push(RawDiag {
+                line,
+                col,
+                message: "`partial_cmp` on a sort key — NaN makes it non-total and the \
+                          comparator panics or reorders; use `total_cmp`"
+                    .to_string(),
+            });
+        }
+        visit::visit_expr_method_call(self, c);
+    }
+}
+
+impl Rule for FloatOrd {
+    fn id(&self) -> &'static str {
+        "float-ord"
+    }
+    fn description(&self) -> &'static str {
+        "float comparisons use total_cmp, never partial_cmp"
+    }
+    fn applies_to(&self, _rel: &str) -> bool {
+        true
+    }
+    fn check(&self, ctx: &FileCtx) -> Vec<RawDiag> {
+        let mut v = FloatOrdVisitor { diags: Vec::new() };
+        v.visit_file(ctx.ast);
+        v.diags
+    }
+}
+
+/// D4 `seeded-rand`: no ambient randomness — no `rand`, `getrandom`,
+/// `thread_rng`, `RandomState`, or `DefaultHasher`.
+struct SeededRand;
+
+const RAND_IDENTS: &[&str] =
+    &["rand", "thread_rng", "RandomState", "DefaultHasher", "getrandom"];
+
+struct SeededRandVisitor {
+    diags: Vec<RawDiag>,
+}
+
+impl<'ast> Visit<'ast> for SeededRandVisitor {
+    skip_test_scopes!();
+
+    fn visit_path(&mut self, p: &'ast syn::Path) {
+        for seg in &p.segments {
+            let name = seg.ident.to_string();
+            if RAND_IDENTS.contains(&name.as_str()) {
+                let (line, col) = lc(seg.ident.span());
+                self.diags.push(RawDiag {
+                    line,
+                    col,
+                    message: format!(
+                        "`{name}` introduces run-to-run nondeterminism — thread explicit \
+                         seeds through `stats::rng::Rng` instead"
+                    ),
+                });
+            }
+        }
+        visit::visit_path(self, p);
+    }
+
+    fn visit_item_use(&mut self, u: &'ast syn::ItemUse) {
+        let text = tok(&u.tree);
+        for name in ["rand", "getrandom"] {
+            if text == name || text.starts_with(&format!("{name} ::")) {
+                let (line, col) = lc(u.use_token.span);
+                self.diags.push(RawDiag {
+                    line,
+                    col,
+                    message: format!("importing `{name}` — the crate bans ambient randomness"),
+                });
+            }
+        }
+        visit::visit_item_use(self, u);
+    }
+}
+
+impl Rule for SeededRand {
+    fn id(&self) -> &'static str {
+        "seeded-rand"
+    }
+    fn description(&self) -> &'static str {
+        "no rand/getrandom/thread_rng/RandomState/DefaultHasher — explicit seeds only"
+    }
+    fn applies_to(&self, _rel: &str) -> bool {
+        true
+    }
+    fn check(&self, ctx: &FileCtx) -> Vec<RawDiag> {
+        let mut v = SeededRandVisitor { diags: Vec::new() };
+        v.visit_file(ctx.ast);
+        v.diags
+    }
+}
+
+/// D5 `unbounded-log`: coordinator log fields must be `RingLog`, not
+/// `Vec` — long-lived coordinators otherwise grow without bound.
+struct UnboundedLog;
+
+impl Rule for UnboundedLog {
+    fn id(&self) -> &'static str {
+        "unbounded-log"
+    }
+    fn description(&self) -> &'static str {
+        "coordinator log fields use util::ring::RingLog, not unbounded Vec"
+    }
+    fn applies_to(&self, rel: &str) -> bool {
+        rel == "server/coordinator.rs"
+    }
+    fn check(&self, ctx: &FileCtx) -> Vec<RawDiag> {
+        struct V {
+            diags: Vec<RawDiag>,
+        }
+        impl<'ast> Visit<'ast> for V {
+            fn visit_item_struct(&mut self, s: &'ast syn::ItemStruct) {
+                if !s.ident.to_string().contains("Coordinator") {
+                    return;
+                }
+                for f in &s.fields {
+                    let Some(id) = &f.ident else { continue };
+                    let name = id.to_string();
+                    if (name == "log" || name.ends_with("_log")) && tok(&f.ty).contains("Vec <") {
+                        let (line, col) = lc(id.span());
+                        self.diags.push(RawDiag {
+                            line,
+                            col,
+                            message: format!(
+                                "coordinator log field `{name}` is an unbounded Vec — use \
+                                 `util::ring::RingLog` so long-lived runs stay bounded"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        let mut v = V { diags: Vec::new() };
+        v.visit_file(ctx.ast);
+        v.diags
+    }
+}
+
+/// D6 `hot-path-panic`: no `unwrap`/`expect` in the serving hot paths
+/// (`server/`, `lb/`, `dispatch/`).
+struct HotPathPanic;
+
+struct HotPathPanicVisitor {
+    diags: Vec<RawDiag>,
+}
+
+impl<'ast> Visit<'ast> for HotPathPanicVisitor {
+    skip_test_scopes!();
+
+    fn visit_expr_method_call(&mut self, c: &'ast syn::ExprMethodCall) {
+        let m = c.method.to_string();
+        if m == "unwrap" || m == "expect" {
+            let (line, col) = lc(c.method.span());
+            self.diags.push(RawDiag {
+                line,
+                col,
+                message: format!(
+                    "`{m}` on a serving hot path — a poisoned lock or absent entry must \
+                     degrade, not abort the coordinator; return an error or handle the None"
+                ),
+            });
+        }
+        visit::visit_expr_method_call(self, c);
+    }
+}
+
+impl Rule for HotPathPanic {
+    fn id(&self) -> &'static str {
+        "hot-path-panic"
+    }
+    fn description(&self) -> &'static str {
+        "no unwrap/expect in server/, lb/, dispatch/ non-test code"
+    }
+    fn applies_to(&self, rel: &str) -> bool {
+        rel.starts_with("server/") || rel.starts_with("lb/") || rel.starts_with("dispatch/")
+    }
+    fn check(&self, ctx: &FileCtx) -> Vec<RawDiag> {
+        let mut v = HotPathPanicVisitor { diags: Vec::new() };
+        v.visit_file(ctx.ast);
+        v.diags
+    }
+}
+
+/// D7 `missing-docs`: every public item in the stable surfaces
+/// (`workload/trace.rs`, `metrics/`) carries rustdoc.
+struct MissingDocs;
+
+fn has_doc(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| a.path().is_ident("doc"))
+}
+
+fn is_pub(vis: &syn::Visibility) -> bool {
+    matches!(vis, syn::Visibility::Public(_))
+}
+
+struct MissingDocsVisitor {
+    diags: Vec<RawDiag>,
+}
+
+impl MissingDocsVisitor {
+    fn require(&mut self, kind: &str, ident: &syn::Ident, attrs: &[syn::Attribute]) {
+        if !has_doc(attrs) {
+            let (line, col) = lc(ident.span());
+            self.diags.push(RawDiag {
+                line,
+                col,
+                message: format!(
+                    "public {kind} `{ident}` has no rustdoc — this file is a stable \
+                     surface; document behavior and units"
+                ),
+            });
+        }
+    }
+}
+
+impl<'ast> Visit<'ast> for MissingDocsVisitor {
+    fn visit_item_mod(&mut self, m: &'ast syn::ItemMod) {
+        if is_cfg_test(&m.attrs) {
+            return;
+        }
+        visit::visit_item_mod(self, m);
+    }
+
+    fn visit_item_fn(&mut self, f: &'ast syn::ItemFn) {
+        if is_cfg_test(&f.attrs) {
+            return;
+        }
+        if is_pub(&f.vis) {
+            self.require("fn", &f.sig.ident, &f.attrs);
+        }
+        visit::visit_item_fn(self, f);
+    }
+
+    fn visit_item_struct(&mut self, s: &'ast syn::ItemStruct) {
+        if is_pub(&s.vis) {
+            self.require("struct", &s.ident, &s.attrs);
+        }
+        visit::visit_item_struct(self, s);
+    }
+
+    fn visit_item_enum(&mut self, e: &'ast syn::ItemEnum) {
+        if is_pub(&e.vis) {
+            self.require("enum", &e.ident, &e.attrs);
+        }
+        visit::visit_item_enum(self, e);
+    }
+
+    fn visit_item_trait(&mut self, t: &'ast syn::ItemTrait) {
+        if is_pub(&t.vis) {
+            self.require("trait", &t.ident, &t.attrs);
+        }
+        visit::visit_item_trait(self, t);
+    }
+
+    fn visit_item_type(&mut self, t: &'ast syn::ItemType) {
+        if is_pub(&t.vis) {
+            self.require("type alias", &t.ident, &t.attrs);
+        }
+        visit::visit_item_type(self, t);
+    }
+
+    fn visit_item_const(&mut self, c: &'ast syn::ItemConst) {
+        if is_pub(&c.vis) {
+            self.require("const", &c.ident, &c.attrs);
+        }
+        visit::visit_item_const(self, c);
+    }
+
+    fn visit_item_static(&mut self, s: &'ast syn::ItemStatic) {
+        if is_pub(&s.vis) {
+            self.require("static", &s.ident, &s.attrs);
+        }
+        visit::visit_item_static(self, s);
+    }
+
+    fn visit_item_impl(&mut self, i: &'ast syn::ItemImpl) {
+        // Trait impls inherit docs from the trait definition.
+        if i.trait_.is_some() {
+            return;
+        }
+        for item in &i.items {
+            if let syn::ImplItem::Fn(f) = item {
+                if is_pub(&f.vis) && !is_cfg_test(&f.attrs) {
+                    self.require("method", &f.sig.ident, &f.attrs);
+                }
+            }
+        }
+        visit::visit_item_impl(self, i);
+    }
+}
+
+impl Rule for MissingDocs {
+    fn id(&self) -> &'static str {
+        "missing-docs"
+    }
+    fn description(&self) -> &'static str {
+        "public items in workload/trace.rs and metrics/ carry rustdoc"
+    }
+    fn applies_to(&self, rel: &str) -> bool {
+        rel == "workload/trace.rs" || rel.starts_with("metrics/")
+    }
+    fn check(&self, ctx: &FileCtx) -> Vec<RawDiag> {
+        let mut v = MissingDocsVisitor { diags: Vec::new() };
+        v.visit_file(ctx.ast);
+        v.diags
+    }
+}
+
+/// D8 `no-env-fs`: ambient process state (`std::env`, `std::fs`) is read
+/// only at the edges — `cli/`, `config/`, `main.rs`.
+struct NoEnvFs;
+
+struct NoEnvFsVisitor {
+    /// `use std::fs;` / `use std::env;` in scope, so bare `fs::...`
+    /// paths count too.
+    bare_imported: Vec<&'static str>,
+    diags: Vec<RawDiag>,
+}
+
+impl<'ast> Visit<'ast> for NoEnvFsVisitor {
+    skip_test_scopes!();
+
+    fn visit_expr_path(&mut self, p: &'ast syn::ExprPath) {
+        let segs: Vec<String> = p.path.segments.iter().map(|s| s.ident.to_string()).collect();
+        let module = if segs.len() >= 2 && segs[0] == "std" && (segs[1] == "env" || segs[1] == "fs")
+        {
+            Some(segs[1].clone())
+        } else if segs.len() >= 2 && self.bare_imported.iter().any(|m| *m == segs[0]) {
+            Some(segs[0].clone())
+        } else {
+            None
+        };
+        if let Some(module) = module {
+            let (line, col) = lc(p.path.segments.first().map(|s| s.ident.span()).unwrap_or_else(Span::call_site));
+            self.diags.push(RawDiag {
+                line,
+                col,
+                message: format!(
+                    "`std::{module}` read outside the edges — ambient process state \
+                     belongs in cli/ or config/; pass values in explicitly"
+                ),
+            });
+        }
+        visit::visit_expr_path(self, p);
+    }
+}
+
+impl Rule for NoEnvFs {
+    fn id(&self) -> &'static str {
+        "no-env-fs"
+    }
+    fn description(&self) -> &'static str {
+        "std::env/std::fs only in cli/, config/, main.rs"
+    }
+    fn applies_to(&self, rel: &str) -> bool {
+        !(rel.starts_with("cli/") || rel.starts_with("config/") || rel == "main.rs")
+    }
+    fn check(&self, ctx: &FileCtx) -> Vec<RawDiag> {
+        struct Uses {
+            bare: Vec<&'static str>,
+        }
+        impl<'ast> Visit<'ast> for Uses {
+            fn visit_item_use(&mut self, u: &'ast syn::ItemUse) {
+                let text = tok(&u.tree);
+                if text.starts_with("std :: fs") && !self.bare.contains(&"fs") {
+                    self.bare.push("fs");
+                }
+                if text.starts_with("std :: env") && !self.bare.contains(&"env") {
+                    self.bare.push("env");
+                }
+                visit::visit_item_use(self, u);
+            }
+        }
+        let mut uses = Uses { bare: Vec::new() };
+        uses.visit_file(ctx.ast);
+        let mut v = NoEnvFsVisitor { bare_imported: uses.bare, diags: Vec::new() };
+        v.visit_file(ctx.ast);
+        v.diags
+    }
+}

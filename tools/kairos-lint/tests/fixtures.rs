@@ -1,0 +1,89 @@
+//! Fixture-driven rule tests.
+//!
+//! Each rule id has `tests/fixtures/<id>/bad/` (a miniature source tree
+//! that must trip exactly that rule) and `tests/fixtures/<id>/ok/` (the
+//! corrected tree, which must be clean under ALL rules). The directory
+//! layout below `bad`/`ok` mirrors real `rust/src` paths, so path-scoped
+//! rules are exercised with realistic `rel` values.
+
+use std::path::{Path, PathBuf};
+
+fn fixture_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn rule_ids() -> Vec<&'static str> {
+    let mut ids: Vec<&'static str> =
+        kairos_lint::default_rules().iter().map(|r| r.id()).collect();
+    ids.push(kairos_lint::SUPPRESSION_RULE);
+    ids
+}
+
+#[test]
+fn every_rule_has_a_firing_bad_fixture() {
+    let rules = kairos_lint::default_rules();
+    for id in rule_ids() {
+        let bad = fixture_root().join(id).join("bad");
+        let diags = kairos_lint::lint_root(&bad, &rules)
+            .unwrap_or_else(|e| panic!("linting {id}/bad: {e}"));
+        assert!(
+            diags.iter().any(|d| d.rule == id),
+            "fixture {id}/bad must trip rule `{id}`, got: {diags:#?}"
+        );
+    }
+}
+
+#[test]
+fn every_rule_has_a_clean_ok_fixture() {
+    let rules = kairos_lint::default_rules();
+    for id in rule_ids() {
+        let ok = fixture_root().join(id).join("ok");
+        let diags = kairos_lint::lint_root(&ok, &rules)
+            .unwrap_or_else(|e| panic!("linting {id}/ok: {e}"));
+        assert!(
+            diags.is_empty(),
+            "fixture {id}/ok must be clean under every rule, got: {diags:#?}"
+        );
+    }
+}
+
+#[test]
+fn no_fixture_dir_lacks_a_registered_rule() {
+    let ids = rule_ids();
+    for entry in std::fs::read_dir(fixture_root()).expect("fixtures dir") {
+        let name = entry.expect("dir entry").file_name();
+        let name = name.to_string_lossy();
+        assert!(
+            ids.iter().any(|id| *id == name),
+            "fixture dir `{name}` has no registered rule — stale fixture or renamed id"
+        );
+    }
+}
+
+#[test]
+fn suppression_round_trip() {
+    let rules = kairos_lint::default_rules();
+    // With a reason: the violation is waived, nothing else fires.
+    let with_reason = kairos_lint::lint_root(
+        &fixture_root().join("suppression/ok"),
+        &rules,
+    )
+    .expect("lint suppression/ok");
+    assert!(with_reason.is_empty(), "{with_reason:#?}");
+
+    // Without a reason: the marker itself errors AND the underlying
+    // violation still fires — a broken allow must never waive anything.
+    let without_reason = kairos_lint::lint_root(
+        &fixture_root().join("suppression/bad"),
+        &rules,
+    )
+    .expect("lint suppression/bad");
+    assert!(
+        without_reason.iter().any(|d| d.rule == kairos_lint::SUPPRESSION_RULE),
+        "{without_reason:#?}"
+    );
+    assert!(
+        without_reason.iter().any(|d| d.rule == "wall-clock"),
+        "{without_reason:#?}"
+    );
+}

@@ -1,0 +1,7 @@
+pub struct Sketch {
+    centers: Vec<f64>,
+}
+
+pub fn width(s: &Sketch) -> usize {
+    s.centers.len()
+}

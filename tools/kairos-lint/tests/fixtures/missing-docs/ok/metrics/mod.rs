@@ -1,0 +1,9 @@
+/// Fixed-width quantile sketch over latency samples.
+pub struct Sketch {
+    centers: Vec<f64>,
+}
+
+/// Number of centroids currently held.
+pub fn width(s: &Sketch) -> usize {
+    s.centers.len()
+}

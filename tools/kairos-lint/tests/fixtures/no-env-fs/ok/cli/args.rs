@@ -1,0 +1,3 @@
+pub fn load(path: &str) -> String {
+    std::fs::read_to_string(path).unwrap_or_default()
+}

@@ -1,0 +1,4 @@
+pub fn stamp() -> std::time::Instant {
+    // kairos-lint: allow(wall-clock)
+    std::time::Instant::now()
+}

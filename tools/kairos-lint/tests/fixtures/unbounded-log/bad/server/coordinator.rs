@@ -1,0 +1,3 @@
+pub struct Coordinator {
+    pub scale_log: Vec<String>,
+}

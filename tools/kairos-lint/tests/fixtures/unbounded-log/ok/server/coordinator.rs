@@ -1,0 +1,8 @@
+pub struct RingLog<T> {
+    items: Vec<T>,
+    cap: usize,
+}
+
+pub struct Coordinator {
+    pub scale_log: RingLog<String>,
+}

@@ -1,0 +1,8 @@
+use std::collections::HashMap;
+
+pub fn first_key(m: &HashMap<String, u64>) -> Option<&String> {
+    for k in m.keys() {
+        return Some(k);
+    }
+    None
+}

@@ -1,0 +1,11 @@
+use std::collections::HashMap;
+
+pub fn sorted_keys(m: &HashMap<String, u64>) -> Vec<String> {
+    let mut keys: Vec<String> = m.keys().cloned().collect();
+    keys.sort();
+    keys
+}
+
+pub fn total(m: &HashMap<String, u64>) -> u64 {
+    m.values().sum()
+}

@@ -1,0 +1,4 @@
+pub fn tick_ns() -> u128 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos()
+}

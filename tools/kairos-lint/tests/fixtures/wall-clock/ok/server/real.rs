@@ -1,0 +1,7 @@
+pub struct WallClock;
+
+impl WallClock {
+    pub fn now_ns() -> u128 {
+        std::time::Instant::now().elapsed().as_nanos()
+    }
+}
