@@ -1,14 +1,20 @@
 //! The `kairos bench` harness: seeded million-request speed runs with
 //! machine-readable results.
 //!
-//! Two benchmarks, each run as an in-binary A/B over the coordinator's two
-//! hot paths (one commit, one binary, two arms — no cross-build noise):
+//! Three benchmarks, each run as an in-binary A/B over a legacy/optimized
+//! pair of arms (one commit, one binary, two arms — no cross-build noise):
 //!
 //! * **pump** — a tight submit→pump→drain loop of free-standing external
 //!   requests through one [`Coordinator`], timing only the submission and
 //!   dispatch half (`hot_seconds`); engine stepping is driven but untimed.
 //! * **e2e** — a full [`run_fleet`] simulation over a generated workflow
 //!   trace, timing the whole discrete-event run.
+//! * **pack** — a packing-heavy [`run_fleet`] trace (large mixed fleet,
+//!   learned demand on) through the time-slot packer with only the
+//!   dispatcher's scoring arm differing
+//!   ([`Coordinator::set_legacy_scoring`]): naive linear peak scans vs.
+//!   the max-tree fast paths. Both arms run the optimized coordinator hot
+//!   path, so the delta isolates candidate scoring.
 //!
 //! The **baseline** arm runs [`Coordinator::set_legacy_hot_path`] `(true)`
 //! with unbounded logs and exact (vector-backed) metrics: the pre-index
@@ -19,8 +25,8 @@
 //! dispatch decisions (asserted) — the A/B measures speed and memory, never
 //! behavior.
 //!
-//! Results go to `BENCH_pump.json` / `BENCH_e2e.json` (schema documented in
-//! the README). Decision counts, drop counts and log-state bytes are
+//! Results go to `BENCH_pump.json` / `BENCH_e2e.json` / `BENCH_pack.json`
+//! (schema documented in the README). Decision counts, drop counts and log-state bytes are
 //! seed-deterministic; wall-clock fields vary by host and carry a
 //! `provenance` block saying where they were measured. `--quick` shrinks
 //! the run for CI smoke (~seconds); the full run serves a million pump
@@ -52,7 +58,8 @@ pub struct BenchOptions {
     /// Seed for the submission streams (decision counts are functions of
     /// the seed alone).
     pub seed: u64,
-    /// Directory receiving `BENCH_pump.json` and `BENCH_e2e.json`.
+    /// Directory receiving `BENCH_pump.json`, `BENCH_e2e.json` and
+    /// `BENCH_pack.json`.
     pub out_dir: PathBuf,
 }
 
@@ -208,6 +215,51 @@ fn e2e_arm_json(res: &SimResult, wall: f64) -> Json {
     ])
 }
 
+/// One arm of the pack benchmark: the same seeded trace through the
+/// time-slot packer, with only [`FleetConfig::legacy_scoring`] differing.
+/// Large mixed fleet so every decision scores many candidates, learned
+/// routing so the packer prices learned KV demand.
+fn pack_arm(
+    arrivals: Vec<crate::workload::ArrivalEvent>,
+    legacy_scoring: bool,
+) -> (SimResult, f64) {
+    let fleet = FleetSpec::parse("10*llama3-8b@0.12,6*llama2-13b@0.12")
+        .expect("static fleet spec");
+    let mut fc = FleetConfig::from(fleet);
+    fc.affinity = Some(
+        AffinitySpec::parse("*=llama3-8b,Engineer=llama2-13b,QAEngineer=llama2-13b")
+            .expect("static affinity spec"),
+    );
+    fc.route = Some(RoutePolicy::learned_default());
+    fc.logs = LogConfig::bounded(65_536);
+    fc.lean_metrics = true;
+    fc.legacy_scoring = legacy_scoring;
+    let t = Instant::now();
+    let res = run_fleet(fc, "kairos", "kairos", arrivals);
+    (res, t.elapsed().as_secs_f64())
+}
+
+fn pack_arm_json(res: &SimResult, wall: f64) -> Json {
+    let p = res.metrics.stream.packer;
+    Json::obj(vec![
+        ("wall_seconds", Json::from(wall)),
+        ("requests", Json::from(res.metrics.total_requests as f64)),
+        (
+            "req_per_sec",
+            Json::from(res.metrics.total_requests as f64 / wall.max(1e-12)),
+        ),
+        ("dispatched_total", Json::from(res.dispatched_total as f64)),
+        ("dropped", Json::from(res.dropped_requests as f64)),
+        ("decisions", Json::from(p.decisions as f64)),
+        ("candidates", Json::from(p.candidates as f64)),
+        ("evaluated", Json::from(p.evaluated as f64)),
+        ("fast_accepted", Json::from(p.fast_accepted as f64)),
+        ("fast_rejected", Json::from(p.fast_rejected as f64)),
+        ("rejected_rounds", Json::from(p.rejected_rounds as f64)),
+        ("suspensions", Json::from(p.suspensions as f64)),
+    ])
+}
+
 fn provenance(seed: u64, mode: &str) -> Json {
     // kairos-lint: allow(no-env-fs, provenance block records the measuring host; never feeds results)
     let host = if std::env::var_os("CI").is_some() { "ci" } else { "local" };
@@ -224,7 +276,8 @@ fn write_json(path: &std::path::Path, j: &Json) -> crate::Result<()> {
     Ok(())
 }
 
-/// Run both benchmarks and write `BENCH_pump.json` / `BENCH_e2e.json`.
+/// Run all three benchmarks and write `BENCH_pump.json` / `BENCH_e2e.json`
+/// / `BENCH_pack.json`.
 pub fn run(opts: &BenchOptions) -> crate::Result<()> {
     // kairos-lint: allow(no-env-fs, result emission is the bench harness's contract; path comes from --out-dir)
     std::fs::create_dir_all(&opts.out_dir)?;
@@ -234,8 +287,13 @@ pub fn run(opts: &BenchOptions) -> crate::Result<()> {
     } else {
         (1_000_000, 120_000, 8.0)
     };
+    let (pack_tasks, pack_rate) = if opts.quick { (3_000, 16.0) } else { (200_000, 16.0) };
 
-    println!("bench ({mode}): pump {pump_n} requests, e2e {e2e_tasks} tasks, seed {}", opts.seed);
+    println!(
+        "bench ({mode}): pump {pump_n} requests, e2e {e2e_tasks} tasks, \
+         pack {pack_tasks} tasks, seed {}",
+        opts.seed
+    );
 
     // --- pump microbench -------------------------------------------------
     let stream = pump_stream(pump_n, opts.seed);
@@ -326,7 +384,60 @@ pub fn run(opts: &BenchOptions) -> crate::Result<()> {
          log bytes {} -> {}",
         base_res.log_state_bytes, opt_res.log_state_bytes,
     );
-    println!("wrote {} and {}", pump_path.display(), e2e_path.display());
+
+    // --- pack benchmark --------------------------------------------------
+    let pack_trace = TraceGen::default().generate(
+        &WorkloadMix::colocated(),
+        pack_rate,
+        pack_tasks,
+        &mut Rng::new(opts.seed),
+    );
+    let (pack_base, pack_base_wall) = pack_arm(pack_trace.clone(), true);
+    let (pack_opt, pack_opt_wall) = pack_arm(pack_trace, false);
+    // Zero decision divergence between the scoring arms: same decision
+    // count, same drop count, and the retained dispatch-log windows (both
+    // arms carry the same cap) match entry for entry.
+    assert_eq!(
+        pack_base.dispatched_total, pack_opt.dispatched_total,
+        "pack scoring arms diverged on dispatch decisions"
+    );
+    assert_eq!(pack_base.dropped_requests, pack_opt.dropped_requests);
+    assert_eq!(
+        pack_base.dispatch_log, pack_opt.dispatch_log,
+        "pack scoring arms diverged inside the retained dispatch log"
+    );
+    let pack_speedup = pack_base_wall / pack_opt_wall.max(1e-12);
+    let pack_json = Json::obj(vec![
+        ("schema", Json::from("kairos-bench-pack/v1")),
+        ("mode", Json::from(mode)),
+        ("tasks", Json::from(pack_tasks)),
+        ("rate", Json::from(pack_rate)),
+        ("fleet", Json::from("10*llama3-8b@0.12,6*llama2-13b@0.12")),
+        ("provenance", provenance(opts.seed, mode)),
+        ("baseline", pack_arm_json(&pack_base, pack_base_wall)),
+        ("optimized", pack_arm_json(&pack_opt, pack_opt_wall)),
+        ("speedup", Json::from(pack_speedup)),
+    ]);
+    let pack_path = opts.out_dir.join("BENCH_pack.json");
+    write_json(&pack_path, &pack_json)?;
+    let pk = pack_opt.metrics.stream.packer;
+    println!(
+        "pack: baseline {pack_base_wall:.2}s, optimized {pack_opt_wall:.2}s \
+         ({pack_speedup:.2}x); {} decisions, {} evaluated, {} fast-accepted, \
+         {} fast-rejected, {} rejected rounds, {} suspensions",
+        pk.decisions,
+        pk.evaluated,
+        pk.fast_accepted,
+        pk.fast_rejected,
+        pk.rejected_rounds,
+        pk.suspensions,
+    );
+    println!(
+        "wrote {}, {} and {}",
+        pump_path.display(),
+        e2e_path.display(),
+        pack_path.display()
+    );
     Ok(())
 }
 
@@ -349,6 +460,28 @@ mod tests {
             opt.peak_log_bytes,
             base.peak_log_bytes
         );
+    }
+
+    #[test]
+    fn pack_arms_agree_on_every_decision() {
+        let trace = TraceGen::default().generate(
+            &WorkloadMix::colocated(),
+            16.0,
+            120,
+            &mut Rng::new(11),
+        );
+        let (base, _) = pack_arm(trace.clone(), true);
+        let (opt, _) = pack_arm(trace, false);
+        assert_eq!(base.dispatched_total, opt.dispatched_total);
+        assert_eq!(base.dropped_requests, opt.dropped_requests);
+        assert_eq!(base.dispatch_log, opt.dispatch_log);
+        assert!(opt.dispatched_total > 0);
+        let p = opt.metrics.stream.packer;
+        assert!(p.decisions > 0, "packer stats must reach the metrics surface");
+        assert!(p.evaluated > 0);
+        // The legacy arm must never report fast-path hits.
+        let lp = base.metrics.stream.packer;
+        assert_eq!(lp.fast_accepted + lp.fast_rejected, 0);
     }
 
     #[test]

@@ -186,12 +186,13 @@ ROUTE POLICY — `pinned` (the static affinity stamp) or
   `route-sweep` compares both policies on the same trace.
 
 BENCH — seeded speed runs of the serving hot path: a pump microbench
-  (submit→pump→drain of external requests) and a full simulated run, each
-  as an in-binary baseline-vs-optimized A/B (legacy linear scans + full
-  logs + exact metrics vs indexed scans + ring-buffer logs + streaming
-  sketches). Writes `BENCH_pump.json` and `BENCH_e2e.json` to `--out`
-  (default `.`); `--quick` shrinks both runs to CI-smoke size. Decision
-  counts are seed-deterministic; wall-clock fields vary by host.
+  (submit→pump→drain of external requests), a full simulated run, and a
+  packing-heavy run isolating the time-slot packer's candidate scoring
+  (naive linear scans vs the max-tree fast paths), each as an in-binary
+  baseline-vs-optimized A/B that must agree on every dispatch decision.
+  Writes `BENCH_pump.json`, `BENCH_e2e.json` and `BENCH_pack.json` to
+  `--out` (default `.`); `--quick` shrinks all runs to CI-smoke size.
+  Decision counts are seed-deterministic; wall-clock fields vary by host.
 
 PRESSURE TRACE — `;`-separated `TARGET:TIME=MULT,...` with TARGET an
   instance index or `*`: piecewise co-tenant KV-pressure multipliers, e.g.
@@ -469,6 +470,7 @@ fn serve(args: &Args) -> crate::Result<()> {
         logs: crate::server::coordinator::LogConfig::full(),
         lean_metrics: false,
         legacy_hot_path: false,
+        legacy_scoring: false,
     };
     let affine = fc.affinity.is_some() || matches!(fc.route, Some(RoutePolicy::Learned { .. }));
     let res = run_fleet(fc, &cfg.scheduler, &cfg.dispatcher, arrivals);
@@ -536,6 +538,21 @@ fn check_cmd(args: &Args) -> crate::Result<()> {
         "replayed {} workflows over {:.1} sim-seconds; {} invariant audits run",
         res.summary.n_workflows, res.sim_duration, res.audit_checks
     );
+    let p = res.metrics.stream.packer;
+    if p.decisions > 0 {
+        println!(
+            "packer: {} decisions, {} candidates, {} evaluated, \
+             {} fast-accepted, {} fast-rejected, {} rejected rounds, \
+             {} suspensions",
+            p.decisions,
+            p.candidates,
+            p.evaluated,
+            p.fast_accepted,
+            p.fast_rejected,
+            p.rejected_rounds,
+            p.suspensions,
+        );
+    }
     if res.audit_violations.is_empty() {
         println!("all audits passed");
         Ok(())

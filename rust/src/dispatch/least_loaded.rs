@@ -35,6 +35,25 @@ impl DispatchPolicy for LeastLoaded {
             .min_by_key(|(_, s)| s.committed_tokens + s.n_waiting as u64 * 256)
             .map(|(i, _)| i)
     }
+
+    fn choose_among(
+        &mut self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        candidates: &[usize],
+        _now: Time,
+    ) -> Option<usize> {
+        // Same load key over the pruned set; `min_by_key` keeps the first
+        // minimal element and candidates are ascending, so ties break
+        // exactly as the full scan's.
+        candidates
+            .iter()
+            .copied()
+            .filter_map(|i| statuses.get(i).map(|s| (i, s)))
+            .filter(|(_, s)| s.accepting && req.model_class.matches(s.model))
+            .min_by_key(|(_, s)| s.committed_tokens + s.n_waiting as u64 * 256)
+            .map(|(i, _)| i)
+    }
 }
 
 #[cfg(test)]
@@ -102,6 +121,22 @@ mod tests {
         let mut r = req();
         r.model_class = ModelClass::Model(ModelKind::Llama2_13B);
         assert_eq!(d.choose(&r, &statuses, 0.0), Some(1));
+    }
+
+    #[test]
+    fn choose_among_matches_full_scan() {
+        let mut d = LeastLoaded::new();
+        let mut statuses = vec![st(0, 500), st(1, 100), st(2, 900), st(3, 100)];
+        statuses[1].model = ModelKind::Llama2_13B;
+        let mut r = req();
+        r.model_class = ModelClass::Model(ModelKind::Llama3_8B);
+        let full = d.choose(&r, &statuses, 0.0);
+        // The matching set for the pinned family is [0, 2, 3].
+        let pruned = d.choose_among(&r, &statuses, &[0, 2, 3], 0.0);
+        assert_eq!(full, pruned);
+        assert_eq!(pruned, Some(3));
+        // Stale out-of-range candidates are skipped, not indexed.
+        assert_eq!(d.choose_among(&r, &statuses, &[9, 0], 0.0), Some(0));
     }
 
     #[test]

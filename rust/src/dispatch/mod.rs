@@ -19,6 +19,34 @@ use crate::engine::core::InstanceStatus;
 use crate::engine::request::{Request, RequestId};
 use crate::Time;
 
+/// Streaming decision counters a dispatcher accumulates over its lifetime.
+///
+/// All counters are monotone; deltas between two snapshots describe an
+/// interval. The bench summary and `kairos check` print them, and
+/// [`crate::metrics::StreamingMetrics`] carries the latest snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DispatchStats {
+    /// Scheduling decisions taken (one per [`DispatchPolicy::choose`] /
+    /// [`DispatchPolicy::choose_among`] call on policies that track stats).
+    pub decisions: u64,
+    /// Candidate instances offered across all decisions (fleet size for
+    /// full scans, pruned-set size for `choose_among`).
+    pub candidates: u64,
+    /// Candidates that survived the cheap filters (accepting, family,
+    /// cooldown, live budget) and were actually scored.
+    pub evaluated: u64,
+    /// Scored candidates settled by the O(log H) fast-accept band (peak
+    /// taken from the maintained tree root, no per-slot scan).
+    pub fast_accepted: u64,
+    /// Scored candidates settled by the O(log H) fast-reject band.
+    pub fast_rejected: u64,
+    /// Decisions in which no instance was feasible and the request stayed
+    /// queued for the next round.
+    pub rejected_rounds: u64,
+    /// OOM-suspect preemption events that triggered a cooldown suspension.
+    pub suspensions: u64,
+}
+
 /// Picks the target instance for each scheduled request.
 pub trait DispatchPolicy: Send {
     fn name(&self) -> &'static str;
@@ -37,6 +65,44 @@ pub trait DispatchPolicy: Send {
         statuses: &[InstanceStatus],
         now: Time,
     ) -> Option<usize>;
+
+    /// Candidate-set-aware variant of [`DispatchPolicy::choose`]: the
+    /// caller has already pruned the fleet to `candidates` (ascending
+    /// instance indices — the coordinator passes its `FamilyIndex` slot set
+    /// for the request's pinned family), so the policy may skip its own
+    /// family filter and scan only those instances.
+    ///
+    /// Contract: with `candidates` equal to the indices of all instances
+    /// matching `req.model_class`, the decision must equal
+    /// [`DispatchPolicy::choose`] on the full fleet — pruning is a pure
+    /// optimization and must never change a pick (the seam tests assert
+    /// this through the driver). `statuses` is still the FULL fleet
+    /// snapshot, indexed by instance; entries of `candidates` beyond
+    /// `statuses.len()` (a stale set across a fleet shrink) are skipped.
+    /// The default implementation ignores the pruning and full-scans.
+    fn choose_among(
+        &mut self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        candidates: &[usize],
+        now: Time,
+    ) -> Option<usize> {
+        let _ = candidates;
+        self.choose(req, statuses, now)
+    }
+
+    /// A/B switch for the scoring arms (same pattern as the coordinator's
+    /// `set_legacy_hot_path`): `true` scores candidates with the naive
+    /// reference path, `false` (the default) with the optimized one. Both
+    /// arms must make identical decisions — the `pack` bench stage asserts
+    /// it. Policies without a dual path ignore the switch.
+    fn set_legacy_scoring(&mut self, _legacy: bool) {}
+
+    /// Snapshot of the policy's streaming decision counters. Policies that
+    /// do not track stats return the zero default.
+    fn stats(&self) -> DispatchStats {
+        DispatchStats::default()
+    }
 
     /// Request actually dispatched to `instance` (stateful policies commit
     /// their prediction here).

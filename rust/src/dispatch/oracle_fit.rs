@@ -54,6 +54,33 @@ impl DispatchPolicy for OracleFit {
             .map(|(i, _)| i)
     }
 
+    fn choose_among(
+        &mut self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        candidates: &[usize],
+        _now: Time,
+    ) -> Option<usize> {
+        if self.outstanding.len() != statuses.len() {
+            self.outstanding.resize(statuses.len(), 0);
+        }
+        let demand = req.total_tokens() as u64;
+        // Same feasibility filter and peak key over the pruned set;
+        // `min_by_key` keeps the first minimal element and candidates are
+        // ascending, so ties break exactly as the full scan's.
+        candidates
+            .iter()
+            .copied()
+            .filter_map(|i| statuses.get(i).map(|s| (i, s)))
+            .filter(|(i, s)| {
+                s.accepting
+                    && req.model_class.matches(s.model)
+                    && self.outstanding[*i] + demand <= s.capacity_tokens
+            })
+            .min_by_key(|(i, _)| self.outstanding[*i] + demand)
+            .map(|(i, _)| i)
+    }
+
     fn on_dispatch(&mut self, req: &Request, instance: usize, _now: Time) {
         let demand = req.total_tokens() as u64;
         if instance >= self.outstanding.len() {
@@ -181,6 +208,22 @@ mod tests {
         let mut big = req(3, 100, 100);
         big.model_class = ModelClass::Model(ModelKind::Llama2_13B);
         assert_eq!(d.choose(&big, &statuses, 0.0), None, "stays queued");
+    }
+
+    #[test]
+    fn choose_among_matches_full_scan() {
+        let mut d = OracleFit::new(3);
+        let mut statuses = vec![st(0, 1000), st(1, 1000), st(2, 1000)];
+        statuses[1].model = ModelKind::Llama2_13B;
+        d.on_dispatch(&req(1, 100, 400), 0, 0.0);
+        let mut r = req(2, 100, 100);
+        r.model_class = ModelClass::Model(ModelKind::Llama3_8B);
+        let full = d.choose(&r, &statuses, 0.0);
+        let pruned = d.choose_among(&r, &statuses, &[0, 2], 0.0);
+        assert_eq!(full, pruned);
+        assert_eq!(pruned, Some(2));
+        // Stale out-of-range candidates are skipped, not indexed.
+        assert_eq!(d.choose_among(&r, &statuses, &[9, 2], 0.0), Some(2));
     }
 
     #[test]

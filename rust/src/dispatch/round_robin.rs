@@ -46,6 +46,39 @@ impl DispatchPolicy for RoundRobin {
         }
         None
     }
+
+    fn choose_among(
+        &mut self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        candidates: &[usize],
+        _now: Time,
+    ) -> Option<usize> {
+        let n = statuses.len();
+        if n == 0 {
+            return None;
+        }
+        // The full scan picks the eligible instance with the smallest
+        // cyclic distance from the cursor; minimize the same rank over the
+        // pruned set (first-wins on ties, candidates are ascending).
+        let mut best: Option<(usize, usize)> = None; // (rank, instance)
+        for &j in candidates {
+            if j >= n {
+                continue;
+            }
+            let s = &statuses[j];
+            if !(s.accepting && req.model_class.matches(s.model)) {
+                continue;
+            }
+            let rank = (j + n - self.next % n) % n;
+            if best.map(|(r, _)| rank < r).unwrap_or(true) {
+                best = Some((rank, j));
+            }
+        }
+        let (_, pick) = best?;
+        self.next = (pick + 1) % n;
+        Some(pick)
+    }
 }
 
 #[cfg(test)]
@@ -146,6 +179,26 @@ mod tests {
         let mut orphan = req();
         orphan.model_class = ModelClass::Model(ModelKind::Tiny);
         assert_eq!(rr.choose(&orphan, &statuses, 0.0), None);
+    }
+
+    #[test]
+    fn choose_among_preserves_the_rotation() {
+        // Two cursors, one fed the full scan and one the pruned set the
+        // coordinator would pass (every matching index): the pick sequence
+        // must be identical, including cursor evolution across picks.
+        let mut full = RoundRobin::new();
+        let mut pruned = RoundRobin::new();
+        let mut statuses = vec![st(0), st(1), st(2), st(3)];
+        statuses[2].accepting = false;
+        let all: Vec<usize> = (0..statuses.len()).collect();
+        for _ in 0..8 {
+            let a = full.choose(&req(), &statuses, 0.0);
+            let b = pruned.choose_among(&req(), &statuses, &all, 0.0);
+            assert_eq!(a, b);
+        }
+        // Out-of-range candidates are skipped; empty fleet stays None.
+        assert_eq!(pruned.choose_among(&req(), &statuses, &[9], 0.0), None);
+        assert_eq!(pruned.choose_among(&req(), &[], &[0], 0.0), None);
     }
 
     #[test]

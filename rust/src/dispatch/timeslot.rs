@@ -18,10 +18,26 @@
 //! memory wins. Adaptive measures: slots are released early when a request
 //! finishes before its prediction, and an instance that reports a
 //! preemption (OOM-suspect) is suspended for a cooldown.
+//!
+//! ## Decision cost: the max-tree
+//!
+//! Scoring a candidate needs the ring's global peak and a feasibility scan
+//! over the spanned slots. A naive ring pays O(H) per candidate for the
+//! peak alone (H = 600 slots at the default horizon), which the bench
+//! program flagged as the dominant per-decision cost. `SlotRing` is
+//! therefore a ring window layered over an implicit tournament (segment)
+//! max-tree: point add/release in O(log H), the global peak in O(1) from
+//! the maintained root, and an O(log H) range-max that lets scoring
+//! fast-accept (`range_max + peak_ramp_add ≤ capacity` ⇒ feasible without
+//! touching individual slots) and fast-reject, falling back to the exact
+//! per-slot loop only in the ambiguous band. The naive scoring path is kept
+//! behind [`TimeSlotDispatcher`]'s `set_legacy_scoring` switch; both arms
+//! produce bit-identical peaks, so they agree on every dispatch decision —
+//! asserted by the `pack` bench stage and a property test below.
 
 use std::collections::HashMap;
 
-use super::DispatchPolicy;
+use super::{DispatchPolicy, DispatchStats};
 use crate::engine::core::InstanceStatus;
 use crate::engine::cost_model::{CostModel, ModelKind};
 use crate::engine::request::{Request, RequestId};
@@ -91,8 +107,10 @@ struct Placement {
 /// Per-instance ramp constants from the instance's OWN cost model —
 /// per-instance cost awareness: a 13B co-tenant decodes slower and holds
 /// denser KV than an 8B neighbor, so both its prefill footprint and its
-/// ramp slope differ from the fleet's reference model.
-#[derive(Debug, Clone, Copy)]
+/// ramp slope differ from the fleet's reference model. `PartialEq` lets the
+/// per-request ramp precompute be shared across candidates with identical
+/// constants instead of recomputed per instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
 struct InstanceCost {
     kv_bytes_per_token: f64,
     mem_slope: f64,
@@ -117,33 +135,57 @@ impl InstanceCost {
     }
 }
 
-/// Per-instance future memory profile as a slot ring.
+/// Per-instance future memory profile: a ring window over absolute slot
+/// indices, backed by an implicit tournament (segment) max-tree.
+///
+/// Layout and invariants:
+///
+/// * `tree` has length `2·len`. Leaf `p` (a **physical** ring position in
+///   `[0, len)`) lives at `tree[len + p]`; every internal node `i` in
+///   `[1, len)` satisfies `tree[i] = max(tree[2i], tree[2i+1])`, so
+///   `tree[1]` is the max over all live slots — [`SlotRing::peak`] is O(1).
+/// * Absolute slot `s` maps to physical position
+///   `(cursor + (s − base_slot)) % len` while `base_slot ≤ s < base_slot +
+///   len`; [`SlotRing::advance_to`] rotates the window by clearing expired
+///   leaves (point updates) or, once a gap covers the whole window, by
+///   zeroing the tree outright.
+/// * Leaves are never negative ([`SlotRing::add`] clamps release dust to
+///   0.0) and never NaN, so `max` is associative over them and the root is
+///   **bit-identical** to a linear left-to-right fold over the leaves
+///   ([`SlotRing::peak_scan`], kept as the legacy scoring arm's scan).
+/// * [`SlotRing::range_max`] answers max over an absolute slot range in
+///   O(log len) by splitting the (up to two) contiguous physical intervals
+///   the rotated range covers.
 #[derive(Debug, Clone)]
 struct SlotRing {
-    /// Absolute index of `slots[cursor]`; slot s covers
+    /// Absolute index of the physical slot at `cursor`; slot s covers
     /// [s·slot_len, (s+1)·slot_len).
     base_slot: i64,
     cursor: usize,
-    slots: Vec<f64>,
+    /// Number of live slots (the window length H).
+    len: usize,
+    /// Implicit max-tree nodes; see the struct docs for the layout.
+    tree: Vec<f64>,
 }
 
 impl SlotRing {
     fn new(horizon: usize) -> SlotRing {
-        SlotRing { base_slot: 0, cursor: 0, slots: vec![0.0; horizon] }
+        let len = horizon.max(1);
+        SlotRing { base_slot: 0, cursor: 0, len, tree: vec![0.0; 2 * len] }
     }
 
     fn idx(&self, abs_slot: i64) -> Option<usize> {
         let off = abs_slot - self.base_slot;
-        if off < 0 || off >= self.slots.len() as i64 {
+        if off < 0 || off >= self.len as i64 {
             None
         } else {
-            Some((self.cursor + off as usize) % self.slots.len())
+            Some((self.cursor + off as usize) % self.len)
         }
     }
 
     /// Absolute index of the last live slot.
     fn horizon_end(&self) -> i64 {
-        self.base_slot + self.slots.len() as i64 - 1
+        self.base_slot + self.len as i64 - 1
     }
 
     /// The fold rule for out-of-window predictions: past slots charge the
@@ -152,6 +194,18 @@ impl SlotRing {
     /// a prediction is released from the exact slot it was charged to.
     fn fold(&self, abs_slot: i64) -> i64 {
         abs_slot.max(self.base_slot).min(self.horizon_end())
+    }
+
+    /// Write leaf `p` and recompute the max along its ancestor path
+    /// (O(log len)).
+    fn set_leaf(&mut self, p: usize, v: f64) {
+        let mut i = self.len + p;
+        self.tree[i] = v;
+        i >>= 1;
+        while i >= 1 {
+            self.tree[i] = self.tree[i << 1].max(self.tree[(i << 1) | 1]);
+            i >>= 1;
+        }
     }
 
     /// Advance the ring so `abs_slot` becomes the base; expired slots reset.
@@ -163,15 +217,17 @@ impl SlotRing {
             return;
         }
         let gap = abs_slot - self.base_slot;
-        if gap >= self.slots.len() as i64 {
-            self.slots.fill(0.0);
+        if gap >= self.len as i64 {
+            self.tree.fill(0.0);
             self.cursor = 0;
             self.base_slot = abs_slot;
             return;
         }
         for _ in 0..gap {
-            self.slots[self.cursor] = 0.0;
-            self.cursor = (self.cursor + 1) % self.slots.len();
+            if self.tree[self.len + self.cursor] != 0.0 {
+                self.set_leaf(self.cursor, 0.0);
+            }
+            self.cursor = (self.cursor + 1) % self.len;
         }
         self.base_slot = abs_slot;
     }
@@ -179,20 +235,118 @@ impl SlotRing {
     fn add(&mut self, abs_slot: i64, v: f64) {
         let clamped = self.fold(abs_slot);
         if let Some(i) = self.idx(clamped) {
-            self.slots[i] += v;
-            if self.slots[i] < 0.0 {
-                self.slots[i] = 0.0; // numeric dust from release
+            let mut next = self.tree[self.len + i] + v;
+            if next < 0.0 {
+                next = 0.0; // numeric dust from release
             }
+            self.set_leaf(i, next);
         }
     }
 
+    /// Load in absolute slot `abs_slot`; expired and beyond-horizon slots
+    /// read 0.0. (Past slots must NOT clamp to the base slot — that would
+    /// report the base's live load for a slot that no longer exists.)
     fn get(&self, abs_slot: i64) -> f64 {
-        self.idx(abs_slot.max(self.base_slot)).map_or(0.0, |i| self.slots[i])
+        if abs_slot < self.base_slot {
+            return 0.0;
+        }
+        self.idx(abs_slot).map_or(0.0, |i| self.tree[self.len + i])
     }
 
+    /// Global peak in O(1) from the maintained tree root.
     fn peak(&self) -> f64 {
-        self.slots.iter().cloned().fold(0.0, f64::max)
+        self.tree[1]
     }
+
+    /// The legacy O(len) peak: a linear fold over the leaves. Kept as the
+    /// `set_legacy_scoring` arm's scan; bit-identical to [`SlotRing::peak`]
+    /// (leaves are non-negative and NaN-free, so max association cannot
+    /// change the result).
+    fn peak_scan(&self) -> f64 {
+        self.tree[self.len..].iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Max over the absolute slot range `[lo, hi]` (inclusive), counting
+    /// only live window slots; expired and beyond-horizon slots contribute
+    /// 0.0. O(log len).
+    fn range_max(&self, lo: i64, hi: i64) -> f64 {
+        let lo = lo.max(self.base_slot);
+        let hi = hi.min(self.horizon_end());
+        if lo > hi {
+            return 0.0;
+        }
+        let off = (lo - self.base_slot) as usize;
+        let m = (hi - lo) as usize + 1;
+        let a = (self.cursor + off) % self.len;
+        if a + m <= self.len {
+            self.range_max_phys(a, a + m)
+        } else {
+            // The rotated range wraps: two contiguous physical intervals.
+            self.range_max_phys(a, self.len).max(self.range_max_phys(0, a + m - self.len))
+        }
+    }
+
+    /// Max over the physical leaf range `[l, r)` via the implicit tree.
+    fn range_max_phys(&self, mut l: usize, mut r: usize) -> f64 {
+        let mut m = 0.0_f64;
+        l += self.len;
+        r += self.len;
+        while l < r {
+            if l & 1 == 1 {
+                m = m.max(self.tree[l]);
+                l += 1;
+            }
+            if r & 1 == 1 {
+                r -= 1;
+                m = m.max(self.tree[r]);
+            }
+            l >>= 1;
+            r >>= 1;
+        }
+        m
+    }
+}
+
+/// Per-request ramp contributions, shared across every candidate whose
+/// [`InstanceCost`] constants are identical (the common case on a fleet
+/// with a handful of model families): the ramp depends only on the
+/// constants and the request's `(start, end)` window, never on the
+/// candidate's ring.
+#[derive(Debug, Clone)]
+struct RampPre {
+    cost: InstanceCost,
+    /// Ramp contribution per spanned slot `s0..=s1`, from
+    /// [`TimeSlotDispatcher::ramp_at`] — the exact values the legacy
+    /// per-candidate loop recomputes.
+    adds: Vec<f64>,
+    /// Max of `adds`.
+    add_max: f64,
+    /// True when every slot except the trailing one carries positive ramp
+    /// mass and the trailing slot carries none — the span shape the fast
+    /// feasibility band relies on (degenerate shapes fall back to the
+    /// exact loop).
+    clean_span: bool,
+}
+
+impl RampPre {
+    fn empty() -> RampPre {
+        RampPre {
+            cost: InstanceCost { kv_bytes_per_token: 0.0, mem_slope: 0.0 },
+            adds: Vec::new(),
+            add_max: 0.0,
+            clean_span: false,
+        }
+    }
+}
+
+/// How the optimized scoring arm resolved one candidate.
+enum EvalPath {
+    /// O(log H) accept: feasibility and peak both settled by range-max.
+    FastAccept,
+    /// O(log H) reject: capacity exceeded without touching per-slot loads.
+    FastReject,
+    /// Ambiguous band: the exact per-slot loop ran.
+    Exact,
 }
 
 /// The memory-aware time-slot dispatcher.
@@ -213,6 +367,15 @@ pub struct TimeSlotDispatcher {
     suspended_until: Vec<Time>,
     /// Diagnostics.
     pub rejected_rounds: u64,
+    /// When true, score candidates with the naive O(H)-per-candidate path
+    /// (linear peak scan, per-candidate ramp recompute) instead of the
+    /// max-tree arm. Decisions are bit-identical either way.
+    legacy_scoring: bool,
+    /// Streaming decision counters (see [`DispatchStats`]).
+    stats: DispatchStats,
+    /// Reusable shared-ramp cache; entries beyond the per-decision live
+    /// count are stale capacity kept to avoid reallocating.
+    ramp_scratch: Vec<RampPre>,
 }
 
 impl TimeSlotDispatcher {
@@ -229,6 +392,9 @@ impl TimeSlotDispatcher {
             expected_kv: HashMap::new(),
             suspended_until: vec![0.0; n_instances],
             rejected_rounds: 0,
+            legacy_scoring: false,
+            stats: DispatchStats::default(),
+            ramp_scratch: Vec::new(),
         }
     }
 
@@ -249,24 +415,32 @@ impl TimeSlotDispatcher {
     }
 
     /// Refresh the per-agent expected execution times from the profiler
-    /// (mode of the single-request latency distribution, §6).
+    /// (mode of the single-request latency distribution, §6). Skips the
+    /// map write when the profiled mode is unchanged.
     pub fn set_expected_exec(
         &mut self,
         agent: crate::orchestrator::ids::AgentId,
         t_mode: f64,
     ) {
-        self.expected_exec.insert(agent, t_mode.max(1e-3));
+        let t = t_mode.max(1e-3);
+        if self.expected_exec.get(&agent).copied() != Some(t) {
+            self.expected_exec.insert(agent, t);
+        }
     }
 
     /// Install an agent's learned total-KV-token demand (mode of the
     /// profiler's demand distribution). Only read when
-    /// [`TimeSlotConfig::learned_demand`] is enabled.
+    /// [`TimeSlotConfig::learned_demand`] is enabled. Skips the map write
+    /// when the profiled demand is unchanged.
     pub fn set_expected_kv(
         &mut self,
         agent: crate::orchestrator::ids::AgentId,
         tokens: f64,
     ) {
-        self.expected_kv.insert(agent, tokens.max(1.0));
+        let t = tokens.max(1.0);
+        if self.expected_kv.get(&agent).copied() != Some(t) {
+            self.expected_kv.insert(agent, t);
+        }
     }
 
     /// Expected lifetime KV tokens of `req` on an instance with the given
@@ -328,11 +502,20 @@ impl TimeSlotDispatcher {
             .unwrap_or(self.cfg.capacity_bytes)
     }
 
-    /// Evaluate placing `req` on instance `j` starting `now`, under the
-    /// instance's own cost model; returns the resulting peak usage over the
-    /// spanned slots, or None if any slot would exceed `capacity` (bytes).
-    fn evaluate(&self, j: usize, req: &Request, now: Time, capacity: f64) -> Option<f64> {
-        let t_i = self.expected_time(req);
+    /// Legacy scoring of placing `req` on instance `j` starting `now`:
+    /// linear peak scan plus a per-slot ramp recompute. Returns the
+    /// resulting peak usage over the spanned slots, or None if any slot
+    /// would exceed `capacity` (bytes). Kept verbatim behind the
+    /// `set_legacy_scoring` switch as the A/B baseline the max-tree arm
+    /// must agree with bit-for-bit.
+    fn evaluate_legacy(
+        &self,
+        j: usize,
+        req: &Request,
+        t_i: f64,
+        now: Time,
+        capacity: f64,
+    ) -> Option<f64> {
         let start = now;
         let end = now + t_i;
         let cost = self.costs[j];
@@ -340,7 +523,7 @@ impl TimeSlotDispatcher {
         let s0 = self.abs_slot(start);
         let s1 = self.abs_slot(end) + 1;
         let ring = &self.rings[j];
-        let mut peak: f64 = ring.peak();
+        let mut peak: f64 = ring.peak_scan();
         for s in s0..=s1 {
             let add = self.ramp_at(prefill_bytes, cost.mem_slope, start, end, s);
             if add == 0.0 {
@@ -354,33 +537,119 @@ impl TimeSlotDispatcher {
         }
         Some(peak)
     }
-}
 
-impl DispatchPolicy for TimeSlotDispatcher {
-    fn name(&self) -> &'static str {
-        "kairos-timeslot"
+    /// Max-tree scoring: O(1) root peak plus an O(log H) range-max
+    /// feasibility band, falling back to the exact per-slot loop (over the
+    /// shared precomputed ramp) only when neither band settles the
+    /// candidate. Peaks are bit-identical to [`Self::evaluate_legacy`]:
+    ///
+    /// * the root equals the linear peak scan (non-negative, NaN-free
+    ///   leaves);
+    /// * fast-reject fires only when some slot the legacy loop inspects
+    ///   already exceeds capacity on its own (`add_max > capacity`, or ring
+    ///   load `> capacity` in a span whose every slot carries positive ramp
+    ///   mass);
+    /// * fast-accept fires when the spanned range is untouched
+    ///   (`range_max == 0.0`, so every total is exactly its ramp add and
+    ///   the peak is `max(root, add_max)`), or when every spanned total is
+    ///   bounded by `range_max + add_max ≤ capacity` AND the global root
+    ///   dominates that bound, so the exact peak is the root itself.
+    fn evaluate_fast(
+        &self,
+        j: usize,
+        pre: &RampPre,
+        s0: i64,
+        s1: i64,
+        capacity: f64,
+    ) -> (Option<f64>, EvalPath) {
+        let ring = &self.rings[j];
+        let root = ring.peak();
+        if pre.clean_span {
+            if pre.add_max > capacity {
+                // The slot holding add_max totals at least add_max alone.
+                return (None, EvalPath::FastReject);
+            }
+            let rm = ring.range_max(s0, s1 - 1);
+            if rm > capacity {
+                // That slot carries positive ramp mass (clean span), so the
+                // legacy loop checks it and its total already exceeds
+                // capacity on ring load alone.
+                return (None, EvalPath::FastReject);
+            }
+            if rm == 0.0 {
+                // Untouched span: every spanned slot reads 0.0, so each
+                // total is exactly its ramp add (`0.0 + a` is bitwise `a`)
+                // and the peak is max(root, add_max) — the common case on
+                // lightly-loaded instances.
+                return (Some(root.max(pre.add_max)), EvalPath::FastAccept);
+            }
+            let bound = rm + pre.add_max;
+            if bound <= capacity && root >= bound {
+                return (Some(root), EvalPath::FastAccept);
+            }
+        }
+        // Ambiguous band: the exact per-slot loop, sharing the precomputed
+        // ramp instead of recomputing it per candidate.
+        let mut peak = root;
+        for (i, &add) in pre.adds.iter().enumerate() {
+            if add == 0.0 {
+                continue;
+            }
+            let total = ring.get(s0 + i as i64) + add;
+            if total > capacity {
+                return (None, EvalPath::Exact);
+            }
+            peak = peak.max(total);
+        }
+        (Some(peak), EvalPath::Exact)
     }
 
-    fn choose(
+    /// Shared body of [`DispatchPolicy::choose`] (candidates = the whole
+    /// fleet) and [`DispatchPolicy::choose_among`] (candidates = the
+    /// coordinator's family-index prune). Candidate order is ascending in
+    /// both callers, so the strict `<` first-wins tie-break picks the same
+    /// instance either way.
+    fn choose_filtered(
         &mut self,
         req: &Request,
         statuses: &[InstanceStatus],
         now: Time,
+        candidates: Option<&[usize]>,
     ) -> Option<usize> {
         if statuses.len() != self.rings.len() {
             // Defensive resize: a driver that skipped `on_fleet_change`
             // must still never make us mis-index the rings.
             self.on_fleet_change(statuses);
         }
+        // Every ring advances — even non-candidates — so ring state (and
+        // therefore every later decision) is independent of which candidate
+        // subsets earlier rounds were called with.
         let cur = self.abs_slot(now);
         for ring in self.rings.iter_mut() {
             ring.advance_to(cur);
         }
-        // Evaluate all instances "in parallel" (paper §6 step 2) and pick
+        // Evaluate the candidates "in parallel" (paper §6 step 2) and pick
         // the lowest expected total peak among the available ones.
         let t_i = self.expected_time(req);
+        let start = now;
+        let end = now + t_i;
+        let s0 = self.abs_slot(start);
+        let s1 = self.abs_slot(end) + 1;
+        self.stats.decisions += 1;
+        let n = self.rings.len();
+        let mut scratch = std::mem::take(&mut self.ramp_scratch);
+        let mut scratch_used = 0usize;
         let mut best: Option<(usize, f64)> = None;
-        for j in 0..self.rings.len() {
+        let upper = candidates.map_or(n, <[usize]>::len);
+        for k in 0..upper {
+            let j = match candidates {
+                Some(c) => c[k],
+                None => k,
+            };
+            if j >= n {
+                continue; // stale candidate set across a fleet shrink
+            }
+            self.stats.candidates += 1;
             let st = &statuses[j];
             if !st.accepting {
                 continue; // draining toward retirement / retired tombstone
@@ -407,16 +676,140 @@ impl DispatchPolicy for TimeSlotDispatcher {
                 continue;
             }
             let capacity = self.capacity_of(j, Some(st));
-            if let Some(peak) = self.evaluate(j, req, now, capacity) {
+            self.stats.evaluated += 1;
+            let peak = if self.legacy_scoring {
+                self.evaluate_legacy(j, req, t_i, now, capacity)
+            } else {
+                let pi = Self::ramp_pre(
+                    &self.cfg,
+                    &mut scratch,
+                    &mut scratch_used,
+                    cost,
+                    req.prompt_tokens,
+                    start,
+                    end,
+                    s0,
+                    s1,
+                );
+                let (peak, path) = self.evaluate_fast(j, &scratch[pi], s0, s1, capacity);
+                match path {
+                    EvalPath::FastAccept => self.stats.fast_accepted += 1,
+                    EvalPath::FastReject => self.stats.fast_rejected += 1,
+                    EvalPath::Exact => {}
+                }
+                peak
+            };
+            if let Some(peak) = peak {
                 if best.map(|(_, p)| peak < p).unwrap_or(true) {
                     best = Some((j, peak));
                 }
             }
         }
+        self.ramp_scratch = scratch;
         if best.is_none() {
             self.rejected_rounds += 1;
         }
         best.map(|(j, _)| j)
+    }
+
+    /// Find-or-build the shared [`RampPre`] for `cost` in the per-decision
+    /// scratch, returning its index. Entries are keyed by the exact ramp
+    /// constants; on a fleet with a handful of model families this computes
+    /// each ramp once per decision instead of once per candidate.
+    #[allow(clippy::too_many_arguments)]
+    fn ramp_pre(
+        cfg: &TimeSlotConfig,
+        scratch: &mut Vec<RampPre>,
+        used: &mut usize,
+        cost: InstanceCost,
+        prompt_tokens: u32,
+        start: Time,
+        end: Time,
+        s0: i64,
+        s1: i64,
+    ) -> usize {
+        for (i, p) in scratch[..*used].iter().enumerate() {
+            if p.cost == cost {
+                return i;
+            }
+        }
+        if *used == scratch.len() {
+            scratch.push(RampPre::empty());
+        }
+        let p = &mut scratch[*used];
+        p.cost = cost;
+        p.adds.clear();
+        let prefill_bytes = prompt_tokens as f64 * cost.kv_bytes_per_token;
+        let mut add_max = 0.0_f64;
+        for s in s0..=s1 {
+            // Same arithmetic as `ramp_at`, inlined against `cfg` so the
+            // precompute can run while `self` stays borrowed by the caller.
+            let mid = (s as f64 + 0.5) * cfg.slot_len;
+            let a = if mid < start || mid >= end {
+                let slot_lo = s as f64 * cfg.slot_len;
+                let slot_hi = slot_lo + cfg.slot_len;
+                if slot_hi <= start || slot_lo >= end {
+                    0.0
+                } else {
+                    prefill_bytes + cost.mem_slope * (mid.clamp(start, end) - start)
+                }
+            } else {
+                prefill_bytes + cost.mem_slope * (mid.clamp(start, end) - start)
+            };
+            add_max = add_max.max(a);
+            p.adds.push(a);
+        }
+        p.add_max = add_max;
+        let n = p.adds.len();
+        p.clean_span =
+            n >= 2 && p.adds[n - 1] == 0.0 && p.adds[..n - 1].iter().all(|&a| a > 0.0);
+        *used += 1;
+        *used - 1
+    }
+
+    /// Bit-exact snapshot of every ring's state (base, cursor, tree bits) —
+    /// the property tests compare legacy vs. max-tree arms with this.
+    #[cfg(test)]
+    fn ring_bits(&self) -> Vec<(i64, usize, Vec<u64>)> {
+        self.rings
+            .iter()
+            .map(|r| (r.base_slot, r.cursor, r.tree.iter().map(|v| v.to_bits()).collect()))
+            .collect()
+    }
+}
+
+impl DispatchPolicy for TimeSlotDispatcher {
+    fn name(&self) -> &'static str {
+        "kairos-timeslot"
+    }
+
+    fn choose(
+        &mut self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        now: Time,
+    ) -> Option<usize> {
+        self.choose_filtered(req, statuses, now, None)
+    }
+
+    fn choose_among(
+        &mut self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        candidates: &[usize],
+        now: Time,
+    ) -> Option<usize> {
+        self.choose_filtered(req, statuses, now, Some(candidates))
+    }
+
+    fn set_legacy_scoring(&mut self, legacy: bool) {
+        self.legacy_scoring = legacy;
+    }
+
+    fn stats(&self) -> DispatchStats {
+        let mut s = self.stats;
+        s.rejected_rounds = self.rejected_rounds;
+        s
     }
 
     fn on_dispatch(&mut self, req: &Request, instance: usize, now: Time) {
@@ -471,6 +864,7 @@ impl DispatchPolicy for TimeSlotDispatcher {
         // OOM-suspect: temporarily suspend new dispatches to this instance.
         if instance < self.suspended_until.len() {
             self.suspended_until[instance] = now + self.cfg.suspend_cooldown;
+            self.stats.suspensions += 1;
         }
     }
 
@@ -641,6 +1035,7 @@ mod tests {
         // After the cooldown instance 0 becomes eligible again.
         let pick = d.choose(&req(9, 0, 10), &statuses, 3.0);
         assert!(pick.is_some());
+        assert_eq!(d.stats().suspensions, 1);
     }
 
     #[test]
@@ -683,6 +1078,101 @@ mod tests {
     }
 
     #[test]
+    fn expired_slots_read_zero_not_base() {
+        // Regression: `get` used to clamp past slots to the base slot and
+        // silently reported the CURRENT base slot's load for any expired
+        // slot — a mis-scoring footgun for anything that reads behind the
+        // window.
+        let mut ring = SlotRing::new(4);
+        ring.advance_to(10);
+        ring.add(10, 42.0);
+        assert_eq!(ring.get(10), 42.0);
+        assert_eq!(ring.get(9), 0.0, "expired slot must read 0, not the base's load");
+        assert_eq!(ring.get(0), 0.0);
+        assert_eq!(ring.get(13), 0.0, "last live slot is empty");
+        assert_eq!(ring.get(14), 0.0, "beyond-horizon reads 0");
+    }
+
+    #[test]
+    fn max_tree_matches_linear_scan_under_churn() {
+        // The maintained root and range-max must track a brute-force scan
+        // through adds, releases, folds and window rotations (including
+        // wrap-around ranges).
+        let mut rng = crate::stats::rng::Rng::new(0x5107);
+        let mut ring = SlotRing::new(7);
+        let mut base = 0i64;
+        for _ in 0..500 {
+            match rng.below(4) {
+                0 => {
+                    base += rng.below(5) as i64;
+                    ring.advance_to(base);
+                }
+                1 => {
+                    let s = base + rng.below(10) as i64 - 2;
+                    ring.add(s, (rng.below(100) as f64) / 10.0);
+                }
+                2 => {
+                    let s = base + rng.below(7) as i64;
+                    ring.add(s, -((rng.below(50) as f64) / 10.0));
+                }
+                _ => {
+                    let lo = base + rng.below(9) as i64 - 1;
+                    let hi = lo + rng.below(9) as i64;
+                    let mut want = 0.0_f64;
+                    for s in lo..=hi {
+                        want = want.max(ring.get(s));
+                    }
+                    assert_eq!(ring.range_max(lo, hi).to_bits(), want.to_bits());
+                }
+            }
+            let scan = ring.peak_scan();
+            assert_eq!(
+                ring.peak().to_bits(),
+                scan.to_bits(),
+                "root {} != scan {}",
+                ring.peak(),
+                scan
+            );
+        }
+    }
+
+    #[test]
+    fn range_max_wraps_across_the_ring_seam() {
+        let mut ring = SlotRing::new(5);
+        ring.advance_to(3); // cursor now mid-array: ranges can wrap
+        ring.add(3, 1.0);
+        ring.add(5, 9.0);
+        ring.add(7, 4.0);
+        assert_eq!(ring.range_max(3, 7), 9.0);
+        assert_eq!(ring.range_max(6, 7), 4.0);
+        assert_eq!(ring.range_max(0, 2), 0.0, "expired range is empty");
+        assert_eq!(ring.range_max(8, 20), 0.0, "beyond-horizon range is empty");
+        assert_eq!(ring.range_max(-5, 100), 9.0, "clamps to the live window");
+    }
+
+    #[test]
+    fn advance_to_jumps_large_gaps() {
+        // A wall-clock driver idle for an hour advances ~7200 slots per
+        // ring per pump; advance_to must clear at most slots.len() entries
+        // and jump the base directly. With the old O(Δslots) loop this
+        // multi-billion-slot gap would effectively hang the test.
+        let mut ring = SlotRing::new(8);
+        ring.add(3, 5.0);
+        ring.add(7, 2.0);
+        ring.advance_to(10_000_000_000);
+        assert_eq!(ring.base_slot, 10_000_000_000);
+        assert_eq!(ring.peak(), 0.0, "all live slots expired across the gap");
+        ring.add(10_000_000_001, 2.5);
+        assert_eq!(ring.get(10_000_000_001), 2.5);
+        // A moderate (sub-window) gap still expires exactly the slots it
+        // covers and keeps the future ones.
+        ring.add(10_000_000_006, 1.5);
+        ring.advance_to(10_000_000_004);
+        assert_eq!(ring.get(10_000_000_001), 0.0);
+        assert_eq!(ring.get(10_000_000_006), 1.5);
+    }
+
+    #[test]
     fn beyond_horizon_release_lands_in_fold_slot() {
         // Regression for the fold leak: with a 4-slot horizon (2 s) and a
         // 4 s expected execution, most of the prediction folds into the
@@ -713,28 +1203,6 @@ mod tests {
         );
         // And a near-capacity request can now be placed again.
         assert_eq!(d.choose(&req(3, 0, 900), &statuses, 1.0), Some(0));
-    }
-
-    #[test]
-    fn advance_to_jumps_large_gaps() {
-        // A wall-clock driver idle for an hour advances ~7200 slots per
-        // ring per pump; advance_to must clear at most slots.len() entries
-        // and jump the base directly. With the old O(Δslots) loop this
-        // multi-billion-slot gap would effectively hang the test.
-        let mut ring = SlotRing::new(8);
-        ring.add(3, 5.0);
-        ring.add(7, 2.0);
-        ring.advance_to(10_000_000_000);
-        assert_eq!(ring.base_slot, 10_000_000_000);
-        assert_eq!(ring.peak(), 0.0, "all live slots expired across the gap");
-        ring.add(10_000_000_001, 2.5);
-        assert_eq!(ring.get(10_000_000_001), 2.5);
-        // A moderate (sub-window) gap still expires exactly the slots it
-        // covers and keeps the future ones.
-        ring.add(10_000_000_006, 1.5);
-        ring.advance_to(10_000_000_004);
-        assert_eq!(ring.get(10_000_000_001), 0.0);
-        assert_eq!(ring.get(10_000_000_006), 1.5);
     }
 
     #[test]
@@ -818,6 +1286,34 @@ mod tests {
     }
 
     #[test]
+    fn choose_among_prunes_without_changing_the_pick() {
+        let mut full = TimeSlotDispatcher::new(3, cfg());
+        let mut pruned = TimeSlotDispatcher::new(3, cfg());
+        let mut statuses = vec![st(0), st(1), st(2)];
+        statuses[1].model = ModelKind::Llama2_13B;
+        // Pinned 8B requests: the coordinator's family index would offer
+        // exactly [0, 2]. The pruned pick must equal the full scan's for
+        // every request in a packing sequence.
+        for k in 0..12 {
+            let mut r = req(k, 0, 300);
+            r.model_class = ModelClass::Model(ModelKind::Llama3_8B);
+            let now = k as f64 * 0.25;
+            let a = full.choose(&r, &statuses, now);
+            let b = pruned.choose_among(&r, &statuses, &[0, 2], now);
+            assert_eq!(a, b, "candidate pruning changed the decision for req {k}");
+            if let Some(j) = a {
+                full.on_dispatch(&r, j, now);
+                pruned.on_dispatch(&r, j, now);
+            }
+        }
+        assert_eq!(full.ring_bits(), pruned.ring_bits());
+        // A stale candidate set (index beyond the fleet) is skipped, not
+        // indexed out of bounds.
+        let r = req(99, 0, 10);
+        assert!(pruned.choose_among(&r, &statuses, &[7, 0], 10.0).is_some());
+    }
+
+    #[test]
     fn per_instance_cost_models_shape_the_ramp() {
         // Same request, same cfg — but the 13B instance holds ~6x denser
         // KV per token, so its predicted footprint must be larger than the
@@ -893,5 +1389,150 @@ mod tests {
         d.on_complete(1, 0, 0.0);
         assert!(d.rings[0].peak() >= 0.0);
         assert!(d.rings[0].peak() < 1e-6, "all predicted usage released");
+    }
+
+    #[test]
+    fn packer_stats_count_fast_paths() {
+        let mut d = TimeSlotDispatcher::new(2, cfg());
+        let statuses = vec![st(0), st(1)];
+        for k in 0..6 {
+            if let Some(j) = d.choose(&req(k, 0, 120), &statuses, k as f64 * 0.1) {
+                d.on_dispatch(&req(k, 0, 120), j, k as f64 * 0.1);
+            }
+        }
+        let s = d.stats();
+        assert_eq!(s.decisions, 6);
+        assert_eq!(s.candidates, 12);
+        assert_eq!(s.evaluated, 12);
+        assert!(s.fast_accepted > 0, "empty-span candidates must fast-accept");
+        // The legacy arm never takes a fast path.
+        let mut l = TimeSlotDispatcher::new(2, cfg());
+        l.set_legacy_scoring(true);
+        for k in 0..6 {
+            if let Some(j) = l.choose(&req(k, 0, 120), &statuses, k as f64 * 0.1) {
+                l.on_dispatch(&req(k, 0, 120), j, k as f64 * 0.1);
+            }
+        }
+        let ls = l.stats();
+        assert_eq!(ls.fast_accepted + ls.fast_rejected, 0);
+        assert_eq!(ls.decisions, 6);
+    }
+
+    // ---- property: legacy vs. max-tree scoring are bit-identical --------
+
+    #[derive(Debug, Clone)]
+    enum Op {
+        Submit { agent: u32, prompt: u32, pinned: bool },
+        Complete { nth: usize },
+        Wait { ms: usize },
+        Fleet { n: usize },
+        Preempt { j: usize },
+    }
+
+    fn gen_ops(rng: &mut crate::stats::rng::Rng) -> Vec<Op> {
+        let n_ops = 30 + rng.below(50);
+        (0..n_ops)
+            .map(|_| match rng.below(10) {
+                0 => Op::Wait { ms: 1 + rng.below(4000) },
+                1 => Op::Complete { nth: rng.below(8) },
+                2 => Op::Fleet { n: 1 + rng.below(5) },
+                3 => Op::Preempt { j: rng.below(5) },
+                _ => Op::Submit {
+                    agent: rng.below(4) as u32,
+                    prompt: 1 + rng.below(600) as u32,
+                    pinned: rng.below(4) == 0,
+                },
+            })
+            .collect()
+    }
+
+    fn st_mixed(id: usize) -> InstanceStatus {
+        let mut s = st(id);
+        if id % 2 == 1 {
+            s.model = ModelKind::Llama2_13B;
+        }
+        // Uneven budgets so rejections and near-capacity bands happen.
+        s.capacity_tokens = 300 + 250 * id as u64;
+        s
+    }
+
+    fn run_scoring_equivalence(ops: &[Op]) -> Result<(), String> {
+        let mut legacy = TimeSlotDispatcher::new(3, cfg());
+        let mut fast = TimeSlotDispatcher::new(3, cfg());
+        legacy.set_legacy_scoring(true);
+        let mut statuses: Vec<InstanceStatus> = (0..3).map(st_mixed).collect();
+        let mut now = 0.0_f64;
+        let mut next_id = 1u64;
+        let mut live: Vec<u64> = Vec::new();
+        for op in ops {
+            match op {
+                Op::Wait { ms } => now += *ms as f64 / 1000.0,
+                Op::Fleet { n } => {
+                    statuses = (0..*n).map(st_mixed).collect();
+                    legacy.on_fleet_change(&statuses);
+                    fast.on_fleet_change(&statuses);
+                }
+                Op::Preempt { j } => {
+                    if *j < statuses.len() {
+                        legacy.on_preemption(*j, now);
+                        fast.on_preemption(*j, now);
+                    }
+                }
+                Op::Complete { nth } => {
+                    if !live.is_empty() {
+                        let id = live.remove(nth % live.len());
+                        legacy.on_complete(id, 0, now);
+                        fast.on_complete(id, 0, now);
+                    }
+                }
+                Op::Submit { agent, prompt, pinned } => {
+                    let mut r = req(next_id, *agent, *prompt);
+                    next_id += 1;
+                    if *pinned {
+                        r.model_class = ModelClass::Model(ModelKind::Llama2_13B);
+                    }
+                    let a = legacy.choose(&r, &statuses, now);
+                    let b = fast.choose(&r, &statuses, now);
+                    if a != b {
+                        return Err(format!(
+                            "decision divergence at req {}: legacy {a:?} fast {b:?}",
+                            r.id
+                        ));
+                    }
+                    // The candidate-pruned entry point must agree with the
+                    // full scan when offered exactly the matching set.
+                    let cands: Vec<usize> = (0..statuses.len())
+                        .filter(|&j| r.model_class.matches(statuses[j].model))
+                        .collect();
+                    let c = fast.choose_among(&r, &statuses, &cands, now);
+                    if c != b {
+                        return Err(format!(
+                            "choose_among divergence at req {}: full {b:?} pruned {c:?}",
+                            r.id
+                        ));
+                    }
+                    if let Some(j) = a {
+                        legacy.on_dispatch(&r, j, now);
+                        fast.on_dispatch(&r, j, now);
+                        live.push(r.id);
+                    }
+                }
+            }
+            if legacy.ring_bits() != fast.ring_bits() {
+                return Err(format!("ring state divergence after {op:?} at t={now}"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_legacy_and_max_tree_scoring_bit_identical() {
+        crate::testing::forall(
+            "timeslot-scoring-equivalence",
+            64,
+            0xC0FFEE,
+            gen_ops,
+            |ops| run_scoring_equivalence(ops),
+        );
     }
 }

@@ -97,6 +97,12 @@ pub struct StreamingMetrics {
     pub queue_ratio: OnlineStats,
     /// Distinct (agent, model-family) pairs that actually served.
     pub agent_families: Hll,
+    /// Latest snapshot of the dispatcher's decision counters
+    /// ([`crate::dispatch::DispatchStats`]): candidates offered vs.
+    /// evaluated, fast-path accepts/rejects, rejected rounds and
+    /// OOM-suspect suspensions. Synced by the coordinator on every refresh
+    /// and at end of run; printed by the bench summary and `kairos check`.
+    pub packer: crate::dispatch::DispatchStats,
 }
 
 impl StreamingMetrics {

@@ -29,7 +29,7 @@ use std::cell::Cell;
 use std::collections::HashMap;
 
 use crate::agents::apps::{App, WorkflowPlan};
-use crate::dispatch::DispatchPolicy;
+use crate::dispatch::{DispatchPolicy, DispatchStats};
 use crate::engine::core::{
     EngineConfig, EngineCore, ExecBackend, InstanceStatus, SimBackend, StepOutcome,
 };
@@ -693,6 +693,24 @@ impl<B: ExecBackend> Coordinator<B> {
         self.legacy_hot_path = legacy;
     }
 
+    /// Forward the dispatcher's scoring A/B switch
+    /// ([`DispatchPolicy::set_legacy_scoring`]): `true` scores candidates
+    /// with the naive reference arm, `false` (default) with the optimized
+    /// one. Orthogonal to [`Self::set_legacy_hot_path`] — that one switches
+    /// the coordinator's own candidate/pressure structures; this one
+    /// switches the packer's per-candidate scoring. Both arms of both
+    /// switches must produce identical dispatch decisions.
+    pub fn set_legacy_scoring(&mut self, legacy: bool) {
+        self.dispatcher.set_legacy_scoring(legacy);
+    }
+
+    /// Snapshot of the dispatcher's streaming decision counters
+    /// ([`DispatchStats`]); also synced into
+    /// [`crate::metrics::StreamingMetrics::packer`] on every refresh.
+    pub fn dispatch_stats(&self) -> DispatchStats {
+        self.dispatcher.stats()
+    }
+
     /// Resident bytes pinned by the decision logs (buffer capacities plus
     /// the trace records' per-stage heap) — the bench harness's
     /// `peak_log_bytes`.
@@ -1331,7 +1349,26 @@ impl<B: ExecBackend> Coordinator<B> {
                 }
                 continue;
             }
-            let Some(j) = self.dispatcher.choose(best, &self.status_buf, now) else {
+            // The family prune already computed for the fit scan flows into
+            // the dispatcher: a pinned request offers only its family's
+            // slot set (ascending, so policy tie-breaks are unchanged —
+            // the seam tests pin this). `Any` requests and the legacy arm
+            // full-scan.
+            let chosen = match class {
+                ModelClass::Model(m) if !self.legacy_hot_path => {
+                    match self.family_slot(m) {
+                        Some(fi) => self.dispatcher.choose_among(
+                            best,
+                            &self.status_buf,
+                            &self.families[fi].slots,
+                            now,
+                        ),
+                        None => self.dispatcher.choose(best, &self.status_buf, now),
+                    }
+                }
+                _ => self.dispatcher.choose(best, &self.status_buf, now),
+            };
+            let Some(j) = chosen else {
                 self.blocked_buf[s] = true;
                 continue;
             };
@@ -1510,6 +1547,9 @@ impl<B: ExecBackend> Coordinator<B> {
         self.finalize_drained(now);
         self.activate_booted(now);
         self.autoscale(now);
+        // Keep the packer's decision counters visible on the streaming
+        // metrics surface (bench summary, `kairos check`).
+        self.metrics.stream.packer = self.dispatcher.stats();
         // Dynamic counterpart of the static lint pass: in debug builds
         // every refresh re-derives the incremental structures from scratch
         // and asserts they agree (release builds skip this; `kairos check`
@@ -1803,6 +1843,8 @@ impl<B: ExecBackend> Coordinator<B> {
         for e in &self.engines {
             self.metrics.recomputed_tokens += e.recomputed_tokens;
         }
+        // Final sync for runs that end between refreshes.
+        self.metrics.stream.packer = self.dispatcher.stats();
     }
 
     /// Number of workflows still in flight.

@@ -115,6 +115,11 @@ pub struct FleetConfig {
     /// per-call pressure rebuilds, unbatched refresh) — the bench
     /// harness's in-binary baseline arm.
     pub legacy_hot_path: bool,
+    /// Run the dispatcher's naive candidate-scoring arm (linear peak
+    /// scans, per-candidate ramp recompute) instead of the max-tree arm —
+    /// the `pack` bench's baseline. Orthogonal to `legacy_hot_path`;
+    /// decisions are identical either way.
+    pub legacy_scoring: bool,
 }
 
 impl From<SimConfig> for FleetConfig {
@@ -131,6 +136,7 @@ impl From<SimConfig> for FleetConfig {
             logs: LogConfig::full(),
             lean_metrics: false,
             legacy_hot_path: false,
+            legacy_scoring: false,
         }
     }
 }
@@ -150,6 +156,7 @@ impl From<FleetSpec> for FleetConfig {
             logs: LogConfig::full(),
             lean_metrics: false,
             legacy_hot_path: false,
+            legacy_scoring: false,
         }
     }
 }
@@ -296,6 +303,7 @@ impl SimServer {
         coord.set_log_config(cfg.logs);
         coord.metrics.lean = cfg.lean_metrics;
         coord.set_legacy_hot_path(cfg.legacy_hot_path);
+        coord.set_legacy_scoring(cfg.legacy_scoring);
         let n = coord.n_instances();
         SimServer {
             cfg,

@@ -752,3 +752,73 @@ fn legacy_and_indexed_hot_paths_are_identical_through_the_driver() {
         indexed.metrics.workflows.len()
     );
 }
+
+#[test]
+fn scoring_arms_and_candidate_pruning_are_identical_through_the_driver() {
+    // The packer's scoring A/B (`set_legacy_scoring`: naive linear peak
+    // scans vs the max-tree fast paths) and the coordinator's candidate
+    // seam (`choose_among` fed from the FamilyIndex vs full-scan `choose`
+    // on the legacy hot path) are both pure speedups. Run the full
+    // (hot_path × scoring) matrix over a mixed elastic fleet under learned
+    // routing — the regime where pinned requests flow through the pruned
+    // entry point and near-capacity packing exercises every fast-path
+    // band — with invariant audits on: all four runs must produce one
+    // decision stream.
+    let fleet = FleetSpec::parse("2*llama3-8b@0.12,llama2-13b@0.12").unwrap();
+    let aff =
+        AffinitySpec::parse("*=llama3-8b,Engineer=llama2-13b,QAEngineer=llama2-13b")
+            .unwrap();
+    let mut auto = elastic_config(&fleet);
+    auto.per_group = parse_per_group("llama3-8b=2..4,llama2-13b=1..2").unwrap();
+    let arrivals = burst_then_calm(67);
+    let run = |legacy_hot_path: bool, legacy_scoring: bool| {
+        let mut cfg = FleetConfig::from(fleet.clone());
+        cfg.autoscale = Some(auto.clone());
+        cfg.affinity = Some(aff.clone());
+        cfg.route = Some(RoutePolicy::Learned { explore_rate: 0.125, min_samples: 8 });
+        cfg.legacy_hot_path = legacy_hot_path;
+        cfg.legacy_scoring = legacy_scoring;
+        let route = cfg.route;
+        let mut server = SimServer::with_fleet(
+            cfg,
+            make_policy("kairos"),
+            make_dispatcher_routed("kairos", &fleet, route.as_ref()),
+        );
+        server.enable_audit();
+        server.run(arrivals.clone())
+    };
+    let reference = run(false, false);
+    assert!(!reference.dispatch_log.is_empty());
+    assert!(reference.audit_checks > 0, "audits must actually run");
+    assert!(
+        reference.audit_violations.is_empty(),
+        "{:?}",
+        reference.audit_violations
+    );
+    let p = reference.metrics.stream.packer;
+    assert!(p.decisions > 0, "packer stats must flow to the metrics surface");
+    assert!(
+        p.fast_accepted + p.fast_rejected > 0,
+        "a packing-heavy run must hit the max-tree fast paths"
+    );
+    for (hot, scoring) in [(false, true), (true, false), (true, true)] {
+        let arm = run(hot, scoring);
+        assert_eq!(
+            reference.dispatch_log, arm.dispatch_log,
+            "dispatch log diverged at hot_path={hot} scoring={scoring}"
+        );
+        assert_eq!(reference.group_log, arm.group_log);
+        assert_eq!(reference.route_log, arm.route_log);
+        assert_eq!(reference.dropped_requests, arm.dropped_requests);
+        assert_eq!(reference.dispatched_total, arm.dispatched_total);
+        assert!(arm.audit_violations.is_empty(), "{:?}", arm.audit_violations);
+        if scoring {
+            let lp = arm.metrics.stream.packer;
+            assert_eq!(
+                lp.fast_accepted + lp.fast_rejected,
+                0,
+                "legacy scoring must never take a fast path"
+            );
+        }
+    }
+}
