@@ -16,6 +16,7 @@ fn mk_req(id: u64, prompt: u32, output: u32) -> Request {
         id,
         msg_id: id,
         agent: AgentId((id % 8) as u32),
+        session: id,
         model_class: ModelClass::Any,
         upstream: None,
         prompt_tokens: prompt,
@@ -72,6 +73,7 @@ fn main() {
             total_blocks: 64,
             max_batch: 32,
             max_prefill_tokens: 4096,
+            prefix_cache_blocks: 0,
         };
         let mut e = EngineCore::new(0, cfg, SimBackend::new(cost));
         for i in 0..16 {

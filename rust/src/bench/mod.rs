@@ -1,8 +1,8 @@
 //! The `kairos bench` harness: seeded million-request speed runs with
 //! machine-readable results.
 //!
-//! Three benchmarks, each run as an in-binary A/B over a legacy/optimized
-//! pair of arms (one commit, one binary, two arms — no cross-build noise):
+//! Four benchmarks, each run as an in-binary A/B over a pair of arms (one
+//! commit, one binary, two arms — no cross-build noise):
 //!
 //! * **pump** — a tight submit→pump→drain loop of free-standing external
 //!   requests through one [`Coordinator`], timing only the submission and
@@ -15,6 +15,13 @@
 //!   ([`Coordinator::set_legacy_scoring`]): naive linear peak scans vs.
 //!   the max-tree fast paths. Both arms run the optimized coordinator hot
 //!   path, so the delta isolates candidate scoring.
+//! * **cache** — a session-heavy [`run_fleet`] trace (round-robin session
+//!   keys, so each conversation's stages share a growing prefix) with the
+//!   per-instance prefix cache enabled in BOTH arms; only placement
+//!   differs: the cache-blind `kairos` packer vs. the session-sticky
+//!   `cache-affine` CHWBL dispatcher. The delta isolates how much of the
+//!   cache's reuse potential placement converts into hits, saved prefill
+//!   tokens and end-to-end latency.
 //!
 //! The **baseline** arm runs [`Coordinator::set_legacy_hot_path`] `(true)`
 //! with unbounded logs and exact (vector-backed) metrics: the pre-index
@@ -25,7 +32,8 @@
 //! dispatch decisions (asserted) — the A/B measures speed and memory, never
 //! behavior.
 //!
-//! Results go to `BENCH_pump.json` / `BENCH_e2e.json` / `BENCH_pack.json`
+//! Results go to `BENCH_pump.json` / `BENCH_e2e.json` / `BENCH_pack.json` /
+//! `BENCH_cache.json`
 //! (schema documented in the README). Decision counts, drop counts and log-state bytes are
 //! seed-deterministic; wall-clock fields vary by host and carry a
 //! `provenance` block saying where they were measured. `--quick` shrinks
@@ -45,7 +53,7 @@ use crate::lb::policies::Fcfs;
 use crate::orchestrator::affinity::AffinitySpec;
 use crate::orchestrator::router::RoutePolicy;
 use crate::server::coordinator::{Coordinator, FleetSpec, LogConfig};
-use crate::server::sim::{run_fleet, FleetConfig, SimResult};
+use crate::server::sim::{run_fleet, CacheTuning, FleetConfig, SimResult};
 use crate::stats::rng::Rng;
 use crate::util::Json;
 use crate::workload::{TraceGen, WorkloadMix};
@@ -58,8 +66,8 @@ pub struct BenchOptions {
     /// Seed for the submission streams (decision counts are functions of
     /// the seed alone).
     pub seed: u64,
-    /// Directory receiving `BENCH_pump.json`, `BENCH_e2e.json` and
-    /// `BENCH_pack.json`.
+    /// Directory receiving `BENCH_pump.json`, `BENCH_e2e.json`,
+    /// `BENCH_pack.json` and `BENCH_cache.json`.
     pub out_dir: PathBuf,
 }
 
@@ -260,6 +268,59 @@ fn pack_arm_json(res: &SimResult, wall: f64) -> Json {
     ])
 }
 
+/// Session keys make the trace cache-friendly: stage `i` of a workflow in
+/// session `s` extends the prefix stage `i-1` left in `s`'s cache entry,
+/// and successive workflows in the same session reuse it again. Round-robin
+/// assignment keeps every session equally hot.
+fn sessionize_arrivals(arrivals: &mut [crate::workload::ArrivalEvent], sessions: u64) {
+    for (i, a) in arrivals.iter_mut().enumerate() {
+        a.session = Some(i as u64 % sessions);
+    }
+}
+
+/// One arm of the cache benchmark: the same session-heavy trace with the
+/// prefix cache enabled; only the dispatcher differs (`kairos` = cache-blind
+/// placement, `cache-affine` = session-sticky CHWBL).
+fn cache_arm(
+    arrivals: Vec<crate::workload::ArrivalEvent>,
+    dispatcher: &str,
+) -> (SimResult, f64) {
+    let fleet = FleetSpec::parse("6*llama3-8b@0.12").expect("static fleet spec");
+    let mut fc = FleetConfig::from(fleet);
+    fc.cache = CacheTuning { enabled: true, budget_blocks: 512, load_factor: 1.25 };
+    fc.logs = LogConfig::bounded(65_536);
+    fc.lean_metrics = true;
+    let t = Instant::now();
+    let res = run_fleet(fc, "kairos", dispatcher, arrivals);
+    (res, t.elapsed().as_secs_f64())
+}
+
+fn cache_arm_json(res: &SimResult, wall: f64) -> Json {
+    let cs = res.cache_stats();
+    let p = res.metrics.stream.packer;
+    Json::obj(vec![
+        ("wall_seconds", Json::from(wall)),
+        ("requests", Json::from(res.metrics.total_requests as f64)),
+        (
+            "req_per_sec",
+            Json::from(res.metrics.total_requests as f64 / wall.max(1e-12)),
+        ),
+        ("dispatched_total", Json::from(res.dispatched_total as f64)),
+        ("dropped", Json::from(res.dropped_requests as f64)),
+        ("cache_hits", Json::from(cs.hits as f64)),
+        ("cache_misses", Json::from(cs.misses as f64)),
+        ("hit_rate", Json::from(cs.hit_rate())),
+        ("saved_prefill_tokens", Json::from(cs.saved_prefill_tokens as f64)),
+        ("evictions", Json::from(cs.evictions as f64)),
+        ("alloc_failures", Json::from(res.alloc_failures() as f64)),
+        ("sticky_hits", Json::from(p.sticky_hits as f64)),
+        ("sticky_fallbacks", Json::from(p.sticky_fallbacks as f64)),
+        ("mean_e2e_seconds", Json::from(res.mean_request_e2e())),
+        ("avg_token_latency", Json::from(res.summary.avg_token_latency)),
+        ("p99_token_latency", Json::from(res.summary.p99_token_latency)),
+    ])
+}
+
 fn provenance(seed: u64, mode: &str) -> Json {
     // kairos-lint: allow(no-env-fs, provenance block records the measuring host; never feeds results)
     let host = if std::env::var_os("CI").is_some() { "ci" } else { "local" };
@@ -288,10 +349,12 @@ pub fn run(opts: &BenchOptions) -> crate::Result<()> {
         (1_000_000, 120_000, 8.0)
     };
     let (pack_tasks, pack_rate) = if opts.quick { (3_000, 16.0) } else { (200_000, 16.0) };
+    let (cache_tasks, cache_rate, cache_sessions) =
+        if opts.quick { (2_500, 10.0, 24) } else { (120_000, 10.0, 96) };
 
     println!(
         "bench ({mode}): pump {pump_n} requests, e2e {e2e_tasks} tasks, \
-         pack {pack_tasks} tasks, seed {}",
+         pack {pack_tasks} tasks, cache {cache_tasks} tasks, seed {}",
         opts.seed
     );
 
@@ -432,11 +495,62 @@ pub fn run(opts: &BenchOptions) -> crate::Result<()> {
         pk.rejected_rounds,
         pk.suspensions,
     );
+    // --- cache benchmark -------------------------------------------------
+    let mut cache_trace = TraceGen::default().generate(
+        &WorkloadMix::colocated(),
+        cache_rate,
+        cache_tasks,
+        &mut Rng::new(opts.seed),
+    );
+    sessionize_arrivals(&mut cache_trace, cache_sessions);
+    let (blind_res, blind_wall) = cache_arm(cache_trace.clone(), "kairos");
+    let (affine_res, affine_wall) = cache_arm(cache_trace, "cache-affine");
+    // Placement arms serve the same trace to completion: the comparison is
+    // WHERE sessions land, never whether their requests finish.
+    assert_eq!(
+        blind_res.metrics.total_requests, affine_res.metrics.total_requests,
+        "cache arms diverged on completed requests"
+    );
+    assert!(
+        affine_res.cache_stats().hits > 0,
+        "sticky placement produced no prefix-cache hits"
+    );
+    // The headline is simulated latency, not wall time: how much e2e the
+    // sticky placement buys on the identical trace.
+    let cache_speedup =
+        blind_res.mean_request_e2e() / affine_res.mean_request_e2e().max(1e-12);
+    let cache_json = Json::obj(vec![
+        ("schema", Json::from("kairos-bench-cache/v1")),
+        ("mode", Json::from(mode)),
+        ("tasks", Json::from(cache_tasks)),
+        ("rate", Json::from(cache_rate)),
+        ("sessions", Json::from(cache_sessions as f64)),
+        ("fleet", Json::from("6*llama3-8b@0.12")),
+        ("provenance", provenance(opts.seed, mode)),
+        ("blind", cache_arm_json(&blind_res, blind_wall)),
+        ("affine", cache_arm_json(&affine_res, affine_wall)),
+        ("e2e_speedup", Json::from(cache_speedup)),
+    ]);
+    let cache_path = opts.out_dir.join("BENCH_cache.json");
+    write_json(&cache_path, &cache_json)?;
+    let bcs = blind_res.cache_stats();
+    let acs = affine_res.cache_stats();
     println!(
-        "wrote {}, {} and {}",
+        "cache: blind {:.1}% hits / affine {:.1}% hits, saved prefill {} -> {} \
+         tokens, mean e2e {:.3}s -> {:.3}s ({cache_speedup:.2}x)",
+        bcs.hit_rate() * 100.0,
+        acs.hit_rate() * 100.0,
+        bcs.saved_prefill_tokens,
+        acs.saved_prefill_tokens,
+        blind_res.mean_request_e2e(),
+        affine_res.mean_request_e2e(),
+    );
+    println!(
+        "wrote {}, {}, {} and {}",
         pump_path.display(),
         e2e_path.display(),
-        pack_path.display()
+        pack_path.display(),
+        cache_path.display()
     );
     Ok(())
 }
@@ -482,6 +596,31 @@ mod tests {
         // The legacy arm must never report fast-path hits.
         let lp = base.metrics.stream.packer;
         assert_eq!(lp.fast_accepted + lp.fast_rejected, 0);
+    }
+
+    #[test]
+    fn cache_arms_complete_the_same_trace_and_the_sticky_arm_hits() {
+        let mut trace = TraceGen::default().generate(
+            &WorkloadMix::colocated(),
+            10.0,
+            150,
+            &mut Rng::new(5),
+        );
+        sessionize_arrivals(&mut trace, 12);
+        let (blind, _) = cache_arm(trace.clone(), "kairos");
+        let (affine, _) = cache_arm(trace, "cache-affine");
+        // Same trace, same completions — placement only moves WHERE.
+        assert_eq!(blind.metrics.total_requests, affine.metrics.total_requests);
+        assert!(blind.metrics.total_requests > 0);
+        let p = affine.metrics.stream.packer;
+        assert!(p.sticky_hits > 0, "CHWBL never stuck a session to its instance");
+        assert!(
+            affine.cache_stats().hits > 0,
+            "sticky placement produced no prefix-cache hits"
+        );
+        // The cache-blind packer records no sticky decisions.
+        assert_eq!(blind.metrics.stream.packer.sticky_hits, 0);
+        assert_eq!(blind.metrics.stream.packer.sticky_fallbacks, 0);
     }
 
     #[test]

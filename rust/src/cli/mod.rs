@@ -15,9 +15,12 @@
 //!                [--trace FILE]
 //! kairos route-sweep [--fleet SPEC] [--affinity SPEC] [--route-policy P]
 //!                [--rate R] [--tasks N] [--trace FILE]
+//! kairos cache-sweep [--fleet SPEC] [--rate R] [--tasks N] [--sessions N]
+//!                [--cache-budget BLOCKS] [--load-factors LIST] [--trace FILE]
 //! kairos trace   gen|record|scale|stats [...]
 //! kairos check   --trace FILE [--fleet SPEC] [--affinity SPEC]
-//!                [--scheduler S] [--dispatcher D]
+//!                [--scheduler S] [--dispatcher D] [--cache]
+//!                [--cache-budget N] [--cache-load-factor F]
 //! kairos figures <id|all> [--out results/]
 //! kairos quickstart [--artifacts DIR] [--model NAME]
 //! ```
@@ -34,13 +37,14 @@ use crate::server::autoscale::{parse_boot_delays, parse_per_group, AutoscaleConf
 use crate::server::coordinator::{FleetSpec, PROVISIONING};
 use crate::server::pressure::PressureTrace;
 use crate::server::sim::{
-    make_dispatcher_for_fleet, make_policy, run_fleet, FleetConfig, SimResult, SimServer,
+    make_dispatcher_tuned, make_policy, run_fleet, CacheTuning, FleetConfig, SimResult,
+    SimServer,
 };
 use crate::workload::{FileSource, GenSource, Trace, TraceGen, TraceSource, WorkloadMix};
 
 /// Flags that take no value (`--flag` alone means `true`; an explicit
 /// `--flag false` still parses).
-const BOOL_FLAGS: &[&str] = &["autoscale", "quick"];
+const BOOL_FLAGS: &[&str] = &["autoscale", "quick", "cache"];
 
 /// Parsed `--key value` flags plus positional args.
 #[derive(Debug, Default)]
@@ -131,6 +135,7 @@ USAGE:
                      [--autoscale] [--pressure TRACE] [--affinity SPEC]
                      [--route-policy pinned|learned[:KEY=VAL,...]]
                      [--trace FILE] [--burst-shape B] [--profile-half-life S]
+                     [--cache] [--cache-budget N] [--cache-load-factor F]
   kairos fleet-sweep [--fleet SPEC] [--scheduler S] [--rate R] [--tasks N]
                      [--seed S] [--workload W] [--trace FILE]
   kairos elastic-sweep
@@ -144,6 +149,10 @@ USAGE:
   kairos route-sweep [--fleet SPEC] [--affinity SPEC] [--scheduler S]
                      [--dispatcher D] [--route-policy P] [--rate R]
                      [--tasks N] [--seed S] [--workload W] [--trace FILE]
+  kairos cache-sweep [--fleet SPEC] [--scheduler S] [--rate R] [--tasks N]
+                     [--seed S] [--workload W] [--sessions N]
+                     [--cache-budget BLOCKS] [--load-factors F1,F2,...]
+                     [--trace FILE]
   kairos trace gen    --out FILE [--rate R] [--tasks N] [--seed S]
                      [--workload W] [--burst-shape B]
   kairos trace record --out FILE [--fleet SPEC] [--affinity SPEC]
@@ -153,7 +162,8 @@ USAGE:
                      [--filter-app QA|RG|CG] [--splice FILE2]
   kairos trace stats  --in FILE
   kairos check       --trace FILE [--fleet SPEC] [--affinity SPEC]
-                     [--scheduler S] [--dispatcher D]
+                     [--scheduler S] [--dispatcher D] [--cache]
+                     [--cache-budget N] [--cache-load-factor F]
   kairos figures     <table1|fig3..fig18|overhead|all> [--out results]
   kairos quickstart  [--artifacts artifacts] [--model tiny]
   kairos bench       [--quick] [--seed S] [--out DIR]
@@ -186,13 +196,26 @@ ROUTE POLICY — `pinned` (the static affinity stamp) or
   `route-sweep` compares both policies on the same trace.
 
 BENCH — seeded speed runs of the serving hot path: a pump microbench
-  (submit→pump→drain of external requests), a full simulated run, and a
+  (submit→pump→drain of external requests), a full simulated run, a
   packing-heavy run isolating the time-slot packer's candidate scoring
-  (naive linear scans vs the max-tree fast paths), each as an in-binary
-  baseline-vs-optimized A/B that must agree on every dispatch decision.
-  Writes `BENCH_pump.json`, `BENCH_e2e.json` and `BENCH_pack.json` to
-  `--out` (default `.`); `--quick` shrinks all runs to CI-smoke size.
-  Decision counts are seed-deterministic; wall-clock fields vary by host.
+  (naive linear scans vs the max-tree fast paths), and a session-heavy
+  run comparing cache-blind vs cache-affine placement on one trace, each
+  as an in-binary A/B with an agreement check. Writes `BENCH_pump.json`,
+  `BENCH_e2e.json`, `BENCH_pack.json` and `BENCH_cache.json` to `--out`
+  (default `.`); `--quick` shrinks all runs to CI-smoke size. Decision
+  counts are seed-deterministic; wall-clock fields vary by host.
+
+CACHE — `--cache` (or `[cache] enabled = true`) gives every instance a
+  deterministic LRU prefix cache of `--cache-budget` KV blocks keyed by
+  session: a completed stage's context becomes its session's cached
+  prefix, and the next stage's prefill shortens by the cached tokens.
+  The `cache-affine` dispatcher adds session-sticky placement — CHWBL
+  (consistent hashing with bounded loads) keeps a session's stages on
+  the instance already holding its prefix unless that instance exceeds
+  `ceil(load_factor × mean load)` in-flight dispatches, then falls back
+  to the packer score. `cache-sweep` compares cache-blind and
+  cache-affine arms over `--load-factors` on one session-heavy trace
+  (`--sessions` long-running conversations).
 
 PRESSURE TRACE — `;`-separated `TARGET:TIME=MULT,...` with TARGET an
   instance index or `*`: piecewise co-tenant KV-pressure multipliers, e.g.
@@ -218,6 +241,7 @@ pub fn run(raw: Vec<String>) -> crate::Result<()> {
         Some("elastic-sweep") => elastic_sweep(&args),
         Some("shard-sweep") => shard_sweep(&args),
         Some("route-sweep") => route_sweep(&args),
+        Some("cache-sweep") => cache_sweep(&args),
         Some("trace") => trace_cmd(&args),
         Some("check") => check_cmd(&args),
         Some("figures") => {
@@ -279,6 +303,29 @@ fn num_rate(args: &Args, key: &str, default: f64) -> crate::Result<f64> {
 fn burst_gen(args: &Args, default_shape: f64) -> crate::Result<TraceGen> {
     let shape = numf(args, "burst-shape", default_shape)?;
     TraceGen::new(shape).map_err(|e| anyhow::anyhow!("flag --burst-shape: {e}"))
+}
+
+/// Resolve the `--cache` / `--cache-budget` / `--cache-load-factor`
+/// flags over a base tuning (the config's `[cache]` section, or the
+/// defaults). Bad values error naming the flag.
+fn cache_tuning_flags(args: &Args, mut base: CacheTuning) -> crate::Result<CacheTuning> {
+    if args.get("cache").is_some() {
+        base.enabled = args.bool_flag("cache").map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if args.get("cache-budget").is_some() {
+        base.budget_blocks =
+            num_count(args, "cache-budget", base.budget_blocks as usize)? as u32;
+    }
+    if args.get("cache-load-factor").is_some() {
+        let f = numf(args, "cache-load-factor", base.load_factor)?;
+        if !f.is_finite() || f < 1.0 {
+            anyhow::bail!(
+                "flag --cache-load-factor: expected a finite number >= 1, got {f}"
+            );
+        }
+        base.load_factor = f;
+    }
+    Ok(base)
 }
 
 /// A recorded trace file fixes the workload, so the generator's flags
@@ -381,6 +428,7 @@ fn serve(args: &Args) -> crate::Result<()> {
         }
         cfg.profile_half_life = Some(h);
     }
+    cfg.cache = cache_tuning_flags(args, cfg.cache)?;
     let fleet = cfg.resolve_fleet().map_err(|e| anyhow::anyhow!(e))?;
     // `--autoscale` overrides the config like every other flag: bare/true
     // enables (with the requested fleet as the floor when the config has
@@ -443,7 +491,7 @@ fn serve(args: &Args) -> crate::Result<()> {
     let arrivals = trace.arrivals();
 
     println!(
-        "serving {} tasks ({}) on {} instances{}{}{}{}{} — scheduler={} dispatcher={}",
+        "serving {} tasks ({}) on {} instances{}{}{}{}{}{} — scheduler={} dispatcher={}",
         arrivals.len(),
         source.describe(),
         fleet.len(),
@@ -455,6 +503,7 @@ fn serve(args: &Args) -> crate::Result<()> {
             Some(RoutePolicy::Learned { .. }) => " (learned routing)",
             _ => "",
         },
+        if cfg.cache.enabled { " (prefix cache)" } else { "" },
         cfg.scheduler,
         cfg.dispatcher
     );
@@ -471,6 +520,7 @@ fn serve(args: &Args) -> crate::Result<()> {
         lean_metrics: false,
         legacy_hot_path: false,
         legacy_scoring: false,
+        cache: cfg.cache,
     };
     let affine = fc.affinity.is_some() || matches!(fc.route, Some(RoutePolicy::Learned { .. }));
     let res = run_fleet(fc, &cfg.scheduler, &cfg.dispatcher, arrivals);
@@ -483,6 +533,20 @@ fn serve(args: &Args) -> crate::Result<()> {
     println!("queueing-time ratio: {:.1}%", s.mean_queue_ratio * 100.0);
     println!("preempted requests:  {:.1}%", s.preemption_rate * 100.0);
     println!("dropped requests:    {}", res.dropped_requests);
+    if cfg.cache.enabled {
+        let cs = res.cache_stats();
+        println!(
+            "prefix cache:        {:.1}% hit rate ({} hits / {} lookups), \
+             {} prefill tokens saved",
+            cs.hit_rate() * 100.0,
+            cs.hits,
+            cs.hits + cs.misses,
+            cs.saved_prefill_tokens
+        );
+    }
+    if res.alloc_failures() > 0 {
+        println!("kv alloc failures:   {}", res.alloc_failures());
+    }
     if affine {
         println!("cross-model dispatches: {}", res.cross_model_dispatches());
     }
@@ -519,19 +583,26 @@ fn check_cmd(args: &Args) -> crate::Result<()> {
         .map_err(|e| anyhow::anyhow!(e))?;
     let scheduler = args.get("scheduler").unwrap_or("kairos");
     let dispatcher = args.get("dispatcher").unwrap_or("kairos");
+    let cache = cache_tuning_flags(args, CacheTuning::default())?;
     let mut fc = FleetConfig::from(fleet.clone());
     fc.affinity = affinity;
+    fc.cache = cache;
     let mut server = SimServer::with_fleet(
         fc,
         make_policy(scheduler),
-        make_dispatcher_for_fleet(dispatcher, &fleet),
+        make_dispatcher_tuned(dispatcher, &fleet, None, Some(&cache)),
     );
     server.enable_audit();
     println!(
         "checking {} tasks ({desc}) on {} instances — scheduler={scheduler} \
-         dispatcher={dispatcher}, invariant audits on",
+         dispatcher={dispatcher}, invariant audits on{}",
         trace.len(),
-        fleet.len()
+        fleet.len(),
+        if cache.enabled {
+            " (prefix-cache bookkeeping audited)"
+        } else {
+            ""
+        }
     );
     let res = server.run(trace.arrivals());
     println!(
@@ -551,6 +622,20 @@ fn check_cmd(args: &Args) -> crate::Result<()> {
             p.fast_rejected,
             p.rejected_rounds,
             p.suspensions,
+        );
+    }
+    if p.sticky_hits + p.sticky_fallbacks > 0 {
+        println!(
+            "sticky dispatch: {} session-sticky picks, {} bounded-load fallbacks",
+            p.sticky_hits, p.sticky_fallbacks
+        );
+    }
+    if cache.enabled {
+        let cs = res.cache_stats();
+        println!(
+            "prefix cache: {} hits, {} misses, {} prefill tokens saved, \
+             {} insertions, {} evictions",
+            cs.hits, cs.misses, cs.saved_prefill_tokens, cs.insertions, cs.evictions
         );
     }
     if res.audit_violations.is_empty() {
@@ -833,6 +918,70 @@ fn route_sweep(args: &Args) -> crate::Result<()> {
     Ok(())
 }
 
+/// Prefix-cache scenario: one session-heavy trace (`--sessions`
+/// long-running conversations, round-robin over arrivals) served by the
+/// cache-blind `kairos` packer and by the session-sticky `cache-affine`
+/// dispatcher at each `--load-factors` bound. Every arm runs with the
+/// engine-side cache enabled, so the comparison isolates *placement*: the
+/// sticky arms land a session's stages on the instance already holding
+/// its prefix and convert that into cache hits and shorter prefills.
+fn cache_sweep(args: &Args) -> crate::Result<()> {
+    let spec = args.get("fleet").unwrap_or("4*llama3-8b@0.12");
+    let fleet = FleetSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+    let scheduler = args.get("scheduler").unwrap_or("kairos");
+    let (trace, desc) = shared_trace(args, 8.0, 400)?;
+    let sessions = num_count(args, "sessions", 32)? as u64;
+    let trace = trace.sessionize(sessions);
+    let budget = num_count(args, "cache-budget", 512)? as u32;
+    let mut factors: Vec<f64> = Vec::new();
+    for part in args.get("load-factors").unwrap_or("1.25,1.5,2.0").split(',') {
+        let f: f64 = part.trim().parse().map_err(|_| {
+            anyhow::anyhow!("flag --load-factors: bad number {part:?}")
+        })?;
+        if !f.is_finite() || f < 1.0 {
+            anyhow::bail!("flag --load-factors: expected numbers >= 1, got {part:?}");
+        }
+        factors.push(f);
+    }
+
+    println!(
+        "cache sweep over {spec:?} — {} sessions, {budget}-block budget, \
+         scheduler={scheduler}",
+        sessions
+    );
+    println!("{} tasks ({desc})\n", trace.len());
+    let mut t = crate::util::table::Table::new(&[
+        "arm", "hit%", "saved tok", "sticky", "fallback", "mean e2e s", "P99 s/tok",
+        "dropped",
+    ]);
+    let mut arms: Vec<(String, &str, f64)> = vec![
+        ("blind".to_string(), "kairos", factors[0]),
+    ];
+    for &f in &factors {
+        arms.push((format!("affine c={f}"), "cache-affine", f));
+    }
+    for (label, disp, load_factor) in arms {
+        let arrivals = trace.arrivals();
+        let mut fc = FleetConfig::from(fleet.clone());
+        fc.cache = CacheTuning { enabled: true, budget_blocks: budget, load_factor };
+        let res = run_fleet(fc, scheduler, disp, arrivals);
+        let cs = res.cache_stats();
+        let p = res.metrics.stream.packer;
+        t.row(vec![
+            label,
+            format!("{:.1}%", cs.hit_rate() * 100.0),
+            cs.saved_prefill_tokens.to_string(),
+            p.sticky_hits.to_string(),
+            p.sticky_fallbacks.to_string(),
+            format!("{:.3}", res.mean_request_e2e()),
+            format!("{:.4}", res.summary.p99_token_latency),
+            res.dropped_requests.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
 /// `--boot-delay` takes two forms: a scalar (`--boot-delay 5`, one global
 /// delay) or per-family clauses (`--boot-delay llama3-8b=2,llama2-13b=12`
 /// — big models provision slower; families absent from the list boot
@@ -1006,6 +1155,42 @@ fn trace_stats_cmd(args: &Args) -> crate::Result<()> {
         .filter(|s| s.class.is_some())
         .count();
     println!("class stamps: {stamped} of {stages} stages");
+    // Session reuse: how much prefix-cache locality the trace offers. A
+    // record with no `session` key defaults to its own conversation at
+    // submit time, so only explicitly keyed records count as reuse.
+    let keyed: Vec<_> = trace.records.iter().filter(|r| r.session.is_some()).collect();
+    if !keyed.is_empty() {
+        let mut hll = crate::metrics::hll::Hll::default();
+        for r in &keyed {
+            hll.insert_u64(r.session.unwrap_or(0));
+        }
+        let distinct = hll.estimate().max(1.0);
+        let keyed_stages: usize = keyed.iter().map(|r| r.stages.len()).sum();
+        println!(
+            "sessions:   {} of {} records keyed, ~{distinct:.0} distinct (HLL)",
+            keyed.len(),
+            trace.len()
+        );
+        println!(
+            "  reuse:    {:.1} records/session, {:.1} stages/session",
+            keyed.len() as f64 / distinct,
+            keyed_stages as f64 / distinct
+        );
+        let mut top: Option<(App, usize)> = None;
+        for app in App::all() {
+            let n = keyed.iter().filter(|r| r.app == app).count();
+            if n > top.map_or(0, |(_, m)| m) {
+                top = Some((app, n));
+            }
+        }
+        if let Some((app, n)) = top {
+            println!(
+                "  top app:  {} ({:.0}% of keyed records)",
+                app.name(),
+                100.0 * n as f64 / keyed.len() as f64
+            );
+        }
+    }
     Ok(())
 }
 
@@ -1254,6 +1439,85 @@ mod tests {
         ]))
         .unwrap();
         assert!(check_cmd(&bad).is_err());
+    }
+
+    #[test]
+    fn check_audits_prefix_cache_bookkeeping_with_cache_on() {
+        // Satellite: `kairos check --trace FILE --cache` replays the trace
+        // with the prefix cache enabled and the bookkeeping audits armed
+        // (cached blocks <= budget, hit tokens <= prompt tokens). A healthy
+        // replay must pass them all.
+        let path = std::env::temp_dir().join("kairos_cli_check_cache_trace.jsonl");
+        let gen = Args::parse(&sv(&[
+            "trace", "gen",
+            "--out", path.to_str().unwrap(),
+            "--rate", "4",
+            "--tasks", "30",
+            "--seed", "11",
+        ]))
+        .unwrap();
+        trace_cmd(&gen).unwrap();
+        let ok = Args::parse(&sv(&[
+            "check", "--trace", path.to_str().unwrap(),
+            "--cache", "--cache-budget", "64",
+        ]))
+        .unwrap();
+        assert!(check_cmd(&ok).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cache_tuning_flags_parse_and_validate() {
+        let a = Args::parse(&sv(&[
+            "serve", "--cache", "--cache-budget", "128", "--cache-load-factor", "1.5",
+        ]))
+        .unwrap();
+        let t = cache_tuning_flags(&a, CacheTuning::default()).unwrap();
+        assert!(t.enabled);
+        assert_eq!(t.budget_blocks, 128);
+        assert_eq!(t.load_factor, 1.5);
+        // Absent flags keep the base (config-file) values.
+        let b = Args::parse(&sv(&["serve"])).unwrap();
+        let base = CacheTuning { enabled: true, budget_blocks: 99, load_factor: 2.0 };
+        assert_eq!(cache_tuning_flags(&b, base).unwrap(), base);
+        // `--cache false` disables a config-enabled cache.
+        let c = Args::parse(&sv(&["serve", "--cache", "false"])).unwrap();
+        assert!(!cache_tuning_flags(&c, base).unwrap().enabled);
+        // Malformed values error naming the flag, never run a silent default.
+        for bad in [
+            sv(&["serve", "--cache-load-factor", "0.5"]),
+            sv(&["serve", "--cache-load-factor", "nan"]),
+            sv(&["serve", "--cache-budget", "0"]),
+            sv(&["serve", "--cache-budget", "-3"]),
+        ] {
+            let args = Args::parse(&bad).unwrap();
+            let err = cache_tuning_flags(&args, CacheTuning::default())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--cache-"), "error must name the flag: {err}");
+        }
+    }
+
+    #[test]
+    fn cache_sweep_runs_blind_and_affine_arms() {
+        let a = Args::parse(&sv(&[
+            "cache-sweep",
+            "--rate", "6",
+            "--tasks", "40",
+            "--sessions", "8",
+            "--load-factors", "1.25,2.0",
+        ]))
+        .unwrap();
+        assert!(cache_sweep(&a).is_ok());
+        // Bad load factors error naming the flag.
+        for bad in [
+            sv(&["cache-sweep", "--load-factors", "0.5"]),
+            sv(&["cache-sweep", "--load-factors", "1.5,oops"]),
+        ] {
+            let args = Args::parse(&bad).unwrap();
+            let err = cache_sweep(&args).unwrap_err().to_string();
+            assert!(err.contains("--load-factors"), "{err}");
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::orchestrator::router::RoutePolicy;
 use crate::server::autoscale::{parse_boot_delays, parse_per_group, AutoscaleConfig};
 use crate::server::coordinator::InstanceSpec;
 use crate::server::pressure::PressureTrace;
-use crate::server::sim::SimConfig;
+use crate::server::sim::{CacheTuning, SimConfig};
 use crate::workload::TraceGen;
 
 /// A parsed flat TOML-subset document: section -> key -> raw value.
@@ -186,6 +186,11 @@ pub struct ServingConfig {
     /// profile_half_life`): learned routing tracks drifting latencies
     /// instead of averaging forever. Absent = stationary profiles.
     pub profile_half_life: Option<f64>,
+    /// Prefix-cache tuning (`[cache] enabled = true` + `budget_blocks` /
+    /// `load_factor`): per-instance prefix caches, the packer's
+    /// session-aware prefill estimate, and the `cache-affine`
+    /// dispatcher's CHWBL bounded-load factor.
+    pub cache: CacheTuning,
 }
 
 impl Default for ServingConfig {
@@ -205,6 +210,7 @@ impl Default for ServingConfig {
             trace: None,
             burst_shape: TraceGen::default().burst_shape,
             profile_half_life: None,
+            cache: CacheTuning::default(),
         }
     }
 }
@@ -369,6 +375,25 @@ impl ServingConfig {
                 ));
             }
             cfg.autoscale = Some(a);
+        }
+        cfg.cache.enabled = match doc.get("cache", "enabled") {
+            None => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| format!("[cache] enabled: expected a boolean, got {v:?}"))?,
+        };
+        cfg.cache.budget_blocks =
+            count_key(&doc, "cache", "budget_blocks", cfg.cache.budget_blocks as usize)?
+                as u32;
+        cfg.cache.load_factor =
+            num_key(&doc, "cache", "load_factor", cfg.cache.load_factor)?;
+        if !cfg.cache.load_factor.is_finite() || cfg.cache.load_factor < 1.0 {
+            // A factor below 1 would refuse every sticky pick; NaN would
+            // disarm the bounded-load ceiling entirely.
+            return Err(format!(
+                "[cache] load_factor must be a finite number >= 1, got {}",
+                cfg.cache.load_factor
+            ));
         }
         cfg.pressure = match doc.get("pressure", "trace") {
             None => None,
@@ -718,6 +743,29 @@ refresh_interval = 2.0
             "[autoscale]\nenabled = true\nboot_delay = true\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn cache_section_parses_and_validates() {
+        let cfg = ServingConfig::from_toml(
+            "[cache]\nenabled = true\nbudget_blocks = 256\nload_factor = 1.5\n",
+        )
+        .unwrap();
+        assert!(cfg.cache.enabled);
+        assert_eq!(cfg.cache.budget_blocks, 256);
+        assert!((cfg.cache.load_factor - 1.5).abs() < 1e-12);
+        // Defaults: disabled, 512-block budget, 1.25 bound.
+        let d = ServingConfig::from_toml("").unwrap();
+        assert!(!d.cache.enabled);
+        assert_eq!(d.cache.budget_blocks, 512);
+        assert!((d.cache.load_factor - 1.25).abs() < 1e-12);
+        // Bad values fail at load, naming the key.
+        assert!(ServingConfig::from_toml("[cache]\nenabled = 1\n").is_err());
+        assert!(ServingConfig::from_toml("[cache]\nbudget_blocks = 0\n").is_err());
+        let err =
+            ServingConfig::from_toml("[cache]\nload_factor = 0.5\n").unwrap_err();
+        assert!(err.contains("load_factor"), "{err}");
+        assert!(ServingConfig::from_toml("[cache]\nload_factor = nan\n").is_err());
     }
 
     #[test]

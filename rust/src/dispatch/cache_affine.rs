@@ -1,0 +1,503 @@
+//! Session-sticky cache-affine dispatch: consistent hashing with bounded
+//! loads (CHWBL) layered over any inner [`DispatchPolicy`].
+//!
+//! Multi-agent workflows grow one context across stages: stage *k+1*'s
+//! prompt extends stage *k*'s prompt + output. An instance that already
+//! holds the session's KV prefix (see
+//! [`crate::engine::block_manager::PrefixCache`]) can skip recomputing it,
+//! so placement wants to be *sticky per session* — but naive stickiness
+//! lets one hot session family overload an instance. CHWBL (Mirrokni et
+//! al.) caps stickiness: the ring target is taken only while its in-flight
+//! load stays under `ceil(load_factor × mean)`; otherwise the decision
+//! falls back to the inner scorer (here: the time-slot packer), which sees
+//! the exact same candidate set through the
+//! [`DispatchPolicy::choose_among`] seam.
+//!
+//! Everything is deterministic: the ring is built from
+//! [`crate::metrics::hll::mix64`] vnode hashes, ties sort by instance
+//! index, and loads are integer in-flight counts.
+
+use super::{DispatchPolicy, DispatchStats};
+use crate::engine::core::InstanceStatus;
+use crate::engine::request::{Request, RequestId};
+use crate::metrics::hll::mix64;
+use crate::Time;
+
+/// Tuning for the sticky layer.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheAffineConfig {
+    /// Bounded-load factor `c ≥ 1`: a sticky pick is accepted only while
+    /// the target's in-flight load stays ≤ `ceil(c × (total+1) / n)`.
+    /// Smaller values fall back to the packer sooner (better balance,
+    /// fewer cache hits); larger values stick harder.
+    pub load_factor: f64,
+    /// Virtual nodes per instance on the hash ring. More vnodes smooth the
+    /// session→instance distribution; 64 is plenty for small fleets.
+    pub vnodes: usize,
+}
+
+impl Default for CacheAffineConfig {
+    fn default() -> CacheAffineConfig {
+        CacheAffineConfig { load_factor: 1.25, vnodes: 64 }
+    }
+}
+
+/// The consistent-hashing-with-bounded-loads core, exposed standalone so
+/// property tests can drive it directly.
+///
+/// State is three integers per instance worth of bookkeeping: a sorted
+/// vnode ring, an in-flight load vector, and the load total. All methods
+/// are O(log ring) or O(n).
+#[derive(Debug, Clone)]
+pub struct Chwbl {
+    load_factor: f64,
+    vnodes: usize,
+    /// `(vnode_hash, instance)` sorted ascending; ties break by instance.
+    ring: Vec<(u64, usize)>,
+    /// Ring members (distinct instances), for the mean-load denominator.
+    members: usize,
+    /// In-flight dispatch count per instance slot.
+    loads: Vec<u64>,
+    /// Sum of `loads`.
+    total: u64,
+}
+
+impl Chwbl {
+    /// A ring over instances `0..n` (all assumed live); `rebuild` replaces
+    /// the membership when the fleet changes.
+    pub fn new(cfg: CacheAffineConfig, n: usize) -> Chwbl {
+        assert!(cfg.load_factor >= 1.0, "load_factor must be >= 1");
+        assert!(cfg.vnodes > 0, "vnodes must be > 0");
+        let mut c = Chwbl {
+            load_factor: cfg.load_factor,
+            vnodes: cfg.vnodes,
+            ring: Vec::new(),
+            members: 0,
+            loads: vec![0; n],
+            total: 0,
+        };
+        let all: Vec<usize> = (0..n).collect();
+        c.rebuild(&all, n);
+        c
+    }
+
+    /// Replace the ring membership with `members` (instance indices) and
+    /// resize the load vector to `n_slots`, preserving surviving loads.
+    pub fn rebuild(&mut self, members: &[usize], n_slots: usize) {
+        self.ring.clear();
+        for &j in members {
+            for v in 0..self.vnodes {
+                // Composite (instance, vnode) key through the fixed mixer;
+                // instance indices stay well under 2^48.
+                self.ring.push((mix64(((j as u64) << 16) | v as u64), j));
+            }
+        }
+        self.ring.sort_unstable();
+        self.members = members.len();
+        if self.loads.len() != n_slots {
+            // Shrink drops retired slots' loads; growth starts new slots
+            // empty. Recompute the total from what survives.
+            self.loads.resize(n_slots, 0);
+            self.total = self.loads.iter().sum();
+        }
+    }
+
+    /// The bounded-load ceiling for the *next* dispatch:
+    /// `ceil(load_factor × (total+1) / members)`.
+    pub fn ceiling(&self) -> u64 {
+        if self.members == 0 {
+            return 0;
+        }
+        (self.load_factor * (self.total + 1) as f64 / self.members as f64).ceil()
+            as u64
+    }
+
+    /// The sticky target for `session`: the first ring successor of
+    /// `mix64(session)` that satisfies `eligible`, if its load after one
+    /// more dispatch would stay within [`Chwbl::ceiling`]. `None` means
+    /// "no eligible member" or "target saturated" — the caller falls back.
+    pub fn pick(&self, session: u64, eligible: impl Fn(usize) -> bool) -> Option<usize> {
+        if self.ring.is_empty() {
+            return None;
+        }
+        let h = mix64(session);
+        let start = self.ring.partition_point(|&(vh, _)| vh < h) % self.ring.len();
+        for k in 0..self.ring.len() {
+            let (_, j) = self.ring[(start + k) % self.ring.len()];
+            if !eligible(j) {
+                continue;
+            }
+            let load = self.loads.get(j).copied().unwrap_or(u64::MAX);
+            return (load.saturating_add(1) <= self.ceiling()).then_some(j);
+        }
+        None
+    }
+
+    /// Record a dispatch to instance `j` (chosen by any path).
+    pub fn on_dispatch(&mut self, j: usize) {
+        if let Some(l) = self.loads.get_mut(j) {
+            *l += 1;
+            self.total += 1;
+        }
+    }
+
+    /// Record a completion on instance `j`.
+    pub fn on_complete(&mut self, j: usize) {
+        if let Some(l) = self.loads.get_mut(j) {
+            if *l > 0 {
+                *l -= 1;
+                self.total -= 1;
+            }
+        }
+    }
+
+    /// Forget slot `j`'s in-flight load (the engine behind it was rebuilt).
+    pub fn reset_slot(&mut self, j: usize) {
+        if let Some(l) = self.loads.get_mut(j) {
+            self.total -= *l;
+            *l = 0;
+        }
+    }
+
+    /// Current in-flight load per instance slot.
+    pub fn loads(&self) -> &[u64] {
+        &self.loads
+    }
+
+    /// Number of distinct ring members.
+    pub fn members(&self) -> usize {
+        self.members
+    }
+}
+
+/// Session-sticky wrapper policy: CHWBL first, inner policy on fallback.
+///
+/// Every lifecycle callback is forwarded to the inner policy unchanged —
+/// its predictions stay warm for the dispatches it did not choose, so a
+/// fallback decision scores against the true fleet state.
+pub struct CacheAffine {
+    inner: Box<dyn DispatchPolicy>,
+    chwbl: Chwbl,
+    sticky_hits: u64,
+    sticky_fallbacks: u64,
+}
+
+impl CacheAffine {
+    /// Wrap `inner` with a sticky layer over an `n`-instance fleet.
+    pub fn new(cfg: CacheAffineConfig, n: usize, inner: Box<dyn DispatchPolicy>) -> CacheAffine {
+        CacheAffine { inner, chwbl: Chwbl::new(cfg, n), sticky_hits: 0, sticky_fallbacks: 0 }
+    }
+
+    /// The CHWBL core (inspection in tests and audits).
+    pub fn chwbl(&self) -> &Chwbl {
+        &self.chwbl
+    }
+}
+
+impl DispatchPolicy for CacheAffine {
+    fn name(&self) -> &'static str {
+        "cache-affine"
+    }
+
+    fn choose(
+        &mut self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        now: Time,
+    ) -> Option<usize> {
+        let sticky = self.chwbl.pick(req.session, |j| {
+            statuses
+                .get(j)
+                .is_some_and(|s| s.accepting && req.model_class.matches(s.model))
+        });
+        if let Some(j) = sticky {
+            self.sticky_hits += 1;
+            return Some(j);
+        }
+        self.sticky_fallbacks += 1;
+        self.inner.choose(req, statuses, now)
+    }
+
+    fn choose_among(
+        &mut self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        candidates: &[usize],
+        now: Time,
+    ) -> Option<usize> {
+        // With `candidates` = all indices matching the request's family
+        // (the contract), membership + the model check below reduce to
+        // exactly `choose`'s filter, so the sticky pick is identical.
+        let sticky = self.chwbl.pick(req.session, |j| {
+            candidates.binary_search(&j).is_ok()
+                && statuses
+                    .get(j)
+                    .is_some_and(|s| s.accepting && req.model_class.matches(s.model))
+        });
+        if let Some(j) = sticky {
+            self.sticky_hits += 1;
+            return Some(j);
+        }
+        self.sticky_fallbacks += 1;
+        self.inner.choose_among(req, statuses, candidates, now)
+    }
+
+    fn set_legacy_scoring(&mut self, legacy: bool) {
+        self.inner.set_legacy_scoring(legacy);
+    }
+
+    fn stats(&self) -> DispatchStats {
+        let mut s = self.inner.stats();
+        // Sticky decisions never reach the inner scorer; fold them in so
+        // `decisions` still counts every choose call.
+        s.decisions += self.sticky_hits;
+        s.sticky_hits = self.sticky_hits;
+        s.sticky_fallbacks = self.sticky_fallbacks;
+        s
+    }
+
+    fn on_dispatch(&mut self, req: &Request, instance: usize, now: Time) {
+        self.chwbl.on_dispatch(instance);
+        self.inner.on_dispatch(req, instance, now);
+    }
+
+    fn on_complete(&mut self, req: RequestId, instance: usize, now: Time) {
+        self.chwbl.on_complete(instance);
+        self.inner.on_complete(req, instance, now);
+    }
+
+    fn on_preemption(&mut self, instance: usize, now: Time) {
+        self.inner.on_preemption(instance, now);
+    }
+
+    fn on_fleet_change(&mut self, statuses: &[InstanceStatus]) {
+        // Ring membership = accepting instances; draining/tombstone slots
+        // drop off and their sessions remap to ring successors. Model
+        // compatibility stays a per-request check in the pick closure.
+        let members: Vec<usize> = statuses
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.accepting)
+            .map(|(j, _)| j)
+            .collect();
+        self.chwbl.rebuild(&members, statuses.len());
+        self.inner.on_fleet_change(statuses);
+    }
+
+    fn on_instance_reset(&mut self, instance: usize) {
+        self.chwbl.reset_slot(instance);
+        self.inner.on_instance_reset(instance);
+    }
+
+    fn refresh(&mut self, orch: &crate::orchestrator::Orchestrator) {
+        self.inner.refresh(orch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::LeastLoaded;
+    use crate::engine::cost_model::{ModelClass, ModelKind};
+    use crate::orchestrator::ids::AgentId;
+
+    fn st(id: usize) -> InstanceStatus {
+        InstanceStatus {
+            id,
+            free_blocks: 100,
+            used_blocks: 0,
+            total_blocks: 100,
+            block_size: 16,
+            n_running: 0,
+            n_waiting: 0,
+            waiting_tokens: 0,
+            committed_tokens: 0,
+            capacity_tokens: 160_000,
+            preemptions: 0,
+            alloc_failures: 0,
+            accepting: true,
+            model: ModelKind::Llama3_8B,
+        }
+    }
+
+    fn req(id: u64, session: u64) -> Request {
+        Request {
+            id,
+            msg_id: id,
+            agent: AgentId(0),
+            session,
+            model_class: ModelClass::Any,
+            upstream: None,
+            prompt_tokens: 10,
+            true_output_tokens: 10,
+            true_remaining_latency: 0.0,
+            remaining_stages: 1,
+            app_start: 0.0,
+            stage_arrival: 0.0,
+        }
+    }
+
+    fn affine(n: usize) -> CacheAffine {
+        CacheAffine::new(
+            CacheAffineConfig::default(),
+            n,
+            Box::new(LeastLoaded::new()),
+        )
+    }
+
+    #[test]
+    fn same_session_sticks_to_one_instance() {
+        let mut d = affine(4);
+        let statuses: Vec<_> = (0..4).map(st).collect();
+        let first = d.choose(&req(1, 77), &statuses, 0.0).unwrap();
+        d.on_dispatch(&req(1, 77), first, 0.0);
+        for i in 2..6 {
+            let j = d.choose(&req(i, 77), &statuses, 0.0).unwrap();
+            assert_eq!(j, first, "stage {i} moved off the sticky instance");
+            d.on_dispatch(&req(i, 77), j, 0.0);
+            d.on_complete(i, j, 0.0);
+        }
+        assert_eq!(d.stats().sticky_hits, 5);
+        assert_eq!(d.stats().sticky_fallbacks, 0);
+    }
+
+    #[test]
+    fn sessions_spread_across_the_ring() {
+        let d = affine(4);
+        let mut seen = std::collections::BTreeSet::new();
+        for s in 0..64u64 {
+            if let Some(j) = d.chwbl().pick(s, |_| true) {
+                seen.insert(j);
+            }
+        }
+        assert!(seen.len() >= 3, "64 sessions hit only {seen:?}");
+    }
+
+    #[test]
+    fn saturated_sticky_target_falls_back_to_inner() {
+        let mut d = affine(2);
+        let statuses: Vec<_> = (0..2).map(st).collect();
+        let sticky = d.choose(&req(1, 9), &statuses, 0.0).unwrap();
+        // Pile in-flight load onto the sticky target without completions:
+        // ceiling = ceil(1.25 * (total+1) / 2) stays below the pile.
+        for i in 0..10 {
+            d.on_dispatch(&req(100 + i, 9), sticky, 0.0);
+        }
+        let next = d.choose(&req(50, 9), &statuses, 0.0).unwrap();
+        assert_ne!(next, sticky, "saturated target must be refused");
+        assert!(d.stats().sticky_fallbacks >= 1);
+    }
+
+    #[test]
+    fn model_pinned_request_skips_incompatible_sticky_target() {
+        let mut d = affine(3);
+        let mut statuses: Vec<_> = (0..3).map(st).collect();
+        let mut r = req(1, 5);
+        r.model_class = ModelClass::Model(ModelKind::Llama2_13B);
+        // Make only instance 1 compatible: the pick must land there no
+        // matter where the session hashes.
+        statuses[1].model = ModelKind::Llama2_13B;
+        let j = d.choose(&r, &statuses, 0.0).unwrap();
+        assert_eq!(j, 1);
+    }
+
+    #[test]
+    fn choose_among_matches_full_scan() {
+        let mut full = affine(4);
+        let mut pruned = affine(4);
+        let mut statuses: Vec<_> = (0..4).map(st).collect();
+        statuses[2].model = ModelKind::Llama2_13B;
+        let mut r = req(1, 123);
+        r.model_class = ModelClass::Model(ModelKind::Llama3_8B);
+        for s in 0..32u64 {
+            r.session = s;
+            let a = full.choose(&r, &statuses, 0.0);
+            let b = pruned.choose_among(&r, &statuses, &[0, 1, 3], 0.0);
+            assert_eq!(a, b, "session {s}");
+            if let Some(j) = a {
+                full.on_dispatch(&r, j, 0.0);
+                pruned.on_dispatch(&r, j, 0.0);
+            }
+        }
+        // Stale out-of-range candidates are skipped, not indexed.
+        assert!(pruned.choose_among(&r, &statuses, &[9], 0.0).is_none());
+    }
+
+    #[test]
+    fn draining_instance_drops_off_the_ring() {
+        let mut d = affine(2);
+        let mut statuses: Vec<_> = (0..2).map(st).collect();
+        let sticky = d.choose(&req(1, 3), &statuses, 0.0).unwrap();
+        statuses[sticky].accepting = false;
+        d.on_fleet_change(&statuses);
+        let other = d.choose(&req(2, 3), &statuses, 0.0).unwrap();
+        assert_ne!(other, sticky);
+        assert_eq!(d.chwbl().members(), 1);
+    }
+
+    #[test]
+    fn reset_slot_forgets_inflight_load() {
+        let mut d = affine(2);
+        let statuses: Vec<_> = (0..2).map(st).collect();
+        let j = d.choose(&req(1, 3), &statuses, 0.0).unwrap();
+        for i in 0..5 {
+            d.on_dispatch(&req(10 + i, 3), j, 0.0);
+        }
+        assert_eq!(d.chwbl().loads()[j], 5);
+        d.on_instance_reset(j);
+        assert_eq!(d.chwbl().loads()[j], 0);
+        assert_eq!(d.chwbl().loads().iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn per_pick_bound_holds_under_random_streams() {
+        // Property: every accepted sticky pick satisfies
+        // loads[j] + 1 <= ceil(c * (total+1) / n) at decision time, and on
+        // completion-free streams no instance ever exceeds the global
+        // ceiling (the fallback is least-loaded, which preserves it for
+        // c >= 1).
+        crate::testing::forall(
+            "chwbl_bounded_load",
+            150,
+            0xC4B1,
+            |rng| {
+                let n = 1 + rng.below(6) as usize;
+                let ops: Vec<u64> = (0..80).map(|_| rng.below(12)).collect();
+                (n, ops)
+            },
+            |(n, ops)| {
+                let cfg = CacheAffineConfig { load_factor: 1.25, vnodes: 16 };
+                let mut c = Chwbl::new(cfg, *n);
+                for &session in ops {
+                    let ceil_before = c.ceiling();
+                    let j = match c.pick(session, |_| true) {
+                        Some(j) => {
+                            if c.loads()[j] + 1 > ceil_before {
+                                return Err(format!(
+                                    "sticky pick {j} breaks bound: load {} ceil {}",
+                                    c.loads()[j],
+                                    ceil_before
+                                ));
+                            }
+                            j
+                        }
+                        // Least-loaded fallback (ties to lowest index).
+                        None => (0..*n)
+                            .min_by_key(|&j| c.loads()[j])
+                            .ok_or("empty fleet")?,
+                    };
+                    c.on_dispatch(j);
+                    let ceiling = c.ceiling();
+                    for (k, &l) in c.loads().iter().enumerate() {
+                        if l > ceiling {
+                            return Err(format!(
+                                "instance {k} load {l} exceeds ceiling {ceiling}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -75,6 +75,7 @@ mod tests {
             committed_tokens: committed,
             capacity_tokens: 160_000,
             preemptions: 0,
+            alloc_failures: 0,
             accepting: true,
             model: ModelKind::Llama3_8B,
         }
@@ -85,6 +86,7 @@ mod tests {
             id: 0,
             msg_id: 0,
             agent: AgentId(0),
+            session: 0,
             model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens: 1,

@@ -9,7 +9,12 @@
 //!   (the "Oracle" of Fig. 9).
 //! * [`least_loaded::LeastLoaded`] — ablation: committed-tokens balancing
 //!   without temporal modeling.
+//! * [`cache_affine::CacheAffine`] — session-sticky layer over any inner
+//!   policy: consistent hashing with bounded loads (CHWBL) routes a
+//!   session's stages to one instance so its KV prefix cache hits, falling
+//!   back to the inner scorer when the sticky target is saturated.
 
+pub mod cache_affine;
 pub mod least_loaded;
 pub mod oracle_fit;
 pub mod round_robin;
@@ -45,6 +50,12 @@ pub struct DispatchStats {
     pub rejected_rounds: u64,
     /// OOM-suspect preemption events that triggered a cooldown suspension.
     pub suspensions: u64,
+    /// Session-sticky picks accepted by the cache-affine layer (the CHWBL
+    /// ring target was eligible and under its bounded-load ceiling).
+    pub sticky_hits: u64,
+    /// Session-sticky picks refused (overloaded, non-accepting, or
+    /// model-incompatible ring target) that fell back to the inner scorer.
+    pub sticky_fallbacks: u64,
 }
 
 /// Picks the target instance for each scheduled request.
@@ -137,6 +148,7 @@ pub trait DispatchPolicy: Send {
     fn refresh(&mut self, _orch: &crate::orchestrator::Orchestrator) {}
 }
 
+pub use cache_affine::{CacheAffine, CacheAffineConfig, Chwbl};
 pub use least_loaded::LeastLoaded;
 pub use oracle_fit::OracleFit;
 pub use round_robin::RoundRobin;

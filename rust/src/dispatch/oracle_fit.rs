@@ -140,6 +140,7 @@ mod tests {
             committed_tokens: 0,
             capacity_tokens: capacity,
             preemptions: 0,
+            alloc_failures: 0,
             accepting: true,
             model: ModelKind::Llama3_8B,
         }
@@ -150,6 +151,7 @@ mod tests {
             id,
             msg_id: id,
             agent: AgentId(0),
+            session: id,
             model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens: prompt,

@@ -100,6 +100,7 @@ mod tests {
             committed_tokens: 0,
             capacity_tokens: 1600,
             preemptions: 0,
+            alloc_failures: 0,
             accepting: true,
             model: ModelKind::Llama3_8B,
         }
@@ -110,6 +111,7 @@ mod tests {
             id: 0,
             msg_id: 0,
             agent: AgentId(0),
+            session: 0,
             model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens: 1,

@@ -76,6 +76,12 @@ pub struct TimeSlotConfig {
     /// [`DispatchPolicy::refresh`]) instead of the slope-based guess.
     /// Off by default — enabled alongside learned routing.
     pub learned_demand: bool,
+    /// Prefix-cache awareness: when true, the ramp precompute prices each
+    /// request at its *effective* prefill — the prompt minus the session's
+    /// expected cached prefix (tracked from the packer's own dispatch
+    /// stream, so both drivers see the identical expectation). Off by
+    /// default; enabled alongside the engine-side prefix cache.
+    pub cache_aware: bool,
 }
 
 impl TimeSlotConfig {
@@ -376,7 +382,18 @@ pub struct TimeSlotDispatcher {
     /// Reusable shared-ramp cache; entries beyond the per-decision live
     /// count are stale capacity kept to avoid reallocating.
     ramp_scratch: Vec<RampPre>,
+    /// Session → expected cached prefix tokens (the longest prompt the
+    /// packer has dispatched for the session), read by the ramp precompute
+    /// when [`TimeSlotConfig::cache_aware`] is on. Only keyed lookups —
+    /// never iterated — so hash order cannot reach a decision; bounded by
+    /// [`SESSION_PREFIX_CAP`] with a deterministic full reset.
+    session_prefix: HashMap<u64, u32>,
 }
+
+/// Bound on the packer's session-prefix expectation map. Crossing it resets
+/// the whole map (a deterministic, order-free eviction); expectations then
+/// rebuild from the live dispatch stream.
+const SESSION_PREFIX_CAP: usize = 16_384;
 
 impl TimeSlotDispatcher {
     /// A packer whose every instance uses the config's reference ramp
@@ -395,6 +412,7 @@ impl TimeSlotDispatcher {
             legacy_scoring: false,
             stats: DispatchStats::default(),
             ramp_scratch: Vec::new(),
+            session_prefix: HashMap::new(),
         }
     }
 
@@ -453,7 +471,22 @@ impl TimeSlotDispatcher {
                 return (kv.ceil() as u64).max(req.prompt_tokens as u64 + 1);
             }
         }
-        req.prompt_tokens as u64 + (cost.mem_slope * t_i / cost.kv_bytes_per_token) as u64
+        self.expected_prefill_tokens(req) as u64
+            + (cost.mem_slope * t_i / cost.kv_bytes_per_token) as u64
+    }
+
+    /// Effective prefill the ramp precompute prices `req` at: the full
+    /// prompt, shortened by the session's expected cached prefix when
+    /// [`TimeSlotConfig::cache_aware`] is on. Depends only on the request
+    /// and the packer's own dispatch history (never on the candidate), so
+    /// `choose`/`choose_among` and the legacy/max-tree scoring arms all
+    /// price a candidate identically.
+    fn expected_prefill_tokens(&self, req: &Request) -> u32 {
+        if !self.cfg.cache_aware {
+            return req.prompt_tokens;
+        }
+        let hit = self.session_prefix.get(&req.session).copied().unwrap_or(0);
+        crate::engine::cost_model::effective_prefill(req.prompt_tokens, hit)
     }
 
     fn abs_slot(&self, t: Time) -> i64 {
@@ -511,7 +544,7 @@ impl TimeSlotDispatcher {
     fn evaluate_legacy(
         &self,
         j: usize,
-        req: &Request,
+        eff_prompt: u32,
         t_i: f64,
         now: Time,
         capacity: f64,
@@ -519,7 +552,7 @@ impl TimeSlotDispatcher {
         let start = now;
         let end = now + t_i;
         let cost = self.costs[j];
-        let prefill_bytes = req.prompt_tokens as f64 * cost.kv_bytes_per_token;
+        let prefill_bytes = eff_prompt as f64 * cost.kv_bytes_per_token;
         let s0 = self.abs_slot(start);
         let s1 = self.abs_slot(end) + 1;
         let ring = &self.rings[j];
@@ -631,6 +664,7 @@ impl TimeSlotDispatcher {
         // Evaluate the candidates "in parallel" (paper §6 step 2) and pick
         // the lowest expected total peak among the available ones.
         let t_i = self.expected_time(req);
+        let eff_prompt = self.expected_prefill_tokens(req);
         let start = now;
         let end = now + t_i;
         let s0 = self.abs_slot(start);
@@ -678,14 +712,14 @@ impl TimeSlotDispatcher {
             let capacity = self.capacity_of(j, Some(st));
             self.stats.evaluated += 1;
             let peak = if self.legacy_scoring {
-                self.evaluate_legacy(j, req, t_i, now, capacity)
+                self.evaluate_legacy(j, eff_prompt, t_i, now, capacity)
             } else {
                 let pi = Self::ramp_pre(
                     &self.cfg,
                     &mut scratch,
                     &mut scratch_used,
                     cost,
-                    req.prompt_tokens,
+                    eff_prompt,
                     start,
                     end,
                     s0,
@@ -817,7 +851,20 @@ impl DispatchPolicy for TimeSlotDispatcher {
         let start = now;
         let end = now + t_i;
         let cost = self.costs[instance];
-        let prefill_bytes = req.prompt_tokens as f64 * cost.kv_bytes_per_token;
+        // Same effective prefill the decision was priced at (the session
+        // expectation is updated only after the charge below, so the add
+        // and the score agree); the release subtracts the recorded bytes.
+        let prefill_bytes =
+            self.expected_prefill_tokens(req) as f64 * cost.kv_bytes_per_token;
+        if self.cfg.cache_aware {
+            if self.session_prefix.len() >= SESSION_PREFIX_CAP
+                && !self.session_prefix.contains_key(&req.session)
+            {
+                self.session_prefix.clear();
+            }
+            let e = self.session_prefix.entry(req.session).or_insert(0);
+            *e = (*e).max(req.prompt_tokens);
+        }
         let mem_slope = cost.mem_slope;
         let s0 = self.abs_slot(start);
         let s1 = self.abs_slot(end) + 1;
@@ -925,6 +972,7 @@ impl TimeSlotConfig {
             safety: 1.8,
             suspend_cooldown: 2.0,
             learned_demand: false,
+            cache_aware: false,
         }
     }
 }
@@ -946,6 +994,7 @@ mod tests {
             safety: 1.0,
             suspend_cooldown: 2.0,
             learned_demand: false,
+            cache_aware: false,
         }
     }
 
@@ -962,6 +1011,7 @@ mod tests {
             committed_tokens: 0,
             capacity_tokens: 1000,
             preemptions: 0,
+            alloc_failures: 0,
             accepting: true,
             model: ModelKind::Llama3_8B,
         }
@@ -972,6 +1022,7 @@ mod tests {
             id,
             msg_id: id,
             agent: AgentId(agent),
+            session: id,
             model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens: prompt,

@@ -71,6 +71,194 @@ impl BlockManager {
     }
 }
 
+/// One cached prefix: the longest context this session has completed on
+/// this instance, and the blocks it pins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct PrefixEntry {
+    session: u64,
+    prefix_tokens: u32,
+    blocks: u32,
+    /// Logical LRU clock (insert/hit counter, never wall time).
+    last_used: u64,
+}
+
+/// Deterministic per-instance prefix/KV cache model.
+///
+/// Holds one `(session_key, prefix_tokens)` entry per session, LRU-evicted
+/// under a configurable block budget. A `lookup` hit shortens the effective
+/// prefill of the next stage of that session (the engine still allocates
+/// the full context's KV blocks — the cache models *recompute* avoidance,
+/// not extra residency). Recency is a logical counter, so behavior is
+/// bit-identical across drivers and hosts.
+#[derive(Debug, Clone)]
+pub struct PrefixCache {
+    budget_blocks: u32,
+    block_size: u32,
+    /// Entries in insertion order; scans are linear (entry count is bounded
+    /// by the block budget since every entry pins at least one block).
+    entries: Vec<PrefixEntry>,
+    cached_blocks: u32,
+    tick: u64,
+    /// Lookups that found a usable prefix for the session.
+    pub hits: u64,
+    /// Lookups that found nothing for the session.
+    pub misses: u64,
+    /// Prefill tokens skipped across all hits.
+    pub saved_prefill_tokens: u64,
+    /// Entries inserted (longest-prefix updates count too).
+    pub insertions: u64,
+    /// Entries evicted to stay under the block budget.
+    pub evictions: u64,
+}
+
+impl PrefixCache {
+    /// A cache holding at most `budget_blocks` blocks of `block_size`
+    /// tokens each.
+    pub fn new(budget_blocks: u32, block_size: u32) -> PrefixCache {
+        assert!(budget_blocks > 0 && block_size > 0);
+        PrefixCache {
+            budget_blocks,
+            block_size,
+            entries: Vec::new(),
+            cached_blocks: 0,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            saved_prefill_tokens: 0,
+            insertions: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Configured block budget.
+    pub fn budget_blocks(&self) -> u32 {
+        self.budget_blocks
+    }
+
+    /// Blocks currently pinned by cached prefixes (≤ budget, audited).
+    pub fn cached_blocks(&self) -> u32 {
+        self.cached_blocks
+    }
+
+    /// Cached sessions.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Tokens of `prompt_tokens` already held for `session` (0 on miss).
+    /// Capped at `prompt_tokens - 1` so at least one token is always
+    /// prefilled (the hit invariant `hit ≤ prompt` is audited by
+    /// `kairos check`). Refreshes the entry's recency and counts the
+    /// hit/miss and saved tokens.
+    pub fn lookup(&mut self, session: u64, prompt_tokens: u32) -> u32 {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.entries.iter_mut().find(|e| e.session == session) {
+            Some(e) => {
+                e.last_used = tick;
+                let hit = e.prefix_tokens.min(prompt_tokens.saturating_sub(1));
+                if hit > 0 {
+                    self.hits += 1;
+                    self.saved_prefill_tokens += u64::from(hit);
+                } else {
+                    self.misses += 1;
+                }
+                hit
+            }
+            None => {
+                self.misses += 1;
+                0
+            }
+        }
+    }
+
+    /// Record that `session` now has `prefix_tokens` of context resident
+    /// (called at stage completion with the final context length). Keeps
+    /// the longest prefix per session and LRU-evicts other sessions until
+    /// the block budget holds; a prefix larger than the whole budget is
+    /// not cached.
+    pub fn insert(&mut self, session: u64, prefix_tokens: u32) {
+        if prefix_tokens == 0 {
+            return;
+        }
+        let blocks = prefix_tokens.div_ceil(self.block_size);
+        if blocks > self.budget_blocks {
+            return;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.entries.iter_mut().find(|e| e.session == session) {
+            e.last_used = tick;
+            if prefix_tokens <= e.prefix_tokens {
+                return;
+            }
+            self.cached_blocks = self.cached_blocks - e.blocks + blocks;
+            e.prefix_tokens = prefix_tokens;
+            e.blocks = blocks;
+        } else {
+            self.entries.push(PrefixEntry {
+                session,
+                prefix_tokens,
+                blocks,
+                last_used: tick,
+            });
+            self.cached_blocks += blocks;
+        }
+        self.insertions += 1;
+        while self.cached_blocks > self.budget_blocks {
+            // LRU victim; ties (impossible under the monotone tick, but
+            // kept explicit) break toward the smaller session key.
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| (e.last_used, e.session))
+                .map(|(i, _)| i)
+                .expect("cached_blocks > 0 implies entries exist");
+            let e = self.entries.remove(victim);
+            self.cached_blocks -= e.blocks;
+            self.evictions += 1;
+        }
+    }
+
+    /// Internal-consistency audit: cached blocks within budget, per-entry
+    /// block counts matching their token counts, and the running total
+    /// matching the entries. Returns human-readable violations (empty =
+    /// clean); surfaced through `Coordinator::audit_invariants` and
+    /// `kairos check`.
+    pub fn audit(&self) -> Vec<String> {
+        let mut violations = Vec::new();
+        if self.cached_blocks > self.budget_blocks {
+            violations.push(format!(
+                "prefix cache holds {} blocks over budget {}",
+                self.cached_blocks, self.budget_blocks
+            ));
+        }
+        let mut sum = 0u32;
+        for e in &self.entries {
+            if e.blocks != e.prefix_tokens.div_ceil(self.block_size) {
+                violations.push(format!(
+                    "session {} pins {} blocks for {} tokens (block_size {})",
+                    e.session, e.blocks, e.prefix_tokens, self.block_size
+                ));
+            }
+            sum += e.blocks;
+        }
+        if sum != self.cached_blocks {
+            violations.push(format!(
+                "prefix cache accounting drift: entries pin {} blocks, counter says {}",
+                sum, self.cached_blocks
+            ));
+        }
+        violations
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +302,80 @@ mod tests {
         assert!(!bm.needs_new_block(15));
         assert!(bm.needs_new_block(16));
         assert!(bm.needs_new_block(32));
+    }
+
+    #[test]
+    fn prefix_cache_hit_miss_and_longest_prefix() {
+        let mut pc = PrefixCache::new(8, 16);
+        assert_eq!(pc.lookup(7, 100), 0, "cold cache misses");
+        assert_eq!(pc.misses, 1);
+        pc.insert(7, 40); // 3 blocks
+        assert_eq!(pc.cached_blocks(), 3);
+        assert_eq!(pc.lookup(7, 100), 40);
+        assert_eq!(pc.hits, 1);
+        assert_eq!(pc.saved_prefill_tokens, 40);
+        // Hit is capped below the prompt: one token always prefills.
+        assert_eq!(pc.lookup(7, 30), 29);
+        // Longest prefix wins; shrinking inserts are ignored.
+        pc.insert(7, 64); // 4 blocks
+        pc.insert(7, 16);
+        assert_eq!(pc.cached_blocks(), 4);
+        assert_eq!(pc.lookup(7, 1000), 64);
+        assert!(pc.audit().is_empty(), "{:?}", pc.audit());
+    }
+
+    #[test]
+    fn prefix_cache_lru_eviction_respects_budget() {
+        let mut pc = PrefixCache::new(4, 16);
+        pc.insert(1, 32); // 2 blocks
+        pc.insert(2, 32); // 2 blocks — budget full
+        assert_eq!(pc.lookup(1, 100), 31, "refresh session 1");
+        pc.insert(3, 16); // 1 block: evicts LRU session 2
+        assert_eq!(pc.lookup(2, 100), 0, "session 2 evicted");
+        assert_eq!(pc.lookup(1, 100), 31, "session 1 survived");
+        assert_eq!(pc.evictions, 1);
+        assert!(pc.cached_blocks() <= pc.budget_blocks());
+        // An entry larger than the whole budget is refused outright.
+        pc.insert(9, 16 * 5);
+        assert_eq!(pc.lookup(9, 1000), 0);
+        assert!(pc.audit().is_empty(), "{:?}", pc.audit());
+    }
+
+    #[test]
+    fn prefix_cache_budget_property() {
+        // Random lookup/insert streams never exceed the budget and never
+        // drift the block accounting.
+        forall(
+            "prefix-cache-budget",
+            200,
+            0xCACE,
+            |rng: &mut Rng| {
+                let ops: Vec<(bool, u64, u32)> = (0..60)
+                    .map(|_| {
+                        (rng.chance(0.5), rng.below(12), rng.below(200) as u32 + 1)
+                    })
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut pc = PrefixCache::new(6, 16);
+                for &(is_insert, session, tokens) in ops {
+                    if is_insert {
+                        pc.insert(session, tokens);
+                    } else {
+                        let hit = pc.lookup(session, tokens);
+                        if hit >= tokens.max(1) {
+                            return Err(format!("hit {hit} >= prompt {tokens}"));
+                        }
+                    }
+                    let audit = pc.audit();
+                    if !audit.is_empty() {
+                        return Err(audit.join("; "));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -15,8 +15,8 @@
 
 use std::collections::VecDeque;
 
-use super::block_manager::BlockManager;
-use super::cost_model::{CostModel, ModelKind};
+use super::block_manager::{BlockManager, PrefixCache};
+use super::cost_model::{effective_prefill, CostModel, ModelKind};
 use super::request::{Request, RequestId, SeqPhase, SeqState};
 use crate::Time;
 
@@ -84,6 +84,10 @@ pub struct InstanceStatus {
     /// dispatchers always pack against the *currently available* budget.
     pub capacity_tokens: u64,
     pub preemptions: u64,
+    /// Cumulative KV-block allocation failures (admission attempts the
+    /// pool could not satisfy) — the dispatcher-visible preemption-pressure
+    /// signal next to the prefix-cache hit rate.
+    pub alloc_failures: u64,
     /// Whether the instance accepts new dispatches. The engine itself is
     /// always accepting; the coordinator clears this for instances that are
     /// draining toward retirement or already retired, and every dispatcher
@@ -114,6 +118,8 @@ pub struct EngineConfig {
     /// Max prefill tokens admitted per iteration (vLLM
     /// `max_num_batched_tokens`).
     pub max_prefill_tokens: u32,
+    /// Prefix-cache block budget; `0` disables the cache (the default).
+    pub prefix_cache_blocks: u32,
 }
 
 impl EngineConfig {
@@ -127,6 +133,7 @@ impl EngineConfig {
             total_blocks: cost.total_blocks(block_size),
             max_batch: 256,
             max_prefill_tokens: 2048,
+            prefix_cache_blocks: 0,
         }
     }
 }
@@ -152,10 +159,15 @@ pub struct EngineCore<B: ExecBackend> {
     /// Set when the waiting queue changed since the last policy sort
     /// (avoids re-sorting on every iteration — EXPERIMENTS.md §Perf).
     pub waiting_dirty: bool,
+    /// Prefix/KV cache model (None when `prefix_cache_blocks` is 0): a hit
+    /// at submit time shortens the sequence's effective prefill.
+    prefix_cache: Option<PrefixCache>,
 }
 
 impl<B: ExecBackend> EngineCore<B> {
     pub fn new(id: usize, cfg: EngineConfig, backend: B) -> EngineCore<B> {
+        let prefix_cache = (cfg.prefix_cache_blocks > 0)
+            .then(|| PrefixCache::new(cfg.prefix_cache_blocks, cfg.block_size));
         EngineCore {
             id,
             backend,
@@ -169,13 +181,41 @@ impl<B: ExecBackend> EngineCore<B> {
             recomputed_tokens: 0,
             suspended: false,
             waiting_dirty: false,
+            prefix_cache,
         }
     }
 
-    /// Enqueue a dispatched request.
+    /// Enqueue a dispatched request. With the prefix cache enabled, a
+    /// session hit shortens the effective prefill (the KV-block footprint
+    /// is unchanged — the cache models recompute avoidance, not extra
+    /// residency). Preempted sequences re-prefill their full context: the
+    /// recompute cost of preemption is the phenomenon under study.
     pub fn submit(&mut self, req: Request, now: Time) {
-        self.waiting.push_back(SeqState::new(req, now));
+        let mut seq = SeqState::new(req, now);
+        if let Some(pc) = self.prefix_cache.as_mut() {
+            let hit = pc.lookup(seq.req.session, seq.req.prompt_tokens);
+            seq.prefill_tokens = effective_prefill(seq.req.prompt_tokens, hit);
+        }
+        self.waiting.push_back(seq);
         self.waiting_dirty = true;
+    }
+
+    /// The prefix-cache model, when enabled (hit/miss counters and audits).
+    pub fn prefix_cache(&self) -> Option<&PrefixCache> {
+        self.prefix_cache.as_ref()
+    }
+
+    /// Mutable access to the prefix-cache model — the coordinator uses
+    /// this to fold-and-zero the traffic counters into run metrics.
+    pub fn prefix_cache_mut(&mut self) -> Option<&mut PrefixCache> {
+        self.prefix_cache.as_mut()
+    }
+
+    /// Drain the cumulative KV allocation-failure counter (fold-and-zero;
+    /// the coordinator sums it into the run's streaming metrics, so the
+    /// sweep stays idempotent across drain-time and end-of-run folds).
+    pub fn take_alloc_failures(&mut self) -> u64 {
+        std::mem::take(&mut self.blocks.alloc_failures)
     }
 
     /// Whether the engine has any work.
@@ -205,6 +245,7 @@ impl<B: ExecBackend> EngineCore<B> {
             capacity_tokens: self.blocks.total_blocks() as u64
                 * self.blocks.block_size() as u64,
             preemptions: self.preemptions,
+            alloc_failures: self.blocks.alloc_failures,
             accepting: true,
             model: self.cfg.model,
         }
@@ -371,6 +412,11 @@ impl<B: ExecBackend> EngineCore<B> {
             if self.running[i].is_finished() {
                 let seq = self.running.swap_remove(i);
                 self.blocks.free(seq.held_blocks);
+                if let Some(pc) = self.prefix_cache.as_mut() {
+                    // The completed stage's full context becomes the
+                    // session's cached prefix for its next stage.
+                    pc.insert(seq.req.session, seq.context_len());
+                }
                 out.completed.push(seq);
             } else {
                 i += 1;
@@ -401,6 +447,7 @@ mod tests {
             id,
             msg_id: id,
             agent: AgentId(0),
+            session: id,
             model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens: prompt,
@@ -419,6 +466,7 @@ mod tests {
             total_blocks,
             max_batch: 64,
             max_prefill_tokens: 4096,
+            prefix_cache_blocks: 0,
         };
         EngineCore::new(0, cfg, SimBackend::new(CostModel::new(ModelKind::Llama3_8B)))
     }
@@ -522,6 +570,7 @@ mod tests {
             total_blocks: 10_000,
             max_batch: 4,
             max_prefill_tokens: 1 << 20,
+            prefix_cache_blocks: 0,
         };
         let mut e =
             EngineCore::new(0, cfg, SimBackend::new(CostModel::new(ModelKind::Llama3_8B)));
@@ -541,6 +590,7 @@ mod tests {
             total_blocks: 10_000,
             max_batch: 256,
             max_prefill_tokens: 100,
+            prefix_cache_blocks: 0,
         };
         let mut e =
             EngineCore::new(0, cfg, SimBackend::new(CostModel::new(ModelKind::Llama3_8B)));
@@ -563,6 +613,68 @@ mod tests {
         assert_eq!(reqs.len(), 2);
         assert_eq!(e.status().used_blocks, 0);
         assert!(!e.has_work());
+    }
+
+    #[test]
+    fn prefix_cache_shortens_second_stage_prefill() {
+        let cfg = EngineConfig {
+            model: ModelKind::Llama3_8B,
+            block_size: 16,
+            total_blocks: 1000,
+            max_batch: 64,
+            max_prefill_tokens: 4096,
+            prefix_cache_blocks: 64,
+        };
+        let mut e =
+            EngineCore::new(0, cfg, SimBackend::new(CostModel::new(ModelKind::Llama3_8B)));
+        // Stage 1 of session 7: full prefill, then its 110-token context is
+        // cached on completion.
+        let mut r1 = mk_req(1, 100, 10, 0.0);
+        r1.session = 7;
+        e.submit(r1, 0.0);
+        let mut now = 0.0;
+        for _ in 0..50 {
+            let out = e.step(now);
+            now += out.duration.max(1e-6);
+            if !e.has_work() {
+                break;
+            }
+        }
+        let pc = e.prefix_cache().unwrap();
+        assert_eq!(pc.misses, 1, "stage 1 is a cold miss");
+        assert!(pc.cached_blocks() > 0);
+        // Stage 2 of the same session: 150-token prompt, 110 already held.
+        let mut r2 = mk_req(2, 150, 5, now);
+        r2.session = 7;
+        e.submit(r2, now);
+        let out = e.step(now);
+        assert_eq!(out.prefill_tokens, 40, "110 of 150 tokens hit the cache");
+        let pc = e.prefix_cache().unwrap();
+        assert_eq!(pc.hits, 1);
+        assert_eq!(pc.saved_prefill_tokens, 110);
+        // A different session still prefills in full.
+        let mut r3 = mk_req(3, 80, 5, now);
+        r3.session = 8;
+        e.submit(r3, now);
+        let out = e.step(now);
+        assert_eq!(out.prefill_tokens, 80);
+        assert!(e.prefix_cache().unwrap().audit().is_empty());
+        // KV accounting is untouched by the cache model.
+        let mut guard = 0;
+        while e.has_work() && guard < 200 {
+            now += e.step(now).duration.max(1e-6);
+            guard += 1;
+        }
+        assert_eq!(e.status().used_blocks, 0);
+    }
+
+    #[test]
+    fn status_surfaces_alloc_failures() {
+        let mut e = small_engine(4);
+        // A prompt whose blocks + watermark can never fit the 4-block pool.
+        e.submit(mk_req(1, 200, 4, 0.0), 0.0);
+        e.step(0.0);
+        assert!(e.status().alloc_failures > 0);
     }
 
     #[test]

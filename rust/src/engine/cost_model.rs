@@ -174,6 +174,17 @@ impl CostModel {
     }
 }
 
+/// Effective prefill length after a prefix-cache hit of `hit_tokens`.
+///
+/// The hit is clamped to `prompt_tokens − 1`: at least one token is always
+/// prefilled (the step that produces the first output token), and a hit can
+/// never exceed the prompt. Shared by the engine's admission path and the
+/// time-slot packer's ramp precompute so both sides price a cached session
+/// identically.
+pub fn effective_prefill(prompt_tokens: u32, hit_tokens: u32) -> u32 {
+    prompt_tokens - hit_tokens.min(prompt_tokens.saturating_sub(1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +263,16 @@ mod tests {
         let pinned = ModelClass::Model(ModelKind::Llama2_13B);
         assert!(pinned.matches(ModelKind::Llama2_13B));
         assert!(!pinned.matches(ModelKind::Llama3_8B));
+    }
+
+    #[test]
+    fn effective_prefill_clamps_hits() {
+        assert_eq!(effective_prefill(100, 0), 100);
+        assert_eq!(effective_prefill(100, 40), 60);
+        assert_eq!(effective_prefill(100, 99), 1);
+        assert_eq!(effective_prefill(100, 100), 1, "one token always prefills");
+        assert_eq!(effective_prefill(100, 5000), 1);
+        assert_eq!(effective_prefill(0, 10), 0, "empty prompt stays empty");
     }
 
     #[test]

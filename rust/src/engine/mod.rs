@@ -22,7 +22,7 @@ pub mod cost_model;
 pub mod pjrt_backend;
 pub mod request;
 
-pub use block_manager::BlockManager;
+pub use block_manager::{BlockManager, PrefixCache};
 pub use core::{EngineCore, ExecBackend, InstanceStatus, SimBackend, StepOutcome};
-pub use cost_model::{CostModel, ModelClass, ModelKind};
+pub use cost_model::{effective_prefill, CostModel, ModelClass, ModelKind};
 pub use request::{Request, RequestId, SeqPhase, SeqState};

@@ -192,6 +192,7 @@ mod tests {
             id,
             msg_id: id,
             agent: AgentId(0),
+            session: id,
             model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens,
@@ -221,6 +222,7 @@ mod tests {
             total_blocks: 16, // micro: 2 rows × max 16 tokens
             max_batch,
             max_prefill_tokens: 1 << 20,
+            prefix_cache_blocks: 0,
         };
         let mut engine = EngineCore::new(0, cfg, backend);
         engine.submit(mk_req(1, 3, 5), 0.0);

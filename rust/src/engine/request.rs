@@ -29,6 +29,11 @@ pub struct Request {
     pub msg_id: MsgId,
     /// The agent issuing this request.
     pub agent: AgentId,
+    /// Prefix-cache session key: stages sharing a session extend the same
+    /// evolving context, so a later stage landing on an instance that
+    /// already holds the session's prefix skips re-prefilling it. Defaults
+    /// to the workflow `msg_id`; trace lines may override it.
+    pub session: u64,
     /// Serving-group requirement: which model family may execute this
     /// request (from the agent's affinity annotation; `Any` = every
     /// instance is a candidate, the unsharded behavior).
@@ -116,6 +121,7 @@ mod tests {
             id: 1,
             msg_id: 10,
             agent: AgentId(0),
+            session: 10,
             model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens: 100,

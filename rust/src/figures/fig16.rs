@@ -74,6 +74,7 @@ pub fn accuracy_for(mix: &WorkloadMix, seed: u64) -> (f64, f64, f64) {
             id: i as u64,
             msg_id: r.msg_id,
             agent: r.agent,
+            session: r.msg_id,
             model_class: crate::engine::cost_model::ModelClass::Any,
             upstream: None,
             prompt_tokens: 100,

@@ -33,6 +33,7 @@ fn mk_req(id: u64, agent: u32, rng: &mut Rng) -> Request {
         id,
         msg_id: id,
         agent: AgentId(agent),
+        session: id,
         model_class: ModelClass::Any,
         upstream: None,
         prompt_tokens: 50 + rng.below(400) as u32,
@@ -99,6 +100,7 @@ pub fn packing_time(n_instances: usize, live_requests: usize, seed: u64) -> f64 
             committed_tokens: 0,
             capacity_tokens: 1 << 24,
             preemptions: 0,
+            alloc_failures: 0,
             accepting: true,
             model: ModelKind::Llama3_8B,
         })

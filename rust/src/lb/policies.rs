@@ -109,6 +109,7 @@ mod tests {
             id: 0,
             msg_id: 0,
             agent: AgentId(agent),
+            session: 0,
             model_class: crate::engine::cost_model::ModelClass::Any,
             upstream: None,
             prompt_tokens: 10,

@@ -142,6 +142,7 @@ mod tests {
             id,
             msg_id: id,
             agent: AgentId(0),
+            session: id,
             model_class: crate::engine::cost_model::ModelClass::Any,
             upstream: None,
             prompt_tokens: 1,

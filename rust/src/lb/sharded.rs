@@ -186,6 +186,7 @@ mod tests {
             id,
             msg_id: id,
             agent: AgentId(0),
+            session: id,
             model_class: class,
             upstream: None,
             prompt_tokens: 1,

@@ -83,6 +83,37 @@ impl WorkflowRecord {
     }
 }
 
+/// Aggregate prefix-cache counters summed across the fleet's engines
+/// ([`crate::engine::block_manager::PrefixCache`] per instance). All
+/// counters are monotone totals over the run; the bench summary reports
+/// `hits / (hits + misses)` as the hit rate.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    /// Prefix lookups that found a usable cached prefix.
+    pub hits: u64,
+    /// Prefix lookups that found nothing for the session.
+    pub misses: u64,
+    /// Prefill tokens skipped thanks to cache hits (the recompute the
+    /// cache avoided).
+    pub saved_prefill_tokens: u64,
+    /// Prefix entries inserted (longest-prefix updates included).
+    pub insertions: u64,
+    /// Prefix entries evicted by the LRU budget.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Hit rate over all lookups; 0.0 before the first lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.hits + self.misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.hits as f64 / n as f64
+        }
+    }
+}
+
 /// Constant-memory accumulators fed on every record regardless of mode:
 /// P² sketches for the latency distributions, running moments for the
 /// queue ratio, and an HLL counting distinct (agent, serving-family)
@@ -103,6 +134,13 @@ pub struct StreamingMetrics {
     /// OOM-suspect suspensions. Synced by the coordinator on every refresh
     /// and at end of run; printed by the bench summary and `kairos check`.
     pub packer: crate::dispatch::DispatchStats,
+    /// Fleet-wide prefix-cache counters, folded from every engine's
+    /// [`crate::engine::block_manager::PrefixCache`] at end of run. All
+    /// zeros when the cache is disabled.
+    pub cache: CacheStats,
+    /// KV block-allocation failures summed across engines (admission
+    /// attempts refused by the watermark); folded at end of run.
+    pub alloc_failures: u64,
 }
 
 impl StreamingMetrics {
@@ -411,6 +449,14 @@ mod tests {
         assert_eq!(m.take_recent_queue_ratio(), 0.0, "window consumed");
         m.record_request(req(3, 3.0, 4.0, 0));
         assert!((m.take_recent_queue_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_hit_rate_handles_empty_and_mixed_streams() {
+        let z = CacheStats::default();
+        assert_eq!(z.hit_rate(), 0.0);
+        let s = CacheStats { hits: 3, misses: 1, ..Default::default() };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

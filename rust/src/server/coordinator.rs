@@ -104,15 +104,31 @@ pub struct InstanceSpec {
     /// Scale factor on the instance's KV pool (< 1.0 models co-tenant
     /// memory pressure or a smaller GPU; 1.0 = the model's full budget).
     pub kv_scale: f64,
+    /// KV block budget of the instance's prefix cache
+    /// ([`crate::engine::block_manager::PrefixCache`]); 0 disables the
+    /// cache. Autoscaled instances inherit the value through their spec.
+    pub cache_blocks: u32,
 }
 
 impl InstanceSpec {
     pub fn new(model: ModelKind) -> InstanceSpec {
-        InstanceSpec { model, block_size: 16, max_batch: 256, kv_scale: 1.0 }
+        InstanceSpec {
+            model,
+            block_size: 16,
+            max_batch: 256,
+            kv_scale: 1.0,
+            cache_blocks: 0,
+        }
     }
 
     pub fn with_kv_scale(mut self, kv_scale: f64) -> InstanceSpec {
         self.kv_scale = kv_scale;
+        self
+    }
+
+    /// Set the prefix-cache block budget (0 disables the cache).
+    pub fn with_cache_blocks(mut self, cache_blocks: u32) -> InstanceSpec {
+        self.cache_blocks = cache_blocks;
         self
     }
 
@@ -131,6 +147,7 @@ impl InstanceSpec {
         let mut cfg = EngineConfig::for_model(self.model, self.block_size);
         cfg.max_batch = self.max_batch;
         cfg.total_blocks = ((cfg.total_blocks as f64) * self.kv_scale).max(1.0) as u32;
+        cfg.prefix_cache_blocks = self.cache_blocks;
         cfg
     }
 }
@@ -377,6 +394,9 @@ struct WfState {
     /// Isolated per-stage latency estimates (suffix sums give the ground
     /// truth remaining latency for Oracle/analysis).
     stage_latency: Vec<f64>,
+    /// Prefix-cache session key every stage request carries (the trace's
+    /// override, or the workflow's own message id).
+    session: u64,
 }
 
 struct Pending {
@@ -867,8 +887,7 @@ impl<B: ExecBackend> Coordinator<B> {
                 continue;
             }
             // Fold-and-zero keeps the end-of-run counter sweep idempotent.
-            self.metrics.recomputed_tokens += self.engines[j].recomputed_tokens;
-            self.engines[j].recomputed_tokens = 0;
+            self.fold_instance_counters(j);
             // Draining → Retired: the family's active count already
             // dropped at RetireStart; only the snapshot goes stale here.
             self.instance_state[j] = InstanceState::Retired;
@@ -905,7 +924,21 @@ impl<B: ExecBackend> Coordinator<B> {
     /// ground-truth submission time and the agents' current affinity
     /// stamps, so the run can be written out and replayed.
     pub fn submit_plan(&mut self, plan: WorkflowPlan, now: Time) -> MsgId {
+        self.submit_plan_with_session(plan, None, now)
+    }
+
+    /// [`Self::submit_plan`] with an explicit prefix-cache session key.
+    /// `None` keys the workflow's stages by its own message id (the
+    /// default); traces carrying a `session` field pass it through here so
+    /// replay preserves cross-workflow session grouping.
+    pub fn submit_plan_with_session(
+        &mut self,
+        plan: WorkflowPlan,
+        session: Option<u64>,
+        now: Time,
+    ) -> MsgId {
         let mut rec = TraceRecord::from_plan(&plan, now);
+        rec.session = session;
         for s in rec.stages.iter_mut() {
             // Name-based lookup (never interns): recording must not
             // perturb agent-id assignment.
@@ -930,7 +963,14 @@ impl<B: ExecBackend> Coordinator<B> {
         self.next_msg_id += 1;
         self.workflows.insert(
             msg_id,
-            WfState { plan, next_stage: 0, app_start: now, queue_time: 0.0, stage_latency },
+            WfState {
+                plan,
+                next_stage: 0,
+                app_start: now,
+                queue_time: 0.0,
+                stage_latency,
+                session: session.unwrap_or(msg_id),
+            },
         );
         if let Some(req) = self.make_request(msg_id, now) {
             self.route_and_enqueue(req);
@@ -963,6 +1003,7 @@ impl<B: ExecBackend> Coordinator<B> {
                     c => Some(c),
                 },
             }],
+            session: None,
         });
         let agent = self.orch.registry.intern(agent);
         let id = self.next_req_id;
@@ -984,6 +1025,7 @@ impl<B: ExecBackend> Coordinator<B> {
             id,
             msg_id,
             agent,
+            session: msg_id,
             model_class: self.orch.model_class(agent),
             upstream: None,
             prompt_tokens,
@@ -1142,6 +1184,7 @@ impl<B: ExecBackend> Coordinator<B> {
             id,
             msg_id,
             agent,
+            session: wf.session,
             model_class: self.orch.model_class(agent),
             upstream,
             prompt_tokens: stage.prompt_tokens,
@@ -1577,6 +1620,10 @@ impl<B: ExecBackend> Coordinator<B> {
     /// 3. Slot lifecycle — no tombstoned (or draining) slot whose status
     ///    snapshot is up to date may be `accepting`, and every up-to-date
     ///    Active slot must be.
+    /// 4. Prefix-cache bookkeeping — every engine's
+    ///    [`crate::engine::block_manager::PrefixCache`] must pass its own
+    ///    audit: cached blocks within the budget, per-entry block counts
+    ///    consistent with the block size.
     ///
     /// Called automatically from [`Self::refresh`] in debug builds, from
     /// the seam tests, and per replayed event by `kairos check`.
@@ -1672,6 +1719,16 @@ impl<B: ExecBackend> Coordinator<B> {
                     "slot {j} is {:?} but its snapshot has accepting={}",
                     self.instance_state[j], st.accepting
                 ));
+            }
+        }
+        // (4) Prefix-cache bookkeeping: every engine's cache must respect
+        // its block budget and internal accounting (cached blocks ≤
+        // budget, per-entry block math consistent with the block size).
+        for (j, e) in self.engines.iter().enumerate() {
+            if let Some(pc) = e.prefix_cache() {
+                for v in pc.audit() {
+                    violations.push(format!("instance {j} prefix cache: {v}"));
+                }
             }
         }
         violations
@@ -1838,10 +1895,30 @@ impl<B: ExecBackend> Coordinator<B> {
         self.autoscaler = Some(scaler);
     }
 
+    /// Fold-and-zero one instance's cumulative counters into the run
+    /// metrics: recompute waste, prefix-cache traffic, and KV
+    /// allocation failures. Zeroing keeps the fold idempotent — a
+    /// drained instance's counters are folded once at retirement and
+    /// contribute zeros to the end-of-run sweep.
+    fn fold_instance_counters(&mut self, j: usize) {
+        let e = &mut self.engines[j];
+        self.metrics.recomputed_tokens += e.recomputed_tokens;
+        e.recomputed_tokens = 0;
+        self.metrics.stream.alloc_failures += e.take_alloc_failures();
+        if let Some(pc) = e.prefix_cache_mut() {
+            let c = &mut self.metrics.stream.cache;
+            c.hits += std::mem::take(&mut pc.hits);
+            c.misses += std::mem::take(&mut pc.misses);
+            c.saved_prefill_tokens += std::mem::take(&mut pc.saved_prefill_tokens);
+            c.insertions += std::mem::take(&mut pc.insertions);
+            c.evictions += std::mem::take(&mut pc.evictions);
+        }
+    }
+
     /// Sum per-engine counters into the metrics (end of run).
     pub fn fold_engine_counters(&mut self) {
-        for e in &self.engines {
-            self.metrics.recomputed_tokens += e.recomputed_tokens;
+        for j in 0..self.engines.len() {
+            self.fold_instance_counters(j);
         }
         // Final sync for runs that end between refreshes.
         self.metrics.stream.packer = self.dispatcher.stats();
@@ -2258,6 +2335,7 @@ mod tests {
             id: 999,
             msg_id: 999,
             agent: AgentId(7),
+            session: 999,
             model_class: ModelClass::Any,
             upstream: None,
             prompt_tokens: 16,

@@ -32,4 +32,4 @@ pub use coordinator::{
     ScaleEvent, ScaleEventKind, WallClock, PROVISIONING,
 };
 pub use pressure::PressureTrace;
-pub use sim::{FleetConfig, SimConfig, SimResult, SimServer};
+pub use sim::{CacheTuning, FleetConfig, SimConfig, SimResult, SimServer};

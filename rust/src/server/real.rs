@@ -117,6 +117,7 @@ impl RealServer {
                 total_blocks: batch as u32 * max_seq / 4,
                 max_batch: batch,
                 max_prefill_tokens: 1 << 20,
+                prefix_cache_blocks: 0,
             };
             fleet.push(
                 InstanceSpec::new(crate::engine::cost_model::ModelKind::Tiny)

@@ -75,6 +75,7 @@ impl SimConfig {
             block_size: self.block_size,
             max_batch: self.max_batch,
             kv_scale: self.kv_scale,
+            cache_blocks: 0,
         };
         FleetSpec::homogeneous(self.n_instances, spec)
     }
@@ -120,6 +121,39 @@ pub struct FleetConfig {
     /// the `pack` bench's baseline. Orthogonal to `legacy_hot_path`;
     /// decisions are identical either way.
     pub legacy_scoring: bool,
+    /// Prefix-cache tuning (`[cache]` / `--cache`): engine-side cache
+    /// budget plus the CHWBL bounded-load factor the `cache-affine`
+    /// dispatcher arm uses. Disabled by default.
+    pub cache: CacheTuning,
+}
+
+/// Prefix-cache knobs shared by the engine-side cache, the time-slot
+/// packer's session-aware prefill estimate, and the `cache-affine`
+/// session-sticky dispatch layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheTuning {
+    /// Turn the per-instance prefix cache on (and let the `kairos`
+    /// packer shorten its expected-prefill estimate for warm sessions).
+    pub enabled: bool,
+    /// Per-instance prefix-cache budget in KV blocks.
+    pub budget_blocks: u32,
+    /// CHWBL bounded-load factor (≥ 1.0) for the `cache-affine`
+    /// dispatcher: a sticky target may hold at most
+    /// `ceil(load_factor × mean in-flight load)` dispatches.
+    pub load_factor: f64,
+}
+
+impl Default for CacheTuning {
+    fn default() -> Self {
+        CacheTuning { enabled: false, budget_blocks: 512, load_factor: 1.25 }
+    }
+}
+
+impl CacheTuning {
+    /// The default tuning with the cache switched on.
+    pub fn on() -> CacheTuning {
+        CacheTuning { enabled: true, ..CacheTuning::default() }
+    }
 }
 
 impl From<SimConfig> for FleetConfig {
@@ -137,6 +171,7 @@ impl From<SimConfig> for FleetConfig {
             lean_metrics: false,
             legacy_hot_path: false,
             legacy_scoring: false,
+            cache: CacheTuning::default(),
         }
     }
 }
@@ -157,6 +192,7 @@ impl From<FleetSpec> for FleetConfig {
             lean_metrics: false,
             legacy_hot_path: false,
             legacy_scoring: false,
+            cache: CacheTuning::default(),
         }
     }
 }
@@ -234,6 +270,18 @@ impl SimResult {
         self.group_log.iter().filter(|g| !g.class.matches(g.model)).count()
     }
 
+    /// Prefix-cache traffic counters folded from every engine at end of
+    /// run (all-zero when the cache is disabled).
+    pub fn cache_stats(&self) -> crate::metrics::CacheStats {
+        self.metrics.stream.cache
+    }
+
+    /// KV-block allocation failures across the fleet, folded from every
+    /// engine at end of run.
+    pub fn alloc_failures(&self) -> u64 {
+        self.metrics.stream.alloc_failures
+    }
+
     /// `(grows, completed retirements)` of the run's scale log.
     pub fn scale_counts(&self) -> (usize, usize) {
         use crate::server::coordinator::ScaleEventKind;
@@ -286,7 +334,17 @@ impl SimServer {
         policy: Box<dyn SchedulePolicy>,
         dispatcher: Box<dyn DispatchPolicy>,
     ) -> SimServer {
-        let mut coord = Coordinator::sim(cfg.fleet.clone(), policy, dispatcher);
+        let mut fleet = cfg.fleet.clone();
+        if cfg.cache.enabled {
+            // The cache budget is fleet-wide tuning; specs that carry
+            // their own explicit budget keep it.
+            for s in &mut fleet.instances {
+                if s.cache_blocks == 0 {
+                    s.cache_blocks = cfg.cache.budget_blocks;
+                }
+            }
+        }
+        let mut coord = Coordinator::sim(fleet, policy, dispatcher);
         if let Some(a) = cfg.autoscale.clone() {
             coord.set_autoscaler(Autoscaler::new(a));
         }
@@ -375,7 +433,11 @@ impl SimServer {
         while let Some((now, ev)) = events.pop() {
             match ev {
                 Ev::Arrival(i) => {
-                    self.coord.submit_plan(arrivals[i].plan.clone(), now);
+                    self.coord.submit_plan_with_session(
+                        arrivals[i].plan.clone(),
+                        arrivals[i].session,
+                        now,
+                    );
                     self.pump_and_wake(now, &mut events);
                 }
                 Ev::Step(j) => {
@@ -484,6 +546,19 @@ pub fn make_dispatcher_routed(
     fleet: &FleetSpec,
     route: Option<&RoutePolicy>,
 ) -> Box<dyn DispatchPolicy> {
+    make_dispatcher_tuned(name, fleet, route, None)
+}
+
+/// [`make_dispatcher_routed`] with the prefix-cache tuning: an enabled
+/// [`CacheTuning`] makes the time-slot packer shorten its expected-prefill
+/// estimate for warm sessions, and parameterizes the `cache-affine` arm's
+/// CHWBL bounded-load factor.
+pub fn make_dispatcher_tuned(
+    name: &str,
+    fleet: &FleetSpec,
+    route: Option<&RoutePolicy>,
+    cache: Option<&CacheTuning>,
+) -> Box<dyn DispatchPolicy> {
     use crate::dispatch::*;
     match name {
         "rr" | "round-robin" => Box::new(RoundRobin::new()),
@@ -502,11 +577,24 @@ pub fn make_dispatcher_routed(
                 ts.capacity_bytes *= min_scale;
             }
             ts.learned_demand = matches!(route, Some(RoutePolicy::Learned { .. }));
+            ts.cache_aware = cache.is_some_and(|c| c.enabled);
             // Each instance is priced with ITS OWN cost model (ramp slope
             // + KV density), not the fleet reference's.
             let models: Vec<ModelKind> =
                 fleet.instances.iter().map(|s| s.model).collect();
             Box::new(TimeSlotDispatcher::for_models(&models, ts))
+        }
+        "cache-affine" | "affine" => {
+            // Session-sticky CHWBL over the cache-aware packer: sticky
+            // picks keep a session's stages on the instance holding its
+            // prefix; overloaded targets fall back to the packer score.
+            let tuning = cache.copied().unwrap_or_else(CacheTuning::on);
+            let inner = make_dispatcher_tuned("kairos", fleet, route, Some(&tuning));
+            let cfg = CacheAffineConfig {
+                load_factor: tuning.load_factor.max(1.0),
+                ..CacheAffineConfig::default()
+            };
+            Box::new(CacheAffine::new(cfg, fleet.len(), inner))
         }
         "oracle" => Box::new(OracleFit::new(fleet.len())),
         "least" | "least-loaded" => Box::new(LeastLoaded::new()),
@@ -537,7 +625,8 @@ pub fn run_fleet(
     arrivals: Vec<ArrivalEvent>,
 ) -> SimResult {
     let policy = make_policy(scheduler);
-    let disp = make_dispatcher_routed(dispatcher, &cfg.fleet, cfg.route.as_ref());
+    let disp =
+        make_dispatcher_tuned(dispatcher, &cfg.fleet, cfg.route.as_ref(), Some(&cfg.cache));
     SimServer::with_fleet(cfg, policy, disp).run(arrivals)
 }
 

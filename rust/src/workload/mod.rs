@@ -46,6 +46,9 @@ impl WorkloadMix {
 pub struct ArrivalEvent {
     pub at: Time,
     pub plan: WorkflowPlan,
+    /// Prefix-cache session key override carried from the trace; `None`
+    /// lets the runtime key the workflow's stages by its workflow id.
+    pub session: Option<u64>,
 }
 
 /// Bursty trace generator.
@@ -100,7 +103,11 @@ impl TraceGen {
         for _ in 0..n {
             t += gap_dist.sample(rng);
             let (app, ds, _) = mix.entries[cat.sample_index(rng)];
-            out.push(ArrivalEvent { at: t, plan: WorkflowPlan::sample(app, ds, rng) });
+            out.push(ArrivalEvent {
+                at: t,
+                plan: WorkflowPlan::sample(app, ds, rng),
+                session: None,
+            });
         }
         out
     }

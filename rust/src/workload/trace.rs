@@ -58,6 +58,8 @@ pub struct StageRecord {
 /// | `app`     | string | application name as [`App::name`]: `QA`/`RG`/`CG`|
 /// | `dataset` | string | dataset label the task was sampled from          |
 /// | `stages`  | array  | resolved stage sequence, in execution order      |
+/// | `session` | number | optional prefix-cache session key override;      |
+/// |           |        | omitted = default (the task's workflow id)       |
 ///
 /// Each entry of `stages` is an object:
 ///
@@ -84,6 +86,10 @@ pub struct TraceRecord {
     pub dataset: &'static str,
     /// The resolved stage sequence (agents + token shapes).
     pub stages: Vec<StageRecord>,
+    /// Optional prefix-cache session key override. `None` (the default,
+    /// omitted on the wire) keys the task's stages by its workflow id;
+    /// external traces set it to group tasks into longer-lived sessions.
+    pub session: Option<u64>,
 }
 
 /// Known static names (agents + datasets) so loaded traces re-use the
@@ -154,6 +160,7 @@ impl TraceRecord {
                     class: None,
                 })
                 .collect(),
+            session: None,
         }
     }
 
@@ -191,12 +198,16 @@ impl TraceRecord {
                 Json::obj(pairs)
             })
             .collect();
-        Json::obj(vec![
+        let mut pairs = vec![
             ("at", Json::from(self.at)),
             ("app", Json::from(self.app.name())),
             ("dataset", Json::from(self.dataset)),
             ("stages", Json::Arr(stages)),
-        ])
+        ];
+        if let Some(s) = self.session {
+            pairs.push(("session", Json::from(s as usize)));
+        }
+        Json::obj(pairs)
     }
 
     /// Parse one record from its JSON object form.
@@ -251,7 +262,16 @@ impl TraceRecord {
                 class,
             });
         }
-        Ok(TraceRecord { at, app, dataset: intern_name(dataset), stages })
+        let session = match j.get("session") {
+            None => None,
+            Some(s) => match s.as_u64() {
+                Some(n) => Some(n),
+                None => {
+                    return Err("\"session\" must be a non-negative integer".to_string())
+                }
+            },
+        };
+        Ok(TraceRecord { at, app, dataset: intern_name(dataset), stages, session })
     }
 }
 
@@ -274,7 +294,11 @@ impl Trace {
         Trace {
             records: arrivals
                 .iter()
-                .map(|a| TraceRecord::from_plan(&a.plan, a.at))
+                .map(|a| {
+                    let mut r = TraceRecord::from_plan(&a.plan, a.at);
+                    r.session = a.session;
+                    r
+                })
                 .collect(),
         }
     }
@@ -283,7 +307,7 @@ impl Trace {
     pub fn arrivals(&self) -> Vec<ArrivalEvent> {
         self.records
             .iter()
-            .map(|r| ArrivalEvent { at: r.at, plan: r.plan() })
+            .map(|r| ArrivalEvent { at: r.at, plan: r.plan(), session: r.session })
             .collect()
     }
 
@@ -365,6 +389,19 @@ impl Trace {
             .map_err(|e| format!("cannot read trace {}: {e}", path.display()))?;
         Self::from_jsonl(&text)
             .map_err(|e| format!("trace {}: {e}", path.display()))
+    }
+
+    /// Assign session keys round-robin over `n` long-running sessions
+    /// (record `i` → session `i % n`) — a session-heavy derivative of any
+    /// trace for prefix-cache experiments: consecutive arrivals of the
+    /// same session share a growing context prefix. `n = 0` clears the
+    /// keys back to the per-workflow default. Order-preserving.
+    pub fn sessionize(&self, n: u64) -> Trace {
+        let mut out = self.clone();
+        for (i, r) in out.records.iter_mut().enumerate() {
+            r.session = if n == 0 { None } else { Some(i as u64 % n) };
+        }
+        out
     }
 
     /// Scale the arrival rate by `factor` (> 1 = denser load): every
@@ -521,6 +558,21 @@ mod tests {
     }
 
     #[test]
+    fn sessionize_assigns_round_robin_keys() {
+        let t = sample_trace(10, 4.0, 3);
+        let s = t.sessionize(3);
+        for (i, r) in s.records.iter().enumerate() {
+            assert_eq!(r.session, Some(i as u64 % 3));
+        }
+        // The keys survive the JSONL round trip and flow into arrivals.
+        let back = Trace::from_jsonl(&s.to_jsonl()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(s.arrivals()[4].session, Some(1));
+        // n = 0 clears back to the per-workflow default.
+        assert!(s.sessionize(0).records.iter().all(|r| r.session.is_none()));
+    }
+
+    #[test]
     fn jsonl_round_trip_is_identity_property() {
         forall(
             "trace-jsonl-roundtrip",
@@ -662,6 +714,28 @@ mod tests {
         t.records[1].stages[0].class = Some(ModelClass::Any);
         let back = Trace::from_jsonl(&t.to_jsonl()).unwrap();
         assert_eq!(back, t);
+    }
+
+    #[test]
+    fn session_key_survives_the_round_trip_and_stays_omitted_when_unset() {
+        let mut t = sample_trace(4, 2.0, 21);
+        t.records[0].session = Some(9001);
+        t.records[2].session = Some(0);
+        let jsonl = t.to_jsonl();
+        // Unset records carry no "session" key at all (bit-identity with
+        // pre-session traces).
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert!(lines[0].contains("\"session\":9001"));
+        assert!(!lines[1].contains("session"));
+        assert!(lines[2].contains("\"session\":0"));
+        let back = Trace::from_jsonl(&jsonl).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.arrivals()[0].session, Some(9001));
+        assert_eq!(back.arrivals()[1].session, None);
+        // Non-integer session keys are rejected, naming the field.
+        let bad = "{\"at\":0,\"app\":\"RG\",\"dataset\":\"TQ\",\"session\":-3,\
+                   \"stages\":[{\"agent\":\"A\",\"prompt\":1,\"output\":1}]}";
+        assert!(Trace::from_jsonl(bad).unwrap_err().contains("session"));
     }
 
     #[test]

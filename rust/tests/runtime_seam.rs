@@ -21,8 +21,8 @@ use kairos::server::coordinator::{
 };
 use kairos::server::pressure::PressureTrace;
 use kairos::server::sim::{
-    make_dispatcher_for_fleet, make_dispatcher_routed, make_policy, run_fleet,
-    FleetConfig, SimServer,
+    make_dispatcher_for_fleet, make_dispatcher_routed, make_dispatcher_tuned,
+    make_policy, run_fleet, CacheTuning, FleetConfig, SimResult, SimServer,
 };
 use kairos::stats::rng::Rng;
 use kairos::workload::{ArrivalEvent, Trace, TraceGen, TraceRecord, WorkloadMix};
@@ -88,7 +88,11 @@ fn drive_sim_elastic(
     cfg.pressure = pressure;
     cfg.affinity = affinity;
     cfg.route = route;
-    let res = run_fleet(cfg, scheduler, dispatcher, arrivals);
+    driver_trace_of(run_fleet(cfg, scheduler, dispatcher, arrivals))
+}
+
+/// Reduce a finished sim run to the seam contract.
+fn driver_trace_of(res: SimResult) -> DriverTrace {
     DriverTrace {
         dispatch_log: res.dispatch_log,
         group_log: res.group_log,
@@ -128,6 +132,7 @@ fn drive_polling(
         None,
         None,
         None,
+        None,
     )
 }
 
@@ -142,11 +147,25 @@ fn drive_polling_elastic(
     pressure: Option<PressureTrace>,
     affinity: Option<AffinitySpec>,
     route: Option<RoutePolicy>,
+    cache: Option<CacheTuning>,
 ) -> DriverTrace {
+    // Mirror `SimServer::with_fleet`: an enabled cache tuning stamps the
+    // block budget onto every spec that does not carry its own, so both
+    // drivers boot identical engines.
+    let mut booted = fleet.clone();
+    if let Some(c) = cache {
+        if c.enabled {
+            for s in &mut booted.instances {
+                if s.cache_blocks == 0 {
+                    s.cache_blocks = c.budget_blocks;
+                }
+            }
+        }
+    }
     let mut coord = Coordinator::sim(
-        fleet.clone(),
+        booted,
         make_policy(scheduler),
-        make_dispatcher_routed(dispatcher, fleet, route.as_ref()),
+        make_dispatcher_tuned(dispatcher, fleet, route.as_ref(), cache.as_ref()),
     );
     if let Some(a) = autoscale {
         coord.set_autoscaler(Autoscaler::new(a));
@@ -211,7 +230,11 @@ fn drive_polling_elastic(
         // A provisioned instance whose boot delay elapsed registers inside
         // pump, so the fleet can grow on ANY pump — resize afterwards.
         if t_arrival <= t_done && t_arrival <= next_refresh {
-            coord.submit_plan(arrivals[next_arrival].plan.clone(), now);
+            coord.submit_plan_with_session(
+                arrivals[next_arrival].plan.clone(),
+                arrivals[next_arrival].session,
+                now,
+            );
             next_arrival += 1;
             coord.pump(now);
             while in_flight.len() < coord.n_instances() {
@@ -347,6 +370,7 @@ fn fleet_resize_seam_holds_across_drivers() {
         Some(pressure),
         None,
         None,
+        None,
     );
     assert!(!a.dispatch_log.is_empty());
     assert!(
@@ -421,6 +445,7 @@ fn sharded_seam_holds_on_mixed_model_fleet() {
         None,
         Some(aff),
         None,
+        None,
     );
     assert!(!a.dispatch_log.is_empty());
     assert_eq!(a, b, "drivers diverged over the sharded coordinator");
@@ -489,6 +514,7 @@ fn route_log_seam_holds_with_learned_routing_and_group_bounds() {
         None,
         Some(aff),
         Some(route),
+        None,
     );
     assert!(!a.dispatch_log.is_empty());
     // Route decisions are per submitted stage: unique per request, and a
@@ -582,6 +608,7 @@ fn record_replay_round_trip_reproduces_both_drivers() {
         None,
         None,
         Some(aff),
+        None,
         None,
     );
     assert_eq!(
@@ -821,4 +848,59 @@ fn scoring_arms_and_candidate_pruning_are_identical_through_the_driver() {
             );
         }
     }
+}
+
+#[test]
+fn cache_affine_seam_holds_with_audits_on() {
+    // The prefix-cache contract across the runtime seam: a session-keyed
+    // trace through the session-sticky `cache-affine` dispatcher (CHWBL
+    // over the kairos packer) must produce byte-identical dispatch, group
+    // and route logs from the discrete-event and polling drivers — with
+    // the cache enabled in the engines (so hits shorten prefill and feed
+    // back into timing) and the prefix-cache bookkeeping audits green in
+    // both drivers.
+    let fleet = FleetSpec::parse("3*llama3-8b@0.12").unwrap();
+    let mut arrivals = trace(4.0, 120, 81);
+    for (i, a) in arrivals.iter_mut().enumerate() {
+        a.session = Some(i as u64 % 10);
+    }
+    let tuning = CacheTuning { enabled: true, budget_blocks: 128, load_factor: 1.25 };
+
+    // Discrete-event reference, audited on every refresh tick.
+    let mut cfg = FleetConfig::from(fleet.clone());
+    cfg.cache = tuning;
+    let mut server = SimServer::with_fleet(
+        cfg,
+        make_policy("kairos"),
+        make_dispatcher_tuned("cache-affine", &fleet, None, Some(&tuning)),
+    );
+    server.enable_audit();
+    let res = server.run(arrivals.clone());
+    assert!(res.audit_checks > 0, "audits must actually run");
+    assert!(res.audit_violations.is_empty(), "{:?}", res.audit_violations);
+    assert!(
+        res.cache_stats().hits > 0,
+        "a session-heavy stream must hit the prefix cache"
+    );
+    assert!(
+        res.metrics.stream.packer.sticky_hits > 0,
+        "CHWBL never stuck a session to its instance"
+    );
+    let a = driver_trace_of(res);
+
+    // The polling driver audits on every refresh tick internally.
+    let b = drive_polling_elastic(
+        &fleet,
+        "kairos",
+        "cache-affine",
+        arrivals,
+        5.0,
+        None,
+        None,
+        None,
+        None,
+        Some(tuning),
+    );
+    assert!(!a.dispatch_log.is_empty());
+    assert_eq!(a, b, "drivers diverged under session-sticky dispatch");
 }
