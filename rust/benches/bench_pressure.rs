@@ -1,0 +1,149 @@
+//! Group-pressure depth reads: the old per-call `group_len` walks vs the
+//! epoch-keyed single-pass snapshot (`ShardedQueue::for_each_group_depth`
+//! gated on `ShardedQueue::epoch`).
+//!
+//! The learned router reads every serving group's queued depth on every
+//! routed submission. The legacy path re-walked the shard list once per
+//! group per read; the snapshot path folds all shards in one pass and
+//! reuses the result verbatim while the queue epoch is unchanged. Run:
+//! `cargo bench --bench bench_pressure`.
+
+mod common;
+
+use common::{bench, black_box};
+use kairos::engine::cost_model::{ModelClass, ModelKind};
+use kairos::engine::request::Request;
+use kairos::engine::SimBackend;
+use kairos::lb::{Fcfs, ShardKey, ShardedQueue};
+use kairos::orchestrator::ids::AgentId;
+use kairos::orchestrator::router::RoutePolicy;
+use kairos::orchestrator::AffinitySpec;
+use kairos::server::coordinator::{Coordinator, FleetSpec};
+use kairos::server::sim::make_dispatcher_tuned;
+
+/// The two experiment model families — one serving group each.
+const GROUPS: [ModelKind; 2] = [ModelKind::Llama3_8B, ModelKind::Llama2_13B];
+
+/// Pressure reads folded into one bench iteration (one read per routed
+/// submission in the coordinator, so this stands in for a burst of 1024
+/// arrivals against an otherwise-idle queue).
+const READS: usize = 1024;
+
+fn req(i: u64) -> Request {
+    Request {
+        id: i,
+        msg_id: i,
+        agent: AgentId((i % 16) as u32),
+        session: i,
+        model_class: ModelClass::Any,
+        upstream: None,
+        prompt_tokens: 64,
+        true_output_tokens: 8,
+        true_remaining_latency: 0.0,
+        remaining_stages: 1,
+        app_start: 0.0,
+        stage_arrival: i as f64 * 1e-3,
+    }
+}
+
+/// A queue spread over every group shard kind the router produces: the
+/// pinned class shard and the routed-`Any` shard of both families.
+fn filled_queue(n: usize) -> ShardedQueue {
+    let policy = Fcfs;
+    let mut q = ShardedQueue::new();
+    for i in 0..n {
+        let key = match i % 4 {
+            0 => ShardKey::Class(ModelClass::Model(ModelKind::Llama3_8B)),
+            1 => ShardKey::AnyIn(ModelKind::Llama3_8B),
+            2 => ShardKey::Class(ModelClass::Model(ModelKind::Llama2_13B)),
+            _ => ShardKey::AnyIn(ModelKind::Llama2_13B),
+        };
+        q.push_routed(req(i as u64), key, &policy);
+    }
+    q
+}
+
+/// A live coordinator whose learned router reads group pressure on every
+/// external submission (the end-to-end path the snapshot serves).
+fn coordinator(legacy: bool) -> Coordinator<SimBackend> {
+    let fleet =
+        FleetSpec::parse("6*llama3-8b@0.12,6*llama2-13b@0.12").expect("fleet spec");
+    let dispatcher = make_dispatcher_tuned("kairos", &fleet, None, None);
+    let mut c = Coordinator::sim(fleet, Box::new(Fcfs), dispatcher);
+    c.set_affinity(&AffinitySpec::parse("Pinned=llama2-13b").expect("affinity"));
+    c.set_route_policy(RoutePolicy::learned_default());
+    c.set_legacy_hot_path(legacy);
+    c
+}
+
+fn main() {
+    println!("== group-pressure depth reads ==");
+    for n in [1_000usize, 10_000] {
+        let q = filled_queue(n);
+
+        // Legacy: one shard-list walk per group per read.
+        bench(&format!("group_len_walks/queue={n}/reads={READS}"), 20, || {
+            let mut total = 0usize;
+            for _ in 0..READS {
+                for m in GROUPS {
+                    total += q.group_len(m);
+                }
+            }
+            black_box(total);
+        });
+
+        // Snapshot, epoch ignored: one full shard pass per read (the cost
+        // of a read that always finds the snapshot stale).
+        bench(&format!("snapshot_pass/queue={n}/reads={READS}"), 20, || {
+            let mut scratch = [0usize; GROUPS.len()];
+            for _ in 0..READS {
+                scratch = [0; GROUPS.len()];
+                q.for_each_group_depth(|m, d| {
+                    if let Some(i) = GROUPS.iter().position(|g| *g == m) {
+                        scratch[i] += d;
+                    }
+                });
+                black_box(&scratch);
+            }
+            black_box(scratch);
+        });
+
+        // Epoch-gated snapshot: the steady state — the queue is unchanged
+        // between reads, so all but the first read reuse the scratch.
+        bench(&format!("epoch_gated/queue={n}/reads={READS}"), 20, || {
+            let mut scratch = [0usize; GROUPS.len()];
+            let mut seen = None;
+            for _ in 0..READS {
+                let epoch = q.epoch();
+                if seen != Some(epoch) {
+                    scratch = [0; GROUPS.len()];
+                    q.for_each_group_depth(|m, d| {
+                        if let Some(i) = GROUPS.iter().position(|g| *g == m) {
+                            scratch[i] += d;
+                        }
+                    });
+                    seen = Some(epoch);
+                }
+                black_box(&scratch);
+            }
+            black_box(scratch);
+        });
+    }
+
+    // End to end: routed submissions under the learned policy, which takes
+    // a full pressure read (instance skeleton + queue depths) per call.
+    // `legacy` rescans every instance and walks shards per group; `cached`
+    // clones the instance skeleton and patches epoch-keyed depths in.
+    println!("\n== learned-router submissions (pressure read per call) ==");
+    for (label, legacy) in [("legacy", true), ("cached", false)] {
+        let mut c = coordinator(legacy);
+        let mut i = 0u64;
+        bench(&format!("submit_burst/{label}/batch=256"), 20, || {
+            for _ in 0..256 {
+                let agent = if i % 3 == 0 { "Pinned" } else { "Free" };
+                black_box(c.submit_external(agent, 64, 8, i as f64 * 1e-3));
+                i += 1;
+            }
+        });
+    }
+}

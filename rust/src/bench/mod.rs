@@ -22,6 +22,13 @@
 //!   `cache-affine` CHWBL dispatcher. The delta isolates how much of the
 //!   cache's reuse potential placement converts into hits, saved prefill
 //!   tokens and end-to-end latency.
+//! * **par** — the packing-heavy pump stream through the time-slot packer
+//!   at 1..=`--threads` pump workers
+//!   ([`Coordinator::set_pump_threads`]): the score-in-parallel /
+//!   commit-in-order dispatch round vs. the sequential reference arm.
+//!   Every worker count must produce the bit-identical dispatch and group
+//!   logs (asserted, `equal_logs`); the curve reports wall time, conflict
+//!   and re-score counts per thread count.
 //!
 //! The **baseline** arm runs [`Coordinator::set_legacy_hot_path`] `(true)`
 //! with unbounded logs and exact (vector-backed) metrics: the pre-index
@@ -33,7 +40,7 @@
 //! behavior.
 //!
 //! Results go to `BENCH_pump.json` / `BENCH_e2e.json` / `BENCH_pack.json` /
-//! `BENCH_cache.json`
+//! `BENCH_cache.json` / `BENCH_par.json`
 //! (schema documented in the README). Decision counts, drop counts and log-state bytes are
 //! seed-deterministic; wall-clock fields vary by host and carry a
 //! `provenance` block saying where they were measured. `--quick` shrinks
@@ -67,13 +74,16 @@ pub struct BenchOptions {
     /// the seed alone).
     pub seed: u64,
     /// Directory receiving `BENCH_pump.json`, `BENCH_e2e.json`,
-    /// `BENCH_pack.json` and `BENCH_cache.json`.
+    /// `BENCH_pack.json`, `BENCH_cache.json` and `BENCH_par.json`.
     pub out_dir: PathBuf,
+    /// Top of the parallel-pump scaling curve (`--threads`): the par
+    /// stage runs worker counts 1, 2, 4, … up to this value.
+    pub threads: usize,
 }
 
 impl Default for BenchOptions {
     fn default() -> Self {
-        BenchOptions { quick: false, seed: 42, out_dir: PathBuf::from(".") }
+        BenchOptions { quick: false, seed: 42, out_dir: PathBuf::from("."), threads: 4 }
     }
 }
 
@@ -321,6 +331,118 @@ fn cache_arm_json(res: &SimResult, wall: f64) -> Json {
     ])
 }
 
+/// Measured numbers of one worker count of the parallel-pump bench, plus
+/// the full decision logs for the equal-logs assert.
+#[derive(Debug, Clone)]
+struct ParArm {
+    threads: usize,
+    /// Submission + pump time only (the measured hot path).
+    hot_seconds: f64,
+    wall_seconds: f64,
+    dispatched_total: u64,
+    dropped: u64,
+    conflicts: u64,
+    rescored: u64,
+    par_rounds: u64,
+    dispatches: Vec<(crate::engine::request::RequestId, usize)>,
+    groups: Vec<crate::server::coordinator::GroupDispatch>,
+}
+
+/// One worker count of the parallel-pump bench: the pump stream through
+/// the time-slot packer on a packing-heavy mixed fleet, with model-affine
+/// shards so each pump round holds several group heads to score
+/// concurrently. `threads == 1` is the sequential reference arm.
+fn par_arm(stream: &[PumpReq], threads: usize) -> ParArm {
+    let fleet = FleetSpec::parse("10*llama3-8b@0.12,6*llama2-13b@0.12")
+        .expect("static fleet spec");
+    let disp = crate::server::sim::make_dispatcher_tuned("kairos", &fleet, None, None);
+    let mut c = Coordinator::sim(fleet, Box::new(Fcfs), disp);
+    c.set_affinity(
+        &AffinitySpec::parse("Pinned8=llama3-8b,Pinned13=llama2-13b")
+            .expect("static affinity spec"),
+    );
+    c.set_pump_threads(threads);
+    let start = Instant::now();
+    let mut hot = std::time::Duration::ZERO;
+    let mut now = 0.0_f64;
+    let mut i = 0usize;
+    while i < stream.len() {
+        let batch = (stream.len() - i).min(64);
+        let t = Instant::now();
+        for r in &stream[i..i + batch] {
+            c.submit_external(r.agent, r.prompt_tokens, r.output_tokens, now);
+            now += 1e-4;
+        }
+        c.pump(now);
+        hot += t.elapsed();
+        // Drain between batches (untimed: engine simulation is not the
+        // system under test).
+        loop {
+            let mut idle = true;
+            for j in 0..c.n_instances() {
+                if !c.engines[j].has_work() {
+                    continue;
+                }
+                idle = false;
+                let out = c.step_engine(j, now);
+                now += out.duration.max(1e-6);
+                c.absorb(j, out, now);
+            }
+            let t = Instant::now();
+            c.pump(now);
+            hot += t.elapsed();
+            if idle {
+                break;
+            }
+        }
+        i += batch;
+    }
+    let stats = c.dispatch_stats();
+    ParArm {
+        threads,
+        hot_seconds: hot.as_secs_f64(),
+        wall_seconds: start.elapsed().as_secs_f64(),
+        dispatched_total: c.dispatch_log.total(),
+        dropped: c.dropped,
+        conflicts: stats.conflicts,
+        rescored: stats.rescored,
+        par_rounds: stats.par_rounds,
+        dispatches: c.dispatch_log.take_vec(),
+        groups: c.group_log.take_vec(),
+    }
+}
+
+/// One row of the `BENCH_par.json` scaling curve. `speedup` is this worker
+/// count's pump throughput over the sequential (1-thread) arm's.
+fn par_arm_json(n: usize, a: &ParArm, baseline_hot: f64) -> Json {
+    Json::obj(vec![
+        ("threads", Json::from(a.threads)),
+        ("hot_seconds", Json::from(a.hot_seconds)),
+        ("wall_seconds", Json::from(a.wall_seconds)),
+        ("req_per_sec", Json::from(n as f64 / a.hot_seconds.max(1e-12))),
+        ("speedup", Json::from(baseline_hot / a.hot_seconds.max(1e-12))),
+        ("dispatched_total", Json::from(a.dispatched_total as f64)),
+        ("dropped", Json::from(a.dropped as f64)),
+        ("conflicts", Json::from(a.conflicts as f64)),
+        ("rescored", Json::from(a.rescored as f64)),
+        ("par_rounds", Json::from(a.par_rounds as f64)),
+    ])
+}
+
+/// The worker counts of the scaling curve: 1, then doubling up to `top`.
+fn par_thread_counts(top: usize) -> Vec<usize> {
+    let mut counts = vec![1];
+    let mut t = 2;
+    while t < top {
+        counts.push(t);
+        t *= 2;
+    }
+    if top > 1 {
+        counts.push(top);
+    }
+    counts
+}
+
 fn provenance(seed: u64, mode: &str) -> Json {
     // kairos-lint: allow(no-env-fs, provenance block records the measuring host; never feeds results)
     let host = if std::env::var_os("CI").is_some() { "ci" } else { "local" };
@@ -337,8 +459,9 @@ fn write_json(path: &std::path::Path, j: &Json) -> crate::Result<()> {
     Ok(())
 }
 
-/// Run all three benchmarks and write `BENCH_pump.json` / `BENCH_e2e.json`
-/// / `BENCH_pack.json`.
+/// Run all five benchmark stages and write `BENCH_pump.json`,
+/// `BENCH_e2e.json`, `BENCH_pack.json`, `BENCH_cache.json` and
+/// `BENCH_par.json`.
 pub fn run(opts: &BenchOptions) -> crate::Result<()> {
     // kairos-lint: allow(no-env-fs, result emission is the bench harness's contract; path comes from --out-dir)
     std::fs::create_dir_all(&opts.out_dir)?;
@@ -351,11 +474,13 @@ pub fn run(opts: &BenchOptions) -> crate::Result<()> {
     let (pack_tasks, pack_rate) = if opts.quick { (3_000, 16.0) } else { (200_000, 16.0) };
     let (cache_tasks, cache_rate, cache_sessions) =
         if opts.quick { (2_500, 10.0, 24) } else { (120_000, 10.0, 96) };
+    let par_n = if opts.quick { 8_000 } else { 400_000 };
 
     println!(
         "bench ({mode}): pump {pump_n} requests, e2e {e2e_tasks} tasks, \
-         pack {pack_tasks} tasks, cache {cache_tasks} tasks, seed {}",
-        opts.seed
+         pack {pack_tasks} tasks, cache {cache_tasks} tasks, par {par_n} requests \
+         (1..={} threads), seed {}",
+        opts.threads, opts.seed
     );
 
     // --- pump microbench -------------------------------------------------
@@ -545,12 +670,71 @@ pub fn run(opts: &BenchOptions) -> crate::Result<()> {
         blind_res.mean_request_e2e(),
         affine_res.mean_request_e2e(),
     );
+    // --- parallel-pump benchmark -----------------------------------------
+    let par_stream = pump_stream(par_n, opts.seed);
+    let counts = par_thread_counts(opts.threads);
+    let mut arms: Vec<ParArm> = Vec::new();
+    for &t in &counts {
+        arms.push(par_arm(&par_stream, t));
+    }
+    // Determinism is the contract: every worker count replays the
+    // sequential arm's decisions bit for bit.
+    let base_arm = &arms[0];
+    for a in &arms[1..] {
+        assert_eq!(
+            base_arm.dispatches, a.dispatches,
+            "parallel pump diverged from the sequential arm at {} threads",
+            a.threads
+        );
+        assert_eq!(
+            base_arm.groups, a.groups,
+            "parallel pump group log diverged at {} threads",
+            a.threads
+        );
+        assert_eq!(base_arm.dropped, a.dropped);
+    }
+    let base_hot = base_arm.hot_seconds;
+    let top = match arms.last() {
+        Some(a) => a,
+        None => unreachable!("par_thread_counts always yields at least one count"),
+    };
+    let par_speedup = base_hot / top.hot_seconds.max(1e-12);
+    let par_json = Json::obj(vec![
+        ("schema", Json::from("kairos-bench-par/v1")),
+        ("mode", Json::from(mode)),
+        ("requests", Json::from(par_n)),
+        ("fleet", Json::from("10*llama3-8b@0.12,6*llama2-13b@0.12")),
+        ("provenance", provenance(opts.seed, mode)),
+        ("baseline", par_arm_json(par_n, base_arm, base_hot)),
+        (
+            "curve",
+            Json::Arr(
+                arms.iter().map(|a| par_arm_json(par_n, a, base_hot)).collect(),
+            ),
+        ),
+        ("equal_logs", Json::from(true)),
+        ("speedup", Json::from(par_speedup)),
+    ]);
+    let par_path = opts.out_dir.join("BENCH_par.json");
+    write_json(&par_path, &par_json)?;
     println!(
-        "wrote {}, {}, {} and {}",
+        "par:  sequential {:.0} req/s, {} threads {:.0} req/s ({par_speedup:.2}x); \
+         {} conflicts, {} rescored, {} rounds; logs identical across {:?} threads",
+        par_n as f64 / base_hot.max(1e-12),
+        top.threads,
+        par_n as f64 / top.hot_seconds.max(1e-12),
+        top.conflicts,
+        top.rescored,
+        top.par_rounds,
+        counts,
+    );
+    println!(
+        "wrote {}, {}, {}, {} and {}",
         pump_path.display(),
         e2e_path.display(),
         pack_path.display(),
-        cache_path.display()
+        cache_path.display(),
+        par_path.display()
     );
     Ok(())
 }
@@ -621,6 +805,37 @@ mod tests {
         // The cache-blind packer records no sticky decisions.
         assert_eq!(blind.metrics.stream.packer.sticky_hits, 0);
         assert_eq!(blind.metrics.stream.packer.sticky_fallbacks, 0);
+    }
+
+    #[test]
+    fn par_arms_agree_at_every_thread_count() {
+        let stream = pump_stream(400, 13);
+        let base = par_arm(&stream, 1);
+        assert!(base.dispatched_total > 0);
+        assert_eq!(
+            (base.conflicts, base.rescored, base.par_rounds),
+            (0, 0, 0),
+            "the 1-thread arm must take the sequential path"
+        );
+        for threads in [2usize, 4] {
+            let par = par_arm(&stream, threads);
+            assert_eq!(base.dispatches, par.dispatches, "{threads} threads");
+            assert_eq!(base.groups, par.groups, "{threads} threads");
+            assert_eq!(base.dropped, par.dropped, "{threads} threads");
+            assert!(
+                par.par_rounds > 0,
+                "threaded arm never fanned a scoring round out"
+            );
+        }
+    }
+
+    #[test]
+    fn par_thread_counts_cover_one_to_top() {
+        assert_eq!(par_thread_counts(1), vec![1]);
+        assert_eq!(par_thread_counts(2), vec![1, 2]);
+        assert_eq!(par_thread_counts(4), vec![1, 2, 4]);
+        assert_eq!(par_thread_counts(6), vec![1, 2, 4, 6]);
+        assert_eq!(par_thread_counts(8), vec![1, 2, 4, 8]);
     }
 
     #[test]

@@ -136,6 +136,7 @@ USAGE:
                      [--route-policy pinned|learned[:KEY=VAL,...]]
                      [--trace FILE] [--burst-shape B] [--profile-half-life S]
                      [--cache] [--cache-budget N] [--cache-load-factor F]
+                     [--threads N]
   kairos fleet-sweep [--fleet SPEC] [--scheduler S] [--rate R] [--tasks N]
                      [--seed S] [--workload W] [--trace FILE]
   kairos elastic-sweep
@@ -166,7 +167,7 @@ USAGE:
                      [--cache-budget N] [--cache-load-factor F]
   kairos figures     <table1|fig3..fig18|overhead|all> [--out results]
   kairos quickstart  [--artifacts artifacts] [--model tiny]
-  kairos bench       [--quick] [--seed S] [--out DIR]
+  kairos bench       [--quick] [--seed S] [--out DIR] [--threads N]
 
 TRACE FILES — JSONL, one arrival record per line (see the TraceRecord
   rustdoc for the schema). Every sweep arm replays the SAME materialized
@@ -198,12 +199,15 @@ ROUTE POLICY — `pinned` (the static affinity stamp) or
 BENCH — seeded speed runs of the serving hot path: a pump microbench
   (submit→pump→drain of external requests), a full simulated run, a
   packing-heavy run isolating the time-slot packer's candidate scoring
-  (naive linear scans vs the max-tree fast paths), and a session-heavy
-  run comparing cache-blind vs cache-affine placement on one trace, each
-  as an in-binary A/B with an agreement check. Writes `BENCH_pump.json`,
-  `BENCH_e2e.json`, `BENCH_pack.json` and `BENCH_cache.json` to `--out`
-  (default `.`); `--quick` shrinks all runs to CI-smoke size. Decision
-  counts are seed-deterministic; wall-clock fields vary by host.
+  (naive linear scans vs the max-tree fast paths), a session-heavy
+  run comparing cache-blind vs cache-affine placement on one trace, and
+  a parallel-pump run scaling the score-in-parallel dispatch round from
+  1 to `--threads` workers (asserting bit-identical dispatch logs at
+  every count), each as an in-binary A/B with an agreement check.
+  Writes `BENCH_pump.json`, `BENCH_e2e.json`, `BENCH_pack.json`,
+  `BENCH_cache.json` and `BENCH_par.json` to `--out` (default `.`);
+  `--quick` shrinks all runs to CI-smoke size. Decision counts are
+  seed-deterministic; wall-clock fields vary by host.
 
 CACHE — `--cache` (or `[cache] enabled = true`) gives every instance a
   deterministic LRU prefix cache of `--cache-budget` KV blocks keyed by
@@ -521,6 +525,7 @@ fn serve(args: &Args) -> crate::Result<()> {
         legacy_hot_path: false,
         legacy_scoring: false,
         cache: cfg.cache,
+        threads: num_count(args, "threads", 1)?,
     };
     let affine = fc.affinity.is_some() || matches!(fc.route, Some(RoutePolicy::Learned { .. }));
     let res = run_fleet(fc, &cfg.scheduler, &cfg.dispatcher, arrivals);
@@ -1200,6 +1205,7 @@ fn bench_cmd(args: &Args) -> crate::Result<()> {
         quick: args.bool_flag("quick").map_err(|e| anyhow::anyhow!(e))?,
         seed: num_u64(args, "seed", 42)?,
         out_dir: std::path::PathBuf::from(args.get("out").unwrap_or(".")),
+        threads: num_count(args, "threads", 4)?,
     };
     crate::bench::run(&opts)
 }

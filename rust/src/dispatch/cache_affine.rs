@@ -17,7 +17,7 @@
 //! [`crate::metrics::hll::mix64`] vnode hashes, ties sort by instance
 //! index, and loads are integer in-flight counts.
 
-use super::{DispatchPolicy, DispatchStats};
+use super::{DispatchPolicy, DispatchStats, ScoreScope, Scored};
 use crate::engine::core::InstanceStatus;
 use crate::engine::request::{Request, RequestId};
 use crate::metrics::hll::mix64;
@@ -242,8 +242,81 @@ impl DispatchPolicy for CacheAffine {
         self.inner.choose_among(req, statuses, candidates, now)
     }
 
+    fn supports_parallel(&self) -> bool {
+        self.inner.supports_parallel()
+    }
+
+    fn score_scope(&self) -> ScoreScope {
+        // Every sticky score reads the CHWBL load vector and every
+        // dispatch (to any instance) mutates it, so no score survives a
+        // commit regardless of the inner policy's scope.
+        ScoreScope::Global
+    }
+
+    fn begin_round(&mut self, statuses: &[InstanceStatus], now: Time) {
+        self.inner.begin_round(statuses, now);
+    }
+
+    fn score(
+        &self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        candidates: Option<&[usize]>,
+        now: Time,
+    ) -> Scored {
+        // `Chwbl::pick` is already a pure read; mirror both choose paths'
+        // eligibility closures exactly.
+        let sticky = match candidates {
+            Some(c) => self.chwbl.pick(req.session, |j| {
+                c.binary_search(&j).is_ok()
+                    && statuses
+                        .get(j)
+                        .is_some_and(|s| s.accepting && req.model_class.matches(s.model))
+            }),
+            None => self.chwbl.pick(req.session, |j| {
+                statuses
+                    .get(j)
+                    .is_some_and(|s| s.accepting && req.model_class.matches(s.model))
+            }),
+        };
+        if let Some(j) = sticky {
+            let detail = DispatchStats { sticky_hits: 1, ..DispatchStats::default() };
+            return Scored { pick: Some(j), detail };
+        }
+        let mut scored = self.inner.score(req, statuses, candidates, now);
+        scored.detail.sticky_fallbacks += 1;
+        scored
+    }
+
+    fn commit_score(
+        &mut self,
+        req: &Request,
+        scored: &Scored,
+        statuses: &[InstanceStatus],
+        now: Time,
+    ) {
+        if scored.detail.sticky_hits > 0 {
+            // Sticky decisions never reach the inner scorer.
+            self.sticky_hits += scored.detail.sticky_hits;
+        } else {
+            self.sticky_fallbacks += 1;
+            self.inner.commit_score(req, scored, statuses, now);
+        }
+    }
+
     fn set_legacy_scoring(&mut self, legacy: bool) {
         self.inner.set_legacy_scoring(legacy);
+    }
+
+    fn state_fingerprint(&self) -> u64 {
+        // The CHWBL in-flight loads are the sticky layer's mutable
+        // decision state; the inner policy contributes its own digest.
+        let mut h = self.inner.state_fingerprint() ^ 0xcbf2_9ce4_8422_2325;
+        for &l in self.chwbl.loads() {
+            h ^= l;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
     }
 
     fn stats(&self) -> DispatchStats {

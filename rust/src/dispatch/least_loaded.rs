@@ -3,7 +3,7 @@
 //! temporally blind — no ramp model, no future slots. Isolates the value of
 //! Kairos' time-dimension (DESIGN.md ablation benches).
 
-use super::DispatchPolicy;
+use super::{DispatchPolicy, ScoreScope, Scored};
 use crate::engine::core::InstanceStatus;
 use crate::engine::request::Request;
 use crate::Time;
@@ -53,6 +53,43 @@ impl DispatchPolicy for LeastLoaded {
             .filter(|(_, s)| s.accepting && req.model_class.matches(s.model))
             .min_by_key(|(_, s)| s.committed_tokens + s.n_waiting as u64 * 256)
             .map(|(i, _)| i)
+    }
+
+    fn supports_parallel(&self) -> bool {
+        true
+    }
+
+    fn score_scope(&self) -> ScoreScope {
+        // The load key reads only the candidate's own status entry.
+        ScoreScope::Slots
+    }
+
+    fn score(
+        &self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        candidates: Option<&[usize]>,
+        _now: Time,
+    ) -> Scored {
+        // Stateless policy: the pure score IS the choose body. `min_by_key`
+        // keeps the first minimal element and both iteration orders are
+        // ascending, so ties break exactly as the mutable paths'.
+        let pick = match candidates {
+            Some(c) => c
+                .iter()
+                .copied()
+                .filter_map(|i| statuses.get(i).map(|s| (i, s)))
+                .filter(|(_, s)| s.accepting && req.model_class.matches(s.model))
+                .min_by_key(|(_, s)| s.committed_tokens + s.n_waiting as u64 * 256)
+                .map(|(i, _)| i),
+            None => statuses
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.accepting && req.model_class.matches(s.model))
+                .min_by_key(|(_, s)| s.committed_tokens + s.n_waiting as u64 * 256)
+                .map(|(i, _)| i),
+        };
+        Scored { pick, detail: Default::default() }
     }
 }
 

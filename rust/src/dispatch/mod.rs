@@ -56,10 +56,56 @@ pub struct DispatchStats {
     /// Session-sticky picks refused (overloaded, non-accepting, or
     /// model-incompatible ring target) that fell back to the inner scorer.
     pub sticky_fallbacks: u64,
+    /// Parallel pump only: cached scores invalidated because an earlier
+    /// commit mutated an instance slot the score had read (optimistic
+    /// concurrency conflicts detected on the per-slot version counters).
+    pub conflicts: u64,
+    /// Parallel pump only: heads whose stale score was recomputed after a
+    /// conflict. Always ≤ `conflicts` + the number of scoring rounds.
+    pub rescored: u64,
+    /// Parallel pump only: scoring rounds fanned out to the scoped worker
+    /// pool (zero on the sequential arm).
+    pub par_rounds: u64,
+}
+
+/// What instance state a policy's pure [`DispatchPolicy::score`] reads —
+/// the parallel pump's conflict-detection granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoreScope {
+    /// The score depends only on per-instance state of the candidate slots
+    /// it was offered (plus immutable config): a commit to instance `j`
+    /// invalidates only cached scores whose candidate set contains `j`,
+    /// so cross-family scores survive and commit without re-scoring.
+    Slots,
+    /// The score reads policy-global mutable state (a rotation cursor,
+    /// CHWBL loads, a session-prefix expectation): every commit
+    /// invalidates every cached score.
+    Global,
+}
+
+/// A pure scoring outcome: the pick [`DispatchPolicy::choose_among`] would
+/// have made, plus the [`DispatchStats`] delta it would have folded into
+/// the policy's counters. The delta is applied only when the score is
+/// actually used ([`DispatchPolicy::commit_score`]) — discarded scores
+/// (e.g. for requests the coordinator drops before consulting the
+/// dispatcher) leave the counters exactly as the sequential arm would.
+#[derive(Debug, Clone, Default)]
+pub struct Scored {
+    /// The instance the policy would place the request on, or `None` to
+    /// keep it queued for the next round.
+    pub pick: Option<usize>,
+    /// Counter delta of this one decision (not yet folded into
+    /// [`DispatchPolicy::stats`]).
+    pub detail: DispatchStats,
 }
 
 /// Picks the target instance for each scheduled request.
-pub trait DispatchPolicy: Send {
+///
+/// `Sync` is part of the contract because the parallel pump scores heads
+/// concurrently through shared references ([`DispatchPolicy::score`] takes
+/// `&self`); every policy in the tree holds only owned containers and
+/// scalars, so the bound is automatic.
+pub trait DispatchPolicy: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Choose an instance for `req`, or `None` to keep it queued for the
@@ -100,6 +146,78 @@ pub trait DispatchPolicy: Send {
     ) -> Option<usize> {
         let _ = candidates;
         self.choose(req, statuses, now)
+    }
+
+    /// Whether the policy implements the pure [`DispatchPolicy::score`] /
+    /// [`DispatchPolicy::commit_score`] split faithfully enough for the
+    /// coordinator's parallel pump. `false` (the default) makes the
+    /// coordinator fall back to the sequential pump regardless of its
+    /// thread setting, so a policy without the split can never diverge.
+    fn supports_parallel(&self) -> bool {
+        false
+    }
+
+    /// Conflict-detection granularity of [`DispatchPolicy::score`] (see
+    /// [`ScoreScope`]). Only consulted when
+    /// [`DispatchPolicy::supports_parallel`] is true. Defaults to the
+    /// always-safe [`ScoreScope::Global`].
+    fn score_scope(&self) -> ScoreScope {
+        ScoreScope::Global
+    }
+
+    /// Hoisted per-pump mutations of the scoring path, called once by the
+    /// parallel pump before its first scoring round (at the same `now`
+    /// every score of the pump will see): defensive instance-state
+    /// resizing, ring-window advancement — anything
+    /// [`DispatchPolicy::choose_among`] does to `&mut self` that is
+    /// idempotent at fixed `now` and independent of the request. After
+    /// this call, [`DispatchPolicy::score`] at the same `now` must equal
+    /// [`DispatchPolicy::choose_among`]'s decision bit-for-bit.
+    fn begin_round(&mut self, _statuses: &[InstanceStatus], _now: Time) {}
+
+    /// Pure-read scoring: the decision [`DispatchPolicy::choose_among`]
+    /// (`candidates = Some`) or [`DispatchPolicy::choose`] (`None`) would
+    /// make, without mutating the policy. Requires a prior
+    /// [`DispatchPolicy::begin_round`] at the same `now`. The returned
+    /// [`Scored::detail`] carries this decision's counter delta; it is
+    /// folded only via [`DispatchPolicy::commit_score`]. The default is a
+    /// refusal (`pick: None`, zero detail) — correct only for policies
+    /// that also leave [`DispatchPolicy::supports_parallel`] false, since
+    /// the coordinator never scores through such a policy.
+    fn score(
+        &self,
+        _req: &Request,
+        _statuses: &[InstanceStatus],
+        _candidates: Option<&[usize]>,
+        _now: Time,
+    ) -> Scored {
+        Scored::default()
+    }
+
+    /// Fold a used score into the policy's mutable state, exactly as the
+    /// [`DispatchPolicy::choose_among`] call that produced the same
+    /// decision would have: bump the stats counters by [`Scored::detail`]
+    /// and apply any decision-coupled state change (a rotation cursor
+    /// advance, a sticky-hit tally). Engine-side bookkeeping still flows
+    /// through [`DispatchPolicy::on_dispatch`] afterwards, unchanged.
+    fn commit_score(
+        &mut self,
+        _req: &Request,
+        _scored: &Scored,
+        _statuses: &[InstanceStatus],
+        _now: Time,
+    ) {
+    }
+
+    /// A deterministic digest of the policy's mutable decision state —
+    /// ring windows, cursors, per-instance demand — independent of how the
+    /// state was reached (rotation-invariant where the representation is).
+    /// The parallel-pump equivalence tests assert it bit-identical across
+    /// thread counts next to the decision logs: equal logs with unequal
+    /// internal state would still diverge on FUTURE decisions, and this
+    /// surface catches that. Stateless policies return the 0 default.
+    fn state_fingerprint(&self) -> u64 {
+        0
     }
 
     /// A/B switch for the scoring arms (same pattern as the coordinator's

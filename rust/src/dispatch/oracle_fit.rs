@@ -5,7 +5,7 @@
 
 use std::collections::HashMap;
 
-use super::DispatchPolicy;
+use super::{DispatchPolicy, ScoreScope, Scored};
 use crate::engine::core::InstanceStatus;
 use crate::engine::request::{Request, RequestId};
 use crate::Time;
@@ -79,6 +79,69 @@ impl DispatchPolicy for OracleFit {
             })
             .min_by_key(|(i, _)| self.outstanding[*i] + demand)
             .map(|(i, _)| i)
+    }
+
+    fn supports_parallel(&self) -> bool {
+        true
+    }
+
+    fn score_scope(&self) -> ScoreScope {
+        // Feasibility and the peak key read only `outstanding[candidate]`
+        // and the candidate's own status; a commit to instance j mutates
+        // only `outstanding[j]` (via on_dispatch).
+        ScoreScope::Slots
+    }
+
+    fn begin_round(&mut self, statuses: &[InstanceStatus], _now: Time) {
+        // Hoist the defensive resize the choose paths perform, so `score`
+        // can stay a pure read.
+        if self.outstanding.len() != statuses.len() {
+            self.outstanding.resize(statuses.len(), 0);
+        }
+    }
+
+    fn score(
+        &self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        candidates: Option<&[usize]>,
+        _now: Time,
+    ) -> Scored {
+        let demand = req.total_tokens() as u64;
+        let load = |i: usize| self.outstanding.get(i).copied().unwrap_or(0);
+        let feasible = |i: &usize, s: &&InstanceStatus| {
+            s.accepting
+                && req.model_class.matches(s.model)
+                && load(*i) + demand <= s.capacity_tokens
+        };
+        let pick = match candidates {
+            Some(c) => c
+                .iter()
+                .copied()
+                .filter_map(|i| statuses.get(i).map(|s| (i, s)))
+                .filter(|(i, s)| feasible(i, s))
+                .min_by_key(|(i, _)| load(*i) + demand)
+                .map(|(i, _)| i),
+            None => statuses
+                .iter()
+                .enumerate()
+                .filter(|(i, s)| feasible(i, s))
+                .min_by_key(|(i, _)| load(*i) + demand)
+                .map(|(i, _)| i),
+        };
+        Scored { pick, detail: Default::default() }
+    }
+
+    fn state_fingerprint(&self) -> u64 {
+        // FNV-1a over the per-instance outstanding demand — the only state
+        // the scoring reads. (`placed` is derived from the same dispatch
+        // sequence, so equal logs imply it is equal too.)
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &o in &self.outstanding {
+            h ^= o;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
     }
 
     fn on_dispatch(&mut self, req: &Request, instance: usize, _now: Time) {

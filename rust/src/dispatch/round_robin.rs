@@ -1,7 +1,7 @@
 //! Round-Robin dispatching — the baseline both Parrot and Ayo use
 //! (paper §2.2.3): blind to memory demand and instance state.
 
-use super::DispatchPolicy;
+use super::{DispatchPolicy, Scored};
 use crate::engine::core::InstanceStatus;
 use crate::engine::request::Request;
 use crate::Time;
@@ -78,6 +78,73 @@ impl DispatchPolicy for RoundRobin {
         let (_, pick) = best?;
         self.next = (pick + 1) % n;
         Some(pick)
+    }
+
+    fn supports_parallel(&self) -> bool {
+        true
+    }
+
+    // score_scope stays the default Global: every score reads the cursor
+    // and every committed pick advances it, so a commit invalidates all
+    // outstanding scores. The parallel pump then re-scores — cheap here —
+    // and stays bit-identical to the rotation.
+
+    fn score(
+        &self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        candidates: Option<&[usize]>,
+        _now: Time,
+    ) -> Scored {
+        let n = statuses.len();
+        let mut best: Option<(usize, usize)> = None; // (rank, instance)
+        if n > 0 {
+            // The full scan takes the first eligible instance in cyclic
+            // order from the cursor — exactly the minimal cyclic rank, so
+            // one rank-minimization mirrors both choose paths (ranks are
+            // distinct per instance; candidate order cannot matter).
+            let upper = candidates.map_or(n, <[usize]>::len);
+            for k in 0..upper {
+                let j = match candidates {
+                    Some(c) => c[k],
+                    None => k,
+                };
+                if j >= n {
+                    continue;
+                }
+                let s = &statuses[j];
+                if !(s.accepting && req.model_class.matches(s.model)) {
+                    continue;
+                }
+                let rank = (j + n - self.next % n) % n;
+                if best.map(|(r, _)| rank < r).unwrap_or(true) {
+                    best = Some((rank, j));
+                }
+            }
+        }
+        Scored { pick: best.map(|(_, j)| j), detail: Default::default() }
+    }
+
+    fn state_fingerprint(&self) -> u64 {
+        // The cursor IS the mutable decision state.
+        self.next as u64
+    }
+
+    fn commit_score(
+        &mut self,
+        _req: &Request,
+        scored: &Scored,
+        statuses: &[InstanceStatus],
+        _now: Time,
+    ) {
+        // The decision-coupled mutation of both choose paths: advance the
+        // cursor past the pick. A refusal leaves the cursor untouched.
+        if let Some(pick) = scored.pick {
+            let n = statuses.len();
+            if n > 0 {
+                self.next = (pick + 1) % n;
+            }
+        }
     }
 }
 

@@ -37,7 +37,7 @@
 
 use std::collections::HashMap;
 
-use super::{DispatchPolicy, DispatchStats};
+use super::{DispatchPolicy, DispatchStats, ScoreScope, Scored};
 use crate::engine::core::InstanceStatus;
 use crate::engine::cost_model::{CostModel, ModelKind};
 use crate::engine::request::{Request, RequestId};
@@ -836,8 +836,171 @@ impl DispatchPolicy for TimeSlotDispatcher {
         self.choose_filtered(req, statuses, now, Some(candidates))
     }
 
+    fn supports_parallel(&self) -> bool {
+        true
+    }
+
+    fn score_scope(&self) -> ScoreScope {
+        if self.cfg.cache_aware {
+            // Cache-aware pricing reads the policy-global session-prefix
+            // expectation, which every dispatch may move: no score
+            // survives a commit.
+            ScoreScope::Global
+        } else {
+            // Scoring instance j reads rings[j], costs[j],
+            // suspended_until[j] and j's status entry; on_dispatch to j'
+            // mutates only slot j' state. Cross-family scores survive.
+            ScoreScope::Slots
+        }
+    }
+
+    fn begin_round(&mut self, statuses: &[InstanceStatus], now: Time) {
+        // The two &mut self preambles of `choose_filtered`, hoisted: the
+        // defensive fleet resize and the every-ring window advance. Both
+        // are idempotent at fixed `now`, so the sequential arm's
+        // per-decision advances and this one per-pump advance leave
+        // identical ring state.
+        if statuses.len() != self.rings.len() {
+            self.on_fleet_change(statuses);
+        }
+        let cur = self.abs_slot(now);
+        for ring in self.rings.iter_mut() {
+            ring.advance_to(cur);
+        }
+    }
+
+    fn score(
+        &self,
+        req: &Request,
+        statuses: &[InstanceStatus],
+        candidates: Option<&[usize]>,
+        now: Time,
+    ) -> Scored {
+        // Pure mirror of `choose_filtered` (same candidate order, same
+        // strict-`<` first-wins tie-break, same legacy/max-tree arms, same
+        // shared-ramp precompute), with the counter bumps collected into
+        // the detail delta and the ramp scratch kept local. Requires
+        // `begin_round` at the same `now` (rings sized and advanced).
+        let mut detail = DispatchStats::default();
+        let t_i = self.expected_time(req);
+        let eff_prompt = self.expected_prefill_tokens(req);
+        let start = now;
+        let end = now + t_i;
+        let s0 = self.abs_slot(start);
+        let s1 = self.abs_slot(end) + 1;
+        detail.decisions += 1;
+        let n = self.rings.len();
+        let mut scratch: Vec<RampPre> = Vec::new();
+        let mut scratch_used = 0usize;
+        let mut best: Option<(usize, f64)> = None;
+        let upper = candidates.map_or(n, <[usize]>::len);
+        for k in 0..upper {
+            let j = match candidates {
+                Some(c) => c[k],
+                None => k,
+            };
+            if j >= n {
+                continue; // stale candidate set across a fleet shrink
+            }
+            detail.candidates += 1;
+            let Some(st) = statuses.get(j) else { continue };
+            if !st.accepting {
+                continue;
+            }
+            if !req.model_class.matches(st.model) {
+                continue;
+            }
+            if now < self.suspended_until[j] {
+                continue;
+            }
+            let cost = self.costs[j];
+            let expected_tokens = self.expected_demand_tokens(req, cost, t_i);
+            if st.committed_tokens + st.waiting_tokens + expected_tokens
+                > st.capacity_tokens
+            {
+                continue;
+            }
+            let capacity = self.capacity_of(j, Some(st));
+            detail.evaluated += 1;
+            let peak = if self.legacy_scoring {
+                self.evaluate_legacy(j, eff_prompt, t_i, now, capacity)
+            } else {
+                let pi = Self::ramp_pre(
+                    &self.cfg,
+                    &mut scratch,
+                    &mut scratch_used,
+                    cost,
+                    eff_prompt,
+                    start,
+                    end,
+                    s0,
+                    s1,
+                );
+                let (peak, path) = self.evaluate_fast(j, &scratch[pi], s0, s1, capacity);
+                match path {
+                    EvalPath::FastAccept => detail.fast_accepted += 1,
+                    EvalPath::FastReject => detail.fast_rejected += 1,
+                    EvalPath::Exact => {}
+                }
+                peak
+            };
+            if let Some(peak) = peak {
+                if best.map(|(_, p)| peak < p).unwrap_or(true) {
+                    best = Some((j, peak));
+                }
+            }
+        }
+        if best.is_none() {
+            detail.rejected_rounds += 1;
+        }
+        Scored { pick: best.map(|(j, _)| j), detail }
+    }
+
+    fn commit_score(
+        &mut self,
+        _req: &Request,
+        scored: &Scored,
+        _statuses: &[InstanceStatus],
+        _now: Time,
+    ) {
+        // Fold the decision's counter delta exactly where choose_filtered
+        // bumps its own counters. (The ring/placement mutation of an
+        // accepted pick still arrives through `on_dispatch`.)
+        let d = &scored.detail;
+        self.stats.decisions += d.decisions;
+        self.stats.candidates += d.candidates;
+        self.stats.evaluated += d.evaluated;
+        self.stats.fast_accepted += d.fast_accepted;
+        self.stats.fast_rejected += d.fast_rejected;
+        self.rejected_rounds += d.rejected_rounds;
+    }
+
     fn set_legacy_scoring(&mut self, legacy: bool) {
         self.legacy_scoring = legacy;
+    }
+
+    fn state_fingerprint(&self) -> u64 {
+        // FNV-1a over the semantic ring contents — absolute slot → load
+        // bits, read through `get` so the digest is invariant to the
+        // circular buffer's internal rotation — plus every window base and
+        // the per-instance suspensions. These are the "ring bits" the
+        // parallel pump must keep bit-identical to the sequential arm at
+        // every thread count.
+        fn fold(h: &mut u64, v: u64) {
+            *h ^= v;
+            *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for ring in &self.rings {
+            fold(&mut h, ring.base_slot as u64);
+            for i in 0..ring.len as i64 {
+                fold(&mut h, ring.get(ring.base_slot + i).to_bits());
+            }
+        }
+        for &t in &self.suspended_until {
+            fold(&mut h, t.to_bits());
+        }
+        h
     }
 
     fn stats(&self) -> DispatchStats {

@@ -49,6 +49,10 @@ pub struct ShardedQueue {
     shards: Vec<(ShardKey, RequestQueue)>,
     /// Global insertion sequence shared by all shards.
     next_seq: u64,
+    /// Bumped on every depth-changing operation (push or pop). Consumers
+    /// that derive state from shard depths (the coordinator's group
+    /// pressures) key their caches on this instead of re-walking shards.
+    epoch: u64,
     /// Peak total occupancy across shards (diagnostics).
     pub peak_len: usize,
 }
@@ -66,8 +70,16 @@ impl ShardedQueue {
         ShardedQueue {
             shards: vec![(ShardKey::Class(ModelClass::Any), RequestQueue::new())],
             next_seq: 0,
+            epoch: 0,
             peak_len: 0,
         }
+    }
+
+    /// Monotone counter that moves whenever any shard's depth does.
+    /// Unchanged epoch ⇒ every `group_len`/`for_each_group_depth` result
+    /// is unchanged too.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// Index of the shard for `key`, creating it if absent.
@@ -91,6 +103,7 @@ impl ShardedQueue {
         let i = self.ensure_shard(key);
         let seq = self.next_seq;
         self.next_seq += 1;
+        self.epoch += 1;
         self.shards[i].1.push_with_seq(req, policy, seq);
         self.peak_len = self.peak_len.max(self.len());
     }
@@ -135,7 +148,27 @@ impl ShardedQueue {
 
     /// Remove and return shard `i`'s highest-priority request.
     pub fn pop_shard(&mut self, shard: usize) -> Option<Request> {
-        self.shards[shard].1.pop_best()
+        let popped = self.shards[shard].1.pop_best();
+        if popped.is_some() {
+            self.epoch += 1;
+        }
+        popped
+    }
+
+    /// Visit every shard that belongs to a model family's serving group —
+    /// `Class(Model(m))` and `AnyIn(m)` both map to `m` — with its depth,
+    /// in shard creation order. One pass over the shards replaces G
+    /// separate [`Self::group_len`] walks (each of which scans all shards);
+    /// callers sum the per-shard depths they receive for the same family.
+    pub fn for_each_group_depth(&self, mut f: impl FnMut(ModelKind, usize)) {
+        for (key, q) in &self.shards {
+            match key {
+                ShardKey::Class(ModelClass::Model(m)) | ShardKey::AnyIn(m) => {
+                    f(*m, q.len());
+                }
+                ShardKey::Class(ModelClass::Any) => {}
+            }
+        }
     }
 
     /// The shard whose head ranks first globally, skipping shards marked
@@ -298,6 +331,44 @@ mod tests {
         assert_eq!(q.peek_shard(shard).unwrap().id, 1, "FCFS keys");
         q.resort(&Oracle);
         assert_eq!(q.peek_shard(shard).unwrap().id, 2, "re-keyed to SRTF");
+    }
+
+    #[test]
+    fn epoch_moves_exactly_with_depth() {
+        let mut q = ShardedQueue::new();
+        let e0 = q.epoch();
+        q.push(req(1, 0.0, M8), &Fcfs);
+        assert!(q.epoch() > e0, "push bumps");
+        let e1 = q.epoch();
+        q.resort(&Fcfs);
+        assert_eq!(q.epoch(), e1, "resort leaves depths alone");
+        let s = q.best_shard(&vec![false; q.n_shards()]).unwrap();
+        assert!(q.pop_shard(s).is_some());
+        assert!(q.epoch() > e1, "pop bumps");
+        let e2 = q.epoch();
+        assert!(q.pop_shard(s).is_none());
+        assert_eq!(q.epoch(), e2, "empty pop is depth-neutral");
+    }
+
+    #[test]
+    fn group_depth_visitor_matches_group_len() {
+        let mut q = ShardedQueue::new();
+        q.push(req(1, 0.0, ModelClass::Any), &Fcfs);
+        q.push(req(2, 1.0, M8), &Fcfs);
+        q.push(req(3, 2.0, M13), &Fcfs);
+        q.push_routed(req(4, 3.0, ModelClass::Any), ShardKey::AnyIn(ModelKind::Llama3_8B), &Fcfs);
+        let mut sums: Vec<(ModelKind, usize)> = Vec::new();
+        q.for_each_group_depth(|m, d| match sums.iter_mut().find(|(k, _)| *k == m) {
+            Some((_, s)) => *s += d,
+            None => sums.push((m, d)),
+        });
+        for (m, s) in sums {
+            assert_eq!(s, q.group_len(m), "{m:?}");
+        }
+        // The shared Any shard belongs to no group and is never visited.
+        let mut visits = 0;
+        q.for_each_group_depth(|_, _| visits += 1);
+        assert_eq!(visits, 3, "pinned-8B, pinned-13B, routed-8B");
     }
 
     #[test]

@@ -13,10 +13,15 @@ pub type MsgId = u64;
 pub struct AgentId(pub u32);
 
 /// Bidirectional agent-name interner.
+///
+/// Name storage is the process-wide pool ([`crate::util::intern()`]): the
+/// registry maps names to dense ids but owns no string allocations, so
+/// cloning it (e.g. snapshotting orchestrator state) copies only pointers
+/// and a name shared with the trace recorder is leaked exactly once.
 #[derive(Debug, Default, Clone)]
 pub struct AgentRegistry {
-    names: Vec<String>,
-    by_name: HashMap<String, AgentId>,
+    names: Vec<&'static str>,
+    by_name: HashMap<&'static str, AgentId>,
 }
 
 impl AgentRegistry {
@@ -29,9 +34,10 @@ impl AgentRegistry {
         if let Some(&id) = self.by_name.get(name) {
             return id;
         }
+        let name = crate::util::intern(name);
         let id = AgentId(self.names.len() as u32);
-        self.names.push(name.to_string());
-        self.by_name.insert(name.to_string(), id);
+        self.names.push(name);
+        self.by_name.insert(name, id);
         id
     }
 
@@ -39,8 +45,8 @@ impl AgentRegistry {
         self.by_name.get(name).copied()
     }
 
-    pub fn name(&self, id: AgentId) -> &str {
-        &self.names[id.0 as usize]
+    pub fn name(&self, id: AgentId) -> &'static str {
+        self.names[id.0 as usize]
     }
 
     pub fn len(&self) -> usize {
@@ -97,6 +103,16 @@ mod tests {
         let a = g.next();
         let b = g.next();
         assert!(b > a);
+    }
+
+    #[test]
+    fn registry_shares_the_global_pool() {
+        let mut r = AgentRegistry::new();
+        let id = r.intern("SharedPoolAgent");
+        // The registry stores the pool's allocation, not a private copy.
+        assert!(std::ptr::eq(r.name(id), crate::util::intern("SharedPoolAgent")));
+        let clone = r.clone();
+        assert!(std::ptr::eq(clone.name(id), r.name(id)));
     }
 
     #[test]

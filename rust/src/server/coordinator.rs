@@ -29,7 +29,7 @@ use std::cell::Cell;
 use std::collections::HashMap;
 
 use crate::agents::apps::{App, WorkflowPlan};
-use crate::dispatch::{DispatchPolicy, DispatchStats};
+use crate::dispatch::{DispatchPolicy, DispatchStats, ScoreScope, Scored};
 use crate::engine::core::{
     EngineConfig, EngineCore, ExecBackend, InstanceStatus, SimBackend, StepOutcome,
 };
@@ -45,6 +45,7 @@ use crate::orchestrator::router::{GroupPressure, RouteDecision, RoutePolicy, Rou
 use crate::orchestrator::Orchestrator;
 use crate::server::autoscale::{Autoscaler, FleetObservation, GroupLoad, ScaleAction};
 use crate::server::pressure::PressureTrace;
+use crate::server::pump_pool;
 use crate::util::RingLog;
 use crate::workload::trace::TraceRecord;
 use crate::Time;
@@ -429,6 +430,55 @@ struct PendingBoot {
 }
 
 // ---------------------------------------------------------------------------
+// Parallel pump round plan
+
+/// One shard head offered to a parallel scoring batch: the round plan
+/// partitions the queue heads by serving group (one head per shard, each
+/// shard a `(group, family)` partition) and scores them concurrently.
+struct ScoreJob {
+    /// Shard whose head this is.
+    shard: usize,
+    /// The head itself, cloned so workers need no queue borrow.
+    req: Request,
+    /// Pinned heads offer only their family's slot set (ascending), the
+    /// exact prune the sequential arm feeds `choose_among`; `None` = full
+    /// scan (`Any`-class heads).
+    candidates: Option<Vec<usize>>,
+}
+
+/// A head's cached score, tagged for optimistic conflict detection
+/// against the per-slot commit versions.
+struct CachedScore {
+    /// Request the score was computed for (heads move when shards pop).
+    req_id: RequestId,
+    /// The pure scoring result, committed later via
+    /// [`DispatchPolicy::commit_score`] — or discarded unfolded if a
+    /// conflicting commit stales it first.
+    scored: Scored,
+    /// Commit version the score was computed at.
+    epoch: u64,
+    /// Instance slots the score read ([`ScoreScope::Slots`] policies with
+    /// a pruned candidate set); `None` = the score read every slot, so any
+    /// commit invalidates it.
+    reads: Option<Vec<usize>>,
+}
+
+/// Whether a cached score is still valid: nothing it read was committed to
+/// after it was computed. `slot_epoch[j]` is the commit version that last
+/// mutated instance `j`; `commit_epoch` is the current version.
+fn score_fresh(c: &CachedScore, slot_epoch: &[u64], commit_epoch: u64) -> bool {
+    if c.epoch == commit_epoch {
+        return true;
+    }
+    match &c.reads {
+        None => false,
+        Some(reads) => reads
+            .iter()
+            .all(|&j| slot_epoch.get(j).copied().unwrap_or(0) <= c.epoch),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Coordinator
 
 /// The reusable serving runtime: one instance of the coordination cycle,
@@ -492,8 +542,9 @@ pub struct Coordinator<B: ExecBackend> {
     /// Per-model-family slot index, in fleet first-seen order, maintained
     /// incrementally on every fleet change.
     families: Vec<FamilyIndex>,
-    /// Cached instance-derived group pressures (queue depths are re-read
-    /// on every [`Self::group_pressures`] call — they move per enqueue).
+    /// Cached instance-derived group pressures (queue depths live in
+    /// `depth_scratch`, snapshotted per [`ShardedQueue::epoch`] — they
+    /// move per enqueue).
     pressure_cache: Vec<GroupPressure>,
     /// Set whenever the status snapshot or an instance's lifecycle state
     /// changes; the next pressure read rebuilds the cache.
@@ -527,6 +578,28 @@ pub struct Coordinator<B: ExecBackend> {
     /// as single-stage [`crate::agents::apps::App::Ext`] records, so a
     /// mixed plan/external run replays in full.
     pub trace_log: RingLog<TraceRecord>,
+    /// Per-group queue-depth snapshot (same order as `pressure_cache`),
+    /// rebuilt in one shard pass only when [`ShardedQueue::epoch`] moved —
+    /// replacing the per-call `group_len` walks of every
+    /// [`Self::group_pressures`] read (see `benches/bench_pressure.rs`).
+    depth_scratch: Vec<usize>,
+    /// The queue epoch `depth_scratch` was computed at (`None` = stale).
+    depth_epoch: Option<u64>,
+    /// Worker threads for score-in-parallel dispatch rounds (1 = the
+    /// sequential loop; see [`Self::set_pump_threads`]).
+    pump_threads: usize,
+    /// Pin the pump to the sequential loop regardless of `pump_threads` —
+    /// the parallel pump's in-binary equivalence baseline, in the same
+    /// spirit as `legacy_hot_path` (see [`Self::set_sequential_pump`]).
+    sequential_pump: bool,
+    /// Parallel pump only: commits that invalidated a fresh sibling score
+    /// (the committed slot was in that score's read set).
+    par_conflicts: u64,
+    /// Parallel pump only: heads scored again after a conflict staled
+    /// their previous score.
+    par_rescored: u64,
+    /// Parallel pump only: scoring batches fanned out to the worker pool.
+    par_rounds: u64,
 }
 
 impl Coordinator<SimBackend> {
@@ -629,6 +702,13 @@ impl<B: ExecBackend> Coordinator<B> {
             route_log: RingLog::new(),
             pending_boots: Vec::new(),
             trace_log: RingLog::new(),
+            depth_scratch: Vec::new(),
+            depth_epoch: None,
+            pump_threads: 1,
+            sequential_pump: false,
+            par_conflicts: 0,
+            par_rescored: 0,
+            par_rounds: 0,
         }
     }
 
@@ -724,11 +804,37 @@ impl<B: ExecBackend> Coordinator<B> {
         self.dispatcher.set_legacy_scoring(legacy);
     }
 
+    /// Worker threads for the score-in-parallel dispatch rounds (default 1
+    /// = the sequential loop; values are clamped to at least 1). The
+    /// parallel path additionally requires a dispatcher that opts in via
+    /// [`DispatchPolicy::supports_parallel`] and the indexed hot path.
+    /// Thread count must never change a decision, only wall time: the
+    /// dispatch/group/route logs are pinned bit-identical across counts by
+    /// the property tests below, `tests/runtime_seam.rs`, and the
+    /// `kairos bench` par stage's equal-logs assert.
+    pub fn set_pump_threads(&mut self, threads: usize) {
+        self.pump_threads = threads.max(1);
+    }
+
+    /// Force the sequential dispatch loop even when `pump_threads > 1` —
+    /// the parallel pump's in-binary baseline arm, mirroring
+    /// [`Self::set_legacy_hot_path`]'s role for the indexed structures.
+    /// Both arms must produce identical logs; the bench's 1-thread curve
+    /// point runs with this set.
+    pub fn set_sequential_pump(&mut self, sequential: bool) {
+        self.sequential_pump = sequential;
+    }
+
     /// Snapshot of the dispatcher's streaming decision counters
-    /// ([`DispatchStats`]); also synced into
+    /// ([`DispatchStats`]) merged with the coordinator-owned parallel-pump
+    /// counters (`conflicts`/`rescored`/`par_rounds`); also synced into
     /// [`crate::metrics::StreamingMetrics::packer`] on every refresh.
     pub fn dispatch_stats(&self) -> DispatchStats {
-        self.dispatcher.stats()
+        let mut s = self.dispatcher.stats();
+        s.conflicts += self.par_conflicts;
+        s.rescored += self.par_rescored;
+        s.par_rounds += self.par_rounds;
+        s
     }
 
     /// Resident bytes pinned by the decision logs (buffer capacities plus
@@ -1075,8 +1181,12 @@ impl<B: ExecBackend> Coordinator<B> {
     ///
     /// The instance-derived fields (active/inflight/free_tokens) are
     /// cached and rebuilt only after a pump/refresh/fleet change
-    /// invalidated them; the queue depths move on every enqueue with no
-    /// intervening pump, so they are re-read per call.
+    /// invalidated them. The queue depths move per enqueue with no
+    /// intervening pump, so they are snapshotted separately, keyed on
+    /// [`ShardedQueue::epoch`]: a burst of pressure reads between two
+    /// depth changes (learned routing probes every submission) reuses one
+    /// single-pass snapshot instead of walking all shards per group per
+    /// call (measured in `benches/bench_pressure.rs`).
     fn group_pressures(&mut self) -> Vec<GroupPressure> {
         if self.legacy_hot_path {
             return self.group_pressures_legacy();
@@ -1084,11 +1194,37 @@ impl<B: ExecBackend> Coordinator<B> {
         if self.pressure_cache_dirty {
             self.rebuild_pressure_cache();
         }
+        self.refresh_depth_snapshot();
         let mut out = self.pressure_cache.clone();
-        for g in out.iter_mut() {
-            g.queued = self.queue.group_len(g.model);
+        for (g, &d) in out.iter_mut().zip(self.depth_scratch.iter()) {
+            g.queued = d;
         }
         out
+    }
+
+    /// Rebuild the per-group queue-depth snapshot in one pass over the
+    /// shards, unless the queue's depth epoch is unchanged since the last
+    /// snapshot (then every depth is unchanged too and the scratch is
+    /// reused as-is). Entries parallel `pressure_cache`; shards of
+    /// families the fleet has never held are skipped, exactly as the
+    /// per-call `group_len` walks skipped them.
+    fn refresh_depth_snapshot(&mut self) {
+        let epoch = self.queue.epoch();
+        if self.depth_epoch == Some(epoch)
+            && self.depth_scratch.len() == self.pressure_cache.len()
+        {
+            return;
+        }
+        self.depth_scratch.clear();
+        self.depth_scratch.resize(self.pressure_cache.len(), 0);
+        let cache = &self.pressure_cache;
+        let scratch = &mut self.depth_scratch;
+        self.queue.for_each_group_depth(|m, d| {
+            if let Some(i) = cache.iter().position(|g| g.model == m) {
+                scratch[i] += d;
+            }
+        });
+        self.depth_epoch = Some(epoch);
     }
 
     /// Rebuild the cached instance-derived pressure skeleton from the
@@ -1118,6 +1254,9 @@ impl<B: ExecBackend> Coordinator<B> {
             self.pressure_cache.push(g);
         }
         self.pressure_cache_dirty = false;
+        // The family set (and with it the snapshot's row order) may have
+        // changed: force the next pressure read to re-derive depths.
+        self.depth_epoch = None;
     }
 
     /// The pre-cache implementation: rescan every instance per call.
@@ -1339,9 +1478,32 @@ impl<B: ExecBackend> Coordinator<B> {
         self.refresh_statuses(now);
         self.blocked_buf.clear();
         self.blocked_buf.resize(self.queue.n_shards(), false);
+        if self.use_parallel_pump() {
+            self.dispatch_round_parallel(now, &mut woken);
+        } else {
+            self.dispatch_round_sequential(now, &mut woken);
+        }
+        woken
+    }
+
+    /// Whether this pump takes the score-in-parallel path: opted into by
+    /// thread count, not pinned sequential, a dispatcher whose scoring can
+    /// run as a pure read, and the indexed hot path (the legacy arm stays
+    /// all-sequential — it is the bench baseline).
+    fn use_parallel_pump(&self) -> bool {
+        !self.sequential_pump
+            && self.pump_threads >= 2
+            && !self.legacy_hot_path
+            && self.dispatcher.supports_parallel()
+    }
+
+    /// The sequential dispatch round: pick the globally best head, place
+    /// or defer it, repeat. This is the reference arm the parallel round
+    /// must match log-for-log.
+    fn dispatch_round_sequential(&mut self, now: Time, woken: &mut Vec<usize>) {
         loop {
             let Some(s) = self.queue.best_shard(&self.blocked_buf) else {
-                return woken;
+                return;
             };
             // `best_shard` only returns non-empty shards; a missing head
             // would mean queue-internal drift, so block the shard and move
@@ -1444,6 +1606,219 @@ impl<B: ExecBackend> Coordinator<B> {
             self.refresh_one(j, self.applied_pressure[j]);
             if !woken.contains(&j) {
                 woken.push(j);
+            }
+        }
+    }
+
+    /// The deterministic parallel dispatch round: score-in-parallel,
+    /// commit-in-order.
+    ///
+    /// Each iteration of the outer loop is one **round plan**: every
+    /// unblocked shard head that could be placed (its group has a live
+    /// instance and the prompt physically fits) and lacks a fresh cached
+    /// score becomes a [`ScoreJob`], and the batch is scored concurrently
+    /// on the scoped worker pool ([`pump_pool::run_parallel`]) through the
+    /// dispatcher's pure [`DispatchPolicy::score`]. The inner loop then
+    /// **commits sequentially in exactly the sequential arm's order**
+    /// (global head rank, re-picked after every pop): a commit folds the
+    /// score's stat delta ([`DispatchPolicy::commit_score`]), pops, logs,
+    /// submits — and bumps the committed slot's version so optimistic
+    /// conflict detection ([`score_fresh`]) can tell which sibling scores
+    /// read state this commit mutated. When the globally best head's score
+    /// went stale, the inner loop breaks back out to re-score (counted in
+    /// `rescored`; the invalidations in `conflicts`).
+    ///
+    /// Determinism: scoring is a pure read (enforced by `&self` on
+    /// `score`), results land by job index, commits replay the sequential
+    /// loop verbatim with `choose` replaced by "fresh cached score" — so
+    /// the dispatch/group/route logs are bit-identical at every thread
+    /// count. Ring/cursor state also matches: [`DispatchPolicy::begin_round`]
+    /// runs lazily before the first batch that actually scores, exactly
+    /// the pumps where the sequential arm's first `choose` advances its
+    /// rings (advancing is idempotent at fixed `now`).
+    fn dispatch_round_parallel(&mut self, now: Time, woken: &mut Vec<usize>) {
+        let n_shards = self.queue.n_shards();
+        let mut cache: Vec<Option<CachedScore>> = Vec::with_capacity(n_shards);
+        cache.resize_with(n_shards, || None);
+        // Per-slot commit versions: slot_epoch[j] is the commit number that
+        // last mutated instance j's dispatcher/status state.
+        let mut slot_epoch: Vec<u64> = vec![0; self.engines.len()];
+        let mut commit_epoch: u64 = 0;
+        let mut begun = false;
+        loop {
+            // ---- round plan: batch-score stale unblocked heads ----
+            let mut jobs: Vec<ScoreJob> = Vec::new();
+            for s in 0..n_shards {
+                if self.blocked_buf[s] {
+                    continue;
+                }
+                let Some(head) = self.queue.peek_shard(s) else { continue };
+                if let Some(c) = cache[s].as_ref() {
+                    if c.req_id == head.id {
+                        if score_fresh(c, &slot_epoch, commit_epoch) {
+                            continue;
+                        }
+                        self.par_rescored += 1;
+                    }
+                }
+                // Heads the commit loop will drop or family-defer without
+                // consulting the dispatcher are not scored — otherwise a
+                // drop-only pump would advance ring state the sequential
+                // arm never touches. Both checks read only pump-constant
+                // state, so passing now means passing at commit time.
+                let class = head.model_class;
+                let need_tokens = head.prompt_tokens as u64 + 1;
+                let (any_accepting, could_ever_fit) =
+                    self.scan_candidates_indexed(class, need_tokens);
+                if !any_accepting || !could_ever_fit {
+                    continue;
+                }
+                let candidates = match class {
+                    ModelClass::Model(m) => self
+                        .family_slot(m)
+                        .map(|fi| self.families[fi].slots.clone()),
+                    ModelClass::Any => None,
+                };
+                jobs.push(ScoreJob { shard: s, req: head.clone(), candidates });
+            }
+            if !jobs.is_empty() {
+                if !begun {
+                    self.dispatcher.begin_round(&self.status_buf, now);
+                    begun = true;
+                }
+                self.par_rounds += 1;
+                let dispatcher: &dyn DispatchPolicy = self.dispatcher.as_ref();
+                let statuses: &[InstanceStatus] = &self.status_buf;
+                let results = pump_pool::run_parallel(
+                    self.pump_threads,
+                    &jobs,
+                    |_, job: &ScoreJob| {
+                        dispatcher.score(&job.req, statuses, job.candidates.as_deref(), now)
+                    },
+                );
+                let slots_scope = dispatcher.score_scope() == ScoreScope::Slots;
+                for (job, scored) in jobs.into_iter().zip(results) {
+                    // A pruned read set is only a real read set under Slots
+                    // scope; global-scope scores are staled by any commit.
+                    let reads = if slots_scope { job.candidates } else { None };
+                    cache[job.shard] = Some(CachedScore {
+                        req_id: job.req.id,
+                        scored,
+                        epoch: commit_epoch,
+                        reads,
+                    });
+                }
+            }
+            // ---- commit in order: the sequential loop, reading the cache ----
+            loop {
+                let Some(s) = self.queue.best_shard(&self.blocked_buf) else {
+                    return;
+                };
+                let Some(best) = self.queue.peek_shard(s) else {
+                    self.blocked_buf[s] = true;
+                    continue;
+                };
+                let class = best.model_class;
+                let need_tokens = best.prompt_tokens as u64 + 1;
+                let (any_accepting, could_ever_fit) =
+                    self.scan_candidates_indexed(class, need_tokens);
+                if !any_accepting {
+                    let family_exists =
+                        self.fleet.instances.iter().any(|sp| class.matches(sp.model));
+                    if family_exists {
+                        self.blocked_buf[s] = true;
+                    } else if let Some(req) = self.queue.pop_shard(s) {
+                        self.pending.remove(&req.id);
+                        self.workflows.remove(&req.msg_id);
+                        self.dropped += 1;
+                        cache[s] = None;
+                    } else {
+                        self.blocked_buf[s] = true;
+                    }
+                    continue;
+                }
+                if !could_ever_fit {
+                    if let Some(req) = self.queue.pop_shard(s) {
+                        self.pending.remove(&req.id);
+                        self.workflows.remove(&req.msg_id);
+                        self.dropped += 1;
+                        cache[s] = None;
+                    } else {
+                        self.blocked_buf[s] = true;
+                    }
+                    continue;
+                }
+                let usable = cache[s].as_ref().map_or(false, |c| {
+                    c.req_id == best.id && score_fresh(c, &slot_epoch, commit_epoch)
+                });
+                if !usable {
+                    // The globally best head has no fresh score: back out
+                    // to the round plan, which re-scores it (and every
+                    // other stale head) in one batch.
+                    break;
+                }
+                let Some(entry) = cache[s].take() else {
+                    self.blocked_buf[s] = true;
+                    continue;
+                };
+                let Some(j) = entry.scored.pick else {
+                    // The policy refused the head: fold the scoring
+                    // counters exactly as the sequential arm's refused
+                    // `choose` call does, and defer the group.
+                    self.dispatcher.commit_score(
+                        best,
+                        &entry.scored,
+                        &self.status_buf,
+                        now,
+                    );
+                    self.blocked_buf[s] = true;
+                    continue;
+                };
+                // Safety net over the policies' own filtering, identical
+                // to the sequential arm's.
+                assert!(
+                    j < self.engines.len()
+                        && self.status_buf[j].accepting
+                        && class.matches(self.status_buf[j].model),
+                    "dispatcher chose non-accepting or incompatible instance {j}"
+                );
+                self.dispatcher.commit_score(best, &entry.scored, &self.status_buf, now);
+                let Some(req) = self.queue.pop_shard(s) else {
+                    self.blocked_buf[s] = true;
+                    continue;
+                };
+                self.dispatch_log.push((req.id, j));
+                self.group_log.push(GroupDispatch {
+                    req: req.id,
+                    instance: j,
+                    class,
+                    model: self.status_buf[j].model,
+                });
+                self.dispatcher.on_dispatch(&req, j, now);
+                self.engines[j].submit(req, now);
+                self.refresh_one(j, self.applied_pressure[j]);
+                if !woken.contains(&j) {
+                    woken.push(j);
+                }
+                // Conflict accounting BEFORE stamping the new version:
+                // fresh sibling scores whose read set covers the committed
+                // slot are now invalid (they re-enter the next round plan).
+                for (t, slot) in cache.iter().enumerate() {
+                    if t == s {
+                        continue;
+                    }
+                    if let Some(c) = slot {
+                        if score_fresh(c, &slot_epoch, commit_epoch)
+                            && c.reads.as_ref().map_or(true, |r| r.contains(&j))
+                        {
+                            self.par_conflicts += 1;
+                        }
+                    }
+                }
+                commit_epoch += 1;
+                if let Some(e) = slot_epoch.get_mut(j) {
+                    *e = commit_epoch;
+                }
             }
         }
     }
@@ -1592,7 +1967,7 @@ impl<B: ExecBackend> Coordinator<B> {
         self.autoscale(now);
         // Keep the packer's decision counters visible on the streaming
         // metrics surface (bench summary, `kairos check`).
-        self.metrics.stream.packer = self.dispatcher.stats();
+        self.metrics.stream.packer = self.dispatch_stats();
         // Dynamic counterpart of the static lint pass: in debug builds
         // every refresh re-derives the incremental structures from scratch
         // and asserts they agree (release builds skip this; `kairos check`
@@ -1921,7 +2296,7 @@ impl<B: ExecBackend> Coordinator<B> {
             self.fold_instance_counters(j);
         }
         // Final sync for runs that end between refreshes.
-        self.metrics.stream.packer = self.dispatcher.stats();
+        self.metrics.stream.packer = self.dispatch_stats();
     }
 
     /// Number of workflows still in flight.
@@ -2722,5 +3097,268 @@ mod tests {
             violations.iter().any(|v| v.contains("active count")),
             "corrupted active count must be reported, got: {violations:?}"
         );
+    }
+
+    // ---- parallel pump -------------------------------------------------
+
+    /// Everything the parallel pump must reproduce bit-for-bit: the
+    /// decision logs, the drop count, the dispatcher's mutable state
+    /// digest, and the non-parallel stat counters.
+    #[derive(Debug, PartialEq)]
+    struct PumpTrace {
+        dispatches: Vec<(RequestId, usize)>,
+        groups: Vec<GroupDispatch>,
+        routes: Vec<RouteDecision>,
+        dropped: u64,
+        fingerprint: u64,
+        completed: usize,
+        decisions: u64,
+        candidates: u64,
+        evaluated: u64,
+        fast_accepted: u64,
+        fast_rejected: u64,
+        rejected_rounds: u64,
+        sticky: (u64, u64),
+    }
+
+    /// Drive a mixed stream (pinned + free agents, interleaved engine
+    /// stepping, optional mid-stream fleet growth) and summarize every
+    /// decision artifact the equivalence property compares. `sequential`
+    /// pins the reference arm; `threads >= 2` with `sequential = false`
+    /// takes the score-in-parallel path for parallel-capable dispatchers.
+    fn drive_pump_scenario(
+        fleet: &str,
+        dispatcher: &str,
+        n_reqs: usize,
+        churn: bool,
+        seed: u64,
+        threads: usize,
+        sequential: bool,
+    ) -> PumpTrace {
+        let spec = FleetSpec::parse(fleet).unwrap();
+        let disp = crate::server::sim::make_dispatcher_tuned(dispatcher, &spec, None, None);
+        let mut c = Coordinator::sim(spec, Box::new(Fcfs), disp);
+        c.set_pump_threads(threads);
+        c.set_sequential_pump(sequential);
+        // Pinning an agent to a family some fleets lack exercises the
+        // drop path (never served) alongside ordinary placements.
+        c.set_affinity(
+            &AffinitySpec::parse("Pinned=llama2-13b,Other=llama3-8b").unwrap(),
+        );
+        let mut rng = Rng::new(seed);
+        let mut now = 0.0;
+        for i in 0..n_reqs {
+            let agent = match rng.below(3) {
+                0 => "Pinned",
+                1 => "Other",
+                _ => "Free",
+            };
+            let prompt = (16 + rng.below(200) * 3) as u32;
+            let output = (4 + rng.below(24)) as u32;
+            c.submit_external(agent, prompt, output, now);
+            now += 0.002;
+            if rng.chance(0.3) {
+                c.pump(now);
+            }
+            if churn && i == n_reqs / 2 {
+                let grown = InstanceSpec::new(ModelKind::Llama3_8B).with_kv_scale(0.1);
+                let _ = c.add_instance(grown, now);
+            }
+            if rng.chance(0.2) {
+                for j in 0..c.n_instances() {
+                    if c.engines[j].has_work() {
+                        let out = c.step_engine(j, now);
+                        now += out.duration.max(1e-6);
+                        c.absorb(j, out, now);
+                    }
+                }
+            }
+        }
+        for _ in 0..800 {
+            c.pump(now);
+            let mut idle = true;
+            for j in 0..c.n_instances() {
+                if !c.engines[j].has_work() {
+                    continue;
+                }
+                idle = false;
+                let out = c.step_engine(j, now);
+                now += out.duration.max(1e-6);
+                c.absorb(j, out, now);
+            }
+            if idle {
+                break;
+            }
+        }
+        assert_eq!(c.audit_invariants(), Vec::<String>::new());
+        let stats = c.dispatch_stats();
+        PumpTrace {
+            dispatches: c.dispatch_log.take_vec(),
+            groups: c.group_log.take_vec(),
+            routes: c.route_log.take_vec(),
+            dropped: c.dropped,
+            fingerprint: c.dispatcher.state_fingerprint(),
+            completed: c.metrics.requests.len(),
+            decisions: stats.decisions,
+            candidates: stats.candidates,
+            evaluated: stats.evaluated,
+            fast_accepted: stats.fast_accepted,
+            fast_rejected: stats.fast_rejected,
+            rejected_rounds: stats.rejected_rounds,
+            sticky: (stats.sticky_hits, stats.sticky_fallbacks),
+        }
+    }
+
+    #[test]
+    fn parallel_pump_matches_sequential_bit_for_bit() {
+        const FLEETS: [&str; 3] = [
+            "3*llama3-8b@0.12",
+            "2*llama3-8b@0.12,2*llama2-13b@0.12",
+            "4*llama3-8b@0.08,llama2-13b@0.2",
+        ];
+        const DISPATCHERS: [&str; 4] = ["kairos", "oracle", "rr", "cache-affine"];
+        crate::testing::forall(
+            "parallel-pump-equivalence",
+            10,
+            0xD15F_A7C4,
+            |rng| {
+                (
+                    FLEETS[rng.below(FLEETS.len())],
+                    DISPATCHERS[rng.below(DISPATCHERS.len())],
+                    24 + rng.below(32),
+                    rng.chance(0.5),
+                    rng.next_u64(),
+                )
+            },
+            |&(fleet, disp, n, churn, seed)| {
+                let base = drive_pump_scenario(fleet, disp, n, churn, seed, 1, true);
+                if base.dispatches.is_empty() {
+                    return Err("scenario dispatched nothing".into());
+                }
+                for threads in [1usize, 2, 4, 8] {
+                    let par =
+                        drive_pump_scenario(fleet, disp, n, churn, seed, threads, false);
+                    if par != base {
+                        return Err(format!(
+                            "diverged at {threads} threads:\n  sequential: {base:?}\n  \
+                             parallel:   {par:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn parallel_pump_reports_rounds_conflicts_and_rescores() {
+        // Two shards (a pinned family and Any) under a Global-scope policy:
+        // every commit invalidates the sibling shard's cached score, so the
+        // pump must log conflicts, re-scores, and multiple scoring rounds —
+        // while the dispatch log stays identical to the sequential arm's.
+        let build = |sequential: bool| {
+            let spec = FleetSpec::parse("2*llama3-8b@0.12,2*llama2-13b@0.12").unwrap();
+            let mut c =
+                Coordinator::sim(spec, Box::new(Fcfs), Box::new(RoundRobin::new()));
+            c.set_pump_threads(4);
+            c.set_sequential_pump(sequential);
+            c.set_affinity(&AffinitySpec::parse("Pinned=llama2-13b").unwrap());
+            for i in 0..8 {
+                let agent = if i % 2 == 0 { "Pinned" } else { "Free" };
+                c.submit_external(agent, 32, 4, i as f64 * 0.001);
+            }
+            let woken = c.pump(0.05);
+            assert!(!woken.is_empty());
+            c
+        };
+        let mut par = build(false);
+        let stats = par.dispatch_stats();
+        assert!(stats.par_rounds >= 2, "expected re-score rounds, got {stats:?}");
+        assert!(stats.conflicts >= 1, "expected conflicts, got {stats:?}");
+        assert!(stats.rescored >= 1, "expected rescored heads, got {stats:?}");
+        let mut seq = build(true);
+        let s = seq.dispatch_stats();
+        assert_eq!(
+            (s.conflicts, s.rescored, s.par_rounds),
+            (0, 0, 0),
+            "sequential arm must report no parallel-pump activity"
+        );
+        assert_eq!(par.dispatch_log.take_vec(), seq.dispatch_log.take_vec());
+        assert_eq!(par.group_log.take_vec(), seq.group_log.take_vec());
+    }
+
+    #[test]
+    fn single_thread_or_unsupported_policy_stays_sequential() {
+        // pump_threads == 1 (the default) and sequential pinning both keep
+        // the reference arm: no scoring rounds are ever fanned out.
+        let spec = FleetSpec::parse("2*llama3-8b@0.12").unwrap();
+        let mut c = Coordinator::sim(spec, Box::new(Fcfs), Box::new(RoundRobin::new()));
+        for i in 0..4 {
+            c.submit_external("A", 16, 4, i as f64 * 0.001);
+        }
+        c.pump(0.01);
+        assert_eq!(c.dispatch_stats().par_rounds, 0);
+        assert_eq!(c.dispatch_log.len(), 4);
+    }
+
+    #[test]
+    fn fold_engine_counters_is_idempotent_across_pump_threads() {
+        // Satellite regression: the parallel pump must not change when or
+        // how often per-engine counters fold into the run metrics — the
+        // folded totals are identical at every thread count, and a second
+        // fold adds exactly zero.
+        let run = |threads: usize| {
+            let spec = FleetSpec::parse("2*llama3-8b@0.08,llama2-13b@0.08").unwrap();
+            let disp =
+                crate::server::sim::make_dispatcher_tuned("kairos", &spec, None, None);
+            let mut c = Coordinator::sim(spec, Box::new(Fcfs), disp);
+            c.set_pump_threads(threads);
+            c.set_affinity(&AffinitySpec::parse("Pinned=llama2-13b").unwrap());
+            let mut now = 0.0;
+            for i in 0..24 {
+                let agent = if i % 3 == 0 { "Pinned" } else { "Free" };
+                c.submit_external(agent, 48 + (i % 5) * 64, 12, now);
+                now += 0.002;
+                if i % 4 == 3 {
+                    c.pump(now);
+                }
+            }
+            for _ in 0..800 {
+                c.pump(now);
+                let mut idle = true;
+                for j in 0..c.n_instances() {
+                    if !c.engines[j].has_work() {
+                        continue;
+                    }
+                    idle = false;
+                    let out = c.step_engine(j, now);
+                    now += out.duration.max(1e-6);
+                    c.absorb(j, out, now);
+                }
+                if idle {
+                    break;
+                }
+            }
+            let snapshot = |c: &Coordinator<SimBackend>| {
+                (
+                    c.metrics.recomputed_tokens,
+                    c.metrics.stream.alloc_failures,
+                    c.metrics.stream.cache.hits,
+                    c.metrics.stream.cache.misses,
+                    c.metrics.stream.cache.saved_prefill_tokens,
+                    c.metrics.stream.cache.insertions,
+                    c.metrics.stream.cache.evictions,
+                    c.metrics.requests.len(),
+                )
+            };
+            c.fold_engine_counters();
+            let first = snapshot(&c);
+            c.fold_engine_counters();
+            assert_eq!(first, snapshot(&c), "second fold must add zero");
+            first
+        };
+        let base = run(1);
+        assert_eq!(base, run(2), "folded metrics diverged at 2 threads");
+        assert_eq!(base, run(4), "folded metrics diverged at 4 threads");
     }
 }

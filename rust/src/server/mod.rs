@@ -16,10 +16,14 @@
 //! * [`pressure`] — co-tenant memory-pressure traces: piecewise
 //!   `kv_scale` multipliers that vary each instance's visible KV budget
 //!   over time.
+//! * [`pump_pool`] — the parallel pump's scoped worker pool: the ONLY
+//!   module allowed to spawn threads outside tests (kairos-lint rule
+//!   `thread-spawn`), so every concurrency decision stays order-free.
 
 pub mod autoscale;
 pub mod coordinator;
 pub mod pressure;
+pub mod pump_pool;
 pub mod real;
 pub mod sim;
 

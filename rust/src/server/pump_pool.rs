@@ -1,0 +1,121 @@
+//! The parallel pump's scoped worker pool — the ONLY module allowed to
+//! spawn threads in non-test code (kairos-lint rule `thread-spawn`).
+//!
+//! Rationale: the repo's determinism guarantees (driver equivalence,
+//! record→replay bit-identity, the bench A/B equal-decision asserts) all
+//! assume that concurrency never reaches an ordering decision. Confining
+//! every spawn to this one module keeps that machine-checkable: the pool
+//! below runs a *pure* function over an indexed job list and slots results
+//! by job index, so the output is a deterministic function of the input no
+//! matter how the OS schedules the workers. Work distribution uses an
+//! atomic work-stealing counter (fast, order-free); result placement is
+//! by index (order restored).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Evaluate `f` over `jobs`, fanning out across up to `threads` scoped
+/// worker threads (`std::thread::scope` — no detached threads, no new
+/// dependencies), and return the results in job order.
+///
+/// Determinism contract: `f` must be a pure function of `(index, job)` and
+/// whatever shared state it captures by `&` — the pool adds no ordering of
+/// its own because every result lands in its job's slot. With `threads <=
+/// 1` (or fewer than two jobs) the pool degenerates to an inline loop, so
+/// thread count can never change a result, only wall time.
+pub fn run_parallel<J, R, F>(threads: usize, jobs: &[J], f: F) -> Vec<R>
+where
+    J: Sync,
+    R: Send,
+    F: Fn(usize, &J) -> R + Sync,
+{
+    if threads <= 1 || jobs.len() <= 1 {
+        return jobs.iter().enumerate().map(|(i, j)| f(i, j)).collect();
+    }
+    let n_workers = threads.min(jobs.len());
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(jobs.len());
+    slots.resize_with(jobs.len(), || None);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            handles.push(scope.spawn(|| {
+                // Claim jobs by atomic counter: whichever worker takes job
+                // i computes exactly f(i, &jobs[i]); the pairs carry the
+                // index home so placement is order-free.
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    local.push((i, f(i, &jobs[i])));
+                }
+                local
+            }));
+        }
+        for h in handles {
+            match h.join() {
+                Ok(pairs) => {
+                    for (i, r) in pairs {
+                        slots[i] = Some(r);
+                    }
+                }
+                // A worker panicked (f itself failed): surface the original
+                // panic on the caller's thread instead of a poisoned
+                // placeholder result.
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| match s {
+            Some(r) => r,
+            // Unreachable by construction: the counter hands out every
+            // index in [0, jobs.len()) exactly once and each worker's
+            // results were drained above.
+            None => unreachable!("pump pool worker skipped a job slot"),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_in_job_order_at_every_thread_count() {
+        let jobs: Vec<u64> = (0..137).collect();
+        let expect: Vec<u64> = jobs.iter().map(|j| j * j + 1).collect();
+        for threads in [1, 2, 3, 4, 8, 64] {
+            let got = run_parallel(threads, &jobs, |_, j| j * j + 1);
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn index_reaches_the_job_function() {
+        let jobs = vec!["a", "b", "c"];
+        let got = run_parallel(2, &jobs, |i, j| format!("{i}:{j}"));
+        assert_eq!(got, vec!["0:a", "1:b", "2:c"]);
+    }
+
+    #[test]
+    fn empty_and_single_job_lists_run_inline() {
+        let none: Vec<u32> = Vec::new();
+        assert!(run_parallel(8, &none, |_, j| *j).is_empty());
+        assert_eq!(run_parallel(8, &[7u32], |_, j| *j + 1), vec![8]);
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        let jobs: Vec<u32> = (0..8).collect();
+        let r = std::panic::catch_unwind(|| {
+            run_parallel(4, &jobs, |_, j| {
+                assert!(*j != 5, "boom on 5");
+                *j
+            })
+        });
+        assert!(r.is_err());
+    }
+}

@@ -125,6 +125,10 @@ pub struct FleetConfig {
     /// budget plus the CHWBL bounded-load factor the `cache-affine`
     /// dispatcher arm uses. Disabled by default.
     pub cache: CacheTuning,
+    /// Worker threads for the coordinator's score-in-parallel pump
+    /// (`--threads`). `1` (the default) keeps the sequential reference
+    /// arm; decisions are bit-identical at every value.
+    pub threads: usize,
 }
 
 /// Prefix-cache knobs shared by the engine-side cache, the time-slot
@@ -172,6 +176,7 @@ impl From<SimConfig> for FleetConfig {
             legacy_hot_path: false,
             legacy_scoring: false,
             cache: CacheTuning::default(),
+            threads: 1,
         }
     }
 }
@@ -193,6 +198,7 @@ impl From<FleetSpec> for FleetConfig {
             legacy_hot_path: false,
             legacy_scoring: false,
             cache: CacheTuning::default(),
+            threads: 1,
         }
     }
 }
@@ -362,6 +368,7 @@ impl SimServer {
         coord.metrics.lean = cfg.lean_metrics;
         coord.set_legacy_hot_path(cfg.legacy_hot_path);
         coord.set_legacy_scoring(cfg.legacy_scoring);
+        coord.set_pump_threads(cfg.threads);
         let n = coord.n_instances();
         SimServer {
             cfg,

@@ -1,0 +1,68 @@
+//! Process-wide string interner: one leaked allocation per unique string.
+//!
+//! Agent names flow through two paths that both need `'static` strings —
+//! the trace recorder's [`crate::workload::trace::StageRecord`] and the
+//! orchestrator's [`crate::orchestrator::AgentRegistry`]. Both delegate
+//! here so a name submitted through either path is leaked at most once
+//! for the life of the process, and equal names always share one
+//! allocation (pointer equality holds across the two paths).
+
+use std::collections::HashSet;
+use std::sync::{Mutex, OnceLock};
+
+/// Intern `s`, leaking it on first sight and returning the shared
+/// `'static` copy afterwards. Safe to call from any thread.
+pub fn intern(s: &str) -> &'static str {
+    static POOL: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
+    let pool = POOL.get_or_init(|| Mutex::new(HashSet::new()));
+    let mut guard = match pool.lock() {
+        Ok(g) => g,
+        // A panic while holding the lock cannot leave the set in a bad
+        // state (insert-only); keep serving rather than propagating.
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    if let Some(&k) = guard.get(s) {
+        return k;
+    }
+    let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
+    guard.insert(leaked);
+    leaked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_strings_share_one_allocation() {
+        let a = intern("bench-pressure-agent");
+        let b = intern(&String::from("bench-pressure-agent"));
+        assert_eq!(a, b);
+        assert!(std::ptr::eq(a, b), "same name must intern to same pointer");
+    }
+
+    #[test]
+    fn distinct_strings_stay_distinct() {
+        let a = intern("intern-a");
+        let b = intern("intern-b");
+        assert_ne!(a, b);
+        assert!(!std::ptr::eq(a, b));
+    }
+
+    #[test]
+    fn usable_across_threads() {
+        let handles: Vec<_> = (0..4)
+            .map(|_| std::thread::spawn(|| intern("intern-threaded")))
+            .collect();
+        let mut ptrs = Vec::new();
+        for h in handles {
+            match h.join() {
+                Ok(p) => ptrs.push(p),
+                Err(e) => std::panic::resume_unwind(e),
+            }
+        }
+        for p in &ptrs {
+            assert!(std::ptr::eq(*p, ptrs[0]));
+        }
+    }
+}

@@ -1,12 +1,15 @@
 //! Small utilities: a minimal JSON parser/writer (no serde on this image),
-//! CSV output, aligned table printing for the figure harnesses, and the
-//! bounded ring-buffer log behind the coordinator's `LogConfig`.
+//! CSV output, aligned table printing for the figure harnesses, the
+//! process-wide string interner, and the bounded ring-buffer log behind
+//! the coordinator's `LogConfig`.
 
 pub mod csv;
+pub mod intern;
 pub mod json;
 pub mod ring;
 pub mod table;
 
+pub use intern::intern;
 pub use json::Json;
 pub use ring::RingLog;
 pub use table::Table;

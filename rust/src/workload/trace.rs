@@ -120,25 +120,16 @@ const STATIC_NAMES: &[&str] = &[
 
 /// Intern an arbitrary trace string to a `'static` lifetime: known names
 /// resolve to the compile-time table; unknown names (external traces, or
-/// agents submitted through the serving frontend) are leaked once per
-/// unique name through a global pool. Public so the coordinator's
-/// recording path can capture `submit_external` agent names into
-/// [`StageRecord`]s.
+/// agents submitted through the serving frontend) go through the shared
+/// process-wide pool ([`crate::util::intern()`]), so a name also interned
+/// by the [`crate::orchestrator::AgentRegistry`] is leaked only once.
+/// Public so the coordinator's recording path can capture
+/// `submit_external` agent names into [`StageRecord`]s.
 pub fn intern_name(s: &str) -> &'static str {
-    use std::collections::HashSet;
-    use std::sync::{Mutex, OnceLock};
     if let Some(&k) = STATIC_NAMES.iter().find(|&&k| k == s) {
         return k;
     }
-    static POOL: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
-    let pool = POOL.get_or_init(|| Mutex::new(HashSet::new()));
-    let mut guard = pool.lock().expect("intern pool poisoned");
-    if let Some(&k) = guard.get(s) {
-        return k;
-    }
-    let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
-    guard.insert(leaked);
-    leaked
+    crate::util::intern(s)
 }
 
 impl TraceRecord {

@@ -133,6 +133,7 @@ fn drive_polling(
         None,
         None,
         None,
+        1,
     )
 }
 
@@ -148,6 +149,7 @@ fn drive_polling_elastic(
     affinity: Option<AffinitySpec>,
     route: Option<RoutePolicy>,
     cache: Option<CacheTuning>,
+    threads: usize,
 ) -> DriverTrace {
     // Mirror `SimServer::with_fleet`: an enabled cache tuning stamps the
     // block budget onto every spec that does not carry its own, so both
@@ -179,6 +181,7 @@ fn drive_polling_elastic(
     if let Some(r) = route {
         coord.set_route_policy(r);
     }
+    coord.set_pump_threads(threads);
     let clock = ManualClock::new();
     let n = coord.n_instances();
     // Per-engine in-flight iteration: completes at `.0`, with outcome `.1`.
@@ -371,6 +374,7 @@ fn fleet_resize_seam_holds_across_drivers() {
         None,
         None,
         None,
+        1,
     );
     assert!(!a.dispatch_log.is_empty());
     assert!(
@@ -446,6 +450,7 @@ fn sharded_seam_holds_on_mixed_model_fleet() {
         Some(aff),
         None,
         None,
+        1,
     );
     assert!(!a.dispatch_log.is_empty());
     assert_eq!(a, b, "drivers diverged over the sharded coordinator");
@@ -515,6 +520,7 @@ fn route_log_seam_holds_with_learned_routing_and_group_bounds() {
         Some(aff),
         Some(route),
         None,
+        1,
     );
     assert!(!a.dispatch_log.is_empty());
     // Route decisions are per submitted stage: unique per request, and a
@@ -610,6 +616,7 @@ fn record_replay_round_trip_reproduces_both_drivers() {
         Some(aff),
         None,
         None,
+        1,
     );
     assert_eq!(
         replay_sim, original,
@@ -900,7 +907,56 @@ fn cache_affine_seam_holds_with_audits_on() {
         None,
         None,
         Some(tuning),
+        1,
     );
     assert!(!a.dispatch_log.is_empty());
     assert_eq!(a, b, "drivers diverged under session-sticky dispatch");
+}
+
+#[test]
+fn parallel_pump_keeps_the_seam_at_every_thread_count() {
+    // The parallel-pump contract across the DRIVER seam: the same sharded
+    // mixed-model trace through the discrete-event driver and the polling
+    // driver (which audits the structural invariants on every refresh
+    // tick), at 1, 2 and 4 pump workers — every combination must produce
+    // the sequential reference run's exact DriverTrace.
+    let fleet = FleetSpec::parse("2*llama3-8b@0.12,2*llama2-13b@0.12").unwrap();
+    let aff = AffinitySpec::parse("*=llama3-8b,Engineer=llama2-13b,QAEngineer=llama2-13b")
+        .unwrap();
+    let arrivals = trace(6.0, 140, 53);
+    let base = {
+        let mut cfg = FleetConfig::from(fleet.clone());
+        cfg.affinity = Some(aff.clone());
+        driver_trace_of(run_fleet(cfg, "kairos", "kairos", arrivals.clone()))
+    };
+    assert!(!base.dispatch_log.is_empty());
+    for threads in [2usize, 4] {
+        let sim_par = {
+            let mut cfg = FleetConfig::from(fleet.clone());
+            cfg.affinity = Some(aff.clone());
+            cfg.threads = threads;
+            driver_trace_of(run_fleet(cfg, "kairos", "kairos", arrivals.clone()))
+        };
+        assert_eq!(
+            base, sim_par,
+            "sim driver's parallel pump diverged at {threads} threads"
+        );
+        let poll_par = drive_polling_elastic(
+            &fleet,
+            "kairos",
+            "kairos",
+            arrivals.clone(),
+            5.0,
+            None,
+            None,
+            Some(aff.clone()),
+            None,
+            None,
+            threads,
+        );
+        assert_eq!(
+            base, poll_par,
+            "polling driver's parallel pump diverged at {threads} threads"
+        );
+    }
 }

@@ -1,8 +1,9 @@
-//! The eight determinism rules (D1–D8 in the lint catalog).
+//! The nine determinism rules (D1–D9 in the lint catalog).
 //!
 //! Every rule skips `#[cfg(test)]` modules and `#[test]` functions:
-//! tests may freely read clocks, unwrap, and iterate hash maps — the
-//! rules guard the simulation and serving paths, not test scaffolding.
+//! tests may freely read clocks, unwrap, spawn threads, and iterate hash
+//! maps — the rules guard the simulation and serving paths, not test
+//! scaffolding.
 
 use proc_macro2::Span;
 use quote::ToTokens;
@@ -10,7 +11,7 @@ use syn::visit::{self, Visit};
 
 use crate::{FileCtx, RawDiag, Rule};
 
-/// All rules in catalog order (D1..D8).
+/// All rules in catalog order (D1..D9).
 pub fn all() -> Vec<Box<dyn Rule>> {
     vec![
         Box::new(WallClock),
@@ -21,6 +22,7 @@ pub fn all() -> Vec<Box<dyn Rule>> {
         Box::new(HotPathPanic),
         Box::new(MissingDocs),
         Box::new(NoEnvFs),
+        Box::new(ThreadSpawn),
     ]
 }
 
@@ -730,6 +732,75 @@ impl Rule for NoEnvFs {
         let mut uses = Uses { bare: Vec::new() };
         uses.visit_file(ctx.ast);
         let mut v = NoEnvFsVisitor { bare_imported: uses.bare, diags: Vec::new() };
+        v.visit_file(ctx.ast);
+        v.diags
+    }
+}
+
+/// D9 `thread-spawn`: ad-hoc threads are banned — all parallelism goes
+/// through the scoped worker pool in `server/pump_pool.rs`, whose
+/// score-in-parallel / commit-in-order protocol keeps dispatch decisions
+/// bit-identical at every thread count.
+struct ThreadSpawn;
+
+struct ThreadSpawnVisitor {
+    diags: Vec<RawDiag>,
+}
+
+impl ThreadSpawnVisitor {
+    fn flag(&mut self, span: Span, what: &str) {
+        let (line, col) = lc(span);
+        self.diags.push(RawDiag {
+            line,
+            col,
+            message: format!(
+                "{what} outside the pump worker pool — ad-hoc threads make dispatch \
+                 order racy; route parallelism through `server::pump_pool::run_parallel` \
+                 (score-in-parallel, commit-in-order)"
+            ),
+        });
+    }
+}
+
+impl<'ast> Visit<'ast> for ThreadSpawnVisitor {
+    skip_test_scopes!();
+
+    fn visit_path(&mut self, p: &'ast syn::Path) {
+        let segs: Vec<String> = p.segments.iter().map(|s| s.ident.to_string()).collect();
+        for w in segs.windows(2) {
+            if w[0] == "thread" && matches!(w[1].as_str(), "spawn" | "scope" | "Builder") {
+                self.flag(
+                    p.segments.first().map(|s| s.ident.span()).unwrap_or_else(Span::call_site),
+                    &format!("`thread::{}`", w[1]),
+                );
+            }
+        }
+        visit::visit_path(self, p);
+    }
+
+    fn visit_expr_method_call(&mut self, c: &'ast syn::ExprMethodCall) {
+        // `scope.spawn(..)` / `Builder::new().spawn(..)`: any spawn method
+        // call counts — the only legitimate receiver lives in the exempt
+        // pool module itself.
+        if c.method == "spawn" {
+            self.flag(c.method.span(), "`.spawn(..)`");
+        }
+        visit::visit_expr_method_call(self, c);
+    }
+}
+
+impl Rule for ThreadSpawn {
+    fn id(&self) -> &'static str {
+        "thread-spawn"
+    }
+    fn description(&self) -> &'static str {
+        "thread spawns only inside server/pump_pool.rs (the deterministic pump pool)"
+    }
+    fn applies_to(&self, rel: &str) -> bool {
+        rel != "server/pump_pool.rs"
+    }
+    fn check(&self, ctx: &FileCtx) -> Vec<RawDiag> {
+        let mut v = ThreadSpawnVisitor { diags: Vec::new() };
         v.visit_file(ctx.ast);
         v.diags
     }

@@ -1,0 +1,8 @@
+pub fn score_on_the_side(xs: &[u64]) -> u64 {
+    let owned: Vec<u64> = xs.to_vec();
+    let h = std::thread::spawn(move || owned.iter().sum::<u64>());
+    match h.join() {
+        Ok(v) => v,
+        Err(_) => 0,
+    }
+}

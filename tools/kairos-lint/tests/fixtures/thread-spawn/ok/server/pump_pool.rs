@@ -1,0 +1,19 @@
+pub fn run_parallel<J: Sync, R: Send, F: Fn(&J) -> R + Sync>(
+    jobs: &[J],
+    f: F,
+) -> Vec<R> {
+    let mut out = Vec::with_capacity(jobs.len());
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(jobs.len());
+        for j in jobs {
+            handles.push(scope.spawn(|| f(j)));
+        }
+        for h in handles {
+            match h.join() {
+                Ok(r) => out.push(r),
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+    });
+    out
+}
